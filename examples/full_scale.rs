@@ -1,0 +1,55 @@
+//! Sec. 7.5 analog: the "1 TB" configuration — a 4M-symbol alphabet with
+//! heavy 96/4 label imbalance, encoded with the paper's best streaming
+//! architecture (SJLT numeric + Bloom categorical, d_cat = 20,000) and
+//! trained on a longer stream. Row count is scaled down (the paper
+//! itself notes scalability depends only on (n, s, m), not row count).
+//!
+//! ```bash
+//! cargo run --release --example full_scale
+//! ```
+
+use shdc::coordinator::{CatCfg, EncoderCfg, NumCfg};
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::encoding::BundleMethod;
+use shdc::pipeline::{train, TrainBackend, TrainCfg};
+
+fn main() -> anyhow::Result<()> {
+    let records: u64 = std::env::var("FULL_RECORDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300_000);
+    let data = SyntheticConfig::full(99); // m = 4M, P(y=1) = 0.04
+    let cfg = TrainCfg {
+        encoder: EncoderCfg {
+            // Paper Sec. 7.5: SJLT numeric encoder (d_count = 10,000),
+            // Bloom categorical (d_cat = 20,000), k = 4.
+            cat: CatCfg::Bloom { d: 20_000, k: 4 },
+            num: NumCfg::RelaxedSjlt { d: 10_000, p: 0.4, quantize: true },
+            bundle: BundleMethod::Concat,
+            n_numeric: data.n_numeric,
+            seed: 99,
+        },
+        backend: TrainBackend::RustSgd,
+        lr: 0.3,
+        batch_size: 256,
+        n_workers: 4,
+        train_records: records,
+        val_records: 20_000,
+        test_records: 40_000,
+        validate_every: 50_000,
+        patience: 3,
+        auc_chunk: 10_000,
+        seed: 99,
+    };
+    println!("training the Sec 7.5 configuration on m = 4e6, 96/4 imbalance, {records} records...");
+    let rep = train(&cfg, &data)?;
+    println!("records trained : {}", rep.records_trained);
+    println!("validation AUC  : {:.4} (paper on real 1TB Criteo: 0.731)", rep.val_auc);
+    println!("test AUC chunks : {}", rep.auc_box().row());
+    println!("final val loss  : {:.4}", rep.final_val_loss);
+    println!("params          : {}", rep.trainable_params);
+    println!("wall            : {:.2?}", rep.wall);
+    println!("\nnote: absolute AUC is not comparable (planted synthetic vs real ads);");
+    println!("the point is the pipeline handles the full-scale (m, skew) regime unchanged.");
+    Ok(())
+}

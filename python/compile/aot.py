@@ -1,0 +1,205 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. Lowered with
+``return_tuple=True`` and unwrapped on the rust side.
+
+Each artifact is one jitted function at one concrete shape profile
+(PJRT executables are shape-monomorphic). ``manifest.json`` maps
+artifact name -> file, input/output shapes+dtypes, and the semantic
+parameters (b, n, d_num, d_cat, k, ...) the rust runtime keys on.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    """One concrete shape configuration to lower every function at."""
+
+    name: str
+    b: int  # batch size
+    n: int = 13  # numeric features (Criteo: 13)
+    d_num: int = 2048  # numeric encoding dimension
+    d_cat: int = 8192  # categorical encoding dimension
+    sjlt_k: int = 4  # SJLT chunk count
+
+    @property
+    def d_total(self) -> int:  # concat-bundled model dimension
+        return self.d_num + self.d_cat
+
+
+# "small" keeps artifact compile time negligible for tests; "default" is
+# the scale the examples/benches run at (d_total ~= the paper's 10k).
+PROFILES = {
+    "small": Profile("small", b=32, n=13, d_num=256, d_cat=512, sjlt_k=4),
+    "default": Profile("default", b=256, n=13, d_num=2048, d_cat=8192, sjlt_k=4),
+}
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_specs(p: Profile):
+    """(artifact_name, fn, example_args, semantic_params) for one profile."""
+    b, n, dn, dc, dt = p.b, p.n, p.d_num, p.d_cat, p.d_total
+    k = p.sjlt_k
+    mlp_params = model.mlp_init(n, dc)
+    mlp_specs = [_spec(q.shape) for q in mlp_params]
+    sem = dict(b=b, n=n, d_num=dn, d_cat=dc, d_total=dt, sjlt_k=k)
+    return [
+        (
+            "encode_project_sign",
+            model.encode_project_sign,
+            [_spec((b, n)), _spec((dn, n)), _spec((1,))],
+            sem,
+        ),
+        (
+            "encode_project_threshold",
+            model.encode_project_threshold,
+            [_spec((b, n)), _spec((dn, n)), _spec((1,))],
+            sem,
+        ),
+        (
+            "encode_project_none",
+            model.encode_project_none,
+            [_spec((b, n)), _spec((dn, n)), _spec((1,))],
+            sem,
+        ),
+        (
+            "encode_sjlt",
+            model.make_encode_sjlt(dn),
+            [_spec((b, n)), _spec((k, n), I32), _spec((k, n))],
+            sem,
+        ),
+        (
+            "train_step",
+            model.train_step,
+            [_spec((dt,)), _spec((b, dt)), _spec((b,)), _spec((1,))],
+            sem,
+        ),
+        (
+            "predict",
+            model.predict,
+            [_spec((dt,)), _spec((b, dt))],
+            sem,
+        ),
+        (
+            "loss_eval",
+            model.loss_eval,
+            [_spec((dt,)), _spec((b, dt)), _spec((b,))],
+            sem,
+        ),
+        (
+            "fused_train_sign_concat",
+            model.fused_train_sign_concat,
+            [
+                _spec((dt,)),
+                _spec((b, n)),
+                _spec((dn, n)),
+                _spec((b, dc)),
+                _spec((b,)),
+                _spec((1,)),
+            ],
+            sem,
+        ),
+        (
+            "fused_predict_sign_concat",
+            model.fused_predict_sign_concat,
+            [_spec((dt,)), _spec((b, n)), _spec((dn, n)), _spec((b, dc))],
+            sem,
+        ),
+        (
+            "mlp_train_step",
+            model.mlp_train_step,
+            mlp_specs + [_spec((b, n)), _spec((b, dc)), _spec((b,)), _spec((1,))],
+            sem,
+        ),
+        (
+            "mlp_predict",
+            model.mlp_predict,
+            mlp_specs + [_spec((b, n)), _spec((b, dc))],
+            sem,
+        ),
+    ]
+
+
+def lower_all(out_dir: str, profile_names: list[str]) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"artifacts": {}, "mlp_widths": list(model.MLP_WIDTHS)}
+    for pname in profile_names:
+        prof = PROFILES[pname]
+        for fname, fn, args, sem in build_specs(prof):
+            art_name = f"{fname}__{pname}"
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            fpath = f"{art_name}.hlo.txt"
+            with open(os.path.join(out_dir, fpath), "w") as f:
+                f.write(text)
+            out_aval = lowered.out_info
+            outs = [
+                {"shape": list(o.shape), "dtype": np.dtype(o.dtype).name}
+                for o in jax.tree_util.tree_leaves(out_aval)
+            ]
+            manifest["artifacts"][art_name] = {
+                "file": fpath,
+                "fn": fname,
+                "profile": pname,
+                "inputs": [
+                    {"shape": list(a.shape), "dtype": np.dtype(a.dtype).name}
+                    for a in args
+                ],
+                "outputs": outs,
+                "params": sem,
+            }
+            print(f"  {art_name}: {len(text)} chars, {len(args)} inputs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--profiles",
+        nargs="+",
+        default=["small", "default"],
+        choices=sorted(PROFILES),
+    )
+    args = ap.parse_args()
+    manifest = lower_all(args.out, args.profiles)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

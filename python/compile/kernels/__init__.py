@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for the streaming-HDC stack.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); each has a pure-jnp oracle in :mod:`ref` that pytest
+checks against. Layer 2 (:mod:`compile.model`) composes these into the
+jitted functions that ``compile.aot`` lowers to HLO text for the rust
+runtime.
+"""
+
+from . import logistic, projection, ref, sjlt  # noqa: F401

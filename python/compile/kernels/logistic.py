@@ -1,0 +1,135 @@
+"""Pallas kernels: fused logistic-regression SGD step (paper Sec. 7.1).
+
+The paper trains a logistic regression over the HD encoding with
+mini-batch SGD; its FPGA pipeline (Fig. 1c, Table 2) splits the update
+into a score pass ``theta . phi(x)`` and a gradient pass
+``(y - sigma(theta . phi)) phi``, both partitioned over the embedding
+dimension. We mirror that structure with two D-blocked Pallas kernels:
+
+  * ``matvec``  — z = phi @ theta, grid over D blocks, accumulating the
+                  (B,) partial scores across grid steps (the sequential
+                  grid is the TPU analog of the FPGA's pipelined
+                  partition reduction).
+  * ``update``  — theta' = theta + lr/B * phi^T err, grid over D blocks;
+                  each step owns one theta block, so the write pattern is
+                  disjoint and needs no accumulation.
+
+The sigmoid / loss glue between the two runs as plain jnp inside the same
+jitted graph and fuses into the surrounding HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .projection import effective_block
+
+
+def _matvec_kernel(phi_ref, theta_ref, o_ref):
+    """Accumulate one D-block's contribution to the scores."""
+    partial = jax.lax.dot_general(
+        phi_ref[...],
+        theta_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (B,)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def matvec(phi, theta, *, block_d: int | None = None):
+    """z = phi @ theta with a D-blocked accumulating grid.
+
+    Args:
+      phi:   (B, D) float32 encoded batch.
+      theta: (D,) float32 parameters.
+
+    Returns:
+      (B,) float32 scores.
+    """
+    b, dim = phi.shape
+    assert theta.shape == (dim,)
+    bd = block_d or effective_block(dim)
+    assert dim % bd == 0
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(dim // bd,),
+        in_specs=[
+            pl.BlockSpec((b, bd), lambda i: (0, i)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(phi, theta)
+
+
+def _update_kernel(theta_ref, phi_ref, err_ref, lr_ref, o_ref):
+    """theta block += lr/B * phi_block^T err  (disjoint writes per step)."""
+    phi = phi_ref[...]  # (B, BLOCK_D)
+    err = err_ref[...]  # (B,)
+    grad = jax.lax.dot_general(
+        err,
+        phi,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BLOCK_D,)
+    b = phi.shape[0]
+    o_ref[...] = theta_ref[...] + lr_ref[0] * grad / b
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def update(theta, phi, err, lr, *, block_d: int | None = None):
+    """theta' = theta + lr/B * phi^T err.
+
+    Args:
+      theta: (D,) float32.
+      phi:   (B, D) float32 encoded batch.
+      err:   (B,) float32 residuals (y - sigma(z)).
+      lr:    (1,) float32 learning rate.
+
+    Returns:
+      (D,) float32 updated parameters.
+    """
+    b, dim = phi.shape
+    assert theta.shape == (dim,) and err.shape == (b,)
+    bd = block_d or effective_block(dim)
+    assert dim % bd == 0
+    return pl.pallas_call(
+        _update_kernel,
+        grid=(dim // bd,),
+        in_specs=[
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((b, bd), lambda i: (0, i)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dim,), jnp.float32),
+        interpret=True,
+    )(theta, phi, err, lr)
+
+
+def train_step(theta, phi, y, lr, *, block_d: int | None = None):
+    """Fused SGD step: returns (theta', mean NLL loss).
+
+    Composes the two kernels with jnp glue; lowered as one HLO module by
+    model.py so rust sees a single executable.
+    """
+    z = matvec(phi, theta, block_d=block_d)
+    p = 1.0 / (1.0 + jnp.exp(-z))
+    err = y.astype(jnp.float32) - p
+    loss = jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+    theta_new = update(theta, phi, err, lr, block_d=block_d)
+    return theta_new, loss

@@ -1,0 +1,110 @@
+"""Pallas kernel: blocked random-projection encoding (paper Eq. 4 / Sec 5.3).
+
+The paper's FPGA design (Sec. 6.1) partitions the projection matrix Phi
+row-wise into p coarse partitions x R rows so that one row-block times the
+full input vector retires per cycle. The TPU-shaped analog is a Pallas
+grid over row-blocks of Phi: each grid step holds one ``(BLOCK_D, n)``
+tile of Phi in VMEM together with the whole ``(B, n)`` input batch (n is
+small — 13 numeric features for Criteo — so the batch always fits), and
+contracts it on the MXU. BlockSpec plays the role of the FPGA partition
+schedule; the HBM->VMEM pipeline replaces the BRAM banking.
+
+The optional nonlinearity q matches the paper:
+  * "sign"      — Eq. 4's signed projection, sign(0) := +1.
+  * "threshold" — Sec. 5.3's sparsification-by-thresholding (the paper's
+                  own FPGA substitution for top-k, which needs a sort).
+  * "none"      — raw z, used when composing with SJLT or for debugging.
+
+Run with interpret=True everywhere: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-block. On a real TPU this is the VMEM sizing knob: 512
+# keeps the Phi tile (512 x n f32) plus the batch well under VMEM budget
+# and is a multiple of the 128-lane MXU tile. On the CPU-PJRT artifact
+# path (interpret=True), every extra grid step becomes a while-loop
+# iteration with dynamic-slice traffic, so `make artifacts` can override
+# the block size (SHDC_BLOCK_D=0 means "whole array, one grid step" —
+# the §Perf setting for CPU executables).
+DEFAULT_BLOCK_D = int(os.environ.get("SHDC_BLOCK_D", "512") or "512")
+
+
+def effective_block(d: int) -> int:
+    """Resolve the block policy: 0 => whole-d single step."""
+    if DEFAULT_BLOCK_D <= 0:
+        return d
+    return pick_block_d(d, DEFAULT_BLOCK_D)
+
+
+def pick_block_d(d: int, preferred: int = DEFAULT_BLOCK_D) -> int:
+    """Largest divisor of d that is <= preferred (falls back to d)."""
+    if d <= preferred:
+        return d
+    for b in range(min(preferred, d), 0, -1):
+        if d % b == 0:
+            return b
+    return d
+
+
+def _project_kernel(x_ref, phi_ref, t_ref, o_ref, *, mode: str):
+    """One grid step: contract the (BLOCK_D, n) Phi tile with the batch."""
+    x = x_ref[...]  # (B, n)
+    phi = phi_ref[...]  # (BLOCK_D, n)
+    # MXU-shaped contraction; accumulate in f32 regardless of input dtype.
+    z = jax.lax.dot_general(
+        x,
+        phi,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (B, BLOCK_D)
+    if mode == "sign":
+        o_ref[...] = jnp.where(z >= 0, 1.0, -1.0).astype(jnp.float32)
+    elif mode == "threshold":
+        t = t_ref[0]
+        o_ref[...] = (jnp.abs(z) >= t).astype(jnp.float32)
+    else:
+        o_ref[...] = z
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_d"))
+def project(x, phi, threshold, *, mode: str = "sign", block_d: int | None = None):
+    """Encode a batch with a row-blocked random projection.
+
+    Args:
+      x:         (B, n) float batch.
+      phi:       (d, n) projection matrix.
+      threshold: (1,) float32 threshold (ignored unless mode="threshold";
+                 kept as a live input so one artifact serves all modes).
+      mode:      "sign" | "threshold" | "none".
+      block_d:   row-block size; must divide d. Default: pick_block_d(d).
+
+    Returns:
+      (B, d) float32 encoding.
+    """
+    b, n = x.shape
+    d, n2 = phi.shape
+    assert n == n2, f"x has {n} features but phi expects {n2}"
+    bd = block_d or effective_block(d)
+    assert d % bd == 0, f"block_d={bd} must divide d={d}"
+    grid = (d // bd,)
+    return pl.pallas_call(
+        functools.partial(_project_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, n), lambda i: (0, 0)),  # whole batch, every step
+            pl.BlockSpec((bd, n), lambda i: (i, 0)),  # i-th row-block of Phi
+            pl.BlockSpec((1,), lambda i: (0,)),  # threshold scalar
+        ],
+        out_specs=pl.BlockSpec((b, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=True,
+    )(x, phi, threshold)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has an exact (up to float error) reference
+implementation here. pytest asserts kernel == ref across shape/dtype/seed
+sweeps — this file is the correctness ground truth for Layer 1.
+
+The math mirrors the paper:
+  * ``project``          — Eq. 4, dense signed random projection
+                           ``phi(x) = q(x @ Phi^T)`` with q in
+                           {identity, sign, |.|>=t threshold}.
+  * ``sjlt``             — Eq. 5, sparse Johnson-Lindenstrauss transform,
+                           chunk c of the output is
+                           ``sum_j 1(eta_c(j)=i) sigma_c(j) x_j``.
+  * ``logistic_forward`` / ``logistic_update`` — Section 7.1's
+                           logistic-regression SGD step
+                           ``theta <- theta + lr/B * phi^T (y - sigma(z))``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def project(x, phi, mode: str = "none", threshold: float = 0.0):
+    """Random-projection encode a batch.
+
+    Args:
+      x:    (B, n) float batch.
+      phi:  (d, n) projection matrix (rows = receptive fields).
+      mode: "none" (raw z), "sign" (Eq. 4), or "threshold" (Section 5.3:
+            1 where |z| >= threshold else 0).
+      threshold: scalar t for mode="threshold".
+
+    Returns:
+      (B, d) float32 encoding.
+    """
+    z = x.astype(jnp.float32) @ phi.T.astype(jnp.float32)
+    if mode == "none":
+        return z
+    if mode == "sign":
+        # sign(0) := +1, matching the paper's "+1 if u >= 0".
+        return jnp.where(z >= 0, 1.0, -1.0).astype(jnp.float32)
+    if mode == "threshold":
+        return (jnp.abs(z) >= threshold).astype(jnp.float32)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def sjlt(x, eta, sigma, d: int):
+    """Sparse JL transform (Eq. 5), one chunk per hash pair.
+
+    Args:
+      x:     (B, n) float batch.
+      eta:   (k, n) int32, bucket index in [0, d/k) per (chunk, input coord).
+      sigma: (k, n) float32 in {+1, -1}.
+      d:     total output dimension; must be divisible by k.
+
+    Returns:
+      (B, d) float32: concatenation of the k chunk embeddings.
+    """
+    k, n = eta.shape
+    dk = d // k
+    chunks = []
+    for c in range(k):
+        onehot = (eta[c][:, None] == jnp.arange(dk)[None, :]).astype(jnp.float32)
+        chunks.append(x.astype(jnp.float32) @ (sigma[c][:, None] * onehot))
+    return jnp.concatenate(chunks, axis=1)
+
+
+def logistic_forward(theta, phi):
+    """Scores z = phi @ theta. theta: (D,), phi: (B, D) -> (B,)."""
+    return phi.astype(jnp.float32) @ theta.astype(jnp.float32)
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def logistic_loss(theta, phi, y):
+    """Mean negative log-likelihood; y in {0, 1}."""
+    z = logistic_forward(theta, phi)
+    return jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+
+
+def logistic_update(theta, phi, y, lr):
+    """One SGD step on the mean NLL. Returns (theta', mean_loss)."""
+    z = logistic_forward(theta, phi)
+    p = sigmoid(z)
+    err = y.astype(jnp.float32) - p  # (B,)
+    b = phi.shape[0]
+    grad = phi.astype(jnp.float32).T @ err / b  # (D,)
+    loss = jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+    return theta + lr * grad, loss

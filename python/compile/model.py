@@ -1,0 +1,182 @@
+"""Layer-2 JAX model: the dense-algebra half of the streaming-HDC paper.
+
+This module composes the Layer-1 Pallas kernels into the jitted functions
+the rust coordinator executes via PJRT:
+
+  * ``encode_project_{sign,threshold,none}`` — numeric encoding, Eq. 4 /
+    Sec. 5.3 (dense signed RP, thresholded sparse RP, raw projection).
+  * ``encode_sjlt``    — numeric encoding, Eq. 5.
+  * ``train_step``     — one logistic-regression SGD step over an encoded
+    batch (Sec. 7.1). theta is donated so PJRT updates in place.
+  * ``fused_train_sign_concat`` — the production hot path: numeric sign-RP
+    encode + concat with the (rust-produced) categorical embedding +
+    SGD step, one HLO module, one host round trip per batch.
+  * ``predict``        — scores for validation / AUC.
+  * ``loss_eval``      — mean NLL without update (early stopping, Fig 7B).
+  * ``mlp_train_step`` / ``mlp_predict`` — the paper's MLP numeric-encoder
+    baseline (Sec. 7.2.3: 512x256x64x16 hidden units), trained jointly
+    with the logistic head by jax.grad.
+
+Python never runs at serving/training time: ``compile.aot`` lowers these
+once to HLO text that rust loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import logistic as lkern
+from .kernels import projection as pkern
+from .kernels import sjlt as skern
+
+# The paper's MLP baseline: 4 hidden layers, 512x256x64x16 units.
+MLP_WIDTHS = (512, 256, 64, 16)
+
+
+# --------------------------------------------------------------------------
+# Numeric encoders
+# --------------------------------------------------------------------------
+
+
+def encode_project_sign(x, phi, threshold):
+    """Eq. 4: phi(x) = sign(Phi x). threshold is a live-but-unused input so
+    the three projection artifacts share a signature."""
+    return (pkern.project(x, phi, threshold, mode="sign"),)
+
+
+def encode_project_threshold(x, phi, threshold):
+    """Sec. 5.3: binary sparse codes, 1 where |Phi x| >= t."""
+    return (pkern.project(x, phi, threshold, mode="threshold"),)
+
+
+def encode_project_none(x, phi, threshold):
+    """Raw z = Phi x (composition building block)."""
+    return (pkern.project(x, phi, threshold, mode="none"),)
+
+
+def make_encode_sjlt(d: int):
+    """Eq. 5 encoder with output dim baked (shapes must be static for AOT)."""
+
+    def encode_sjlt(x, eta, sigma):
+        return (skern.sjlt(x, eta, sigma, d=d),)
+
+    return encode_sjlt
+
+
+# --------------------------------------------------------------------------
+# Logistic regression (Sec. 7.1)
+# --------------------------------------------------------------------------
+
+
+def train_step(theta, phi, y, lr):
+    """One minibatch SGD step. Returns (theta', mean NLL)."""
+    theta_new, loss = lkern.train_step(theta, phi, y, lr)
+    return theta_new, loss
+
+
+def predict(theta, phi):
+    """P(y=1) for an encoded batch."""
+    z = lkern.matvec(phi, theta)
+    return (1.0 / (1.0 + jnp.exp(-z)),)
+
+
+def loss_eval(theta, phi, y):
+    """Mean NLL without an update (validation / early stopping)."""
+    z = lkern.matvec(phi, theta)
+    return (jnp.mean(jnp.logaddexp(0.0, z) - y * z),)
+
+
+def fused_train_sign_concat(theta, x, phi_mat, phic, y, lr):
+    """Production hot path: encode numeric + bundle-by-concat + SGD step.
+
+    Args:
+      theta:   (d_num + d_cat,) parameters (donated).
+      x:       (B, n) numeric batch.
+      phi_mat: (d_num, n) projection matrix.
+      phic:    (B, d_cat) categorical embedding (rust scatters the Bloom
+               indices into this dense buffer).
+      y:       (B,) labels in {0, 1}.
+      lr:      (1,) learning rate.
+
+    Returns:
+      (theta', mean NLL).
+    """
+    zero = jnp.zeros((1,), jnp.float32)
+    phin = pkern.project(x, phi_mat, zero, mode="sign")  # (B, d_num)
+    phi = jnp.concatenate([phin, phic.astype(jnp.float32)], axis=1)
+    return lkern.train_step(theta, phi, y, lr)
+
+
+def fused_predict_sign_concat(theta, x, phi_mat, phic):
+    """Scores for the fused path (validation / test)."""
+    zero = jnp.zeros((1,), jnp.float32)
+    phin = pkern.project(x, phi_mat, zero, mode="sign")
+    phi = jnp.concatenate([phin, phic.astype(jnp.float32)], axis=1)
+    z = lkern.matvec(phi, theta)
+    return (1.0 / (1.0 + jnp.exp(-z)),)
+
+
+# --------------------------------------------------------------------------
+# MLP numeric-encoder baseline (Sec. 7.2.3)
+# --------------------------------------------------------------------------
+
+
+def mlp_init(n: int, d_cat: int, seed: int = 0):
+    """He-initialized MLP params + logistic head, as a flat tuple.
+
+    Layout: (W1, b1, W2, b2, W3, b3, W4, b4, theta) with
+    W_i: (fan_in, width_i), theta: (MLP_WIDTHS[-1] + d_cat,).
+    """
+    key = jax.random.PRNGKey(seed)
+    params = []
+    fan_in = n
+    for w in MLP_WIDTHS:
+        key, k1 = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / fan_in)
+        params.append(jax.random.normal(k1, (fan_in, w), jnp.float32) * scale)
+        params.append(jnp.zeros((w,), jnp.float32))
+        fan_in = w
+    params.append(jnp.zeros((MLP_WIDTHS[-1] + d_cat,), jnp.float32))
+    return tuple(params)
+
+
+def _mlp_forward(params, x, phic):
+    """ReLU MLP over numeric features, concat with categorical embedding."""
+    h = x.astype(jnp.float32)
+    for i in range(len(MLP_WIDTHS)):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = jnp.maximum(h @ w + b, 0.0)
+    theta = params[-1]
+    phi = jnp.concatenate([h, phic.astype(jnp.float32)], axis=1)
+    return phi @ theta
+
+
+def _mlp_loss(params, x, phic, y):
+    z = _mlp_forward(params, x, phic)
+    return jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+
+
+def mlp_train_step(*args):
+    """One joint SGD step on (MLP weights, logistic head).
+
+    Signature (flattened for AOT): W1,b1,...,W4,b4,theta, x, phic, y, lr
+    -> (W1',b1',...,theta', loss).
+    """
+    nparams = 2 * len(MLP_WIDTHS) + 1
+    params = tuple(args[:nparams])
+    x, phic, y, lr = args[nparams:]
+    loss, grads = jax.value_and_grad(_mlp_loss)(params, x, phic, y)
+    new = tuple(p - lr[0] * g for p, g in zip(params, grads))
+    return (*new, loss)
+
+
+def mlp_predict(*args):
+    """P(y=1) under the MLP-encoder model: W1,b1,...,theta, x, phic."""
+    nparams = 2 * len(MLP_WIDTHS) + 1
+    params = tuple(args[:nparams])
+    x, phic = args[nparams:]
+    z = _mlp_forward(params, x, phic)
+    return (1.0 / (1.0 + jnp.exp(-z)),)

@@ -1,0 +1,75 @@
+"""AOT lowering tests: HLO text artifacts + manifest integrity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.lower_all(out, ["small"])
+    return out, manifest
+
+
+class TestAot:
+    def test_all_expected_artifacts_present(self, lowered):
+        out, manifest = lowered
+        expected_fns = {
+            "encode_project_sign",
+            "encode_project_threshold",
+            "encode_project_none",
+            "encode_sjlt",
+            "train_step",
+            "predict",
+            "loss_eval",
+            "fused_train_sign_concat",
+            "fused_predict_sign_concat",
+            "mlp_train_step",
+            "mlp_predict",
+        }
+        got_fns = {a["fn"] for a in manifest["artifacts"].values()}
+        assert got_fns == expected_fns
+
+    def test_files_exist_and_are_hlo_text(self, lowered):
+        out, manifest = lowered
+        for name, art in manifest["artifacts"].items():
+            path = os.path.join(out, art["file"])
+            assert os.path.exists(path), name
+            text = open(path).read()
+            # HLO text, not a serialized proto: must start with the module
+            # header and contain an entry computation. (The 64-bit-id proto
+            # issue is exactly why we assert on *text* here.)
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_manifest_shapes_match_profile(self, lowered):
+        out, manifest = lowered
+        p = aot.PROFILES["small"]
+        ts = manifest["artifacts"]["train_step__small"]
+        assert ts["inputs"][0]["shape"] == [p.d_total]
+        assert ts["inputs"][1]["shape"] == [p.b, p.d_total]
+        assert ts["outputs"][0]["shape"] == [p.d_total]
+        fused = manifest["artifacts"]["fused_train_sign_concat__small"]
+        assert fused["inputs"][2]["shape"] == [p.d_num, p.n]
+        assert fused["inputs"][3]["shape"] == [p.b, p.d_cat]
+
+    def test_manifest_json_round_trips(self, lowered):
+        out, _ = lowered
+        m = json.load(open(os.path.join(out, "manifest.json")))
+        assert m["mlp_widths"] == list(model.MLP_WIDTHS)
+        for art in m["artifacts"].values():
+            for io in art["inputs"] + art["outputs"]:
+                assert io["dtype"] in ("float32", "int32")
+                assert all(isinstance(s, int) for s in io["shape"])
+
+    def test_mlp_input_count(self, lowered):
+        _, manifest = lowered
+        art = manifest["artifacts"]["mlp_train_step__small"]
+        # 9 params + x + phic + y + lr
+        assert len(art["inputs"]) == 2 * len(model.MLP_WIDTHS) + 1 + 4
+        # outputs: 9 updated params + loss
+        assert len(art["outputs"]) == 2 * len(model.MLP_WIDTHS) + 1 + 1

@@ -1,0 +1,221 @@
+"""Kernel-vs-oracle correctness: the CORE Layer-1 signal.
+
+Every Pallas kernel must match its pure-jnp reference in ``kernels.ref``
+bit-for-bit up to float tolerance, across a hypothesis sweep of shapes,
+block sizes, seeds and value ranges.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import logistic, projection, ref, sjlt
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _close(a, b):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# projection kernel
+# --------------------------------------------------------------------------
+
+
+class TestProjection:
+    @pytest.mark.parametrize("mode", ["none", "sign", "threshold"])
+    def test_matches_ref_basic(self, mode):
+        rng = _rng(1)
+        x = jnp.array(rng.normal(size=(16, 13)), jnp.float32)
+        phi = jnp.array(rng.normal(size=(128, 13)), jnp.float32)
+        t = jnp.array([0.7], jnp.float32)
+        got = projection.project(x, phi, t, mode=mode)
+        want = ref.project(x, phi, mode=mode, threshold=0.7)
+        _close(got, want)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        b=st.integers(1, 33),
+        n=st.integers(1, 40),
+        dblocks=st.integers(1, 6),
+        bd=st.sampled_from([1, 2, 8, 32, 128]),
+        mode=st.sampled_from(["none", "sign", "threshold"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_sweep(self, b, n, dblocks, bd, mode, seed):
+        d = dblocks * bd
+        rng = _rng(seed)
+        x = jnp.array(rng.normal(size=(b, n)) * 3, jnp.float32)
+        phi = jnp.array(rng.normal(size=(d, n)), jnp.float32)
+        t = jnp.array([abs(rng.normal())], jnp.float32)
+        got = projection.project(x, phi, t, mode=mode, block_d=bd)
+        want = ref.project(x, phi, mode=mode, threshold=float(t[0]))
+        _close(got, want)
+
+    def test_sign_of_zero_is_plus_one(self):
+        # Paper: q(u) = +1 if u >= 0 — exact-zero projections must be +1.
+        x = jnp.zeros((2, 4), jnp.float32)
+        phi = jnp.ones((8, 4), jnp.float32)
+        out = projection.project(x, phi, jnp.zeros((1,), jnp.float32), mode="sign")
+        assert np.all(np.asarray(out) == 1.0)
+
+    def test_threshold_output_is_binary(self):
+        rng = _rng(3)
+        x = jnp.array(rng.normal(size=(9, 13)), jnp.float32)
+        phi = jnp.array(rng.normal(size=(64, 13)), jnp.float32)
+        out = np.asarray(
+            projection.project(x, phi, jnp.array([0.5], jnp.float32), mode="threshold")
+        )
+        assert set(np.unique(out)) <= {0.0, 1.0}
+
+    def test_pick_block_d_divides(self):
+        for d in [1, 7, 128, 500, 512, 2048, 10000, 9999]:
+            bd = projection.pick_block_d(d)
+            assert d % bd == 0 and 1 <= bd <= max(d, 1)
+
+    def test_block_size_invariance(self):
+        rng = _rng(4)
+        x = jnp.array(rng.normal(size=(8, 13)), jnp.float32)
+        phi = jnp.array(rng.normal(size=(96, 13)), jnp.float32)
+        t = jnp.zeros((1,), jnp.float32)
+        full = projection.project(x, phi, t, mode="none", block_d=96)
+        for bd in [1, 2, 3, 4, 8, 16, 32, 48]:
+            _close(projection.project(x, phi, t, mode="none", block_d=bd), full)
+
+
+# --------------------------------------------------------------------------
+# SJLT kernel
+# --------------------------------------------------------------------------
+
+
+class TestSjlt:
+    def _case(self, b, n, k, dk, seed):
+        rng = _rng(seed)
+        x = jnp.array(rng.normal(size=(b, n)), jnp.float32)
+        eta = jnp.array(rng.integers(0, dk, size=(k, n)), jnp.int32)
+        sigma = jnp.array(rng.choice([-1.0, 1.0], size=(k, n)), jnp.float32)
+        return x, eta, sigma, k * dk
+
+    def test_matches_ref_basic(self):
+        x, eta, sigma, d = self._case(16, 13, 4, 32, 7)
+        _close(sjlt.sjlt(x, eta, sigma, d=d), ref.sjlt(x, eta, sigma, d))
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        b=st.integers(1, 20),
+        n=st.integers(1, 30),
+        k=st.integers(1, 6),
+        dk=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_sweep(self, b, n, k, dk, seed):
+        x, eta, sigma, d = self._case(b, n, k, dk, seed)
+        _close(sjlt.sjlt(x, eta, sigma, d=d), ref.sjlt(x, eta, sigma, d))
+
+    def test_norm_preservation_in_expectation(self):
+        # JL property: E[||phi(x)||^2] = k * ||x||^2 (each chunk preserves
+        # the norm in expectation). Check the empirical mean over draws.
+        rng = _rng(11)
+        n, k, dk, trials = 20, 4, 64, 200
+        x = rng.normal(size=(1, n)).astype(np.float32)
+        target = k * float((x**2).sum())
+        acc = 0.0
+        for i in range(trials):
+            eta = jnp.array(rng.integers(0, dk, size=(k, n)), jnp.int32)
+            sigma = jnp.array(rng.choice([-1.0, 1.0], size=(k, n)), jnp.float32)
+            e = np.asarray(sjlt.sjlt(jnp.array(x), eta, sigma, d=k * dk))
+            acc += float((e**2).sum())
+        assert abs(acc / trials - target) / target < 0.15
+
+    def test_single_coordinate_routing(self):
+        # x = e_j must land sign sigma_c(j) at bucket eta_c(j) of chunk c.
+        n, k, dk = 5, 3, 8
+        x = jnp.zeros((1, n), jnp.float32).at[0, 2].set(1.0)
+        eta = jnp.array([[0, 1, 5, 3, 4]] * k, jnp.int32)
+        sigma = jnp.array([[1, 1, -1, 1, 1]] * k, jnp.float32)
+        out = np.asarray(sjlt.sjlt(x, eta, sigma, d=k * dk)).reshape(k, dk)
+        for c in range(k):
+            want = np.zeros(dk)
+            want[5] = -1.0
+            np.testing.assert_array_equal(out[c], want)
+
+
+# --------------------------------------------------------------------------
+# logistic kernels
+# --------------------------------------------------------------------------
+
+
+class TestLogistic:
+    def _case(self, b, d, seed):
+        rng = _rng(seed)
+        theta = jnp.array(rng.normal(size=(d,)) * 0.1, jnp.float32)
+        phi = jnp.array(rng.normal(size=(b, d)), jnp.float32)
+        y = jnp.array(rng.integers(0, 2, size=(b,)), jnp.float32)
+        return theta, phi, y
+
+    def test_matvec_matches_ref(self):
+        theta, phi, _ = self._case(16, 96, 21)
+        _close(logistic.matvec(phi, theta), ref.logistic_forward(theta, phi))
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        b=st.integers(1, 24),
+        dblocks=st.integers(1, 5),
+        bd=st.sampled_from([1, 3, 16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matvec_sweep(self, b, dblocks, bd, seed):
+        theta, phi, _ = self._case(b, dblocks * bd, seed)
+        _close(
+            logistic.matvec(phi, theta, block_d=bd),
+            ref.logistic_forward(theta, phi),
+        )
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        b=st.integers(1, 24),
+        dblocks=st.integers(1, 5),
+        bd=st.sampled_from([1, 3, 16, 64]),
+        lr=st.floats(1e-4, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_train_step_sweep(self, b, dblocks, bd, lr, seed):
+        theta, phi, y = self._case(b, dblocks * bd, seed)
+        t_new, loss = logistic.train_step(
+            theta, phi, y, jnp.array([lr], jnp.float32), block_d=bd
+        )
+        t_ref, l_ref = ref.logistic_update(theta, phi, y, lr)
+        _close(t_new, t_ref)
+        np.testing.assert_allclose(float(loss), float(l_ref), rtol=1e-4, atol=1e-5)
+
+    def test_update_matches_manual_gradient(self):
+        theta, phi, y = self._case(8, 32, 33)
+        lr = jnp.array([0.3], jnp.float32)
+        z = np.asarray(phi) @ np.asarray(theta)
+        err = jnp.array(np.asarray(y) - 1 / (1 + np.exp(-z)), jnp.float32)
+        got = logistic.update(theta, phi, err, lr)
+        want = np.asarray(theta) + 0.3 * (np.asarray(phi).T @ np.asarray(err)) / 8
+        _close(got, want)
+
+    def test_loss_decreases_over_steps(self):
+        # SGD on a linearly-separable toy problem must reduce the NLL.
+        rng = _rng(5)
+        d, b = 64, 32
+        w_true = rng.normal(size=(d,))
+        theta = jnp.zeros((d,), jnp.float32)
+        lr = jnp.array([0.5], jnp.float32)
+        losses = []
+        for i in range(30):
+            phi = rng.normal(size=(b, d)).astype(np.float32)
+            y = (phi @ w_true > 0).astype(np.float32)
+            theta, loss = logistic.train_step(theta, jnp.array(phi), jnp.array(y), lr)
+            losses.append(float(loss))
+        assert np.mean(losses[-5:]) < 0.8 * np.mean(losses[:5])

@@ -1,0 +1,156 @@
+"""Layer-2 model tests: composition, gradients, and training behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestEncoders:
+    def test_encode_project_sign_shape_and_values(self):
+        rng = _rng(1)
+        x = jnp.array(rng.normal(size=(8, 13)), jnp.float32)
+        phi = jnp.array(rng.normal(size=(64, 13)), jnp.float32)
+        (out,) = model.encode_project_sign(x, phi, jnp.zeros((1,), jnp.float32))
+        assert out.shape == (8, 64)
+        assert set(np.unique(np.asarray(out))) <= {-1.0, 1.0}
+
+    def test_encode_project_threshold_sparsity_tunable(self):
+        # Larger threshold => sparser code (Sec. 5.3's knob).
+        rng = _rng(2)
+        x = jnp.array(rng.normal(size=(32, 13)), jnp.float32)
+        phi = jnp.array(rng.normal(size=(256, 13)) / np.sqrt(13), jnp.float32)
+        dens = []
+        for t in [0.5, 1.5, 2.5]:
+            (out,) = model.encode_project_threshold(
+                x, phi, jnp.array([t], jnp.float32)
+            )
+            dens.append(float(np.asarray(out).mean()))
+        assert dens[0] > dens[1] > dens[2]
+
+    def test_encode_sjlt_shape(self):
+        rng = _rng(3)
+        x = jnp.array(rng.normal(size=(8, 13)), jnp.float32)
+        eta = jnp.array(rng.integers(0, 16, size=(4, 13)), jnp.int32)
+        sig = jnp.array(rng.choice([-1.0, 1.0], size=(4, 13)), jnp.float32)
+        (out,) = model.make_encode_sjlt(64)(x, eta, sig)
+        assert out.shape == (8, 64)
+
+
+class TestFusedPath:
+    def test_fused_equals_manual_composition(self):
+        rng = _rng(4)
+        b, n, dn, dc = 8, 13, 64, 96
+        theta = jnp.array(rng.normal(size=(dn + dc,)) * 0.1, jnp.float32)
+        x = jnp.array(rng.normal(size=(b, n)), jnp.float32)
+        phim = jnp.array(rng.normal(size=(dn, n)), jnp.float32)
+        phic = jnp.array(rng.integers(0, 2, size=(b, dc)), jnp.float32)
+        y = jnp.array(rng.integers(0, 2, size=(b,)), jnp.float32)
+        lr = jnp.array([0.2], jnp.float32)
+
+        t_fused, l_fused = model.fused_train_sign_concat(theta, x, phim, phic, y, lr)
+
+        phin = ref.project(x, phim, mode="sign")
+        phi = jnp.concatenate([phin, phic], axis=1)
+        t_ref, l_ref = ref.logistic_update(theta, phi, y, 0.2)
+        np.testing.assert_allclose(np.asarray(t_fused), np.asarray(t_ref), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(l_fused), float(l_ref), rtol=1e-5)
+
+    def test_fused_predict_in_unit_interval(self):
+        rng = _rng(5)
+        b, n, dn, dc = 8, 13, 64, 96
+        theta = jnp.array(rng.normal(size=(dn + dc,)), jnp.float32)
+        x = jnp.array(rng.normal(size=(b, n)), jnp.float32)
+        phim = jnp.array(rng.normal(size=(dn, n)), jnp.float32)
+        phic = jnp.array(rng.integers(0, 2, size=(b, dc)), jnp.float32)
+        (p,) = model.fused_predict_sign_concat(theta, x, phim, phic)
+        p = np.asarray(p)
+        assert p.shape == (b,) and np.all(p > 0) and np.all(p < 1)
+
+
+class TestTrainEval:
+    def test_loss_eval_matches_ref(self):
+        rng = _rng(6)
+        theta = jnp.array(rng.normal(size=(64,)) * 0.1, jnp.float32)
+        phi = jnp.array(rng.normal(size=(16, 64)), jnp.float32)
+        y = jnp.array(rng.integers(0, 2, size=(16,)), jnp.float32)
+        (got,) = model.loss_eval(theta, phi, y)
+        want = ref.logistic_loss(theta, phi, y)
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+    def test_predict_sigmoid_of_scores(self):
+        rng = _rng(7)
+        theta = jnp.array(rng.normal(size=(64,)), jnp.float32)
+        phi = jnp.array(rng.normal(size=(16, 64)), jnp.float32)
+        (p,) = model.predict(theta, phi)
+        z = np.asarray(phi) @ np.asarray(theta)
+        np.testing.assert_allclose(np.asarray(p), 1 / (1 + np.exp(-z)), rtol=1e-5)
+
+
+class TestMlp:
+    def test_init_shapes(self):
+        params = model.mlp_init(13, 96)
+        assert params[0].shape == (13, 512)
+        assert params[-1].shape == (16 + 96,)
+        assert len(params) == 2 * len(model.MLP_WIDTHS) + 1
+
+    def test_grad_matches_finite_difference(self):
+        # Spot-check the AOT'd analytic gradient against central differences
+        # on a few coordinates of W1 and theta.
+        rng = _rng(8)
+        n, dc, b = 5, 7, 6
+        params = tuple(
+            jnp.array(rng.normal(size=p.shape) * 0.3, jnp.float32)
+            for p in model.mlp_init(n, dc, seed=1)
+        )
+        x = jnp.array(rng.normal(size=(b, n)), jnp.float32)
+        phic = jnp.array(rng.integers(0, 2, size=(b, dc)), jnp.float32)
+        y = jnp.array(rng.integers(0, 2, size=(b,)), jnp.float32)
+
+        loss_fn = lambda ps: model._mlp_loss(ps, x, phic, y)
+        grads = jax.grad(loss_fn)(params)
+
+        eps = 1e-3
+        for pi, coords in [(0, [(0, 0), (2, 3)]), (len(params) - 1, [(0,), (3,)])]:
+            for c in coords:
+                up = [jnp.array(p) for p in params]
+                dn = [jnp.array(p) for p in params]
+                up[pi] = up[pi].at[c].add(eps)
+                dn[pi] = dn[pi].at[c].add(-eps)
+                fd = (loss_fn(tuple(up)) - loss_fn(tuple(dn))) / (2 * eps)
+                np.testing.assert_allclose(
+                    float(grads[pi][c]), float(fd), rtol=5e-2, atol=5e-4
+                )
+
+    def test_train_step_reduces_loss(self):
+        rng = _rng(9)
+        n, dc, b = 8, 16, 32
+        params = model.mlp_init(n, dc, seed=2)
+        lr = jnp.array([0.05], jnp.float32)
+        w_num = rng.normal(size=(n,))
+        losses = []
+        for i in range(40):
+            x = rng.normal(size=(b, n)).astype(np.float32)
+            phic = rng.integers(0, 2, size=(b, dc)).astype(np.float32)
+            y = (x @ w_num > 0).astype(np.float32)
+            out = model.mlp_train_step(*params, jnp.array(x), jnp.array(phic), jnp.array(y), lr)
+            params, loss = out[:-1], out[-1]
+            losses.append(float(loss))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+    def test_predict_range(self):
+        rng = _rng(10)
+        n, dc, b = 6, 10, 4
+        params = model.mlp_init(n, dc, seed=3)
+        x = jnp.array(rng.normal(size=(b, n)), jnp.float32)
+        phic = jnp.array(rng.integers(0, 2, size=(b, dc)), jnp.float32)
+        (p,) = model.mlp_predict(*params, x, phic)
+        p = np.asarray(p)
+        assert p.shape == (b,) and np.all((p >= 0) & (p <= 1))

@@ -1,0 +1,44 @@
+//! Microbenchmarks for the hashing substrate — the innermost hot path of
+//! the paper's streaming encoders (a Bloom encode is s*k of these).
+
+use shdc::hash::{murmur3_u64, IndexHash, MurmurHash, PolyHash};
+use shdc::util::bench::Harness;
+use shdc::util::rng::Rng;
+
+fn main() {
+    let mut h = Harness::new("hash_micro");
+    let mut rng = Rng::new(1);
+
+    let mut key = 0u64;
+    h.bench("murmur3_u64 single", || {
+        key = key.wrapping_add(1);
+        murmur3_u64(key, 0x9747b28c)
+    });
+    h.note_throughput(1.0, "hashes");
+
+    let mh = MurmurHash::new(42);
+    h.bench("murmur index d=10000", || mh.index(key.wrapping_add(7), 10_000));
+
+    for p in [2usize, 8, 52] {
+        let ph = PolyHash::new(p, &mut rng);
+        h.bench(&format!("poly({p}-indep) index d=10000"), || {
+            ph.index(key.wrapping_add(3), 10_000)
+        });
+    }
+
+    // A full symbol set: 26 symbols x 4 hashes (the per-record cost).
+    let mhs = MurmurHash::family(4, &mut rng);
+    let symbols: Vec<u64> = (0..26).collect();
+    let mut sink = 0u64;
+    h.bench("26 symbols x k=4 murmur (per record)", || {
+        for &s in &symbols {
+            for f in &mhs {
+                sink = sink.wrapping_add(f.index(s, 10_000));
+            }
+        }
+        sink
+    });
+    h.note_throughput(104.0, "hashes");
+
+    h.finish();
+}

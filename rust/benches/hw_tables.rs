@@ -1,0 +1,54 @@
+//! Hardware-model benchmarks: regenerate Tables 2-4 data and sweep the
+//! simulators across the design space (the ablation surface DESIGN.md
+//! calls out: partitions p, row-unroll R, dimension d).
+
+use shdc::encoding::BundleMethod;
+use shdc::hw::fpga::{self, FpgaConfig};
+use shdc::hw::pim::{self, PimWorkload};
+use shdc::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::new("hw_tables");
+
+    // The simulators themselves are cheap; benchmark to keep them honest.
+    h.bench("fpga::table2 (4 configs)", fpga::table2);
+    h.bench("pim::simulate (paper full)", || {
+        pim::simulate(&PimWorkload::paper(true))
+    });
+
+    println!("\n  FPGA ablation: throughput vs (p, R) at d=10k OR:");
+    for p in [2usize, 5, 10] {
+        for r in [32usize, 64, 128] {
+            let mut cfg = FpgaConfig::paper(BundleMethod::ThresholdedSum, false);
+            cfg.p = p;
+            cfg.r = r;
+            let rep = fpga::simulate(&cfg);
+            println!(
+                "    p={p:<3} R={r:<4} -> {:>8.2} M/s  (DSP {:>4.1}%)",
+                rep.throughput / 1e6,
+                rep.utilization.dsps * 100.0
+            );
+        }
+    }
+
+    println!("\n  FPGA ablation: throughput vs d (OR config):");
+    for d in [2_000usize, 10_000, 20_000, 50_000] {
+        let mut cfg = FpgaConfig::paper(BundleMethod::ThresholdedSum, false);
+        cfg.d = d;
+        let rep = fpga::simulate(&cfg);
+        println!("    d={d:<6} -> {:>8.2} M/s", rep.throughput / 1e6);
+    }
+
+    println!("\n  PIM ablation: throughput vs d (full workload):");
+    for d in [2_000usize, 10_000, 20_000, 50_000] {
+        let rep = pim::simulate(&PimWorkload { d, ..PimWorkload::paper(true) });
+        println!(
+            "    d={d:<6} -> {:>8.2} M/s  ({} + {} xbars/input)",
+            rep.throughput / 1e6,
+            rep.numeric_xbars.unwrap_or(0),
+            rep.cat_xbars
+        );
+    }
+
+    h.finish();
+}

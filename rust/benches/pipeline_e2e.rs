@@ -1,0 +1,79 @@
+//! End-to-end pipeline benchmarks: streaming encode throughput under the
+//! coordinator (worker scaling, backpressure) and full encode+train
+//! throughput for both trainer paths (the Fig. 13 CPU bars).
+
+use shdc::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::data::SyntheticStream;
+use shdc::encoding::{BundleMethod, Encoding};
+use shdc::model::LogisticModel;
+use shdc::util::bench::Harness;
+
+fn encoder(no_count: bool) -> EncoderCfg {
+    EncoderCfg {
+        cat: CatCfg::Bloom { d: 10_000, k: 4 },
+        num: if no_count { NumCfg::None } else { NumCfg::DenseSign { d: 10_000 } },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 3,
+    }
+}
+
+fn pipeline_throughput(workers: usize, records: u64, no_count: bool, train: bool) -> f64 {
+    let data = SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(3) };
+    let cfg = encoder(no_count);
+    let mut model = LogisticModel::new(cfg.out_dim());
+    let stream = SyntheticStream::new(data);
+    let t0 = std::time::Instant::now();
+    run_pipeline(
+        stream,
+        &cfg,
+        &CoordinatorCfg {
+            batch_size: 256,
+            n_workers: workers,
+            max_records: Some(records),
+            ..Default::default()
+        },
+        |batch| {
+            if train {
+                let pairs: Vec<(Encoding, bool)> = batch
+                    .encodings
+                    .into_iter()
+                    .zip(batch.labels.iter().copied())
+                    .collect();
+                model.sgd_step(&pairs, 0.3);
+            }
+            true
+        },
+    );
+    records as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let h = Harness::new("pipeline_e2e");
+    let records: u64 = std::env::var("BENCH_RECORDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000);
+
+    println!("  (one-shot wall-clock measurements, {records} records each)");
+    println!("\n  encode-only worker scaling (bloom 10k/4 + dense RP 10k, No-Count=false):");
+    let base = pipeline_throughput(1, records, false, false);
+    println!("    1 worker : {base:>12.0} rec/s");
+    for w in [2usize, 4, 8] {
+        let tp = pipeline_throughput(w, records, false, false);
+        println!("    {w} workers: {tp:>12.0} rec/s  ({:.2}x)", tp / base);
+    }
+
+    println!("\n  encode-only No-Count (categorical only):");
+    let nc = pipeline_throughput(4, records * 4, true, false);
+    println!("    4 workers: {nc:>12.0} rec/s");
+
+    println!("\n  encode + sparse-SGD train (Fig. 13 CPU bar, concat):");
+    let tr = pipeline_throughput(4, records, false, true);
+    println!("    4 workers: {tr:>12.0} rec/s");
+    let trnc = pipeline_throughput(4, records * 2, true, true);
+    println!("    4 workers (No-Count): {trnc:>12.0} rec/s");
+
+    h.finish();
+}

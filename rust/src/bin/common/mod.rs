@@ -1,0 +1,97 @@
+//! Shared plumbing for the per-table/figure report binaries.
+//!
+//! Every binary prints a self-describing header, the paper's reference
+//! values where applicable, and our measured/simulated values, so the
+//! outputs in EXPERIMENTS.md read as paper-vs-measured tables. Scale
+//! knobs come from env vars so `cargo bench`/CI stay fast:
+//! `SHDC_SCALE=full` runs paper-scale sweeps.
+
+// Each report binary uses the subset it needs.
+#![allow(dead_code)]
+
+use shdc::coordinator::EncoderCfg;
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::pipeline::{train, TrainBackend, TrainCfg, TrainReport};
+
+/// true => slower, closer-to-paper-scale sweeps.
+pub fn full_scale() -> bool {
+    std::env::var("SHDC_SCALE").map(|v| v == "full").unwrap_or(false)
+}
+
+pub fn header(id: &str, title: &str) {
+    println!("=======================================================================");
+    println!("{id}: {title}");
+    println!("=======================================================================");
+}
+
+/// The standard sweep workload: planted Criteo-like stream at moderate
+/// alphabet, sized so a RustSgd run finishes in seconds in release mode.
+pub fn sweep_data(seed: u64) -> SyntheticConfig {
+    SyntheticConfig {
+        alphabet_size: if full_scale() { 5_000_000 } else { 200_000 },
+        noise: 0.6,
+        ..SyntheticConfig::sampled(seed)
+    }
+}
+
+/// Per-method learning rate (the paper tunes hyper-parameters on the
+/// validation set per configuration): encoders that bundle by sum have
+/// O(s)-magnitude coordinates and need a much smaller step than binary
+/// sparse codes.
+pub fn lr_for(encoder: &EncoderCfg) -> f32 {
+    use shdc::coordinator::{CatCfg, NumCfg};
+    // Sum-bundled dense categorical codes have O(s)-magnitude coords.
+    if matches!(
+        encoder.cat,
+        CatCfg::DenseHash { .. } | CatCfg::Codebook { .. } | CatCfg::Permutation { .. }
+    ) {
+        return 0.005;
+    }
+    // Dense ±1 numeric codes put unit mass on every coordinate.
+    if matches!(
+        encoder.num,
+        NumCfg::DenseSign { .. } | NumCfg::RelaxedSjlt { quantize: true, .. }
+    ) {
+        return 0.05;
+    }
+    // Sparse binary paths tolerate (and need) a large step.
+    0.5
+}
+
+/// Train one encoder config on the sweep workload and return the report.
+pub fn sweep_train(encoder: EncoderCfg, seed: u64) -> TrainReport {
+    let data = sweep_data(seed);
+    let (train_records, val, test) = if full_scale() {
+        (600_000, 20_000, 100_000)
+    } else {
+        (60_000, 4_000, 20_000)
+    };
+    let lr = lr_for(&encoder);
+    let cfg = TrainCfg {
+        encoder,
+        backend: TrainBackend::RustSgd,
+        lr,
+        batch_size: 256,
+        n_workers: 4,
+        train_records,
+        val_records: val,
+        test_records: test,
+        validate_every: (train_records / 8).max(1),
+        patience: 3,
+        auc_chunk: test / 8,
+        seed,
+    };
+    train(&cfg, &data).expect("training failed")
+}
+
+pub fn print_auc_row(label: &str, report: &TrainReport) {
+    println!(
+        "  {:<28} AUC {}  (gap {:+.4}, params {}, {} records, {:.1}s)",
+        label,
+        report.auc_box().row(),
+        report.train_val_gap,
+        report.trainable_params,
+        report.records_trained,
+        report.wall.as_secs_f64(),
+    );
+}

@@ -1,0 +1,33 @@
+//! Fig. 10: bundling methods (concat / sum / thresholded-sum "OR") —
+//! paper finds all three nearly equivalent in AUC, with OR preferred
+//! computationally. Cat = Bloom (k=4), num = sparse RP (Eq. 6).
+
+mod common;
+
+use shdc::coordinator::{CatCfg, EncoderCfg, NumCfg};
+use shdc::encoding::BundleMethod;
+
+fn main() {
+    common::header("Fig 10", "bundling methods: concat vs sum vs thresholded-sum (OR)");
+    let seed = 31;
+    let d = if common::full_scale() { 10_000 } else { 4_096 };
+    let k_sparse = if common::full_scale() { 100 } else { 64 };
+    println!("\n(cat = bloom d={d} k=4; num = sparse RP d={d} k={k_sparse})\n");
+    for (label, bundle) in [
+        ("Concat", BundleMethod::Concat),
+        ("Sum", BundleMethod::Sum),
+        ("OR (thresholded sum)", BundleMethod::ThresholdedSum),
+    ] {
+        let cfg = EncoderCfg {
+            cat: CatCfg::Bloom { d, k: 4 },
+            num: NumCfg::SparseTopK { d, k: k_sparse },
+            bundle,
+            n_numeric: 13,
+            seed,
+        };
+        let rep = common::sweep_train(cfg, seed);
+        common::print_auc_row(label, &rep);
+    }
+    println!("\nshape check (paper): all three within noise of each other;");
+    println!("OR keeps the embedding binary and the dimension unchanged.");
+}

@@ -1,0 +1,52 @@
+//! Fig. 12: encoding throughput and throughput/Watt — CPU vs FPGA vs PIM,
+//! with and without the numeric branch (No-Count).
+//!
+//! CPU bars are *measured* on this machine with this crate's encoders;
+//! FPGA/PIM bars come from the cycle models. Ratios are reported against
+//! both our measured CPU and the paper's reference CPU (back-derived
+//! from its published speedups) so absolute-hardware differences stay
+//! visible. Our CPU wattage is assumed at the paper's measured 88 W.
+
+mod common;
+
+use shdc::encoding::BundleMethod;
+use shdc::hw::cpu::{self, PAPER_CPU_FULL, PAPER_CPU_NOCOUNT, PAPER_CPU_WATTS};
+use shdc::hw::fpga::{self, FpgaConfig};
+use shdc::hw::pim::{self, PimWorkload};
+use shdc::hw::{comparison_table, PlatformRow};
+
+fn main() {
+    common::header("Fig 12", "encoding throughput and throughput/Watt: CPU vs FPGA vs PIM");
+    let records = if common::full_scale() { 20_000 } else { 3_000 };
+
+    for no_count in [false, true] {
+        let title = if no_count { "No-Count (categorical only)" } else { "numeric + categorical" };
+        println!("\n--- {title} ---");
+        let cpu_m = cpu::measure_encode(&cpu::paper_workload(no_count, 5), records, 5);
+        // FPGA encode-only: bottleneck encode stage at the OR config.
+        let f = fpga::simulate(&FpgaConfig::paper(BundleMethod::ThresholdedSum, no_count));
+        let enc_cycles = f.cycles.cat_encode + f.cycles.num_encode.unwrap_or(0);
+        let fpga_tp = f.config.freq_mhz * 1e6 / (enc_cycles as f64 * 1.12);
+        let p = pim::simulate(&PimWorkload::paper(!no_count));
+        let rows = vec![
+            PlatformRow {
+                platform: "CPU (ours)".into(),
+                throughput: cpu_m.records_per_sec,
+                watts: PAPER_CPU_WATTS,
+            },
+            PlatformRow { platform: "FPGA (sim)".into(), throughput: fpga_tp, watts: f.power_watts },
+            PlatformRow { platform: "PIM (sim)".into(), throughput: p.throughput, watts: p.chip_power_w },
+        ];
+        print!("{}", comparison_table(&rows));
+        let paper_cpu = if no_count { PAPER_CPU_NOCOUNT } else { PAPER_CPU_FULL };
+        println!(
+            "paper-reference ratios (paper CPU ~{:.0}/s @ {:.0} W): FPGA {:.0}x, PIM {:.0}x   (paper: {} / {})",
+            paper_cpu,
+            PAPER_CPU_WATTS,
+            fpga_tp / paper_cpu,
+            p.throughput / paper_cpu,
+            if no_count { "11x" } else { "81x" },
+            if no_count { "414x" } else { "1177x" },
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Fig. 9: numeric-encoder comparison — dense signed RP, sparse RP
+//! (top-k), SJLT at several densities p (sign-quantized), the MLP
+//! baseline (via the PJRT `mlp_train_step` artifact), and No-Count.
+//! Categorical branch fixed to Bloom (k=4).
+
+mod common;
+
+use shdc::coordinator::{CatCfg, EncoderCfg, NumCfg};
+use shdc::encoding::BundleMethod;
+use shdc::model::{auc, log_loss};
+use shdc::runtime::{self, HostTensor};
+use shdc::util::rng::Rng;
+
+fn mk(num: NumCfg, seed: u64, d_cat: usize) -> EncoderCfg {
+    EncoderCfg {
+        cat: CatCfg::Bloom { d: d_cat, k: 4 },
+        num,
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed,
+    }
+}
+
+fn main() {
+    common::header("Fig 9", "numeric encoding methods (cat = bloom, k=4, concat bundling)");
+    let seed = 21;
+    let (d_num, d_cat) = if common::full_scale() { (10_000, 10_000) } else { (2_048, 8_000) };
+
+    println!();
+    for (label, num) in [
+        ("Dense (sign RP)", NumCfg::DenseSign { d: d_num }),
+        ("Sparse (k=100)", NumCfg::SparseTopK { d: d_num, k: 100 .min(d_num / 4) }),
+        ("Sparse (k=d/10)", NumCfg::SparseTopK { d: d_num, k: d_num / 10 }),
+        ("SJLT (p=0.1)", NumCfg::RelaxedSjlt { d: d_num, p: 0.1, quantize: true }),
+        ("SJLT (p=0.4)", NumCfg::RelaxedSjlt { d: d_num, p: 0.4, quantize: true }),
+        ("SJLT (p=0.8)", NumCfg::RelaxedSjlt { d: d_num, p: 0.8, quantize: true }),
+        ("SJLT structured", NumCfg::Sjlt { d: d_num, k: 4 }),
+        ("No-Count", NumCfg::None),
+    ] {
+        let rep = common::sweep_train(mk(num, seed, d_cat), seed);
+        common::print_auc_row(label, &rep);
+    }
+
+    // MLP baseline through the PJRT artifact (Sec. 7.2.3: 512x256x64x16).
+    match run_mlp(seed) {
+        Ok((auc_med, loss, params)) => println!(
+            "  {:<28} AUC med={auc_med:.4} (val loss {loss:.4}, {params} params, PJRT mlp_train_step)",
+            "MLP (PJRT artifact)"
+        ),
+        Err(e) => println!("  MLP (PJRT artifact): skipped — {e}"),
+    }
+    println!("\nshape check (paper): MLP ~ SJLT(p=0.4) best; dense RP slightly behind;");
+    println!("sparse RP within ~0.005-0.007 AUC of SJLT; No-Count clearly worst.");
+}
+
+/// Train the MLP numeric-encoder baseline with the AOT artifact, using
+/// the same synthetic workload as the rust sweeps (small profile shapes).
+fn run_mlp(seed: u64) -> anyhow::Result<(f64, f64, usize)> {
+    use shdc::data::{RecordStream, SyntheticStream};
+
+    let mut rt = runtime::load_default()?;
+    let profile = "small"; // b=32, d_cat=512 — fast enough for the report
+    let train_art = format!("mlp_train_step__{profile}");
+    let pred_art = format!("mlp_predict__{profile}");
+    let spec = rt.spec(&train_art)?.clone();
+    let b = spec.param("b")?;
+    let n = spec.param("n")?;
+    let d_cat = spec.param("d_cat")?;
+
+    // Parameter shapes from the manifest (everything before x, phic, y, lr).
+    let par_specs: Vec<_> = spec.inputs[..spec.inputs.len() - 4].to_vec();
+    let mut rng = Rng::new(seed);
+    // He init for weight matrices, zeros for biases and the head.
+    let mut params: Vec<Vec<f32>> = par_specs
+        .iter()
+        .map(|s| {
+            let scale = if s.shape.len() == 2 {
+                (2.0 / s.shape[0] as f32).sqrt()
+            } else {
+                0.0
+            };
+            (0..s.elements()).map(|_| rng.normal_f32() * scale).collect()
+        })
+        .collect();
+
+    let data = common::sweep_data(seed);
+    let enc_cfg = mk(NumCfg::None, seed, d_cat);
+    let mut enc = enc_cfg.build();
+    let mut stream = SyntheticStream::new(data.clone());
+
+    let steps = if common::full_scale() { 800 } else { 250 };
+    let lr = HostTensor::scalar_f32(0.05);
+    let mut xbuf = vec![0.0f32; b * n];
+    let mut cbuf = vec![0.0f32; b * d_cat];
+    let mut ybuf = vec![0.0f32; b];
+    for _ in 0..steps {
+        for i in 0..b {
+            let r = stream.next_record().unwrap();
+            xbuf[i * n..(i + 1) * n].copy_from_slice(&r.numeric);
+            ybuf[i] = if r.label { 1.0 } else { 0.0 };
+            let code = enc.encode_categorical(&r).unwrap();
+            cbuf[i * d_cat..(i + 1) * d_cat].fill(0.0);
+            code.scatter_into(&mut cbuf[i * d_cat..(i + 1) * d_cat]);
+        }
+        let mut inputs: Vec<HostTensor> = params
+            .iter()
+            .zip(&par_specs)
+            .map(|(p, s)| HostTensor::f32(p.clone(), &s.shape))
+            .collect();
+        inputs.push(HostTensor::f32(xbuf.clone(), &[b, n]));
+        inputs.push(HostTensor::f32(cbuf.clone(), &[b, d_cat]));
+        inputs.push(HostTensor::f32(ybuf.clone(), &[b]));
+        inputs.push(lr.clone());
+        let outs = rt.execute(&train_art, &inputs)?;
+        let n_params = params.len();
+        for (p, o) in params.iter_mut().zip(&outs[..n_params]) {
+            p.copy_from_slice(&o.data);
+        }
+    }
+
+    // Evaluate on held-out records.
+    let mut eval_stream = SyntheticStream::new({
+        let mut d = data.clone();
+        d.stream_salt ^= 0x7e57;
+        d
+    });
+    let eval_n = if common::full_scale() { 200 } else { 60 };
+    let mut scores = Vec::new();
+    let mut labels = Vec::new();
+    for _ in 0..eval_n {
+        for i in 0..b {
+            let r = eval_stream.next_record().unwrap();
+            xbuf[i * n..(i + 1) * n].copy_from_slice(&r.numeric);
+            labels.push(r.label);
+            let code = enc.encode_categorical(&r).unwrap();
+            cbuf[i * d_cat..(i + 1) * d_cat].fill(0.0);
+            code.scatter_into(&mut cbuf[i * d_cat..(i + 1) * d_cat]);
+        }
+        let mut inputs: Vec<HostTensor> = params
+            .iter()
+            .zip(&par_specs)
+            .map(|(p, s)| HostTensor::f32(p.clone(), &s.shape))
+            .collect();
+        inputs.push(HostTensor::f32(xbuf.clone(), &[b, n]));
+        inputs.push(HostTensor::f32(cbuf.clone(), &[b, d_cat]));
+        let outs = rt.execute(&pred_art, &inputs)?;
+        scores.extend(outs[0].data.iter().map(|&v| v as f64));
+    }
+    let n_params: usize = params.iter().map(Vec::len).sum();
+    Ok((auc(&scores, &labels), log_loss(&scores, &labels), n_params))
+}

@@ -1,0 +1,43 @@
+//! Table 2: FPGA frequency, per-module cycle counts, and throughput for
+//! the four combining modes, plus the Sec. 7.4.1 shift-materialization
+//! baseline (`--shift` style report always included).
+
+mod common;
+
+use shdc::encoding::BundleMethod;
+use shdc::hw::fpga::{self, FpgaConfig, TABLE2_PAPER};
+
+fn main() {
+    common::header("Table 2", "FPGA cycles + throughput per combining mode (d = 10,000)");
+    println!("\n{:<10} {:>6} {:>9} {:>9} {:>9} {:>9} {:>14}  | paper M/s", "mode", "MHz", "phi(xc)", "phi(xn)", "theta.phi", "grad", "throughput");
+    for (rep, paper) in fpga::table2().iter().zip(&TABLE2_PAPER) {
+        println!(
+            "{:<10} {:>6.0} {:>9} {:>9} {:>9} {:>9} {:>11.2} M/s  | {:>6.2}",
+            rep.config.label(),
+            rep.config.freq_mhz,
+            rep.cycles.cat_encode,
+            rep.cycles
+                .num_encode
+                .map(|c| c.to_string())
+                .unwrap_or_else(|| "-".into()),
+            rep.cycles.score,
+            rep.cycles.gradient,
+            rep.throughput / 1e6,
+            paper.throughput_m,
+        );
+    }
+
+    println!("\nSec 7.4.1 — shift-based materialization baseline:");
+    let or = fpga::simulate(&FpgaConfig::paper(BundleMethod::ThresholdedSum, false));
+    let concat = fpga::simulate(&FpgaConfig::paper(BundleMethod::Concat, false));
+    let shift = fpga::simulate_shift_baseline(&FpgaConfig::paper(BundleMethod::ThresholdedSum, false));
+    println!(
+        "  shift throughput: {:.1}k inputs/s (paper ~11.2k)",
+        shift.throughput / 1e3
+    );
+    println!(
+        "  slowdown vs hash-OR: {:.0}x (paper 135x); vs hash-Concat: {:.0}x (paper 84x)",
+        or.throughput / shift.throughput,
+        concat.throughput / shift.throughput,
+    );
+}

@@ -1,0 +1,46 @@
+//! Table 3: PIM component area/power and the crossbar→chip roll-up.
+
+mod common;
+
+use shdc::hw::pim::{self, CLUSTER_COMPONENTS, XBAR_COMPONENTS};
+
+fn main() {
+    common::header("Table 3", "PIM component specifications (14nm) and hierarchy roll-up");
+    println!("\nper-crossbar components:");
+    println!("  {:<22} {:>12} {:>12} {:>8}", "component", "area (um^2)", "power (uW)", "count");
+    for c in XBAR_COMPONENTS {
+        println!(
+            "  {:<22} {:>12.1} {:>12.2} {:>8.3}",
+            c.name, c.area_um2, c.power_uw, c.count_per_xbar
+        );
+    }
+    println!("\nper-cluster shared components:");
+    for c in CLUSTER_COMPONENTS {
+        println!("  {:<22} {:>12.1} {:>12.2}", c.name, c.area_um2, c.power_uw);
+    }
+
+    let (xbar, cluster, tile, chip) = pim::hierarchy();
+    println!("\nderived hierarchy (paper reference in parentheses):");
+    println!(
+        "  crossbar: {:>10.0} um^2 ({}), {:>8.2} mW ({})",
+        xbar.area_mm2 * 1e6,
+        "3502 um^2",
+        xbar.power_w * 1e3,
+        "1.79 mW"
+    );
+    println!(
+        "  cluster:  {:>10.0} um^2 ({}), {:>8.1} mW ({})",
+        cluster.area_mm2 * 1e6,
+        "33042 um^2",
+        cluster.power_w * 1e3,
+        "15.9 mW"
+    );
+    println!(
+        "  tile:     {:>10.3} mm^2 ({}), {:>8.1} mW ({})",
+        tile.area_mm2, "0.264 mm^2", tile.power_w * 1e3, "127.6 mW"
+    );
+    println!(
+        "  chip:     {:>10.1} mm^2 ({}), {:>8.1} W  ({})",
+        chip.area_mm2, "136 mm^2", chip.power_w, "65 W"
+    );
+}

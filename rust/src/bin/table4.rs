@@ -1,0 +1,35 @@
+//! Table 4: PIM allocation, utilization, encoding cycles, throughput.
+
+mod common;
+
+use shdc::hw::pim::{self, PimWorkload, TABLE4_PAPER};
+
+fn main() {
+    common::header("Table 4", "PIM performance details (d = 10,000)");
+    println!(
+        "\n{:<10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>14}",
+        "mode", "num-xbar", "cat-xbar", "num-util", "cat-util", "num-cyc", "cat-cyc", "throughput"
+    );
+    for (w, paper) in [PimWorkload::paper(true), PimWorkload::paper(false)]
+        .into_iter()
+        .zip(&TABLE4_PAPER)
+    {
+        let rep = pim::simulate(&w);
+        println!(
+            "{:<10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>11.2} M/s   (paper {:>6.2} M/s)",
+            paper.label,
+            rep.numeric_xbars.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            rep.cat_xbars,
+            rep.numeric_utilization
+                .map(|v| format!("{:.0}%", v * 100.0))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.0}%", rep.cat_utilization * 100.0),
+            rep.numeric_cycles.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            rep.cat_cycles,
+            rep.throughput / 1e6,
+            paper.throughput_m,
+        );
+    }
+    println!("\n(100 ns memory cycle; 32,768 crossbars; numeric and categorical run concurrently;");
+    println!(" categorical allocation auto-balanced against the numeric branch per the paper.)");
+}

@@ -1,0 +1,104 @@
+//! Theory validation: empirical dot-product-preservation error vs the
+//! Theorem 2 (random codebook) and Theorem 3 (Bloom) bounds, swept over
+//! d, k, and s. This regenerates the quantitative backbone behind the
+//! paper's Sec. 4 analysis.
+
+mod common;
+
+use shdc::encoding::{BloomEncoder, CodebookEncoder};
+use shdc::util::rng::Rng;
+
+/// Max and mean absolute error of the (bias-corrected) similarity
+/// estimator over `trials` random set pairs with overlap sweep.
+fn bloom_error(d: usize, k: usize, s: usize, trials: usize, rng: &mut Rng) -> (f64, f64) {
+    let mut maxe = 0.0f64;
+    let mut sume = 0.0f64;
+    for t in 0..trials {
+        let enc = BloomEncoder::new(d, k, rng);
+        let overlap = t % (s + 1);
+        let base = (t * 1_000_003) as u64;
+        let x: Vec<u64> = (0..s as u64).map(|i| base + i).collect();
+        let y: Vec<u64> = (0..s as u64)
+            .map(|i| if (i as usize) < overlap { base + i } else { base + 10_000 + i })
+            .collect();
+        let fx = enc.encode_set(&x);
+        let fy = enc.encode_set(&y);
+        // Theorem 3 estimator: phi(x).phi(y)/k - s^2 k/(2d) bias term.
+        let est = fx.dot(&fy) / k as f64 - (s * s * k) as f64 / (2.0 * d as f64);
+        let err = (est - overlap as f64).abs();
+        maxe = maxe.max(err);
+        sume += err;
+    }
+    (maxe, sume / trials as f64)
+}
+
+fn codebook_error(d: usize, s: usize, trials: usize, rng: &mut Rng) -> (f64, f64) {
+    let mut maxe = 0.0f64;
+    let mut sume = 0.0f64;
+    for t in 0..trials {
+        let mut enc = CodebookEncoder::new(d, rng.next_u64());
+        let overlap = t % (s + 1);
+        let base = (t * 1_000_003) as u64;
+        let x: Vec<u64> = (0..s as u64).map(|i| base + i).collect();
+        let y: Vec<u64> = (0..s as u64)
+            .map(|i| if (i as usize) < overlap { base + i } else { base + 10_000 + i })
+            .collect();
+        let fx = enc.try_encode(&x).unwrap();
+        let fy = enc.try_encode(&y).unwrap();
+        let est = fx.dot(&fy) / d as f64;
+        let err = (est - overlap as f64).abs();
+        maxe = maxe.max(err);
+        sume += err;
+    }
+    (maxe, sume / trials as f64)
+}
+
+fn main() {
+    common::header(
+        "Theory sweep",
+        "dot-product preservation error vs (d, k, s): Theorems 2 and 3",
+    );
+    let trials = if common::full_scale() { 400 } else { 120 };
+    let mut rng = Rng::new(99);
+    let s = 26;
+
+    println!("\nTheorem 2 (codebook, error ~ sqrt(s^3 log m / d) scaled 1/sqrt(d)):");
+    println!("  {:>8} {:>12} {:>12} {:>18}", "d", "max err", "mean err", "mean*sqrt(d) (flat?)");
+    for d in [1_000usize, 4_000, 16_000, 64_000] {
+        let (maxe, meane) = codebook_error(d, s, trials, &mut rng);
+        println!(
+            "  {:>8} {:>12.3} {:>12.3} {:>18.2}",
+            d,
+            maxe,
+            meane,
+            meane * (d as f64).sqrt()
+        );
+    }
+
+    println!("\nTheorem 3 (bloom, k=4; same 1/sqrt(d) law after bias correction):");
+    println!("  {:>8} {:>12} {:>12} {:>18}", "d", "max err", "mean err", "mean*sqrt(d) (flat?)");
+    for d in [1_000usize, 4_000, 16_000, 64_000] {
+        let (maxe, meane) = bloom_error(d, 4, s, trials, &mut rng);
+        println!(
+            "  {:>8} {:>12.3} {:>12.3} {:>18.2}",
+            d,
+            maxe,
+            meane,
+            meane * (d as f64).sqrt()
+        );
+    }
+
+    println!("\nTheorem 3, error vs k at d = 16,000 (bigger k -> bigger s^2k/2d bias, more collisions):");
+    println!("  {:>8} {:>12} {:>12}", "k", "max err", "mean err");
+    for k in [1usize, 2, 4, 8, 16, 32] {
+        let (maxe, meane) = bloom_error(16_000, k, s, trials, &mut rng);
+        println!("  {:>8} {:>12.3} {:>12.3}", k, maxe, meane);
+    }
+
+    println!("\nTheorem 3, error vs s at d = 16,000, k = 4:");
+    println!("  {:>8} {:>12} {:>12}", "s", "max err", "mean err");
+    for s in [5usize, 13, 26, 52, 104] {
+        let (maxe, meane) = bloom_error(16_000, 4, s, trials, &mut rng);
+        println!("  {:>8} {:>12.3} {:>12.3}", s, maxe, meane);
+    }
+}

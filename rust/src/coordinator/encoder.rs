@@ -1,0 +1,329 @@
+//! Record-level encoder: configuration + the composite (numeric ⊕
+//! categorical) encoding of one [`Record`] (paper Fig. 6's two-branch
+//! pipeline feeding a bundling operator).
+//!
+//! Configurations are plain data so experiments (Figs. 7–10) can sweep
+//! them, and `build()` is deterministic from the seed so every worker
+//! shard constructs identical encoders.
+
+use crate::data::Record;
+use crate::encoding::{
+    bundle, BloomEncoder, BundleMethod, CategoricalEncoder, CodebookEncoder, DenseHashEncoder,
+    DenseHashMode, DenseProjection, Encoding, NumericEncoder, PermutationEncoder, ProjectionMode,
+    RelaxedSjlt, Sjlt, SparseProjection,
+};
+use crate::util::rng::Rng;
+
+/// Categorical-encoder choice (paper Sec. 4).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CatCfg {
+    /// Sparse Bloom-filter hashing (the contribution), k Murmur3 fns.
+    Bloom { d: usize, k: usize },
+    /// Bloom with a 2s-independent polynomial family (Theorem 3 form).
+    BloomPoly { d: usize, k: usize, independence: usize },
+    /// Dense hashing baseline (Sec. 4.2.1).
+    DenseHash { d: usize, literal: bool },
+    /// Random-codebook baseline (Sec. 4.1); optional memory budget.
+    Codebook { d: usize, budget_bytes: Option<usize> },
+    /// Permutation/shift baseline (Remark 3).
+    Permutation { d: usize, pool: usize, granularity: usize },
+    /// No categorical branch.
+    None,
+}
+
+/// Numeric-encoder choice (paper Sec. 5).
+#[derive(Clone, Debug, PartialEq)]
+pub enum NumCfg {
+    /// Dense signed random projection (Eq. 4).
+    DenseSign { d: usize },
+    /// Sparse RP, exact top-k (Eq. 6).
+    SparseTopK { d: usize, k: usize },
+    /// Sparse RP, thresholded (Sec. 5.3).
+    SparseThreshold { d: usize, t: f32 },
+    /// Structured SJLT (Eq. 5).
+    Sjlt { d: usize, k: usize },
+    /// Relaxed ±1/0 SJLT (Sec. 7.2.3), optionally sign-quantized.
+    RelaxedSjlt { d: usize, p: f64, quantize: bool },
+    /// "No-Count": drop numeric features (Fig. 9 baseline).
+    None,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct EncoderCfg {
+    pub cat: CatCfg,
+    pub num: NumCfg,
+    pub bundle: BundleMethod,
+    pub n_numeric: usize,
+    pub seed: u64,
+}
+
+impl EncoderCfg {
+    /// The paper's best streaming configuration (Sec. 7.5): Bloom d=10k
+    /// k=4 for categorical, SJLT for numeric, concat bundling.
+    pub fn paper_default(seed: u64) -> Self {
+        EncoderCfg {
+            cat: CatCfg::Bloom { d: 10_000, k: 4 },
+            num: NumCfg::RelaxedSjlt { d: 10_000, p: 0.4, quantize: true },
+            bundle: BundleMethod::Concat,
+            n_numeric: crate::data::CRITEO_NUMERIC,
+            seed,
+        }
+    }
+
+    /// Output dimension after bundling.
+    pub fn out_dim(&self) -> usize {
+        let dc = match &self.cat {
+            CatCfg::Bloom { d, .. }
+            | CatCfg::BloomPoly { d, .. }
+            | CatCfg::DenseHash { d, .. }
+            | CatCfg::Codebook { d, .. }
+            | CatCfg::Permutation { d, .. } => *d,
+            CatCfg::None => 0,
+        };
+        let dn = match &self.num {
+            NumCfg::DenseSign { d }
+            | NumCfg::SparseTopK { d, .. }
+            | NumCfg::SparseThreshold { d, .. }
+            | NumCfg::Sjlt { d, .. }
+            | NumCfg::RelaxedSjlt { d, .. } => *d,
+            NumCfg::None => 0,
+        };
+        match (dc, dn) {
+            (0, d) | (d, 0) => d,
+            (dc, dn) => self.bundle.out_dim(dn, dc),
+        }
+    }
+
+    /// Build the composite encoder. Deterministic from `seed`.
+    pub fn build(&self) -> RecordEncoder {
+        let mut rng = Rng::new(self.seed ^ ENCODER_SEED_KEY);
+        let cat: Option<Box<dyn CategoricalEncoder>> = match &self.cat {
+            CatCfg::Bloom { d, k } => Some(Box::new(BloomEncoder::new(*d, *k, &mut rng))),
+            CatCfg::BloomPoly { d, k, independence } => {
+                Some(Box::new(BloomEncoder::new_poly(*d, *k, *independence, &mut rng)))
+            }
+            CatCfg::DenseHash { d, literal } => Some(Box::new(DenseHashEncoder::new(
+                *d,
+                if *literal { DenseHashMode::Literal } else { DenseHashMode::Packed },
+                &mut rng,
+            ))),
+            CatCfg::Codebook { d, budget_bytes } => Some(Box::new(match budget_bytes {
+                Some(b) => CodebookEncoder::with_budget(*d, self.seed, *b),
+                None => CodebookEncoder::new(*d, self.seed),
+            })),
+            CatCfg::Permutation { d, pool, granularity } => {
+                Some(Box::new(PermutationEncoder::new(*d, *pool, *granularity, &mut rng)))
+            }
+            CatCfg::None => None,
+        };
+        let num: Option<Box<dyn NumericEncoder>> = match &self.num {
+            NumCfg::DenseSign { d } => Some(Box::new(DenseProjection::new(
+                *d,
+                self.n_numeric,
+                ProjectionMode::Sign,
+                &mut rng,
+            ))),
+            NumCfg::SparseTopK { d, k } => {
+                Some(Box::new(SparseProjection::new_topk(*d, self.n_numeric, *k, &mut rng)))
+            }
+            NumCfg::SparseThreshold { d, t } => Some(Box::new(SparseProjection::new_threshold(
+                *d,
+                self.n_numeric,
+                *t,
+                &mut rng,
+            ))),
+            NumCfg::Sjlt { d, k } => Some(Box::new(Sjlt::new(*d, self.n_numeric, *k, &mut rng))),
+            NumCfg::RelaxedSjlt { d, p, quantize } => Some(Box::new(RelaxedSjlt::new(
+                *d,
+                self.n_numeric,
+                *p,
+                *quantize,
+                &mut rng,
+            ))),
+            NumCfg::None => None,
+        };
+        RecordEncoder { cat, num, bundle: self.bundle, out_dim: self.out_dim() }
+    }
+}
+
+/// Key for deriving encoder randomness from the experiment seed (keeps
+/// encoder draws decorrelated from data-stream draws under one seed).
+const ENCODER_SEED_KEY: u64 = 0xe4c0_de00_5eed_0001;
+
+/// The composite encoder for one record.
+pub struct RecordEncoder {
+    cat: Option<Box<dyn CategoricalEncoder>>,
+    num: Option<Box<dyn NumericEncoder>>,
+    bundle: BundleMethod,
+    out_dim: usize,
+}
+
+impl RecordEncoder {
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Encode one record (numeric branch ⊕ categorical branch).
+    pub fn encode(&mut self, record: &Record) -> Encoding {
+        let cat_code = self.cat.as_mut().map(|c| c.encode(&record.symbols));
+        let num_code = self.num.as_ref().map(|n| n.encode(&record.numeric));
+        match (num_code, cat_code) {
+            (Some(n), Some(c)) => {
+                // Bundle order: numeric first (matches the concat layout
+                // the fused PJRT artifact expects: [phi_n | phi_c]).
+                bundle(&n, &c, self.bundle)
+            }
+            (Some(n), None) => n,
+            (None, Some(c)) => c,
+            (None, None) => panic!("EncoderCfg with neither branch"),
+        }
+    }
+
+    /// Encode a whole batch, using the numeric encoder's row-blocked
+    /// batch path (projection rows loaded once per batch, not per
+    /// record — the §Perf fix that makes worker scaling linear).
+    pub fn encode_batch(&mut self, records: &[Record]) -> Vec<Encoding> {
+        let num_codes: Option<Vec<Encoding>> = self.num.as_ref().map(|n| {
+            let xs: Vec<&[f32]> = records.iter().map(|r| r.numeric.as_slice()).collect();
+            n.encode_batch(&xs)
+        });
+        match (num_codes, &mut self.cat) {
+            (Some(nums), Some(cat)) => records
+                .iter()
+                .zip(nums)
+                .map(|(r, ncode)| bundle(&ncode, &cat.encode(&r.symbols), self.bundle))
+                .collect(),
+            (Some(nums), None) => nums,
+            (None, Some(cat)) => records.iter().map(|r| cat.encode(&r.symbols)).collect(),
+            (None, None) => panic!("EncoderCfg with neither branch"),
+        }
+    }
+
+    /// Encoder state size (the Fig. 7A memory axis).
+    pub fn memory_bytes(&self) -> usize {
+        self.cat.as_ref().map_or(0, |c| c.memory_bytes())
+    }
+
+    /// Only the categorical branch (used by the fused-PJRT path, which
+    /// computes the numeric branch on-device).
+    pub fn encode_categorical(&mut self, record: &Record) -> Option<Encoding> {
+        self.cat.as_mut().map(|c| c.encode(&record.symbols))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic::SyntheticConfig, RecordStream, SyntheticStream};
+
+    fn sample_record() -> Record {
+        let mut s = SyntheticStream::new(SyntheticConfig::sampled(1));
+        s.next_record().unwrap()
+    }
+
+    #[test]
+    fn paper_default_builds_and_encodes() {
+        let cfg = EncoderCfg::paper_default(1);
+        let mut enc = cfg.build();
+        let code = enc.encode(&sample_record());
+        assert_eq!(code.dim(), 20_000);
+        assert_eq!(cfg.out_dim(), 20_000);
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let cfg = EncoderCfg::paper_default(9);
+        let r = sample_record();
+        let a = cfg.build().encode(&r);
+        let b = cfg.build().encode(&r);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn no_count_uses_cat_only() {
+        let cfg = EncoderCfg {
+            cat: CatCfg::Bloom { d: 512, k: 4 },
+            num: NumCfg::None,
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 2,
+        };
+        let code = cfg.build().encode(&sample_record());
+        assert_eq!(code.dim(), 512);
+        assert!(matches!(code, Encoding::SparseBinary { .. }));
+    }
+
+    #[test]
+    fn or_bundling_of_sparse_branches_stays_sparse() {
+        let cfg = EncoderCfg {
+            cat: CatCfg::Bloom { d: 1024, k: 4 },
+            num: NumCfg::SparseThreshold { d: 1024, t: 1.0 },
+            bundle: BundleMethod::ThresholdedSum,
+            n_numeric: 13,
+            seed: 3,
+        };
+        assert_eq!(cfg.out_dim(), 1024);
+        let code = cfg.build().encode(&sample_record());
+        assert!(matches!(code, Encoding::SparseBinary { .. }));
+        assert_eq!(code.dim(), 1024);
+    }
+
+    #[test]
+    fn all_cat_variants_encode() {
+        for cat in [
+            CatCfg::Bloom { d: 256, k: 2 },
+            CatCfg::BloomPoly { d: 256, k: 2, independence: 8 },
+            CatCfg::DenseHash { d: 256, literal: false },
+            CatCfg::Codebook { d: 256, budget_bytes: None },
+            CatCfg::Permutation { d: 256, pool: 2, granularity: 16 },
+        ] {
+            let cfg = EncoderCfg {
+                cat: cat.clone(),
+                num: NumCfg::None,
+                bundle: BundleMethod::Concat,
+                n_numeric: 13,
+                seed: 4,
+            };
+            let code = cfg.build().encode(&sample_record());
+            assert_eq!(code.dim(), 256, "{cat:?}");
+        }
+    }
+
+    #[test]
+    fn all_num_variants_encode() {
+        for num in [
+            NumCfg::DenseSign { d: 128 },
+            NumCfg::SparseTopK { d: 128, k: 16 },
+            NumCfg::SparseThreshold { d: 128, t: 0.5 },
+            NumCfg::Sjlt { d: 128, k: 4 },
+            NumCfg::RelaxedSjlt { d: 128, p: 0.4, quantize: true },
+        ] {
+            let cfg = EncoderCfg {
+                cat: CatCfg::None,
+                num: num.clone(),
+                bundle: BundleMethod::Concat,
+                n_numeric: 13,
+                seed: 5,
+            };
+            let code = cfg.build().encode(&sample_record());
+            assert_eq!(code.dim(), 128, "{num:?}");
+        }
+    }
+
+    #[test]
+    fn concat_layout_numeric_first() {
+        let cfg = EncoderCfg {
+            cat: CatCfg::Bloom { d: 64, k: 2 },
+            num: NumCfg::DenseSign { d: 32 },
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 6,
+        };
+        let mut enc = cfg.build();
+        let r = sample_record();
+        let code = enc.encode(&r).to_dense();
+        // first 32 coords are ±1 (numeric sign-projection), rest 0/1.
+        assert!(code[..32].iter().all(|&x| x == 1.0 || x == -1.0));
+        assert!(code[32..].iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+}

@@ -1,0 +1,354 @@
+//! Layer-3 streaming coordinator.
+//!
+//! The paper's setting is a continuous stream of mixed-type records
+//! (Sec. 3); the coordination work is: shard the stream across encoder
+//! workers, keep every worker's hash-defined encoder state identical,
+//! apply backpressure so a slow trainer throttles readers instead of
+//! buffering unboundedly, and deliver encoded batches to the learner
+//! in deterministic order.
+//!
+//! Implementation: std threads + bounded `sync_channel`s (tokio is not
+//! available offline; the pipeline is CPU-bound so threads are the right
+//! tool anyway). Stages:
+//!
+//! ```text
+//!  reader ──► raw batch channel (bounded) ──► encode workers (N)
+//!         ──► encoded channel (bounded) ──► reorderer ──► consumer
+//! ```
+//!
+//! Batches carry sequence numbers; the tail reorders them so the
+//! consumer sees stream order regardless of worker scheduling — making
+//! multi-worker runs bit-identical to single-worker runs.
+
+pub mod encoder;
+pub mod stats;
+
+pub use encoder::{CatCfg, EncoderCfg, NumCfg, RecordEncoder};
+pub use stats::{PipelineStats, ScopeTimer, StatsSnapshot};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread;
+
+use crate::data::{Record, RecordStream};
+use crate::encoding::Encoding;
+
+/// A batch of encoded records plus labels, tagged with its stream order.
+#[derive(Debug)]
+pub struct EncodedBatch {
+    pub seq: u64,
+    pub encodings: Vec<Encoding>,
+    pub labels: Vec<bool>,
+    /// Raw records retained when the consumer needs them (PJRT fused path
+    /// encodes numerics on-device and needs the raw features).
+    pub records: Option<Vec<Record>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorCfg {
+    pub batch_size: usize,
+    pub n_workers: usize,
+    /// Bounded-queue depth (in batches) between stages.
+    pub queue_depth: usize,
+    /// Retain raw records in the output batches.
+    pub keep_records: bool,
+    /// Stop after this many records (None = until stream end).
+    pub max_records: Option<u64>,
+}
+
+impl Default for CoordinatorCfg {
+    fn default() -> Self {
+        CoordinatorCfg {
+            batch_size: 256,
+            n_workers: 4,
+            queue_depth: 8,
+            keep_records: false,
+            max_records: None,
+        }
+    }
+}
+
+struct RawBatch {
+    seq: u64,
+    records: Vec<Record>,
+}
+
+/// Blocking send that counts backpressure events.
+fn send_counted<T>(tx: &SyncSender<T>, mut v: T, stats: &PipelineStats) -> Result<(), ()> {
+    loop {
+        match tx.try_send(v) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Full(back)) => {
+                stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                v = back;
+                // Fall back to the blocking path once counted.
+                return tx.send(v).map_err(|_| ());
+            }
+            Err(TrySendError::Disconnected(_)) => return Err(()),
+        }
+    }
+}
+
+/// Run the coordinated encode pipeline, invoking `consume` for each
+/// encoded batch in stream order; `consume` returns `false` to stop the
+/// pipeline early (early stopping, record budgets). Returns the shared
+/// stats.
+///
+/// `encoder_cfg.build()` is called once per worker; because encoders are
+/// deterministic from the seed, every worker holds an identical encoder
+/// (the paper's "no codebook to synchronize" property makes this free
+/// for hash-based encoders — only the codebook baseline pays per-worker
+/// duplication, which is itself part of the scalability story).
+pub fn run_pipeline<S, F>(
+    mut stream: S,
+    encoder_cfg: &EncoderCfg,
+    cfg: &CoordinatorCfg,
+    mut consume: F,
+) -> Arc<PipelineStats>
+where
+    S: RecordStream + 'static,
+    F: FnMut(EncodedBatch) -> bool,
+{
+    let stats = Arc::new(PipelineStats::new());
+    let (raw_tx, raw_rx) = sync_channel::<RawBatch>(cfg.queue_depth);
+    let raw_rx = Arc::new(std::sync::Mutex::new(raw_rx));
+    let (enc_tx, enc_rx) = sync_channel::<EncodedBatch>(cfg.queue_depth);
+
+    // --- reader ---------------------------------------------------------
+    let reader_stats = Arc::clone(&stats);
+    let reader_cfg = cfg.clone();
+    let reader = thread::spawn(move || {
+        let mut seq = 0u64;
+        let mut emitted = 0u64;
+        loop {
+            let budget = match reader_cfg.max_records {
+                Some(maxn) if emitted >= maxn => break,
+                Some(maxn) => ((maxn - emitted) as usize).min(reader_cfg.batch_size),
+                None => reader_cfg.batch_size,
+            };
+            let mut batch = Vec::with_capacity(budget);
+            if stream.next_batch(&mut batch, budget) == 0 {
+                break;
+            }
+            emitted += batch.len() as u64;
+            reader_stats
+                .records_read
+                .fetch_add(batch.len() as u64, Ordering::Relaxed);
+            if send_counted(&raw_tx, RawBatch { seq, records: batch }, &reader_stats).is_err() {
+                break;
+            }
+            seq += 1;
+        }
+        // raw_tx drops here -> workers drain and exit.
+    });
+
+    // --- encode workers --------------------------------------------------
+    let mut workers = Vec::new();
+    for w in 0..cfg.n_workers.max(1) {
+        let rx = Arc::clone(&raw_rx);
+        let tx = enc_tx.clone();
+        let wstats = Arc::clone(&stats);
+        let ecfg = encoder_cfg.clone();
+        let keep = cfg.keep_records;
+        workers.push(thread::spawn(move || {
+            let _ = w;
+            let mut enc = ecfg.build();
+            loop {
+                let raw = match rx.lock().unwrap().recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                };
+                let n = raw.records.len() as u64;
+                let labels: Vec<bool> = raw.records.iter().map(|r| r.label).collect();
+                let encodings = {
+                    let _t = ScopeTimer::new(&wstats.encode_ns);
+                    enc.encode_batch(&raw.records)
+                };
+                wstats.records_encoded.fetch_add(n, Ordering::Relaxed);
+                let out = EncodedBatch {
+                    seq: raw.seq,
+                    encodings,
+                    labels,
+                    records: if keep { Some(raw.records) } else { None },
+                };
+                if send_counted(&tx, out, &wstats).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    drop(enc_tx); // consumers see EOF when all workers finish
+    // Drop our clone of the raw receiver: once every worker exits, the
+    // channel closes and a blocked reader unblocks (early-stop path).
+    drop(raw_rx);
+
+    // --- in-order consumption -------------------------------------------
+    consume_in_order(enc_rx, &mut consume);
+
+    reader.join().expect("reader panicked");
+    for w in workers {
+        w.join().expect("worker panicked");
+    }
+    stats
+}
+
+/// Reorder batches by sequence number before invoking the consumer.
+/// Returns early (dropping the receiver, which unwinds the upstream
+/// stages via send errors) if the consumer asks to stop.
+fn consume_in_order<F: FnMut(EncodedBatch) -> bool>(rx: Receiver<EncodedBatch>, consume: &mut F) {
+    let mut next = 0u64;
+    let mut pending: BTreeMap<u64, EncodedBatch> = BTreeMap::new();
+    for batch in rx {
+        pending.insert(batch.seq, batch);
+        while let Some(b) = pending.remove(&next) {
+            if !consume(b) {
+                return; // rx drops; workers/reader see disconnects
+            }
+            next += 1;
+        }
+    }
+    // Channel closed: drain whatever is contiguous (should be everything).
+    while let Some(b) = pending.remove(&next) {
+        if !consume(b) {
+            return;
+        }
+        next += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic::SyntheticConfig, SyntheticStream};
+    use crate::encoding::BundleMethod;
+
+    fn small_cfg() -> EncoderCfg {
+        EncoderCfg {
+            cat: CatCfg::Bloom { d: 256, k: 2 },
+            num: NumCfg::None,
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn processes_exactly_max_records_in_order() {
+        let stream = SyntheticStream::new(SyntheticConfig::sampled(3));
+        let mut seen = Vec::new();
+        let stats = run_pipeline(
+            stream,
+            &small_cfg(),
+            &CoordinatorCfg {
+                batch_size: 32,
+                n_workers: 4,
+                max_records: Some(1000),
+                ..Default::default()
+            },
+            |b| { seen.push((b.seq, b.encodings.len())); true },
+        );
+        let total: usize = seen.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, 1000);
+        let seqs: Vec<u64> = seen.iter().map(|(s, _)| *s).collect();
+        let mut sorted = seqs.clone();
+        sorted.sort();
+        assert_eq!(seqs, sorted, "batches must arrive in stream order");
+        assert_eq!(stats.snapshot().records_encoded, 1000);
+        assert_eq!(stats.snapshot().records_read, 1000);
+    }
+
+    #[test]
+    fn multi_worker_equals_single_worker() {
+        let collect = |workers: usize| {
+            let stream = SyntheticStream::new(SyntheticConfig::sampled(4));
+            let mut encs = Vec::new();
+            run_pipeline(
+                stream,
+                &small_cfg(),
+                &CoordinatorCfg {
+                    batch_size: 16,
+                    n_workers: workers,
+                    max_records: Some(200),
+                    ..Default::default()
+                },
+                |b| { encs.extend(b.encodings); true },
+            );
+            encs
+        };
+        assert_eq!(collect(1), collect(6));
+    }
+
+    #[test]
+    fn keep_records_carries_raw_data() {
+        let stream = SyntheticStream::new(SyntheticConfig::sampled(5));
+        let mut n_rec = 0usize;
+        run_pipeline(
+            stream,
+            &small_cfg(),
+            &CoordinatorCfg {
+                batch_size: 10,
+                n_workers: 2,
+                keep_records: true,
+                max_records: Some(50),
+                ..Default::default()
+            },
+            |b| {
+                let recs = b.records.expect("records kept");
+                assert_eq!(recs.len(), b.encodings.len());
+                n_rec += recs.len();
+                true
+            },
+        );
+        assert_eq!(n_rec, 50);
+    }
+
+    #[test]
+    fn backpressure_counted_with_slow_consumer() {
+        let stream = SyntheticStream::new(SyntheticConfig::sampled(6));
+        let stats = run_pipeline(
+            stream,
+            &small_cfg(),
+            &CoordinatorCfg {
+                batch_size: 8,
+                n_workers: 4,
+                queue_depth: 1,
+                max_records: Some(400),
+                ..Default::default()
+            },
+            |_| { std::thread::sleep(std::time::Duration::from_micros(500)); true },
+        );
+        assert!(
+            stats.snapshot().backpressure_events > 0,
+            "tiny queue + slow consumer must trigger backpressure"
+        );
+    }
+
+    #[test]
+    fn consumer_can_stop_early() {
+        let stream = SyntheticStream::new(SyntheticConfig::sampled(8));
+        let mut batches = 0usize;
+        run_pipeline(
+            stream,
+            &small_cfg(),
+            &CoordinatorCfg { batch_size: 8, n_workers: 3, max_records: Some(10_000), ..Default::default() },
+            |_| {
+                batches += 1;
+                batches < 5
+            },
+        );
+        assert_eq!(batches, 5, "pipeline must halt when consumer returns false");
+    }
+
+    #[test]
+    fn labels_align_with_encodings() {
+        let stream = SyntheticStream::new(SyntheticConfig::sampled(7));
+        run_pipeline(
+            stream,
+            &small_cfg(),
+            &CoordinatorCfg { batch_size: 64, max_records: Some(128), ..Default::default() },
+            |b| { assert_eq!(b.labels.len(), b.encodings.len()); true },
+        );
+    }
+}

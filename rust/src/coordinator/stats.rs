@@ -1,0 +1,129 @@
+//! Shared pipeline counters (lock-free; read by the reporting thread
+//! while workers run).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Default)]
+pub struct PipelineStats {
+    pub records_read: AtomicU64,
+    pub records_encoded: AtomicU64,
+    pub records_trained: AtomicU64,
+    pub batches_trained: AtomicU64,
+    /// Nanoseconds spent inside encode calls (summed across workers).
+    pub encode_ns: AtomicU64,
+    /// Nanoseconds spent inside the trainer (SGD or PJRT execute).
+    pub train_ns: AtomicU64,
+    /// Times a bounded channel send blocked (backpressure events).
+    pub backpressure_events: AtomicU64,
+}
+
+impl PipelineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            records_read: self.records_read.load(Ordering::Relaxed),
+            records_encoded: self.records_encoded.load(Ordering::Relaxed),
+            records_trained: self.records_trained.load(Ordering::Relaxed),
+            batches_trained: self.batches_trained.load(Ordering::Relaxed),
+            encode_ns: self.encode_ns.load(Ordering::Relaxed),
+            train_ns: self.train_ns.load(Ordering::Relaxed),
+            backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub records_read: u64,
+    pub records_encoded: u64,
+    pub records_trained: u64,
+    pub batches_trained: u64,
+    pub encode_ns: u64,
+    pub train_ns: u64,
+    pub backpressure_events: u64,
+}
+
+impl StatsSnapshot {
+    pub fn encode_throughput(&self) -> f64 {
+        if self.encode_ns == 0 {
+            return 0.0;
+        }
+        self.records_encoded as f64 * 1e9 / self.encode_ns as f64
+    }
+
+    pub fn train_throughput(&self) -> f64 {
+        if self.train_ns == 0 {
+            return 0.0;
+        }
+        self.records_trained as f64 * 1e9 / self.train_ns as f64
+    }
+}
+
+/// Scope timer that adds its elapsed nanoseconds to a counter on drop.
+pub struct ScopeTimer<'a> {
+    counter: &'a AtomicU64,
+    start: Instant,
+}
+
+impl<'a> ScopeTimer<'a> {
+    pub fn new(counter: &'a AtomicU64) -> Self {
+        ScopeTimer { counter, start: Instant::now() }
+    }
+}
+
+impl Drop for ScopeTimer<'_> {
+    fn drop(&mut self) {
+        self.counter
+            .fetch_add(self.start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let s = PipelineStats::new();
+        s.add(&s.records_read, 10);
+        s.add(&s.records_read, 5);
+        s.add(&s.records_encoded, 7);
+        let snap = s.snapshot();
+        assert_eq!(snap.records_read, 15);
+        assert_eq!(snap.records_encoded, 7);
+    }
+
+    #[test]
+    fn scope_timer_records_time() {
+        let s = PipelineStats::new();
+        {
+            let _t = ScopeTimer::new(&s.encode_ns);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(s.snapshot().encode_ns >= 4_000_000);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let snap = StatsSnapshot {
+            records_read: 0,
+            records_encoded: 1000,
+            records_trained: 500,
+            batches_trained: 2,
+            encode_ns: 1_000_000_000,
+            train_ns: 500_000_000,
+            backpressure_events: 0,
+        };
+        assert!((snap.encode_throughput() - 1000.0).abs() < 1e-9);
+        assert!((snap.train_throughput() - 1000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,71 @@
+//! Data layer: the record model, the synthetic Criteo-like planted-model
+//! stream (our substitution for the proprietary Criteo datasets — see
+//! DESIGN.md §3), and a TSV reader for real Criteo-format data.
+
+pub mod synthetic;
+pub mod tsv;
+
+pub use synthetic::{SyntheticConfig, SyntheticStream};
+pub use tsv::TsvReader;
+
+/// One observation: n numeric features, s categorical symbols (interned
+/// to globally-unique u64 ids; feature slots have disjoint alphabets as
+/// in Sec. 3), and a binary label.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    pub numeric: Vec<f32>,
+    pub symbols: Vec<u64>,
+    pub label: bool,
+}
+
+/// Schema constants for the Criteo task (Sec. 7: 13 numeric, 26
+/// categorical features).
+pub const CRITEO_NUMERIC: usize = 13;
+pub const CRITEO_CATEGORICAL: usize = 26;
+
+/// A stream of records — everything downstream (pipeline, benches,
+/// examples) consumes this, so synthetic and file-backed sources are
+/// interchangeable.
+pub trait RecordStream: Send {
+    /// Next record, or None when exhausted (synthetic streams are
+    /// unbounded and never return None).
+    fn next_record(&mut self) -> Option<Record>;
+
+    /// Fill a batch; returns how many records were produced.
+    fn next_batch(&mut self, out: &mut Vec<Record>, n: usize) -> usize {
+        out.clear();
+        for _ in 0..n {
+            match self.next_record() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct CountStream(usize);
+
+    impl RecordStream for CountStream {
+        fn next_record(&mut self) -> Option<Record> {
+            if self.0 == 0 {
+                return None;
+            }
+            self.0 -= 1;
+            Some(Record { numeric: vec![0.0], symbols: vec![1], label: true })
+        }
+    }
+
+    #[test]
+    fn batch_fills_until_exhausted() {
+        let mut s = CountStream(5);
+        let mut buf = Vec::new();
+        assert_eq!(s.next_batch(&mut buf, 3), 3);
+        assert_eq!(s.next_batch(&mut buf, 3), 2);
+        assert_eq!(s.next_batch(&mut buf, 3), 0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Sparse hash-based (Bloom filter) categorical encoder — the paper's
+//! headline contribution (Sec. 4.2.2, Eq. 2–3, Theorem 3).
+//!
+//! Each symbol sets k hashed coordinates; a feature vector is the OR
+//! (set union) of its symbols' codes. Encoding touches only `s·k`
+//! coordinates regardless of alphabet size m and dimension d, and the
+//! encoder's entire state is k hash seeds — nothing scales with m.
+
+use crate::encoding::vector::{sparse_from_indices, Encoding};
+use crate::encoding::CategoricalEncoder;
+use crate::hash::{IndexHash, MurmurHash, PolyHash};
+use crate::util::rng::Rng;
+
+/// Bloom encoder generic over the hash family (Murmur3 in practice,
+/// 2s-independent polynomials when validating Theorem 3).
+#[derive(Clone, Debug)]
+pub struct BloomEncoder<H: IndexHash = MurmurHash> {
+    hashes: Vec<H>,
+    d: usize,
+}
+
+impl BloomEncoder<MurmurHash> {
+    /// The practical construction: k seeded Murmur3 functions.
+    pub fn new(d: usize, k: usize, rng: &mut Rng) -> Self {
+        BloomEncoder { hashes: MurmurHash::family(k, rng), d }
+    }
+}
+
+impl BloomEncoder<PolyHash> {
+    /// Theorem 3's construction: k functions from a p-independent
+    /// polynomial family (p = 2s for sets of size s).
+    pub fn new_poly(d: usize, k: usize, independence: usize, rng: &mut Rng) -> Self {
+        BloomEncoder { hashes: PolyHash::family(k, independence, rng), d }
+    }
+}
+
+impl<H: IndexHash> BloomEncoder<H> {
+    pub fn with_hashes(d: usize, hashes: Vec<H>) -> Self {
+        BloomEncoder { hashes, d }
+    }
+
+    pub fn k(&self) -> usize {
+        self.hashes.len()
+    }
+
+    /// Append the k hashed coordinates of one symbol to `out`
+    /// (unsorted, may contain duplicates). The zero-allocation hot path.
+    #[inline]
+    pub fn symbol_indices_into(&self, symbol: u64, out: &mut Vec<u32>) {
+        for h in &self.hashes {
+            out.push(h.index(symbol, self.d as u64) as u32);
+        }
+    }
+
+    /// Encode one symbol (Eq. 2).
+    pub fn encode_symbol(&self, symbol: u64) -> Encoding {
+        let mut idx = Vec::with_capacity(self.k());
+        self.symbol_indices_into(symbol, &mut idx);
+        sparse_from_indices(idx, self.d)
+    }
+
+    /// Encode a feature vector (Eq. 3: element-wise max over symbols).
+    pub fn encode_set(&self, symbols: &[u64]) -> Encoding {
+        let mut idx = Vec::with_capacity(symbols.len() * self.k());
+        for &a in symbols {
+            self.symbol_indices_into(a, &mut idx);
+        }
+        sparse_from_indices(idx, self.d)
+    }
+
+    /// Approximate membership query (Broder–Mitzenmacher): `a` is deemed
+    /// a member iff all k of its coordinates are set.
+    pub fn query(&self, set_code: &Encoding, symbol: u64) -> bool {
+        let code = self.encode_symbol(symbol);
+        // Thresholded dot product at k — but dedup means |code| can be < k.
+        set_code.dot(&code) >= code.nnz() as f64
+    }
+}
+
+impl<H: IndexHash> CategoricalEncoder for BloomEncoder<H> {
+    fn encode(&mut self, symbols: &[u64]) -> Encoding {
+        self.encode_set(symbols)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // k seeds / coefficient vectors — independent of both m and the
+        // number of records processed. (32k bits for Murmur3, Sec. 7.1.)
+        self.hashes.len() * std::mem::size_of::<H>()
+    }
+
+    fn name(&self) -> &'static str {
+        "bloom"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc(d: usize, k: usize, seed: u64) -> BloomEncoder {
+        BloomEncoder::new(d, k, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn at_most_sk_bits_set() {
+        let e = enc(1000, 4, 1);
+        let symbols: Vec<u64> = (0..26).collect();
+        let code = e.encode_set(&symbols);
+        assert!(code.nnz() <= 26 * 4);
+        assert!(code.nnz() > 0);
+        assert_eq!(code.dim(), 1000);
+    }
+
+    #[test]
+    fn deterministic() {
+        let e = enc(512, 3, 2);
+        assert_eq!(e.encode_set(&[5, 9, 100]), e.encode_set(&[5, 9, 100]));
+    }
+
+    #[test]
+    fn order_invariant() {
+        let e = enc(512, 3, 3);
+        assert_eq!(e.encode_set(&[1, 2, 3]), e.encode_set(&[3, 1, 2]));
+    }
+
+    #[test]
+    fn union_is_or_of_codes() {
+        let e = enc(2048, 4, 4);
+        let a = e.encode_set(&[10]);
+        let b = e.encode_set(&[20]);
+        let ab = e.encode_set(&[10, 20]);
+        // every bit of a and of b appears in ab, and nothing else
+        let mut want: Vec<u32> = Vec::new();
+        if let (Encoding::SparseBinary { indices: ia, .. }, Encoding::SparseBinary { indices: ib, .. }) =
+            (&a, &b)
+        {
+            want.extend(ia);
+            want.extend(ib);
+        }
+        want.sort_unstable();
+        want.dedup();
+        match &ab {
+            Encoding::SparseBinary { indices, .. } => assert_eq!(indices, &want),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn membership_no_false_negatives() {
+        let e = enc(4096, 4, 5);
+        let set: Vec<u64> = (0..30).map(|i| i * 13 + 7).collect();
+        let code = e.encode_set(&set);
+        for &a in &set {
+            assert!(e.query(&code, a), "false negative for {a}");
+        }
+    }
+
+    #[test]
+    fn membership_low_false_positive_rate() {
+        let e = enc(8192, 4, 6);
+        let set: Vec<u64> = (0..50).collect();
+        let code = e.encode_set(&set);
+        let fp = (1000u64..6000).filter(|&a| e.query(&code, a)).count();
+        // d=8192, sk=200 set bits -> fill ~2.4%, fpr ~ (0.024)^4 ~ 3e-7
+        assert!(fp < 5, "false positives: {fp}/5000");
+    }
+
+    #[test]
+    fn dot_estimates_intersection() {
+        // Theorem 3: (1/k) phi(x).phi(x') ~ |x ∩ x'| + s^2 k / 2d.
+        let k = 4;
+        let e = enc(65536, k, 7);
+        let x: Vec<u64> = (0..26).collect();
+        let y: Vec<u64> = (13..39).collect(); // overlap 13
+        let fx = e.encode_set(&x);
+        let fy = e.encode_set(&y);
+        let est = fx.dot(&fy) / k as f64;
+        assert!((est - 13.0).abs() < 3.0, "est={est}");
+    }
+
+    #[test]
+    fn memory_independent_of_usage() {
+        let mut e = enc(10_000, 4, 8);
+        let before = e.memory_bytes();
+        for batch in 0..50 {
+            let symbols: Vec<u64> = (batch * 100..batch * 100 + 26).collect();
+            let _ = e.encode(&symbols);
+        }
+        assert_eq!(e.memory_bytes(), before);
+    }
+
+    #[test]
+    fn poly_family_variant_works() {
+        let mut rng = Rng::new(9);
+        let e = BloomEncoder::new_poly(4096, 4, 52, &mut rng);
+        let code = e.encode_set(&(0..26).collect::<Vec<_>>());
+        assert!(code.nnz() <= 26 * 4 && code.nnz() > 50);
+    }
+
+    #[test]
+    fn empty_set_encodes_to_zero() {
+        let e = enc(128, 4, 10);
+        let code = e.encode_set(&[]);
+        assert_eq!(code.nnz(), 0);
+    }
+}

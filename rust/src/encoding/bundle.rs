@@ -1,0 +1,208 @@
+//! Bundling: combining numeric and categorical embeddings (paper
+//! Sec. 5.4, compared empirically in Fig. 10 / Table 2).
+//!
+//! * `Concat`         — final dim = d_num + d_cat; mixes precisions freely.
+//! * `Sum`            — element-wise sum; dims must match; result may need
+//!                      higher precision.
+//! * `ThresholdedSum` — sum clamped at 1 ("OR"); for sparse binary inputs
+//!                      this is the element-wise max / logical or, keeping
+//!                      the result binary.
+
+use crate::encoding::vector::{sparse_from_indices, Encoding};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BundleMethod {
+    Concat,
+    Sum,
+    ThresholdedSum,
+}
+
+impl BundleMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BundleMethod::Concat => "concat",
+            BundleMethod::Sum => "sum",
+            BundleMethod::ThresholdedSum => "or",
+        }
+    }
+
+    /// Output dimension for inputs of dims (dn, dc).
+    pub fn out_dim(&self, dn: usize, dc: usize) -> usize {
+        match self {
+            BundleMethod::Concat => dn + dc,
+            _ => {
+                assert_eq!(dn, dc, "sum/or bundling needs equal dims");
+                dn
+            }
+        }
+    }
+}
+
+/// Bundle two encodings. Sparse results stay sparse where the math allows
+/// (OR of two sparse-binary codes); everything else goes dense.
+pub fn bundle(a: &Encoding, b: &Encoding, method: BundleMethod) -> Encoding {
+    match method {
+        BundleMethod::Concat => concat(a, b),
+        BundleMethod::Sum => sum(a, b),
+        BundleMethod::ThresholdedSum => or(a, b),
+    }
+}
+
+fn concat(a: &Encoding, b: &Encoding) -> Encoding {
+    match (a, b) {
+        (
+            Encoding::SparseBinary { indices: ia, d: da },
+            Encoding::SparseBinary { indices: ib, d: db },
+        ) => {
+            let mut idx = Vec::with_capacity(ia.len() + ib.len());
+            idx.extend_from_slice(ia);
+            idx.extend(ib.iter().map(|&i| i + *da as u32));
+            // Already sorted: ia sorted, shifted ib sorted and disjoint.
+            Encoding::SparseBinary { indices: idx, d: da + db }
+        }
+        _ => {
+            let mut out = a.to_dense();
+            out.extend(b.to_dense());
+            Encoding::Dense(out)
+        }
+    }
+}
+
+fn sum(a: &Encoding, b: &Encoding) -> Encoding {
+    assert_eq!(a.dim(), b.dim(), "sum bundling needs equal dims");
+    match (a, b) {
+        (Encoding::Dense(va), Encoding::Dense(vb)) => {
+            Encoding::Dense(va.iter().zip(vb).map(|(x, y)| x + y).collect())
+        }
+        (Encoding::Dense(v), Encoding::SparseBinary { indices, .. })
+        | (Encoding::SparseBinary { indices, .. }, Encoding::Dense(v)) => {
+            let mut out = v.clone();
+            for &i in indices {
+                out[i as usize] += 1.0;
+            }
+            Encoding::Dense(out)
+        }
+        (Encoding::SparseBinary { .. }, Encoding::SparseBinary { .. }) => {
+            let mut out = a.to_dense();
+            if let Encoding::SparseBinary { indices, .. } = b {
+                for &i in indices {
+                    out[i as usize] += 1.0;
+                }
+            }
+            Encoding::Dense(out)
+        }
+    }
+}
+
+fn or(a: &Encoding, b: &Encoding) -> Encoding {
+    assert_eq!(a.dim(), b.dim(), "or bundling needs equal dims");
+    match (a, b) {
+        (
+            Encoding::SparseBinary { indices: ia, d },
+            Encoding::SparseBinary { indices: ib, .. },
+        ) => {
+            // Union of sorted index lists.
+            let mut idx = Vec::with_capacity(ia.len() + ib.len());
+            idx.extend_from_slice(ia);
+            idx.extend_from_slice(ib);
+            sparse_from_indices(idx, *d)
+        }
+        _ => {
+            // min(sum, 1): dense fallback.
+            let s = sum(a, b);
+            match s {
+                Encoding::Dense(v) => {
+                    Encoding::Dense(v.iter().map(|&x| if x >= 1.0 { 1.0 } else { x.max(0.0).min(1.0) }).collect())
+                }
+                other => other,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(idx: &[u32], d: usize) -> Encoding {
+        sparse_from_indices(idx.to_vec(), d)
+    }
+
+    #[test]
+    fn concat_dims_add() {
+        let a = Encoding::Dense(vec![1.0, 2.0]);
+        let b = Encoding::Dense(vec![3.0]);
+        let c = bundle(&a, &b, BundleMethod::Concat);
+        assert_eq!(c.dim(), 3);
+        assert_eq!(c.to_dense(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn concat_sparse_stays_sparse_and_sorted() {
+        let a = sp(&[1, 5], 8);
+        let b = sp(&[0, 7], 8);
+        let c = bundle(&a, &b, BundleMethod::Concat);
+        match &c {
+            Encoding::SparseBinary { indices, d } => {
+                assert_eq!(*d, 16);
+                assert_eq!(indices, &vec![1, 5, 8, 15]);
+            }
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn sum_matches_dense_math() {
+        let a = sp(&[0, 2], 4);
+        let b = Encoding::Dense(vec![0.5, 0.5, 0.5, 0.5]);
+        let c = bundle(&a, &b, BundleMethod::Sum);
+        assert_eq!(c.to_dense(), vec![1.5, 0.5, 1.5, 0.5]);
+    }
+
+    #[test]
+    fn or_of_sparse_is_union() {
+        let a = sp(&[1, 3], 6);
+        let b = sp(&[3, 5], 6);
+        let c = bundle(&a, &b, BundleMethod::ThresholdedSum);
+        match &c {
+            Encoding::SparseBinary { indices, .. } => assert_eq!(indices, &vec![1, 3, 5]),
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn or_clamps_dense_sum_at_one() {
+        let a = Encoding::Dense(vec![1.0, 0.0, 1.0]);
+        let b = sp(&[0, 1], 3);
+        let c = bundle(&a, &b, BundleMethod::ThresholdedSum);
+        assert_eq!(c.to_dense(), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn out_dim_accounting() {
+        assert_eq!(BundleMethod::Concat.out_dim(10, 20), 30);
+        assert_eq!(BundleMethod::Sum.out_dim(10, 10), 10);
+        assert_eq!(BundleMethod::ThresholdedSum.out_dim(5, 5), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sum_dim_mismatch_panics() {
+        let a = Encoding::Dense(vec![1.0]);
+        let b = Encoding::Dense(vec![1.0, 2.0]);
+        bundle(&a, &b, BundleMethod::Sum);
+    }
+
+    #[test]
+    fn or_sparse_dot_sees_union_similarity() {
+        // Sec. 5.4: with highly sparse inputs, OR ~ sum. Check dot against
+        // a dense theta agrees between or-bundled and sum-bundled codes
+        // when supports are disjoint.
+        let a = sp(&[0, 2], 6);
+        let b = sp(&[1, 4], 6);
+        let theta: Vec<f32> = vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6];
+        let or_code = bundle(&a, &b, BundleMethod::ThresholdedSum);
+        let sum_code = bundle(&a, &b, BundleMethod::Sum);
+        assert_eq!(or_code.dot_params(&theta), sum_code.dot_params(&theta));
+    }
+}

@@ -1,0 +1,225 @@
+//! Random-codebook categorical encoder — the conventional HDC baseline
+//! (paper Sec. 4.1, Theorem 2).
+//!
+//! Each symbol gets a codeword sampled `Unif({±1}^d)`; feature vectors
+//! bundle by element-wise sum. Codewords are generated *lazily* as new
+//! symbols stream in (exactly the setup of Fig. 7A) and retained in an
+//! item memory whose footprint grows linearly with the alphabet seen so
+//! far — the scalability failure mode this paper exists to fix. The
+//! encoder tracks its own memory use and can enforce a budget, turning
+//! the paper's "at a certain point the codebook exceeds available RAM
+//! and the program crashes" into a typed error.
+
+use std::collections::HashMap;
+
+use crate::encoding::vector::Encoding;
+use crate::encoding::CategoricalEncoder;
+use crate::util::rng::{mix64, Rng};
+
+/// Codeword precision: i8 keeps the codebook 4x smaller than f32 while
+/// remaining faithful (codewords are ±1).
+type Codeword = Vec<i8>;
+
+#[derive(Debug)]
+pub struct CodebookEncoder {
+    codebook: HashMap<u64, Codeword>,
+    d: usize,
+    seed: u64,
+    /// Optional cap on codebook bytes; `encode` returns an error past it.
+    pub memory_budget: Option<usize>,
+}
+
+/// Raised when the item memory exceeds its budget (Fig. 7A's OOM point).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodebookOom {
+    pub symbols: usize,
+    pub bytes: usize,
+}
+
+impl std::fmt::Display for CodebookOom {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "codebook exceeded memory budget: {} symbols, {} bytes",
+            self.symbols, self.bytes
+        )
+    }
+}
+
+impl std::error::Error for CodebookOom {}
+
+impl CodebookEncoder {
+    pub fn new(d: usize, seed: u64) -> Self {
+        CodebookEncoder { codebook: HashMap::new(), d, seed, memory_budget: None }
+    }
+
+    pub fn with_budget(d: usize, seed: u64, budget_bytes: usize) -> Self {
+        CodebookEncoder {
+            codebook: HashMap::new(),
+            d,
+            seed,
+            memory_budget: Some(budget_bytes),
+        }
+    }
+
+    pub fn symbols_seen(&self) -> usize {
+        self.codebook.len()
+    }
+
+    /// Deterministic codeword for a symbol: the draw is keyed by
+    /// (global seed, symbol), so re-encoding after eviction or on another
+    /// worker yields the identical codeword.
+    fn gen_codeword(&self, symbol: u64) -> Codeword {
+        let mut rng = Rng::new(mix64(self.seed ^ mix64(symbol)));
+        // 64 signs per u64 draw.
+        let mut out = Vec::with_capacity(self.d);
+        let mut word = 0u64;
+        for i in 0..self.d {
+            if i % 64 == 0 {
+                word = rng.next_u64();
+            }
+            out.push(if word & 1 == 0 { 1 } else { -1 });
+            word >>= 1;
+        }
+        out
+    }
+
+    fn lookup_or_insert(&mut self, symbol: u64) -> &Codeword {
+        if !self.codebook.contains_key(&symbol) {
+            let cw = self.gen_codeword(symbol);
+            self.codebook.insert(symbol, cw);
+        }
+        &self.codebook[&symbol]
+    }
+
+    /// Encode, returning an error if the memory budget is exhausted.
+    pub fn try_encode(&mut self, symbols: &[u64]) -> Result<Encoding, CodebookOom> {
+        let mut acc = vec![0.0f32; self.d];
+        for &a in symbols {
+            let cw = self.lookup_or_insert(a);
+            for (o, &c) in acc.iter_mut().zip(cw.iter()) {
+                *o += c as f32;
+            }
+        }
+        if let Some(budget) = self.memory_budget {
+            let bytes = self.memory_bytes_now();
+            if bytes > budget {
+                return Err(CodebookOom { symbols: self.codebook.len(), bytes });
+            }
+        }
+        Ok(Encoding::Dense(acc))
+    }
+
+    fn memory_bytes_now(&self) -> usize {
+        // codeword payloads + per-entry HashMap overhead (key + bucket).
+        self.codebook.len() * (self.d + std::mem::size_of::<u64>() + 48)
+    }
+}
+
+impl CategoricalEncoder for CodebookEncoder {
+    /// Panics on budget exhaustion — mirroring the paper's observed crash.
+    /// Use [`CodebookEncoder::try_encode`] to handle it gracefully.
+    fn encode(&mut self, symbols: &[u64]) -> Encoding {
+        self.try_encode(symbols).expect("codebook memory budget exceeded")
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.memory_bytes_now()
+    }
+
+    fn name(&self) -> &'static str {
+        "codebook"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codewords_are_pm_one_and_deterministic() {
+        let mut e = CodebookEncoder::new(256, 1);
+        let a = e.try_encode(&[5]).unwrap().to_dense();
+        assert!(a.iter().all(|&x| x == 1.0 || x == -1.0));
+        let mut e2 = CodebookEncoder::new(256, 1);
+        assert_eq!(e2.try_encode(&[5]).unwrap().to_dense(), a);
+    }
+
+    #[test]
+    fn different_seed_different_codebook() {
+        let mut e1 = CodebookEncoder::new(128, 1);
+        let mut e2 = CodebookEncoder::new(128, 2);
+        assert_ne!(
+            e1.try_encode(&[9]).unwrap().to_dense(),
+            e2.try_encode(&[9]).unwrap().to_dense()
+        );
+    }
+
+    #[test]
+    fn bundling_is_sum_of_codewords() {
+        let mut e = CodebookEncoder::new(64, 3);
+        let a = e.try_encode(&[1]).unwrap().to_dense();
+        let b = e.try_encode(&[2]).unwrap().to_dense();
+        let ab = e.try_encode(&[1, 2]).unwrap().to_dense();
+        for i in 0..64 {
+            assert_eq!(ab[i], a[i] + b[i]);
+        }
+    }
+
+    #[test]
+    fn memory_grows_linearly_with_alphabet() {
+        let mut e = CodebookEncoder::new(1000, 4);
+        let m0 = e.memory_bytes();
+        e.try_encode(&(0..100).collect::<Vec<_>>()).unwrap();
+        let m100 = e.memory_bytes();
+        e.try_encode(&(100..300).collect::<Vec<_>>()).unwrap();
+        let m300 = e.memory_bytes();
+        assert!(m100 > m0);
+        // 300 symbols ~ 3x the footprint of 100 symbols.
+        let per1 = m100 as f64 / 100.0;
+        let per3 = m300 as f64 / 300.0;
+        assert!((per1 - per3).abs() / per1 < 0.05);
+    }
+
+    #[test]
+    fn repeated_symbols_do_not_grow_memory() {
+        let mut e = CodebookEncoder::new(500, 5);
+        e.try_encode(&[1, 2, 3]).unwrap();
+        let m = e.memory_bytes();
+        for _ in 0..10 {
+            e.try_encode(&[1, 2, 3]).unwrap();
+        }
+        assert_eq!(e.memory_bytes(), m);
+        assert_eq!(e.symbols_seen(), 3);
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let mut e = CodebookEncoder::with_budget(1000, 6, 200_000);
+        let mut failed = false;
+        for batch in 0..100 {
+            let symbols: Vec<u64> = (batch * 10..batch * 10 + 10).collect();
+            if e.try_encode(&symbols).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "budget never tripped");
+    }
+
+    #[test]
+    fn dot_concentration_theorem2() {
+        // (1/d) phi(x).phi(x') ~ |x ∩ x'| (Theorem 2): overlap-13 sets.
+        let mut e = CodebookEncoder::new(32_768, 7);
+        let x: Vec<u64> = (0..26).collect();
+        let y: Vec<u64> = (13..39).collect();
+        let fx = e.try_encode(&x).unwrap();
+        let fy = e.try_encode(&y).unwrap();
+        let est = fx.dot(&fy) / 32_768.0;
+        assert!((est - 13.0).abs() < 2.0, "est={est}");
+    }
+}

@@ -1,0 +1,194 @@
+//! Dense hash-based categorical encoder (paper Sec. 4.2.1).
+//!
+//! "A trivial approach": d independent ±1 hash functions define
+//! `phi(a)_i = psi_i(a)`, equivalent in distribution to sampling
+//! `phi(a) ~ Unif({±1}^d)` — but computed on the fly, with no codebook.
+//! The cost is d hash evaluations per symbol, which is exactly why the
+//! paper calls it computationally burdensome (Fig. 7 excludes it as
+//! "dramatically slower"). Feature vectors bundle by element-wise sum.
+//!
+//! Two faithfulness modes:
+//! * [`DenseHashMode::Literal`] — one seeded Murmur3 evaluation per
+//!   coordinate, the paper's construction verbatim.
+//! * [`DenseHashMode::Packed`] — one evaluation per 32 coordinates,
+//!   using each output bit as a sign. Statistically identical codes
+//!   (each bit of Murmur3 is unbiased), ~32x faster; used where the
+//!   experiment only needs the *codes*, not the baseline's slowness.
+
+use crate::encoding::vector::Encoding;
+use crate::encoding::CategoricalEncoder;
+use crate::hash::murmur3_u64;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DenseHashMode {
+    Literal,
+    Packed,
+}
+
+#[derive(Clone, Debug)]
+pub struct DenseHashEncoder {
+    /// Literal: one seed per coordinate (len d).
+    /// Packed: one seed per 32-coordinate word (len ceil(d/32)).
+    seeds: Vec<u32>,
+    d: usize,
+    mode: DenseHashMode,
+}
+
+impl DenseHashEncoder {
+    pub fn new(d: usize, mode: DenseHashMode, rng: &mut Rng) -> Self {
+        let n_seeds = match mode {
+            DenseHashMode::Literal => d,
+            DenseHashMode::Packed => d.div_ceil(32),
+        };
+        DenseHashEncoder {
+            seeds: (0..n_seeds).map(|_| rng.next_u32()).collect(),
+            d,
+            mode,
+        }
+    }
+
+    /// phi(a)_i in {+1,-1}, accumulated into `acc` (bundling by sum).
+    pub fn accumulate_symbol(&self, symbol: u64, acc: &mut [f32]) {
+        debug_assert_eq!(acc.len(), self.d);
+        match self.mode {
+            DenseHashMode::Literal => {
+                for (i, &seed) in self.seeds.iter().enumerate() {
+                    let bit = murmur3_u64(symbol, seed) & 1;
+                    acc[i] += if bit == 0 { 1.0 } else { -1.0 };
+                }
+            }
+            DenseHashMode::Packed => {
+                for (w, &seed) in self.seeds.iter().enumerate() {
+                    let mut word = murmur3_u64(symbol, seed);
+                    let base = w * 32;
+                    let n = (self.d - base).min(32);
+                    for j in 0..n {
+                        acc[base + j] += if word & 1 == 0 { 1.0 } else { -1.0 };
+                        word >>= 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Encode one symbol as its ±1 codeword.
+    pub fn encode_symbol(&self, symbol: u64) -> Encoding {
+        let mut acc = vec![0.0f32; self.d];
+        self.accumulate_symbol(symbol, &mut acc);
+        Encoding::Dense(acc)
+    }
+
+    /// Encode a feature vector: sum of the symbols' codewords (Eq. 1 with
+    /// hashing in place of sampling).
+    pub fn encode_set(&self, symbols: &[u64]) -> Encoding {
+        let mut acc = vec![0.0f32; self.d];
+        for &a in symbols {
+            self.accumulate_symbol(a, &mut acc);
+        }
+        Encoding::Dense(acc)
+    }
+}
+
+impl CategoricalEncoder for DenseHashEncoder {
+    fn encode(&mut self, symbols: &[u64]) -> Encoding {
+        self.encode_set(symbols)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.seeds.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        match self.mode {
+            DenseHashMode::Literal => "dense-hash",
+            DenseHashMode::Packed => "dense-hash-packed",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_pm_one() {
+        let mut rng = Rng::new(1);
+        for mode in [DenseHashMode::Literal, DenseHashMode::Packed] {
+            let e = DenseHashEncoder::new(100, mode, &mut rng);
+            if let Encoding::Dense(v) = e.encode_symbol(42) {
+                assert!(v.iter().all(|&x| x == 1.0 || x == -1.0), "{mode:?}");
+            } else {
+                panic!();
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_and_symbol_dependent() {
+        let mut rng = Rng::new(2);
+        let e = DenseHashEncoder::new(64, DenseHashMode::Literal, &mut rng);
+        assert_eq!(e.encode_symbol(7), e.encode_symbol(7));
+        assert_ne!(e.encode_symbol(7), e.encode_symbol(8));
+    }
+
+    #[test]
+    fn bundling_is_sum() {
+        let mut rng = Rng::new(3);
+        let e = DenseHashEncoder::new(32, DenseHashMode::Packed, &mut rng);
+        let a = e.encode_symbol(1).to_dense();
+        let b = e.encode_symbol(2).to_dense();
+        let ab = e.encode_set(&[1, 2]).to_dense();
+        for i in 0..32 {
+            assert_eq!(ab[i], a[i] + b[i]);
+        }
+    }
+
+    #[test]
+    fn codes_look_balanced() {
+        let mut rng = Rng::new(4);
+        let e = DenseHashEncoder::new(4096, DenseHashMode::Packed, &mut rng);
+        let v = e.encode_symbol(99).to_dense();
+        let pos = v.iter().filter(|&&x| x > 0.0).count();
+        assert!((pos as f64 - 2048.0).abs() < 200.0, "pos={pos}");
+    }
+
+    #[test]
+    fn distinct_symbols_near_orthogonal() {
+        // E[phi(a).phi(b)] = 0 with std sqrt(d): check |dot| << d.
+        let mut rng = Rng::new(5);
+        let e = DenseHashEncoder::new(4096, DenseHashMode::Packed, &mut rng);
+        let a = e.encode_symbol(1);
+        let b = e.encode_symbol(2);
+        assert!(a.dot(&b).abs() < 6.0 * (4096f64).sqrt());
+        assert_eq!(a.dot(&a), 4096.0);
+    }
+
+    #[test]
+    fn modes_agree_statistically() {
+        // Same *distribution*, not same values: check dot concentration.
+        let mut rng = Rng::new(6);
+        let lit = DenseHashEncoder::new(2048, DenseHashMode::Literal, &mut rng);
+        let pak = DenseHashEncoder::new(2048, DenseHashMode::Packed, &mut rng);
+        let set: Vec<u64> = (0..10).collect();
+        let dl = lit.encode_set(&set);
+        let dp = pak.encode_set(&set);
+        // ||phi||^2 = s*d + cross terms ~ s*d ± O(s*sqrt(d))
+        let want = 10.0 * 2048.0;
+        assert!((dl.dot(&dl) - want).abs() < want * 0.25);
+        assert!((dp.dot(&dp) - want).abs() < want * 0.25);
+    }
+
+    #[test]
+    fn packed_handles_non_multiple_of_32() {
+        let mut rng = Rng::new(7);
+        let e = DenseHashEncoder::new(37, DenseHashMode::Packed, &mut rng);
+        let v = e.encode_symbol(5).to_dense();
+        assert_eq!(v.len(), 37);
+        assert!(v.iter().all(|&x| x == 1.0 || x == -1.0));
+    }
+}

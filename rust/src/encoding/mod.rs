@@ -1,0 +1,57 @@
+//! Encoding layer: every encoder the paper defines or compares against.
+//!
+//! Categorical (Sec. 4): [`bloom`] (sparse hashing — the contribution),
+//! [`dense_hash`] (Sec. 4.2.1 baseline), [`codebook`] (Sec. 4.1
+//! conventional HDC baseline), [`permutation`] (Remark 3 / Sec. 7.4.1
+//! hardware baseline).
+//!
+//! Numeric (Sec. 5): [`projection`] (dense signed RP + sparse top-k /
+//! thresholded RP), [`sjlt`] (structured Eq. 5 + the relaxed ±1/0 form).
+//!
+//! [`bundle`] implements Sec. 5.4's three combination rules and
+//! [`vector`] the shared dense/sparse HD vector type.
+
+pub mod bloom;
+pub mod bundle;
+pub mod codebook;
+pub mod dense_hash;
+pub mod permutation;
+pub mod projection;
+pub mod sjlt;
+pub mod vector;
+
+pub use bloom::BloomEncoder;
+pub use bundle::{bundle, BundleMethod};
+pub use codebook::{CodebookEncoder, CodebookOom};
+pub use dense_hash::{DenseHashEncoder, DenseHashMode};
+pub use permutation::PermutationEncoder;
+pub use projection::{DenseProjection, ProjectionMode, SparseProjection, SparsifyRule};
+pub use sjlt::{RelaxedSjlt, Sjlt};
+pub use vector::{sparse_from_indices, Encoding};
+
+/// A categorical-feature encoder: symbols (interned u64 ids) -> HD vector.
+/// `&mut self` because the codebook baseline populates lazily.
+pub trait CategoricalEncoder: Send {
+    fn encode(&mut self, symbols: &[u64]) -> Encoding;
+    fn dim(&self) -> usize;
+    /// Persistent encoder state in bytes — the paper's scalability axis.
+    fn memory_bytes(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// A numeric-feature encoder: x in R^n -> HD vector.
+pub trait NumericEncoder: Send + Sync {
+    fn encode(&self, x: &[f32]) -> Encoding;
+    fn dim(&self) -> usize;
+    fn name(&self) -> &'static str;
+
+    /// Encode a batch. The default delegates per record; projection-style
+    /// encoders override it with a row-blocked loop that loads each
+    /// projection row once per *batch* instead of once per *record* —
+    /// the encode hot path is memory-bound on the projection matrix, so
+    /// this is the difference between flat and linear worker scaling
+    /// (EXPERIMENTS.md §Perf).
+    fn encode_batch(&self, xs: &[&[f32]]) -> Vec<Encoding> {
+        xs.iter().map(|x| self.encode(x)).collect()
+    }
+}

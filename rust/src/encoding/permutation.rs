@@ -1,0 +1,153 @@
+//! Permutation / shift-based categorical encoder (paper Remark 3 and the
+//! Sec. 7.4.1 "shift-based materialization" hardware baseline).
+//!
+//! A pool of seed vectors in {±1}^d is generated once; a symbol's
+//! codeword is seed[psi1(a) % pool] cyclically rotated by
+//! `(psi2(a) % (d/g)) * g` where g is the shift granularity (the paper's
+//! FPGA comparison uses g=16 "bricks" to cut materialization latency).
+//! Distinct rotations of a random ±1 vector are near-orthogonal, so this
+//! imitates random codes while storing only `pool` vectors — but every
+//! encode must *materialize* a rotated copy, which is the data-movement
+//! bottleneck the paper measures (84–135x slower than hashing on FPGA).
+
+use crate::encoding::vector::Encoding;
+use crate::encoding::CategoricalEncoder;
+use crate::hash::{IndexHash, MurmurHash};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct PermutationEncoder {
+    seeds: Vec<Vec<f32>>, // pool of ±1 seed vectors
+    d: usize,
+    granularity: usize,
+    h_seed: MurmurHash, // selects the seed vector
+    h_rot: MurmurHash,  // selects the rotation
+}
+
+impl PermutationEncoder {
+    pub fn new(d: usize, pool: usize, granularity: usize, rng: &mut Rng) -> Self {
+        assert!(pool >= 1 && granularity >= 1 && d % granularity == 0);
+        let seeds = (0..pool)
+            .map(|_| (0..d).map(|_| rng.sign()).collect())
+            .collect();
+        PermutationEncoder {
+            seeds,
+            d,
+            granularity,
+            h_seed: MurmurHash::new(rng.next_u32()),
+            h_rot: MurmurHash::new(rng.next_u32()),
+        }
+    }
+
+    /// Rotation amount for a symbol, in coordinates (multiple of g).
+    fn rotation(&self, symbol: u64) -> usize {
+        let steps = self.d / self.granularity;
+        (self.h_rot.index(symbol, steps as u64) as usize) * self.granularity
+    }
+
+    /// Materialize the codeword of one symbol into `out` (the explicit
+    /// copy the hardware baseline pays for).
+    pub fn materialize_symbol(&self, symbol: u64, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d);
+        let seed = &self.seeds[self.h_seed.index(symbol, self.seeds.len() as u64) as usize];
+        let rot = self.rotation(symbol);
+        // out = seed rotated right by rot (brick-wise copy, Sec. 7.4.1).
+        let tail = self.d - rot;
+        out[rot..].copy_from_slice(&seed[..tail]);
+        out[..rot].copy_from_slice(&seed[tail..]);
+    }
+
+    pub fn encode_set(&self, symbols: &[u64]) -> Encoding {
+        let mut acc = vec![0.0f32; self.d];
+        let mut tmp = vec![0.0f32; self.d];
+        for &a in symbols {
+            self.materialize_symbol(a, &mut tmp);
+            for (o, t) in acc.iter_mut().zip(&tmp) {
+                *o += *t;
+            }
+        }
+        Encoding::Dense(acc)
+    }
+}
+
+impl CategoricalEncoder for PermutationEncoder {
+    fn encode(&mut self, symbols: &[u64]) -> Encoding {
+        self.encode_set(symbols)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.seeds.len() * self.d * std::mem::size_of::<f32>()
+    }
+
+    fn name(&self) -> &'static str {
+        "permutation"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn materialized_codes_are_rotations() {
+        let mut rng = Rng::new(1);
+        let e = PermutationEncoder::new(64, 1, 16, &mut rng);
+        let mut a = vec![0.0; 64];
+        e.materialize_symbol(123, &mut a);
+        // Some rotation of the single seed must equal a.
+        let seed = &e.seeds[0];
+        let found = (0..4).any(|r| {
+            let rot = r * 16;
+            (0..64).all(|i| a[(i + rot) % 64] == seed[i])
+        });
+        assert!(found);
+    }
+
+    #[test]
+    fn deterministic_and_order_invariant() {
+        let mut rng = Rng::new(2);
+        let e = PermutationEncoder::new(128, 4, 16, &mut rng);
+        assert_eq!(e.encode_set(&[1, 2, 3]), e.encode_set(&[3, 2, 1]));
+    }
+
+    #[test]
+    fn rotations_near_orthogonal() {
+        let mut rng = Rng::new(3);
+        let e = PermutationEncoder::new(4096, 2, 16, &mut rng);
+        let a = e.encode_set(&[10]);
+        let b = e.encode_set(&[999]);
+        assert!(a.dot(&b).abs() < 6.0 * (4096f64).sqrt(), "dot={}", a.dot(&b));
+    }
+
+    #[test]
+    fn alphabet_capacity_limited_by_d_and_pool() {
+        // pool * d/g distinct codewords exist; larger alphabets collide.
+        let mut rng = Rng::new(4);
+        let e = PermutationEncoder::new(64, 1, 16, &mut rng);
+        // only 4 distinct rotations: among 100 symbols some must share codes
+        let mut codes = std::collections::HashSet::new();
+        let mut buf = vec![0.0f32; 64];
+        for sym in 0..100u64 {
+            e.materialize_symbol(sym, &mut buf);
+            codes.insert(buf.iter().map(|x| *x as i8).collect::<Vec<_>>());
+        }
+        assert!(codes.len() <= 4);
+    }
+
+    #[test]
+    fn memory_scales_with_pool_not_alphabet() {
+        let mut rng = Rng::new(5);
+        let mut e = PermutationEncoder::new(1024, 8, 16, &mut rng);
+        let m = e.memory_bytes();
+        for batch in 0..20 {
+            let symbols: Vec<u64> = (batch * 50..batch * 50 + 26).collect();
+            let _ = e.encode(&symbols);
+        }
+        assert_eq!(e.memory_bytes(), m);
+        assert_eq!(m, 8 * 1024 * 4);
+    }
+}

@@ -1,0 +1,376 @@
+//! Dense random-projection numeric encoder (paper Eq. 4, Sec. 5.1).
+//!
+//! `phi(x) = sign(Phi x)` with rows of Phi drawn `Unif(S^{n-1})`. This is
+//! the rust mirror of the Pallas/PJRT artifact `encode_project_sign` —
+//! the streaming pipeline uses the artifact for batched training, while
+//! this implementation serves the hardware simulators, single-record
+//! paths, and cross-validation tests (rust vs artifact numerics).
+
+use crate::encoding::vector::{sparse_from_indices, Encoding};
+use crate::encoding::NumericEncoder;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectionMode {
+    /// Raw z = Phi x.
+    Raw,
+    /// Eq. 4: sign(Phi x), sign(0) := +1.
+    Sign,
+}
+
+#[derive(Clone, Debug)]
+pub struct DenseProjection {
+    /// Row-major (d x n) — the layout the PJRT artifacts consume.
+    pub phi: Vec<f32>,
+    /// Transposed copy (n x d): the compute layout. The projection is an
+    /// AXPY over contiguous d-length rows, which auto-vectorizes; the
+    /// row-major layout's n=13-long inner products do not (§Perf).
+    phi_t: Vec<f32>,
+    pub d: usize,
+    pub n: usize,
+    pub mode: ProjectionMode,
+}
+
+impl DenseProjection {
+    /// Rows ~ Unif(S^{n-1}).
+    pub fn new(d: usize, n: usize, mode: ProjectionMode, rng: &mut Rng) -> Self {
+        let mut phi = Vec::with_capacity(d * n);
+        for _ in 0..d {
+            phi.extend(rng.unit_vector(n));
+        }
+        let mut phi_t = vec![0.0f32; n * d];
+        for i in 0..d {
+            for j in 0..n {
+                phi_t[j * d + i] = phi[i * n + j];
+            }
+        }
+        DenseProjection { phi, phi_t, d, n, mode }
+    }
+
+    /// z = Phi x into a caller buffer (hot path: no allocation).
+    /// SIMD-friendly: n accumulating AXPY passes over contiguous
+    /// d-length rows of the transposed matrix.
+    pub fn project_into(&self, x: &[f32], z: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(z.len(), self.d);
+        z.fill(0.0);
+        for (j, &xv) in x.iter().enumerate() {
+            let col = &self.phi_t[j * self.d..(j + 1) * self.d];
+            for (zi, &c) in z.iter_mut().zip(col) {
+                *zi += c * xv;
+            }
+        }
+    }
+
+    pub fn encode_record(&self, x: &[f32]) -> Encoding {
+        let mut z = vec![0.0f32; self.d];
+        self.project_into(x, &mut z);
+        match self.mode {
+            ProjectionMode::Raw => Encoding::Dense(z),
+            ProjectionMode::Sign => {
+                for zi in z.iter_mut() {
+                    *zi = if *zi >= 0.0 { 1.0 } else { -1.0 };
+                }
+                Encoding::Dense(z)
+            }
+        }
+    }
+
+    /// Flattened Phi for feeding the PJRT artifact (same row-major layout).
+    pub fn phi_flat(&self) -> &[f32] {
+        &self.phi
+    }
+}
+
+impl DenseProjection {
+    /// Tiled batch projection (§Perf): iterate d in L2-sized tiles; for
+    /// each record-block the 13 transposed-Phi tile rows are reused, so
+    /// Phi traffic per record drops by the block factor, and the inner
+    /// loop stays a vectorizable contiguous AXPY.
+    pub fn project_batch_into(&self, xs: &[&[f32]], zs: &mut [f32]) {
+        const TILE: usize = 4096; // 16 KiB of f32 per tile row
+        const BLOCK: usize = 8; // records sharing one tile pass
+        let bsz = xs.len();
+        debug_assert_eq!(zs.len(), bsz * self.d);
+        zs.fill(0.0);
+        let mut tile_start = 0;
+        while tile_start < self.d {
+            let tile_len = TILE.min(self.d - tile_start);
+            let mut b0 = 0;
+            while b0 < bsz {
+                let bend = (b0 + BLOCK).min(bsz);
+                for (j, col_all) in self.phi_t.chunks_exact(self.d).enumerate() {
+                    let col = &col_all[tile_start..tile_start + tile_len];
+                    for b in b0..bend {
+                        let xv = xs[b][j];
+                        let zrow =
+                            &mut zs[b * self.d + tile_start..b * self.d + tile_start + tile_len];
+                        for (zi, &c) in zrow.iter_mut().zip(col) {
+                            *zi += c * xv;
+                        }
+                    }
+                }
+                b0 = bend;
+            }
+            tile_start += tile_len;
+        }
+    }
+}
+
+impl NumericEncoder for DenseProjection {
+    fn encode(&self, x: &[f32]) -> Encoding {
+        self.encode_record(x)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn name(&self) -> &'static str {
+        match self.mode {
+            ProjectionMode::Raw => "projection-raw",
+            ProjectionMode::Sign => "projection-sign",
+        }
+    }
+
+    fn encode_batch(&self, xs: &[&[f32]]) -> Vec<Encoding> {
+        let bsz = xs.len();
+        let mut zs = vec![0.0f32; bsz * self.d];
+        self.project_batch_into(xs, &mut zs);
+        zs.chunks_exact(self.d)
+            .map(|z| match self.mode {
+                ProjectionMode::Raw => Encoding::Dense(z.to_vec()),
+                ProjectionMode::Sign => Encoding::Dense(
+                    z.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect(),
+                ),
+            })
+            .collect()
+    }
+}
+
+/// Sparse random projection (paper Eq. 6 and Sec. 5.3): binarize z by
+/// top-k or by a fixed threshold t with Pr(|z_i| >= t) ~ k/d.
+#[derive(Clone, Debug)]
+pub struct SparseProjection {
+    pub proj: DenseProjection,
+    pub rule: SparsifyRule,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SparsifyRule {
+    /// Eq. 6: the k largest coordinates of z are set to 1.
+    TopK(usize),
+    /// Sec. 5.3: coordinates with |z_i| >= t are set to 1 (the
+    /// sort-free variant used in the FPGA design).
+    Threshold(f32),
+}
+
+impl SparseProjection {
+    pub fn new_topk(d: usize, n: usize, k: usize, rng: &mut Rng) -> Self {
+        SparseProjection {
+            proj: DenseProjection::new(d, n, ProjectionMode::Raw, rng),
+            rule: SparsifyRule::TopK(k),
+        }
+    }
+
+    pub fn new_threshold(d: usize, n: usize, t: f32, rng: &mut Rng) -> Self {
+        SparseProjection {
+            proj: DenseProjection::new(d, n, ProjectionMode::Raw, rng),
+            rule: SparsifyRule::Threshold(t),
+        }
+    }
+
+    /// Calibrate t so that the expected activation count on the sample is
+    /// ~k ("selecting a threshold t such that Pr(|Phi_i . x| >= t) = k/d").
+    pub fn calibrate_threshold(d: usize, n: usize, k: usize, sample: &[Vec<f32>], rng: &mut Rng) -> Self {
+        let proj = DenseProjection::new(d, n, ProjectionMode::Raw, rng);
+        let mut mags: Vec<f32> = Vec::with_capacity(sample.len() * d);
+        let mut z = vec![0.0f32; d];
+        for x in sample {
+            proj.project_into(x, &mut z);
+            mags.extend(z.iter().map(|v| v.abs()));
+        }
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let frac = (k as f64 / d as f64).clamp(0.0, 1.0);
+        let idx = ((mags.len() as f64 * frac) as usize).min(mags.len().saturating_sub(1));
+        let t = if mags.is_empty() { 0.0 } else { mags[idx] };
+        SparseProjection { proj, rule: SparsifyRule::Threshold(t) }
+    }
+
+    pub fn encode_record(&self, x: &[f32]) -> Encoding {
+        let mut z = vec![0.0f32; self.proj.d];
+        self.proj.project_into(x, &mut z);
+        self.sparsify(&z)
+    }
+}
+
+impl SparseProjection {
+    fn sparsify(&self, z: &[f32]) -> Encoding {
+        match self.rule {
+            SparsifyRule::TopK(k) => {
+                let k = k.min(z.len());
+                let mut idx: Vec<u32> = (0..z.len() as u32).collect();
+                idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+                    z[b as usize].partial_cmp(&z[a as usize]).unwrap()
+                });
+                idx.truncate(k);
+                sparse_from_indices(idx, self.proj.d)
+            }
+            SparsifyRule::Threshold(t) => {
+                let idx: Vec<u32> = z
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, v)| v.abs() >= t)
+                    .map(|(i, _)| i as u32)
+                    .collect();
+                sparse_from_indices(idx, self.proj.d)
+            }
+        }
+    }
+}
+
+impl NumericEncoder for SparseProjection {
+    fn encode(&self, x: &[f32]) -> Encoding {
+        self.encode_record(x)
+    }
+
+    fn dim(&self) -> usize {
+        self.proj.d
+    }
+
+    fn name(&self) -> &'static str {
+        match self.rule {
+            SparsifyRule::TopK(_) => "sparse-rp-topk",
+            SparsifyRule::Threshold(_) => "sparse-rp-threshold",
+        }
+    }
+
+    fn encode_batch(&self, xs: &[&[f32]]) -> Vec<Encoding> {
+        let bsz = xs.len();
+        let mut zs = vec![0.0f32; bsz * self.proj.d];
+        self.proj.project_batch_into(xs, &mut zs);
+        zs.chunks_exact(self.proj.d).map(|z| self.sparsify(z)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(x: &[f32]) -> Vec<f32> {
+        let n: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        x.iter().map(|v| v / n).collect()
+    }
+
+    #[test]
+    fn rows_are_unit_norm() {
+        let mut rng = Rng::new(1);
+        let p = DenseProjection::new(50, 13, ProjectionMode::Sign, &mut rng);
+        for i in 0..50 {
+            let row = &p.phi[i * 13..(i + 1) * 13];
+            let norm: f64 = row.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sign_codes_are_pm_one() {
+        let mut rng = Rng::new(2);
+        let p = DenseProjection::new(64, 5, ProjectionMode::Sign, &mut rng);
+        let e = p.encode(&[0.3, -1.0, 0.5, 2.0, 0.0]);
+        if let Encoding::Dense(v) = e {
+            assert!(v.iter().all(|&x| x == 1.0 || x == -1.0));
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn angle_estimation_eq4() {
+        // (1/d) phi(x).phi(x') ~ 1 - 2 angle(x,x') / pi for unit vectors.
+        let mut rng = Rng::new(3);
+        let d = 20_000;
+        let p = DenseProjection::new(d, 4, ProjectionMode::Sign, &mut rng);
+        let x = unit(&[1.0, 0.0, 0.0, 0.0]);
+        let y = unit(&[1.0, 1.0, 0.0, 0.0]); // 45 degrees
+        let ex = p.encode(&x);
+        let ey = p.encode(&y);
+        let sim = ex.dot(&ey) / d as f64;
+        let want = 1.0 - 2.0 * (std::f64::consts::PI / 4.0) / std::f64::consts::PI;
+        assert!((sim - want).abs() < 0.03, "sim={sim} want={want}");
+    }
+
+    #[test]
+    fn topk_sets_exactly_k() {
+        let mut rng = Rng::new(4);
+        let p = SparseProjection::new_topk(500, 13, 50, &mut rng);
+        let x: Vec<f32> = (0..13).map(|i| (i as f32).sin()).collect();
+        let e = p.encode(&x);
+        assert_eq!(e.nnz(), 50);
+    }
+
+    #[test]
+    fn topk_picks_largest() {
+        let mut rng = Rng::new(5);
+        let p = SparseProjection::new_topk(100, 8, 10, &mut rng);
+        let x: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).cos()).collect();
+        let mut z = vec![0.0f32; 100];
+        p.proj.project_into(&x, &mut z);
+        let e = p.encode(&x);
+        if let Encoding::SparseBinary { indices, .. } = &e {
+            let min_sel = indices.iter().map(|&i| z[i as usize]).fold(f32::MAX, f32::min);
+            let max_unsel = (0..100u32)
+                .filter(|i| !indices.contains(i))
+                .map(|i| z[i as usize])
+                .fold(f32::MIN, f32::max);
+            assert!(min_sel >= max_unsel, "min_sel={min_sel} max_unsel={max_unsel}");
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn threshold_calibration_hits_target_sparsity() {
+        let mut rng = Rng::new(6);
+        let sample: Vec<Vec<f32>> = (0..50)
+            .map(|_| (0..13).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let p = SparseProjection::calibrate_threshold(1000, 13, 100, &sample, &mut rng);
+        let mut nnzs = 0usize;
+        for x in &sample {
+            nnzs += p.encode(x).nnz();
+        }
+        let avg = nnzs as f64 / sample.len() as f64;
+        assert!((avg - 100.0).abs() < 40.0, "avg nnz = {avg}");
+    }
+
+    #[test]
+    fn locality_similar_inputs_share_active_set() {
+        let mut rng = Rng::new(7);
+        let p = SparseProjection::new_topk(2000, 6, 100, &mut rng);
+        let x = unit(&[1.0, 0.2, -0.4, 0.8, 0.1, -0.9]);
+        let mut y = x.clone();
+        y[0] += 0.01; // tiny perturbation
+        let far = unit(&[-1.0, 0.5, 0.4, -0.8, 0.9, 0.2]);
+        let ex = p.encode(&x);
+        let ey = p.encode(&unit(&y));
+        let ef = p.encode(&far);
+        assert!(ex.dot(&ey) > 90.0, "near overlap {}", ex.dot(&ey));
+        assert!(ex.dot(&ef) < 40.0, "far overlap {}", ex.dot(&ef));
+    }
+
+    #[test]
+    fn raw_projection_is_linear() {
+        let mut rng = Rng::new(8);
+        let p = DenseProjection::new(64, 4, ProjectionMode::Raw, &mut rng);
+        let a = [1.0f32, 2.0, -1.0, 0.5];
+        let b = [0.3f32, -0.2, 0.9, 1.5];
+        let ab: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        let ea = p.encode(&a).to_dense();
+        let eb = p.encode(&b).to_dense();
+        let eab = p.encode(&ab).to_dense();
+        for i in 0..64 {
+            assert!((eab[i] - ea[i] - eb[i]).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Sparse Johnson-Lindenstrauss transform numeric encoder (paper Eq. 5,
+//! plus the relaxed i.i.d. ±1/0 matrix of Sec. 7.2.3).
+//!
+//! Two constructions, both hash-defined so nothing scales with n beyond
+//! the (k x n) hash tables:
+//!
+//! * [`Sjlt`] — the structured construction of Eq. 5: k chunks of size
+//!   d/k, chunk c scatter-adds `sigma_c(j) x_j` at bucket `eta_c(j)`.
+//!   Mirrors the Pallas kernel `kernels/sjlt.py` (cross-validated in the
+//!   integration tests).
+//! * [`RelaxedSjlt`] — the empirical-section variant: Phi_ij in
+//!   {+1 w.p. p/2, 0 w.p. 1-p, -1 w.p. p/2}, stored in CSR-like form so
+//!   encode cost is proportional to nnz(Phi). Optionally sign-quantized
+//!   ("SJLT encodings are quantized using the sign function", Fig. 9).
+
+use crate::encoding::vector::Encoding;
+use crate::encoding::NumericEncoder;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Sjlt {
+    /// eta[c][j]: bucket of input j in chunk c, in [0, d/k).
+    pub eta: Vec<Vec<u32>>,
+    /// sigma[c][j]: sign of input j in chunk c.
+    pub sigma: Vec<Vec<f32>>,
+    pub d: usize,
+    pub n: usize,
+}
+
+impl Sjlt {
+    pub fn new(d: usize, n: usize, k: usize, rng: &mut Rng) -> Self {
+        assert!(d % k == 0, "d={d} must be divisible by k={k}");
+        let dk = (d / k) as u64;
+        let eta = (0..k)
+            .map(|_| (0..n).map(|_| rng.below(dk) as u32).collect())
+            .collect();
+        let sigma = (0..k).map(|_| (0..n).map(|_| rng.sign()).collect()).collect();
+        Sjlt { eta, sigma, d, n }
+    }
+
+    pub fn k(&self) -> usize {
+        self.eta.len()
+    }
+
+    pub fn encode_record(&self, x: &[f32]) -> Encoding {
+        debug_assert_eq!(x.len(), self.n);
+        let k = self.k();
+        let dk = self.d / k;
+        let mut out = vec![0.0f32; self.d];
+        for c in 0..k {
+            let base = c * dk;
+            let (eta, sigma) = (&self.eta[c], &self.sigma[c]);
+            for j in 0..self.n {
+                out[base + eta[j] as usize] += sigma[j] * x[j];
+            }
+        }
+        Encoding::Dense(out)
+    }
+
+    /// Hash tables flattened for the PJRT artifact `encode_sjlt`
+    /// (row-major (k, n) i32 / f32).
+    pub fn eta_flat(&self) -> Vec<i32> {
+        self.eta.iter().flatten().map(|&v| v as i32).collect()
+    }
+
+    pub fn sigma_flat(&self) -> Vec<f32> {
+        self.sigma.iter().flatten().copied().collect()
+    }
+}
+
+impl NumericEncoder for Sjlt {
+    fn encode(&self, x: &[f32]) -> Encoding {
+        self.encode_record(x)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn name(&self) -> &'static str {
+        "sjlt"
+    }
+}
+
+/// The relaxed construction used in the paper's experiments (Sec. 7.2.3).
+#[derive(Clone, Debug)]
+pub struct RelaxedSjlt {
+    /// Per output row: (input index, sign) of non-zero entries.
+    rows: Vec<Vec<(u32, f32)>>,
+    pub d: usize,
+    pub n: usize,
+    pub p: f64,
+    pub quantize: bool,
+}
+
+impl RelaxedSjlt {
+    pub fn new(d: usize, n: usize, p: f64, quantize: bool, rng: &mut Rng) -> Self {
+        let rows = (0..d)
+            .map(|_| {
+                (0..n as u32)
+                    .filter_map(|j| {
+                        if rng.bernoulli(p) {
+                            Some((j, rng.sign()))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        RelaxedSjlt { rows, d, n, p, quantize }
+    }
+
+    /// Fraction of non-zero entries in Phi (should be ~p).
+    pub fn density(&self) -> f64 {
+        let nnz: usize = self.rows.iter().map(Vec::len).sum();
+        nnz as f64 / (self.d * self.n) as f64
+    }
+
+    pub fn encode_record(&self, x: &[f32]) -> Encoding {
+        debug_assert_eq!(x.len(), self.n);
+        let mut out = vec![0.0f32; self.d];
+        for (zi, row) in out.iter_mut().zip(&self.rows) {
+            let mut acc = 0.0f32;
+            for &(j, s) in row {
+                acc += s * x[j as usize];
+            }
+            *zi = if self.quantize {
+                if acc >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            } else {
+                acc
+            };
+        }
+        Encoding::Dense(out)
+    }
+}
+
+impl NumericEncoder for RelaxedSjlt {
+    fn encode(&self, x: &[f32]) -> Encoding {
+        self.encode_record(x)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn name(&self) -> &'static str {
+        "sjlt-relaxed"
+    }
+
+    fn encode_batch(&self, xs: &[&[f32]]) -> Vec<Encoding> {
+        // Row-blocked: each CSR row of Phi is walked once per batch.
+        let bsz = xs.len();
+        let mut outs = vec![vec![0.0f32; self.d]; bsz];
+        for (i, row) in self.rows.iter().enumerate() {
+            for (b, x) in xs.iter().enumerate() {
+                let mut acc = 0.0f32;
+                for &(j, s) in row {
+                    acc += s * x[j as usize];
+                }
+                outs[b][i] = if self.quantize {
+                    if acc >= 0.0 {
+                        1.0
+                    } else {
+                        -1.0
+                    }
+                } else {
+                    acc
+                };
+            }
+        }
+        outs.into_iter().map(Encoding::Dense).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structured_buckets_in_range() {
+        let mut rng = Rng::new(1);
+        let s = Sjlt::new(64, 13, 4, &mut rng);
+        for c in 0..4 {
+            assert!(s.eta[c].iter().all(|&b| b < 16));
+            assert!(s.sigma[c].iter().all(|&v| v == 1.0 || v == -1.0));
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Rng::new(2);
+        let s = Sjlt::new(32, 5, 4, &mut rng);
+        let a = [1.0f32, -2.0, 0.5, 3.0, 0.0];
+        let b = [0.2f32, 1.0, -0.5, 0.1, 2.0];
+        let ab: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        let (ea, eb, eab) = (
+            s.encode(&a).to_dense(),
+            s.encode(&b).to_dense(),
+            s.encode(&ab).to_dense(),
+        );
+        for i in 0..32 {
+            assert!((eab[i] - ea[i] - eb[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn norm_preserved_in_expectation() {
+        // E ||phi(x)||^2 = k ||x||^2 for the structured SJLT.
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..20).map(|i| ((i * 7 % 5) as f32) - 2.0).collect();
+        let k = 4;
+        let target = k as f64 * x.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+        let trials = 300;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let s = Sjlt::new(64 * k, 20, k, &mut rng);
+            acc += s.encode(&x).norm_sq();
+        }
+        let meanv = acc / trials as f64;
+        assert!((meanv - target).abs() / target < 0.15, "mean={meanv} want={target}");
+    }
+
+    #[test]
+    fn dot_product_preserved_in_expectation() {
+        // E[phi(x).phi(y)] = k x.y (Definition 2 with Delta -> 0 in mean).
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..10).map(|i| (i as f32 * 0.3).sin()).collect();
+        let y: Vec<f32> = (0..10).map(|i| (i as f32 * 0.9).cos()).collect();
+        let k = 2;
+        let want = k as f64
+            * x.iter().zip(&y).map(|(a, b)| (*a as f64) * (*b as f64)).sum::<f64>();
+        let trials = 500;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let s = Sjlt::new(32 * k, 10, k, &mut rng);
+            acc += s.encode(&x).dot(&s.encode(&y));
+        }
+        let meanv = acc / trials as f64;
+        assert!((meanv - want).abs() < 0.2 * want.abs().max(1.0), "mean={meanv} want={want}");
+    }
+
+    #[test]
+    fn flat_layouts_match() {
+        let mut rng = Rng::new(5);
+        let s = Sjlt::new(24, 7, 3, &mut rng);
+        let ef = s.eta_flat();
+        assert_eq!(ef.len(), 21);
+        assert_eq!(ef[7], s.eta[1][0] as i32);
+        let sf = s.sigma_flat();
+        assert_eq!(sf[14], s.sigma[2][0]);
+    }
+
+    #[test]
+    fn relaxed_density_near_p() {
+        let mut rng = Rng::new(6);
+        for p in [0.1, 0.4, 0.8] {
+            let s = RelaxedSjlt::new(500, 40, p, false, &mut rng);
+            assert!((s.density() - p).abs() < 0.03, "p={p} density={}", s.density());
+        }
+    }
+
+    #[test]
+    fn relaxed_quantized_is_pm_one() {
+        let mut rng = Rng::new(7);
+        let s = RelaxedSjlt::new(64, 13, 0.4, true, &mut rng);
+        let x: Vec<f32> = (0..13).map(|i| (i as f32).cos()).collect();
+        if let Encoding::Dense(v) = s.encode(&x) {
+            assert!(v.iter().all(|&z| z == 1.0 || z == -1.0));
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn relaxed_unquantized_linear() {
+        let mut rng = Rng::new(8);
+        let s = RelaxedSjlt::new(128, 6, 0.4, false, &mut rng);
+        let a = [1.0f32, 0.0, -1.0, 0.5, 2.0, -0.3];
+        let scaled: Vec<f32> = a.iter().map(|v| v * 2.0).collect();
+        let ea = s.encode(&a).to_dense();
+        let es = s.encode(&scaled).to_dense();
+        for i in 0..128 {
+            assert!((es[i] - 2.0 * ea[i]).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! HD vector representations shared by all encoders.
+//!
+//! The paper contrasts *dense* encodings (random codewords, signed
+//! projections — f32/i8 per coordinate) with *sparse binary* encodings
+//! (Bloom filters, thresholded projections — a short sorted index list).
+//! Sparse-binary is the scalability workhorse: inference against a dense
+//! parameter vector degenerates to `k·s` lookups plus adds, with no
+//! multiplications (Sec. 4.2.2), and the full d-dimensional embedding is
+//! never materialized.
+
+/// One encoded HD vector.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Encoding {
+    /// Dense f32 vector of length `d`.
+    Dense(Vec<f32>),
+    /// Sparse binary vector: sorted, deduplicated coordinates equal to 1.
+    SparseBinary { indices: Vec<u32>, d: usize },
+}
+
+impl Encoding {
+    /// Dimension of the HD space this vector lives in.
+    pub fn dim(&self) -> usize {
+        match self {
+            Encoding::Dense(v) => v.len(),
+            Encoding::SparseBinary { d, .. } => *d,
+        }
+    }
+
+    /// Number of non-zero coordinates.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Encoding::Dense(v) => v.iter().filter(|x| **x != 0.0).count(),
+            Encoding::SparseBinary { indices, .. } => indices.len(),
+        }
+    }
+
+    /// Materialize as a dense f32 vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            Encoding::Dense(v) => v.clone(),
+            Encoding::SparseBinary { indices, d } => {
+                let mut out = vec![0.0f32; *d];
+                for &i in indices {
+                    out[i as usize] = 1.0;
+                }
+                out
+            }
+        }
+    }
+
+    /// Scatter into a caller-provided dense buffer (must be zeroed by the
+    /// caller or via [`Encoding::scatter_into_zeroed`]). Used to feed the
+    /// PJRT artifacts, which take dense batches.
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        match self {
+            Encoding::Dense(v) => out[..v.len()].copy_from_slice(v),
+            Encoding::SparseBinary { indices, .. } => {
+                for &i in indices {
+                    out[i as usize] = 1.0;
+                }
+            }
+        }
+    }
+
+    /// Zero `out` then scatter; cheap for sparse codes (zeroing dominated
+    /// by memset, touched coords are few).
+    pub fn scatter_into_zeroed(&self, out: &mut [f32]) {
+        out.fill(0.0);
+        self.scatter_into(out);
+    }
+
+    /// Dot product between two encodings (Definition 2's similarity).
+    pub fn dot(&self, other: &Encoding) -> f64 {
+        assert_eq!(self.dim(), other.dim(), "dim mismatch");
+        match (self, other) {
+            (Encoding::Dense(a), Encoding::Dense(b)) => {
+                a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+            }
+            (Encoding::Dense(a), Encoding::SparseBinary { indices, .. })
+            | (Encoding::SparseBinary { indices, .. }, Encoding::Dense(a)) => {
+                indices.iter().map(|&i| a[i as usize] as f64).sum()
+            }
+            (
+                Encoding::SparseBinary { indices: a, .. },
+                Encoding::SparseBinary { indices: b, .. },
+            ) => {
+                // Both sorted: linear merge intersection count.
+                let (mut i, mut j, mut acc) = (0usize, 0usize, 0u64);
+                while i < a.len() && j < b.len() {
+                    match a[i].cmp(&b[j]) {
+                        std::cmp::Ordering::Less => i += 1,
+                        std::cmp::Ordering::Greater => j += 1,
+                        std::cmp::Ordering::Equal => {
+                            acc += 1;
+                            i += 1;
+                            j += 1;
+                        }
+                    }
+                }
+                acc as f64
+            }
+        }
+    }
+
+    /// Dot product against a dense parameter vector theta — the inference
+    /// primitive. For sparse codes this is the multiplication-free
+    /// lookup-and-sum the paper highlights.
+    pub fn dot_params(&self, theta: &[f32]) -> f64 {
+        match self {
+            Encoding::Dense(v) => {
+                debug_assert_eq!(v.len(), theta.len());
+                v.iter().zip(theta).map(|(x, t)| *x as f64 * *t as f64).sum()
+            }
+            Encoding::SparseBinary { indices, d } => {
+                debug_assert_eq!(*d, theta.len());
+                indices.iter().map(|&i| theta[i as usize] as f64).sum()
+            }
+        }
+    }
+
+    /// Squared L2 norm.
+    pub fn norm_sq(&self) -> f64 {
+        match self {
+            Encoding::Dense(v) => v.iter().map(|x| (*x as f64) * (*x as f64)).sum(),
+            Encoding::SparseBinary { indices, .. } => indices.len() as f64,
+        }
+    }
+
+    /// Bytes needed to store this vector (Sec. 4.2.2's memory argument:
+    /// sparse codes store k·s indices, not d values).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            Encoding::Dense(v) => v.len() * std::mem::size_of::<f32>(),
+            Encoding::SparseBinary { indices, .. } => {
+                indices.len() * std::mem::size_of::<u32>() + std::mem::size_of::<usize>()
+            }
+        }
+    }
+}
+
+/// Sort + dedup an index buffer in place and wrap it as a sparse encoding.
+/// All sparse encoders funnel through this so the "sorted unique"
+/// invariant holds by construction.
+pub fn sparse_from_indices(mut indices: Vec<u32>, d: usize) -> Encoding {
+    indices.sort_unstable();
+    indices.dedup();
+    debug_assert!(indices.last().map_or(true, |&i| (i as usize) < d));
+    Encoding::SparseBinary { indices, d }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(idx: &[u32], d: usize) -> Encoding {
+        sparse_from_indices(idx.to_vec(), d)
+    }
+
+    #[test]
+    fn sparse_invariants() {
+        let e = sp(&[5, 1, 5, 3, 1], 10);
+        match &e {
+            Encoding::SparseBinary { indices, d } => {
+                assert_eq!(indices, &vec![1, 3, 5]);
+                assert_eq!(*d, 10);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(e.nnz(), 3);
+        assert_eq!(e.dim(), 10);
+    }
+
+    #[test]
+    fn to_dense_round_trip() {
+        let e = sp(&[0, 4, 9], 10);
+        let d = e.to_dense();
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.iter().sum::<f32>(), 3.0);
+        assert_eq!(d[0], 1.0);
+        assert_eq!(d[9], 1.0);
+    }
+
+    #[test]
+    fn dot_sparse_sparse_is_intersection() {
+        let a = sp(&[1, 3, 5, 7], 10);
+        let b = sp(&[3, 4, 5, 9], 10);
+        assert_eq!(a.dot(&b), 2.0);
+        assert_eq!(b.dot(&a), 2.0);
+        assert_eq!(a.dot(&a), 4.0);
+    }
+
+    #[test]
+    fn dot_mixed_matches_dense() {
+        let a = sp(&[2, 4], 6);
+        let b = Encoding::Dense(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.dot(&b), 3.0 + 5.0);
+        assert_eq!(b.dot(&a), 8.0);
+        // cross-check against fully dense
+        let ad = Encoding::Dense(a.to_dense());
+        assert_eq!(ad.dot(&b), 8.0);
+    }
+
+    #[test]
+    fn dot_params_paths_agree() {
+        let theta: Vec<f32> = (0..8).map(|i| i as f32 * 0.5).collect();
+        let s = sp(&[1, 6], 8);
+        let d = Encoding::Dense(s.to_dense());
+        assert_eq!(s.dot_params(&theta), d.dot_params(&theta));
+        assert_eq!(s.dot_params(&theta), 0.5 + 3.0);
+    }
+
+    #[test]
+    fn scatter_into_zeroed() {
+        let mut buf = vec![7.0f32; 6];
+        sp(&[0, 5], 6).scatter_into_zeroed(&mut buf);
+        assert_eq!(buf, vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn storage_accounting_favors_sparse() {
+        let d = 10_000;
+        let sparse = sp(&[1, 2, 3, 4], d);
+        let dense = Encoding::Dense(vec![1.0; d]);
+        assert!(sparse.storage_bytes() * 100 < dense.storage_bytes());
+    }
+
+    #[test]
+    fn norm_sq() {
+        assert_eq!(sp(&[1, 2, 3], 5).norm_sq(), 3.0);
+        assert_eq!(Encoding::Dense(vec![3.0, 4.0]).norm_sq(), 25.0);
+    }
+}

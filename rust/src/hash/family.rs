@@ -1,0 +1,247 @@
+//! p-independent hash families (paper Definition 1).
+//!
+//! Theorem 3's analysis of the Bloom encoder requires the hash functions
+//! to be drawn from a *2s-independent* family. The classical construction
+//! is a degree-(p-1) polynomial over a prime field evaluated at the key:
+//!
+//! ```text
+//! psi(a) = (c_{p-1} a^{p-1} + ... + c_1 a + c_0  mod P)  mod d
+//! ```
+//!
+//! with i.i.d. uniform coefficients c_i in [0, P). We use the Mersenne
+//! prime P = 2^61 - 1, whose modular reduction needs only shifts/adds on
+//! the 128-bit product. Storage is O(p log m) as in Sec. 4.2.3.
+//!
+//! The paper's *practical* choice is plain seeded Murmur3 (justified via
+//! the Leftover Hash Lemma / randomness extraction, Sec. 4.2.3); both
+//! implement the same `IndexHash` trait so encoders can swap them, and
+//! the theory-validation suite uses the polynomial family where the
+//! independence assumption must actually hold.
+
+use super::murmur3::murmur3_u64;
+use crate::util::rng::Rng;
+
+/// Mersenne prime 2^61 - 1.
+pub const MERSENNE_P: u64 = (1u64 << 61) - 1;
+
+/// Reduce a 128-bit value mod 2^61 - 1.
+#[inline(always)]
+fn mod_mersenne(x: u128) -> u64 {
+    // x = hi * 2^61 + lo, and 2^61 ≡ 1 (mod P).
+    let lo = (x as u64) & MERSENNE_P;
+    let hi = (x >> 61) as u64;
+    let mut s = lo + hi;
+    if s >= MERSENNE_P {
+        s -= MERSENNE_P;
+    }
+    // hi can be up to 2^67, so fold once more.
+    let hi2 = s >> 61;
+    if hi2 > 0 {
+        s = (s & MERSENNE_P) + hi2;
+        if s >= MERSENNE_P {
+            s -= MERSENNE_P;
+        }
+    }
+    s
+}
+
+#[inline(always)]
+fn mul_mod(a: u64, b: u64) -> u64 {
+    mod_mersenne((a as u128) * (b as u128))
+}
+
+#[inline(always)]
+fn add_mod(a: u64, b: u64) -> u64 {
+    let s = a + b; // both < 2^61, no overflow
+    if s >= MERSENNE_P {
+        s - MERSENNE_P
+    } else {
+        s
+    }
+}
+
+/// A hash function mapping u64 symbol ids into [0, d).
+pub trait IndexHash: Send + Sync {
+    fn index(&self, key: u64, d: u64) -> u64;
+
+    /// A ±1 hash derived from the same function (used by dense-hash
+    /// encodings and the SJLT's sigma).
+    fn sign(&self, key: u64) -> f32 {
+        if self.index(key ^ 0x5bf0_3635, 2) == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+/// Seeded Murmur3: the paper's practical hash (32-bit seed each).
+#[derive(Clone, Copy, Debug)]
+pub struct MurmurHash {
+    pub seed: u32,
+}
+
+impl MurmurHash {
+    pub fn new(seed: u32) -> Self {
+        MurmurHash { seed }
+    }
+
+    /// Draw k functions with independent random seeds (32k bits of state,
+    /// exactly the paper's accounting).
+    pub fn family(k: usize, rng: &mut Rng) -> Vec<MurmurHash> {
+        (0..k).map(|_| MurmurHash::new(rng.next_u32())).collect()
+    }
+}
+
+impl IndexHash for MurmurHash {
+    #[inline(always)]
+    fn index(&self, key: u64, d: u64) -> u64 {
+        // 32-bit output is plenty: d <= ~10^6 in all experiments. Map by
+        // multiply-shift to avoid modulo bias at tiny d.
+        let h = murmur3_u64(key, self.seed) as u64;
+        (h * d) >> 32
+    }
+}
+
+/// Degree-(p-1) polynomial over GF(2^61 - 1): a p-independent family.
+#[derive(Clone, Debug)]
+pub struct PolyHash {
+    /// coefficients c_0 .. c_{p-1}, all < P.
+    coeffs: Vec<u64>,
+}
+
+impl PolyHash {
+    /// Draw one function from the p-independent family.
+    pub fn new(p: usize, rng: &mut Rng) -> Self {
+        assert!(p >= 1);
+        let coeffs = (0..p).map(|_| rng.below(MERSENNE_P)).collect();
+        PolyHash { coeffs }
+    }
+
+    /// Draw k independent functions, each p-independent.
+    pub fn family(k: usize, p: usize, rng: &mut Rng) -> Vec<PolyHash> {
+        (0..k).map(|_| PolyHash::new(p, rng)).collect()
+    }
+
+    /// Independence degree p (number of coefficients).
+    pub fn degree(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// Raw polynomial evaluation in [0, P) via Horner's rule.
+    #[inline]
+    pub fn eval(&self, key: u64) -> u64 {
+        let x = mod_mersenne(key as u128);
+        let mut acc = 0u64;
+        for &c in self.coeffs.iter().rev() {
+            acc = add_mod(mul_mod(acc, x), c);
+        }
+        acc
+    }
+
+    /// Storage in bits: p coefficients of 61 bits (Sec. 4.2.3's
+    /// O(p log m) accounting).
+    pub fn storage_bits(&self) -> usize {
+        self.coeffs.len() * 61
+    }
+}
+
+impl IndexHash for PolyHash {
+    #[inline]
+    fn index(&self, key: u64, d: u64) -> u64 {
+        // (eval * d) / P maps near-uniformly for d << P.
+        ((self.eval(key) as u128 * d as u128) >> 61) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mersenne_arithmetic() {
+        assert_eq!(mod_mersenne(MERSENNE_P as u128), 0);
+        assert_eq!(mod_mersenne((MERSENNE_P as u128) + 5), 5);
+        assert_eq!(mul_mod(MERSENNE_P - 1, 2), MERSENNE_P - 2);
+        assert_eq!(add_mod(MERSENNE_P - 1, 1), 0);
+        // (P-1)^2 mod P = 1
+        assert_eq!(mul_mod(MERSENNE_P - 1, MERSENNE_P - 1), 1);
+    }
+
+    #[test]
+    fn poly_eval_matches_naive() {
+        let mut rng = Rng::new(1);
+        let h = PolyHash::new(4, &mut rng);
+        // Naive O(p^2) evaluation with u128 arithmetic.
+        for key in [0u64, 1, 7, 1_000_003, u64::MAX] {
+            let x = (key as u128 % MERSENNE_P as u128) as u64;
+            let mut want: u128 = 0;
+            let mut xp: u128 = 1;
+            for &c in &h.coeffs {
+                want = (want + c as u128 * xp) % MERSENNE_P as u128;
+                xp = (xp * x as u128) % MERSENNE_P as u128;
+            }
+            assert_eq!(h.eval(key), want as u64, "key={key}");
+        }
+    }
+
+    #[test]
+    fn index_in_range() {
+        let mut rng = Rng::new(2);
+        let ph = PolyHash::new(6, &mut rng);
+        let mh = MurmurHash::new(rng.next_u32());
+        for d in [1u64, 2, 10, 997, 10_000] {
+            for key in 0..1000 {
+                assert!(ph.index(key, d) < d);
+                assert!(mh.index(key, d) < d);
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_independence_empirical() {
+        // For a 2-independent family, Pr[h(a)=i, h(b)=j] ~ 1/d^2. Check
+        // collision rate of pairs over many function draws.
+        let mut rng = Rng::new(3);
+        let d = 16u64;
+        let trials = 20_000;
+        let mut joint = vec![0usize; (d * d) as usize];
+        for _ in 0..trials {
+            let h = PolyHash::new(2, &mut rng);
+            let ia = h.index(11, d);
+            let ib = h.index(77, d);
+            joint[(ia * d + ib) as usize] += 1;
+        }
+        let expect = trials as f64 / (d * d) as f64;
+        for &c in &joint {
+            assert!(
+                (c as f64 - expect).abs() < expect * 0.6 + 8.0,
+                "joint cell {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn sign_hash_balanced() {
+        let h = MurmurHash::new(77);
+        let pos = (0..10_000u64).filter(|&k| h.sign(k) > 0.0).count();
+        assert!((pos as f64 - 5000.0).abs() < 300.0, "pos={pos}");
+    }
+
+    #[test]
+    fn murmur_family_distinct_seeds() {
+        let mut rng = Rng::new(4);
+        let fam = MurmurHash::family(64, &mut rng);
+        let mut seeds: Vec<u32> = fam.iter().map(|h| h.seed).collect();
+        seeds.sort();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 64);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let mut rng = Rng::new(5);
+        let h = PolyHash::new(52, &mut rng); // 2s for s=26
+        assert_eq!(h.storage_bits(), 52 * 61);
+    }
+}

@@ -1,0 +1,13 @@
+//! Hashing substrate (paper Sec. 2.2 / 4.2.3).
+//!
+//! * [`murmur3`] — the paper's practical hash (Murmur3 x86_32), with a
+//!   fast fixed-width path for interned u64 symbols.
+//! * [`family`]  — p-independent polynomial families over GF(2^61-1)
+//!   (Definition 1), used where Theorem 3's independence assumptions
+//!   must hold exactly, plus the seeded-Murmur3 family used in practice.
+
+pub mod family;
+pub mod murmur3;
+
+pub use family::{IndexHash, MurmurHash, PolyHash, MERSENNE_P};
+pub use murmur3::{murmur3_32, murmur3_u64};

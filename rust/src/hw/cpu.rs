@@ -1,0 +1,103 @@
+//! CPU baseline measurement (the denominator in Figs. 12–13).
+//!
+//! The paper's CPU numbers come from an i7-8700K running its
+//! TensorFlow + C-extension pipeline; ours come from actually running
+//! this crate's encoders on the local machine. Reports therefore show
+//! *measured* local throughput next to the paper's reference CPU
+//! throughput (back-derived from its speedup ratios), and comparisons
+//! are made on ratios, not absolute rates. A calibrated `paper_cpu`
+//! constant keeps the FPGA/PIM-vs-CPU ratio reproduction honest about
+//! which numbers are ours and which are the paper's.
+
+use std::time::Instant;
+
+use crate::coordinator::{CatCfg, EncoderCfg, NumCfg};
+use crate::data::synthetic::SyntheticConfig;
+use crate::data::{RecordStream, SyntheticStream};
+use crate::encoding::BundleMethod;
+
+/// Paper-reference CPU encoding throughput (inputs/sec), back-derived
+/// from Sec. 7.4.3: FPGA is 81x CPU with numeric+categorical and 11x
+/// without; FPGA encode-only rates are ~2.7M/s (OR cycle model).
+pub const PAPER_CPU_FULL: f64 = 27_000.0;
+pub const PAPER_CPU_NOCOUNT: f64 = 245_000.0;
+/// Paper CPU power during encoding (Sec. 7.4.3).
+pub const PAPER_CPU_WATTS: f64 = 88.0;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CpuMeasurement {
+    /// Measured single-thread encode throughput (records/sec).
+    pub records_per_sec: f64,
+    pub records: u64,
+    pub elapsed_s: f64,
+}
+
+/// Measure this machine's single-thread encode throughput for a given
+/// encoder configuration (the honest local "CPU" bar in Fig. 12).
+pub fn measure_encode(cfg: &EncoderCfg, records: u64, seed: u64) -> CpuMeasurement {
+    let data = SyntheticConfig {
+        alphabet_size: 10_000_000,
+        ..SyntheticConfig::sampled(seed)
+    };
+    let mut stream = SyntheticStream::new(data);
+    let mut enc = cfg.build();
+    // Pre-materialize records so stream generation is not measured.
+    let recs: Vec<_> = (0..records).map(|_| stream.next_record().unwrap()).collect();
+    let t0 = Instant::now();
+    let mut sink = 0usize;
+    for r in &recs {
+        sink = sink.wrapping_add(enc.encode(r).nnz());
+    }
+    std::hint::black_box(sink);
+    let dt = t0.elapsed().as_secs_f64();
+    CpuMeasurement {
+        records_per_sec: records as f64 / dt,
+        records,
+        elapsed_s: dt,
+    }
+}
+
+/// The paper's two encode workloads (Fig. 12): full (numeric d=10k dense
+/// projection + categorical bloom d=10k k=4) and No-Count.
+pub fn paper_workload(no_count: bool, seed: u64) -> EncoderCfg {
+    EncoderCfg {
+        cat: CatCfg::Bloom { d: 10_000, k: 4 },
+        num: if no_count { NumCfg::None } else { NumCfg::DenseSign { d: 10_000 } },
+        bundle: BundleMethod::ThresholdedSum,
+        n_numeric: 13,
+        seed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_nonzero_throughput() {
+        let cfg = EncoderCfg {
+            cat: CatCfg::Bloom { d: 1_000, k: 4 },
+            num: NumCfg::None,
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 1,
+        };
+        let m = measure_encode(&cfg, 2_000, 1);
+        assert!(m.records_per_sec > 10_000.0, "suspiciously slow: {m:?}");
+        assert_eq!(m.records, 2_000);
+    }
+
+    #[test]
+    fn no_count_faster_than_full() {
+        // Dropping the d=10k numeric projection must speed encoding up a
+        // lot (the paper sees the same asymmetry on CPU).
+        let full = measure_encode(&paper_workload(false, 2), 300, 2);
+        let nc = measure_encode(&paper_workload(true, 2), 300, 2);
+        assert!(
+            nc.records_per_sec > 3.0 * full.records_per_sec,
+            "no-count {:.0}/s vs full {:.0}/s",
+            nc.records_per_sec,
+            full.records_per_sec
+        );
+    }
+}

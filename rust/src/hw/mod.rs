@@ -1,0 +1,70 @@
+//! Hardware evaluation substrate (paper Sec. 6–7.4).
+//!
+//! The paper's hardware results come from an Alveo U280 FPGA and a
+//! simulated ReRAM PIM chip; neither is present here, so both are
+//! modeled as cycle-level simulators built from the papers' own
+//! architectural formulas, with small calibration constants fixed once
+//! against the published tables (see DESIGN.md §3). The CPU baseline is
+//! *measured* on this machine using this crate's real encoders.
+//!
+//! * [`fpga`] — dataflow pipeline model (Table 2, Fig. 11, the Sec. 7.4.1
+//!   shift-materialization baseline).
+//! * [`pim`]  — crossbar/cluster/tile model (Tables 3–4).
+//! * [`cpu`]  — local measurement + the paper's reference CPU constants
+//!   (Figs. 12–13 ratios).
+
+pub mod cpu;
+pub mod fpga;
+pub mod pim;
+
+/// Fig. 12/13-style comparison row.
+#[derive(Clone, Debug)]
+pub struct PlatformRow {
+    pub platform: String,
+    pub throughput: f64,
+    pub watts: f64,
+}
+
+impl PlatformRow {
+    pub fn per_watt(&self) -> f64 {
+        self.throughput / self.watts
+    }
+}
+
+/// Render rows with speedup/efficiency ratios against the first row
+/// (which is conventionally the CPU).
+pub fn comparison_table(rows: &[PlatformRow]) -> String {
+    let mut out = String::new();
+    let base = &rows[0];
+    out.push_str(&format!(
+        "{:<12} {:>16} {:>10} {:>16} {:>12}\n",
+        "platform", "inputs/s", "speedup", "inputs/s/W", "perf/W gain"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:>16.3e} {:>9.1}x {:>16.3e} {:>11.1}x\n",
+            r.platform,
+            r.throughput,
+            r.throughput / base.throughput,
+            r.per_watt(),
+            r.per_watt() / base.per_watt(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_table_formats_ratios() {
+        let rows = vec![
+            PlatformRow { platform: "CPU".into(), throughput: 1e5, watts: 88.0 },
+            PlatformRow { platform: "FPGA".into(), throughput: 8.1e6, watts: 30.0 },
+        ];
+        let t = comparison_table(&rows);
+        assert!(t.contains("81.0x"), "{t}");
+        assert!(t.contains("CPU") && t.contains("FPGA"));
+    }
+}

@@ -1,0 +1,30 @@
+//! # streaming-hdc
+//!
+//! Production-grade reproduction of *"Streaming Encoding Algorithms for
+//! Scalable Hyperdimensional Computing"* (Thomas et al., 2022) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the streaming coordinator: hashing,
+//!   sparse Bloom encoding, the synthetic Criteo-like stream, sharded
+//!   encode workers with backpressure, sparse-SGD logistic training,
+//!   metrics, and the FPGA / PIM hardware simulators.
+//! * **Layer 2 (python/compile/model.py)** — the dense algebra (random
+//!   projections, SJLT, fused logistic train step, MLP baseline) as
+//!   jitted JAX functions AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
+//!   projection / SJLT / logistic hot-spots, lowered into the same HLO.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (the
+//! `xla` crate); python never runs on the request path.
+//!
+//! Start with [`pipeline::TrainPipeline`] or the `examples/` directory.
+
+pub mod coordinator;
+pub mod data;
+pub mod encoding;
+pub mod hash;
+pub mod hw;
+pub mod model;
+pub mod pipeline;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,243 @@
+//! `shdc` — the streaming-HDC leader binary.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! shdc train   [--records N] [--alphabet M] [--d-cat D] [--k K]
+//!              [--backend rust|pjrt] [--profile small|default]
+//!              [--workers W] [--batch B] [--lr LR] [--seed S]
+//! shdc encode-bench [--records N] [--d-cat D] [--k K] [--workers W]
+//! shdc hw-report
+//! shdc artifacts-info
+//! ```
+
+use anyhow::{bail, Result};
+
+use shdc::coordinator::{CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::data::SyntheticStream;
+use shdc::encoding::BundleMethod;
+use shdc::pipeline::{train, TrainBackend, TrainCfg};
+
+/// Minimal `--key value` argument map.
+pub struct Args {
+    pub cmd: String,
+    pairs: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            bail!("usage: shdc <train|encode-bench|hw-report|artifacts-info> [--key value ...]");
+        }
+        let cmd = argv[0].clone();
+        let mut pairs = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {}", argv[i]))?;
+            let v = argv.get(i + 1).cloned().unwrap_or_default();
+            pairs.push((k.to_string(), v));
+            i += 2;
+        }
+        Ok(Args { cmd, pairs })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "encode-bench" => cmd_encode_bench(&args),
+        "hw-report" => cmd_hw_report(&args),
+        "artifacts-info" => cmd_artifacts_info(),
+        "pjrt-bench" => cmd_pjrt_bench(&args),
+        other => bail!("unknown subcommand {other}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let seed: u64 = args.num("seed", 0);
+    let d_cat: usize = args.num("d-cat", 10_000);
+    let d_num: usize = args.num("d-num", 2_048);
+    let k: usize = args.num("k", 4);
+    let backend = match args.get("backend").unwrap_or("rust") {
+        "rust" => TrainBackend::RustSgd,
+        "pjrt" => TrainBackend::PjrtFused {
+            profile: args.get("profile").unwrap_or("default").to_string(),
+        },
+        other => bail!("unknown backend {other}"),
+    };
+    // The pjrt backend's artifact pins (b, d_num, d_cat); align defaults.
+    let (d_cat, d_num) = if let TrainBackend::PjrtFused { profile } = &backend {
+        match profile.as_str() {
+            "small" => (512, 256),
+            _ => (8_192, 2_048),
+        }
+    } else {
+        (d_cat, d_num)
+    };
+    let data = SyntheticConfig {
+        alphabet_size: args.num("alphabet", 1_000_000),
+        positive_rate: args.num("positive-rate", 0.25),
+        noise: args.num("noise", 0.5),
+        seed,
+        ..Default::default()
+    };
+    let cfg = TrainCfg {
+        encoder: EncoderCfg {
+            cat: CatCfg::Bloom { d: d_cat, k },
+            num: NumCfg::DenseSign { d: d_num },
+            bundle: BundleMethod::Concat,
+            n_numeric: data.n_numeric,
+            seed,
+        },
+        backend,
+        lr: args.num("lr", 0.5),
+        batch_size: args.num("batch", 256),
+        n_workers: args.num("workers", 4),
+        train_records: args.num("records", 200_000),
+        val_records: args.num("val-records", 20_000),
+        test_records: args.num("test-records", 40_000),
+        validate_every: args.num("validate-every", 50_000),
+        patience: 3,
+        auc_chunk: args.num("auc-chunk", 10_000),
+        seed,
+    };
+    eprintln!("training: {:?}", cfg.encoder);
+    let report = train(&cfg, &data)?;
+    println!("records_trained   {}", report.records_trained);
+    println!("stopped_early     {}", report.stopped_early);
+    println!("final_train_loss  {:.4}", report.final_train_loss);
+    println!("final_val_loss    {:.4}", report.final_val_loss);
+    println!("val_auc           {:.4}", report.val_auc);
+    println!("test_auc          {}", report.auc_box().row());
+    println!("trainable_params  {}", report.trainable_params);
+    println!("wall              {:.2?}", report.wall);
+    println!(
+        "encode_throughput {:.0} rec/s/worker, train {:.0} rec/s, backpressure {}",
+        report.stats.encode_throughput(),
+        report.stats.train_throughput(),
+        report.stats.backpressure_events,
+    );
+    Ok(())
+}
+
+fn cmd_encode_bench(args: &Args) -> Result<()> {
+    let records: u64 = args.num("records", 500_000);
+    let d: usize = args.num("d-cat", 10_000);
+    let k: usize = args.num("k", 4);
+    let workers: usize = args.num("workers", 4);
+    let data = SyntheticConfig {
+        alphabet_size: args.num("alphabet", 10_000_000),
+        ..SyntheticConfig::sampled(args.num("seed", 0))
+    };
+    let n_numeric = data.n_numeric;
+    let enc = EncoderCfg {
+        cat: CatCfg::Bloom { d, k },
+        num: NumCfg::None,
+        bundle: BundleMethod::Concat,
+        n_numeric,
+        seed: args.num("seed", 0),
+    };
+    let stream = SyntheticStream::new(data);
+    let t0 = std::time::Instant::now();
+    let stats = shdc::coordinator::run_pipeline(
+        stream,
+        &enc,
+        &CoordinatorCfg {
+            batch_size: 4096,
+            n_workers: workers,
+            max_records: Some(records),
+            ..Default::default()
+        },
+        |_| true,
+    );
+    let dt = t0.elapsed();
+    let snap = stats.snapshot();
+    println!(
+        "encoded {} records (d={d}, k={k}, {workers} workers) in {dt:.2?} -> {:.0} rec/s wall, {:.0} rec/s encode-core",
+        snap.records_encoded,
+        snap.records_encoded as f64 / dt.as_secs_f64(),
+        snap.encode_throughput(),
+    );
+    Ok(())
+}
+
+fn cmd_hw_report(_args: &Args) -> Result<()> {
+    println!("run the per-table binaries: table2, table3, table4, fig11, fig12, fig13");
+    Ok(())
+}
+
+fn cmd_artifacts_info() -> Result<()> {
+    let rt = shdc::runtime::load_default()?;
+    println!("platform: {}", rt.platform());
+    for (name, a) in &rt.manifest.artifacts {
+        println!(
+            "  {name}: {} inputs, {} outputs, params {:?}",
+            a.inputs.len(),
+            a.outputs.len(),
+            a.params
+        );
+    }
+    Ok(())
+}
+
+/// Measure per-step latency of the fused train artifact (§Perf probe).
+fn cmd_pjrt_bench(args: &Args) -> Result<()> {
+    use shdc::runtime::HostTensor;
+    let profile = args.get("profile").unwrap_or("default").to_string();
+    let steps: usize = args.num("steps", 30);
+    let mut rt = shdc::runtime::load_default()?;
+    let name = format!("fused_train_sign_concat__{profile}");
+    let spec = rt.spec(&name)?.clone();
+    let (b, n) = (spec.param("b")?, spec.param("n")?);
+    let (d_num, d_cat, d_total) =
+        (spec.param("d_num")?, spec.param("d_cat")?, spec.param("d_total")?);
+    let mut rng = shdc::util::rng::Rng::new(1);
+    let theta = vec![0.0f32; d_total];
+    let x: Vec<f32> = (0..b * n).map(|_| rng.normal_f32()).collect();
+    let phi: Vec<f32> = (0..d_num * n).map(|_| rng.normal_f32()).collect();
+    let phic: Vec<f32> = (0..b * d_cat)
+        .map(|_| if rng.bernoulli(0.01) { 1.0 } else { 0.0 })
+        .collect();
+    let y: Vec<f32> = (0..b).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+    let inputs = vec![
+        HostTensor::f32(theta, &[d_total]),
+        HostTensor::f32(x, &[b, n]),
+        HostTensor::f32(phi, &[d_num, n]),
+        HostTensor::f32(phic, &[b, d_cat]),
+        HostTensor::f32(y, &[b]),
+        HostTensor::scalar_f32(0.1),
+    ];
+    rt.execute(&name, &inputs)?; // compile + warm
+    let mut samples = Vec::new();
+    for _ in 0..steps {
+        let t0 = std::time::Instant::now();
+        rt.execute(&name, &inputs)?;
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "{name}: median {:.2} ms/step  p10 {:.2}  p90 {:.2}  ({} steps, b={b})",
+        shdc::util::stats::median(&samples),
+        shdc::util::stats::percentile(&samples, 10.0),
+        shdc::util::stats::percentile(&samples, 90.0),
+        steps
+    );
+    println!("  -> {:.0} records/s through the train step", b as f64 * 1e3 / shdc::util::stats::median(&samples));
+    Ok(())
+}

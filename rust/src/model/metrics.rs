@@ -1,0 +1,155 @@
+//! Evaluation metrics: ROC-AUC (the paper's headline metric, better
+//! suited to the imbalanced CTR task than accuracy) and logistic loss.
+
+/// Area under the ROC curve via the rank-statistic (Mann-Whitney U)
+/// formulation, with average ranks for tied scores. O(n log n).
+pub fn auc(scores: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5; // undefined; conventional fallback
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // Assign average ranks over tie groups (1-based ranks).
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + 1 + j + 1) as f64 / 2.0;
+        for &idx in &order[i..=j] {
+            if labels[idx] {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Mean negative log-likelihood for probabilities in (0,1).
+pub fn log_loss(probs: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    if probs.is_empty() {
+        return 0.0;
+    }
+    let eps = 1e-12;
+    let s: f64 = probs
+        .iter()
+        .zip(labels)
+        .map(|(&p, &y)| {
+            let p = p.clamp(eps, 1.0 - eps);
+            if y {
+                -p.ln()
+            } else {
+                -(1.0 - p).ln()
+            }
+        })
+        .sum();
+    s / probs.len() as f64
+}
+
+/// Classification accuracy at threshold 0.5 (reported alongside AUC).
+pub fn accuracy(probs: &[f64], labels: &[bool]) -> f64 {
+    if probs.is_empty() {
+        return 0.0;
+    }
+    let correct = probs
+        .iter()
+        .zip(labels)
+        .filter(|(&p, &y)| (p >= 0.5) == y)
+        .count();
+    correct as f64 / probs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// O(n^2) reference AUC: P(score_pos > score_neg) + 0.5 P(tie).
+    fn auc_naive(scores: &[f64], labels: &[bool]) -> f64 {
+        let mut wins = 0.0;
+        let mut pairs = 0.0;
+        for i in 0..scores.len() {
+            if !labels[i] {
+                continue;
+            }
+            for j in 0..scores.len() {
+                if labels[j] {
+                    continue;
+                }
+                pairs += 1.0;
+                if scores[i] > scores[j] {
+                    wins += 1.0;
+                } else if scores[i] == scores[j] {
+                    wins += 0.5;
+                }
+            }
+        }
+        wins / pairs
+    }
+
+    #[test]
+    fn perfect_separation_is_one() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [true, true, false, false];
+        assert_eq!(auc(&scores, &labels), 1.0);
+        let flipped = [false, false, true, true];
+        assert_eq!(auc(&scores, &flipped), 0.0);
+    }
+
+    #[test]
+    fn random_scores_near_half() {
+        let mut rng = Rng::new(1);
+        let scores: Vec<f64> = (0..20_000).map(|_| rng.next_f64()).collect();
+        let labels: Vec<bool> = (0..20_000).map(|_| rng.bernoulli(0.3)).collect();
+        let a = auc(&scores, &labels);
+        assert!((a - 0.5).abs() < 0.02, "auc={a}");
+    }
+
+    #[test]
+    fn matches_naive_reference_with_ties() {
+        let mut rng = Rng::new(2);
+        for trial in 0..20 {
+            let n = 50 + trial * 7;
+            // Quantized scores force ties.
+            let scores: Vec<f64> = (0..n).map(|_| (rng.next_f64() * 8.0).floor() / 8.0).collect();
+            let labels: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.4)).collect();
+            if labels.iter().all(|&l| l) || labels.iter().all(|&l| !l) {
+                continue;
+            }
+            let fast = auc(&scores, &labels);
+            let slow = auc_naive(&scores, &labels);
+            assert!((fast - slow).abs() < 1e-12, "fast={fast} slow={slow}");
+        }
+    }
+
+    #[test]
+    fn degenerate_labels_return_half() {
+        assert_eq!(auc(&[0.1, 0.9], &[true, true]), 0.5);
+        assert_eq!(auc(&[0.1, 0.9], &[false, false]), 0.5);
+    }
+
+    #[test]
+    fn log_loss_basics() {
+        // Perfect confident predictions -> ~0; wrong confident -> large.
+        assert!(log_loss(&[1.0 - 1e-12, 1e-12], &[true, false]) < 1e-9);
+        assert!(log_loss(&[0.01], &[true]) > 4.0);
+        // Uniform prediction -> ln 2.
+        let l = log_loss(&[0.5, 0.5], &[true, false]);
+        assert!((l - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_threshold() {
+        let probs = [0.9, 0.4, 0.6, 0.1];
+        let labels = [true, false, false, true];
+        assert_eq!(accuracy(&probs, &labels), 0.5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Learning layer (paper Sec. 7.1): logistic regression over HD
+//! encodings with mini-batch SGD, ROC-AUC / log-loss metrics, and
+//! validation-driven early stopping.
+
+pub mod logistic;
+pub mod metrics;
+pub mod validate;
+
+pub use logistic::{sigmoid, LogisticModel};
+pub use metrics::{accuracy, auc, log_loss};
+pub use validate::{EarlyStopper, Split};

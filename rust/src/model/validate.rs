@@ -1,0 +1,95 @@
+//! Validation-driven early stopping (paper Sec. 7.1: "Models are
+//! validated every 300,000 records, and we stop training if the loss
+//! fails to decrease after 3 consecutive rounds of validation").
+
+#[derive(Clone, Debug)]
+pub struct EarlyStopper {
+    pub patience: usize,
+    best_loss: f64,
+    rounds_without_improvement: usize,
+    pub rounds_seen: usize,
+}
+
+impl EarlyStopper {
+    pub fn new(patience: usize) -> Self {
+        EarlyStopper {
+            patience,
+            best_loss: f64::INFINITY,
+            rounds_without_improvement: 0,
+            rounds_seen: 0,
+        }
+    }
+
+    /// Report one validation loss; returns true if training should stop.
+    pub fn observe(&mut self, val_loss: f64) -> bool {
+        self.rounds_seen += 1;
+        if val_loss < self.best_loss {
+            self.best_loss = val_loss;
+            self.rounds_without_improvement = 0;
+        } else {
+            self.rounds_without_improvement += 1;
+        }
+        self.rounds_without_improvement >= self.patience
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best_loss
+    }
+}
+
+/// Train/validation/test split boundaries over a fixed-length stream,
+/// following the paper: first 6/7 train, remaining 1/7 split evenly
+/// between validation and test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Split {
+    pub train: u64,
+    pub validation: u64,
+    pub test: u64,
+}
+
+impl Split {
+    pub fn criteo(total: u64) -> Split {
+        let train = total * 6 / 7;
+        let rest = total - train;
+        let validation = rest / 2;
+        Split { train, validation, test: rest - validation }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stops_after_patience_rounds() {
+        let mut es = EarlyStopper::new(3);
+        assert!(!es.observe(1.0));
+        assert!(!es.observe(0.9)); // improvement resets
+        assert!(!es.observe(0.95));
+        assert!(!es.observe(0.95));
+        assert!(es.observe(0.99)); // third consecutive non-improvement
+        assert_eq!(es.best(), 0.9);
+    }
+
+    #[test]
+    fn improvement_resets_counter() {
+        let mut es = EarlyStopper::new(2);
+        assert!(!es.observe(1.0));
+        assert!(!es.observe(1.1));
+        assert!(!es.observe(0.5)); // reset
+        assert!(!es.observe(0.6));
+        assert!(es.observe(0.7));
+    }
+
+    #[test]
+    fn split_proportions() {
+        let s = Split::criteo(7_000_000);
+        assert_eq!(s.train, 6_000_000);
+        assert_eq!(s.validation, 500_000);
+        assert_eq!(s.test, 500_000);
+        assert_eq!(s.train + s.validation + s.test, 7_000_000);
+        // Odd totals conserve mass too.
+        let s2 = Split::criteo(1_000_001);
+        assert_eq!(s2.train + s2.validation + s2.test, 1_000_001);
+    }
+}

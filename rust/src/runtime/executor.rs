@@ -1,0 +1,227 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Executables are compiled once on
+//! first use and cached; the streaming hot loop then only pays host→
+//! device literal transfer + execution.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// A host-side tensor argument.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32(vec![v], vec![1])
+    }
+
+    fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v, _) => xla::Literal::vec1(v),
+            HostTensor::I32(v, _) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// An output tensor pulled back to the host (always f32 in our models).
+#[derive(Clone, Debug)]
+pub struct HostOutput {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl HostOutput {
+    pub fn scalar(&self) -> f32 {
+        self.data[0]
+    }
+}
+
+/// Compiled-executable cache keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative executions per artifact (metrics surface).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain manifest.json).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new(), exec_counts: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.spec(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with shape/dtype-checked inputs.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostOutput>> {
+        self.prepare(name)?;
+        let spec = self.spec(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name} expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (inp, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if !inp.matches(ispec) {
+                bail!(
+                    "artifact {name} input {i}: expected {:?} {:?}, got {:?} {:?}",
+                    ispec.dtype,
+                    ispec.shape,
+                    inp.dtype(),
+                    inp.shape()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        let exe = self.cache.get(name).expect("prepared above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        // aot.py lowers with return_tuple=True: one tuple output.
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name}: manifest promises {} outputs, runtime returned {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ospec)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output of {name} not f32: {e:?}"))?;
+                if data.len() != ospec.elements() {
+                    bail!(
+                        "artifact {name}: output has {} elements, manifest says {}",
+                        data.len(),
+                        ospec.elements()
+                    );
+                }
+                Ok(HostOutput { data, shape: ospec.shape.clone() })
+            })
+            .collect()
+    }
+
+    /// Executables currently compiled.
+    pub fn compiled(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.cache.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+/// Locate the artifacts directory: $SHDC_ARTIFACTS, else ./artifacts
+/// relative to the workspace root.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SHDC_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Walk up from CWD looking for artifacts/manifest.json.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Convenience: load the runtime from the default location with a clear
+/// error message if artifacts have not been built.
+pub fn load_default() -> Result<Runtime> {
+    let dir = default_artifacts_dir();
+    Runtime::load(&dir).with_context(|| {
+        format!(
+            "could not load artifacts from {dir:?}; run `make artifacts` \
+             (or set SHDC_ARTIFACTS)"
+        )
+    })
+}

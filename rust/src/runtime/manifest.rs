@@ -1,0 +1,239 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: PathBuf,
+    /// The L2 function this artifact lowers (e.g. "train_step").
+    pub fn_name: String,
+    /// Shape profile name (e.g. "small", "default").
+    pub profile: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Semantic parameters: b, n, d_num, d_cat, d_total, sjlt_k.
+    pub params: BTreeMap<String, usize>,
+}
+
+impl ArtifactSpec {
+    pub fn param(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("artifact {} missing param {key}", self.name))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub mlp_widths: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, j) in arts {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                j.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            let mut params = BTreeMap::new();
+            if let Some(p) = j.get("params").and_then(Json::as_obj) {
+                for (k, v) in p {
+                    if let Some(x) = v.as_usize() {
+                        params.insert(k.clone(), x);
+                    }
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: PathBuf::from(
+                        j.get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+                    ),
+                    fn_name: j
+                        .get("fn")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    profile: j
+                        .get("profile")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    params,
+                },
+            );
+        }
+        let mlp_widths = root
+            .get("mlp_widths")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        Ok(Manifest { artifacts, mlp_widths })
+    }
+
+    /// Find the artifact for a function at a profile.
+    pub fn find(&self, fn_name: &str, profile: &str) -> Result<&ArtifactSpec> {
+        let key = format!("{fn_name}__{profile}");
+        self.artifacts
+            .get(&key)
+            .ok_or_else(|| anyhow!("no artifact {key} in manifest"))
+    }
+
+    /// All profiles present.
+    pub fn profiles(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .values()
+            .map(|a| a.profile.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "train_step__small": {
+          "file": "train_step__small.hlo.txt",
+          "fn": "train_step",
+          "profile": "small",
+          "inputs": [
+            {"shape": [768], "dtype": "float32"},
+            {"shape": [32, 768], "dtype": "float32"},
+            {"shape": [32], "dtype": "float32"},
+            {"shape": [1], "dtype": "float32"}
+          ],
+          "outputs": [
+            {"shape": [768], "dtype": "float32"},
+            {"shape": [], "dtype": "float32"}
+          ],
+          "params": {"b": 32, "d_total": 768, "n": 13}
+        },
+        "encode_sjlt__small": {
+          "file": "encode_sjlt__small.hlo.txt",
+          "fn": "encode_sjlt",
+          "profile": "small",
+          "inputs": [{"shape": [32, 13], "dtype": "float32"},
+                     {"shape": [4, 13], "dtype": "int32"},
+                     {"shape": [4, 13], "dtype": "float32"}],
+          "outputs": [{"shape": [32, 256], "dtype": "float32"}],
+          "params": {"b": 32, "sjlt_k": 4}
+        }
+      },
+      "mlp_widths": [512, 256, 64, 16]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.mlp_widths, vec![512, 256, 64, 16]);
+        let ts = m.find("train_step", "small").unwrap();
+        assert_eq!(ts.inputs.len(), 4);
+        assert_eq!(ts.inputs[1].shape, vec![32, 768]);
+        assert_eq!(ts.inputs[1].dtype, DType::F32);
+        assert_eq!(ts.outputs[1].shape, Vec::<usize>::new());
+        assert_eq!(ts.param("b").unwrap(), 32);
+        assert!(ts.param("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_i32_parsed() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let sj = m.find("encode_sjlt", "small").unwrap();
+        assert_eq!(sj.inputs[1].dtype, DType::I32);
+        assert_eq!(sj.inputs[1].elements(), 52);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find("train_step", "default").is_err());
+    }
+
+    #[test]
+    fn profiles_listed() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.profiles(), vec!["small".to_string()]);
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the HLO-text artifacts AOT-lowered by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs here — the rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/`.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{default_artifacts_dir, load_default, HostOutput, HostTensor, Runtime};
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};

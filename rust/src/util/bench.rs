@@ -1,0 +1,140 @@
+//! Tiny wall-clock benchmark harness (criterion is not cached offline).
+//!
+//! Usage in a `harness = false` bench target:
+//! ```ignore
+//! let mut h = Harness::new("encode_scaling");
+//! h.bench("bloom d=10000", || encoder.encode(&symbols));
+//! h.finish();
+//! ```
+//! Each benchmark is warmed up, then timed over adaptively-chosen
+//! iteration counts until `min_time` has elapsed; we report median /
+//! p10 / p90 per-iteration latency and derived throughput.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+}
+
+pub struct Harness {
+    pub group: String,
+    pub min_time: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Harness {
+    pub fn new(group: &str) -> Harness {
+        println!("\n== bench group: {group} ==");
+        Harness {
+            group: group.to_string(),
+            min_time: Duration::from_millis(
+                std::env::var("BENCH_MS")
+                    .ok()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(300),
+            ),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should return something (black_box'd to foil DCE).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: find an iteration count that takes >= ~5ms.
+        let mut iters_per_sample = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= Duration::from_millis(5) || iters_per_sample > (1 << 30) {
+                break;
+            }
+            iters_per_sample *= 4;
+        }
+        // Sample until min_time.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let t_start = Instant::now();
+        while t_start.elapsed() < self.min_time || samples_ns.len() < 5 {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            let dt = t0.elapsed();
+            samples_ns.push(dt.as_nanos() as f64 / iters_per_sample as f64);
+            total_iters += iters_per_sample;
+            if samples_ns.len() > 1000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            median_ns: stats::median(&samples_ns),
+            p10_ns: stats::percentile(&samples_ns, 10.0),
+            p90_ns: stats::percentile(&samples_ns, 90.0),
+            iters: total_iters,
+        };
+        println!(
+            "  {:<44} median {:>12}  p10 {:>12}  p90 {:>12}  ({} iters)",
+            res.name,
+            fmt_ns(res.median_ns),
+            fmt_ns(res.p10_ns),
+            fmt_ns(res.p90_ns),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Print a throughput line derived from the last result.
+    pub fn note_throughput(&self, items_per_iter: f64, unit: &str) {
+        if let Some(r) = self.results.last() {
+            let per_sec = items_per_iter * 1e9 / r.median_ns;
+            println!("      -> {per_sec:.3e} {unit}/s");
+        }
+    }
+
+    pub fn finish(&self) {
+        println!("== {} done: {} benchmarks ==", self.group, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_measures_something() {
+        std::env::set_var("BENCH_MS", "20");
+        let mut h = Harness::new("selftest");
+        let r = h.bench("sum", || (0..1000u64).sum::<u64>());
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.p90_ns * 1.001);
+    }
+}

@@ -1,0 +1,7 @@
+//! Dependency-free utilities (this image is offline; see Cargo.toml):
+//! deterministic RNG, minimal JSON, statistics, and a bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,339 @@
+//! Deterministic, dependency-free RNG: splitmix64 seeding + xoshiro256**.
+//!
+//! The paper's encoders are *defined* by random draws (codewords
+//! `Unif({±1}^d)`, projection rows `Unif(S^{n-1})`, hash seeds). All of
+//! those draws route through this module so that every experiment is
+//! reproducible from a single `u64` seed. xoshiro256** passes BigCrush
+//! and is far cheaper than anything crypto-grade, which matters because
+//! the codebook *baseline* has to materialize millions of codewords.
+
+/// splitmix64 step — used to seed xoshiro and as a cheap stateless mixer.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One-shot mix of a 64-bit value (stateless splitmix64 finalizer).
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut s = x;
+    splitmix64(&mut s)
+}
+
+/// xoshiro256** by Blackman & Vigna — the workhorse generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box-Muller normal deviate.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed deterministically from a single u64 via splitmix64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream (e.g. per worker shard / per hash fn).
+    pub fn fork(&self, stream: u64) -> Rng {
+        // Mix the current state with the stream id; forked streams are
+        // decorrelated by the splitmix64 avalanche.
+        let mut sm = self.s[0] ^ mix64(stream ^ 0xA076_1D64_78BD_642F);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in [0, bound) (Lemire rejection).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, bound).
+    #[inline]
+    pub fn below_usize(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Random sign in {-1.0, +1.0}.
+    #[inline]
+    pub fn sign(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box-Muller (with spare caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// A vector drawn uniformly from the unit sphere S^{n-1}
+    /// (normalized gaussian) — the paper's projection-row distribution.
+    pub fn unit_vector(&mut self, n: usize) -> Vec<f32> {
+        loop {
+            let v: Vec<f32> = (0..n).map(|_| self.normal_f32()).collect();
+            let norm = v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                return v.iter().map(|x| (*x as f64 / norm) as f32).collect();
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipf(α) sampler over {0, .., n-1} via rejection-inversion
+/// (Hörmann & Derflinger). The paper's categorical alphabets are heavy-
+/// tailed ("the total universe of products is vast" but views are
+/// concentrated); Zipf is the standard model for that shape.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    alpha: f64,
+    // Precomputed constants for rejection-inversion.
+    hx0: f64,
+    hxm: f64,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, alpha: f64) -> Self {
+        assert!(n >= 1 && alpha > 0.0 && (alpha - 1.0).abs() > 1e-9,
+            "alpha == 1 exactly is not supported; use e.g. 1.0001");
+        let h = |x: f64| -> f64 { ((1.0 + x).powf(1.0 - alpha) - 1.0) / (1.0 - alpha) };
+        let hx0 = h(0.5) - 1.0f64.min(1.0); // H(x0) - p(1)
+        let hx0 = hx0 + 0.0; // keep shape explicit
+        let hxm = h(n as f64 + 0.5);
+        let s = 1.0 - Self::h_inv_static(alpha, h(1.5) - 1.0);
+        Zipf { n, alpha, hx0, hxm, s }
+    }
+
+    fn h_inv_static(alpha: f64, x: f64) -> f64 {
+        (1.0 + x * (1.0 - alpha)).powf(1.0 / (1.0 - alpha)) - 1.0
+    }
+
+    fn h(&self, x: f64) -> f64 {
+        ((1.0 + x).powf(1.0 - self.alpha) - 1.0) / (1.0 - self.alpha)
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        Self::h_inv_static(self.alpha, x)
+    }
+
+    /// Sample a rank in [0, n) (0 = most frequent symbol).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        loop {
+            let u = self.hx0 + rng.next_f64() * (self.hxm - self.hx0);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().max(0.0).min((self.n - 1) as f64);
+            // Acceptance test.
+            if k - x <= self.s || u >= self.h(k + 0.5) - (1.0 + k).powf(-self.alpha) {
+                return k as u64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fork_decorrelates() {
+        let base = Rng::new(7);
+        let mut a = base.fork(0);
+        let mut b = base.fork(1);
+        let av: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let bv: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(av, bv);
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Rng::new(3);
+        let mean: f64 = (0..100_000).map(|_| r.next_f64()).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(4);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            let v = r.below(10) as usize;
+            counts[v] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn unit_vector_has_unit_norm() {
+        let mut r = Rng::new(6);
+        for n in [1usize, 2, 13, 100] {
+            let v = r.unit_vector(n);
+            let norm: f64 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-5, "n={n} norm={norm}");
+        }
+    }
+
+    #[test]
+    fn zipf_is_heavy_headed_and_in_range() {
+        let z = Zipf::new(1000, 1.2);
+        let mut r = Rng::new(8);
+        let mut head = 0usize;
+        for _ in 0..50_000 {
+            let k = z.sample(&mut r);
+            assert!(k < 1000);
+            if k < 10 {
+                head += 1;
+            }
+        }
+        // With alpha=1.2 the top-10 ranks carry a large constant fraction.
+        assert!(head > 20_000, "head={head}");
+    }
+
+    #[test]
+    fn zipf_rank_frequencies_decrease() {
+        let z = Zipf::new(100, 1.5);
+        let mut r = Rng::new(9);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        assert!(counts[0] > counts[3] && counts[3] > counts[20]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(10);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,161 @@
+//! Cross-module integration: encoders + bundling + data streams + model,
+//! exercising the combinations the figures sweep.
+
+use shdc::coordinator::{CatCfg, EncoderCfg, NumCfg};
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::data::{RecordStream, SyntheticStream, TsvReader};
+use shdc::encoding::{BundleMethod, Encoding};
+use shdc::model::LogisticModel;
+use std::io::Cursor;
+
+fn stream(seed: u64) -> SyntheticStream {
+    SyntheticStream::new(SyntheticConfig {
+        alphabet_size: 50_000,
+        ..SyntheticConfig::sampled(seed)
+    })
+}
+
+#[test]
+fn every_encoder_combination_roundtrips_through_the_model() {
+    let cats = [
+        CatCfg::Bloom { d: 512, k: 4 },
+        CatCfg::DenseHash { d: 512, literal: false },
+        CatCfg::Codebook { d: 512, budget_bytes: None },
+        CatCfg::Permutation { d: 512, pool: 4, granularity: 16 },
+    ];
+    let nums = [
+        NumCfg::DenseSign { d: 512 },
+        NumCfg::SparseTopK { d: 512, k: 50 },
+        NumCfg::Sjlt { d: 512, k: 4 },
+        NumCfg::RelaxedSjlt { d: 512, p: 0.4, quantize: true },
+    ];
+    let mut s = stream(1);
+    let records: Vec<_> = (0..64).map(|_| s.next_record().unwrap()).collect();
+    for cat in &cats {
+        for num in &nums {
+            for bundle in [BundleMethod::Concat, BundleMethod::Sum, BundleMethod::ThresholdedSum] {
+                let cfg = EncoderCfg {
+                    cat: cat.clone(),
+                    num: num.clone(),
+                    bundle,
+                    n_numeric: 13,
+                    seed: 7,
+                };
+                let mut enc = cfg.build();
+                let mut model = LogisticModel::new(cfg.out_dim());
+                let batch: Vec<(Encoding, bool)> =
+                    records.iter().map(|r| (enc.encode(r), r.label)).collect();
+                for (e, _) in &batch {
+                    assert_eq!(e.dim(), cfg.out_dim(), "{cat:?}/{num:?}/{bundle:?}");
+                }
+                let l0 = model.loss(&batch);
+                // Tiny step: encodings that bundle-by-sum have O(s)
+                // magnitude coordinates (worst case: permutation pools
+                // with colliding codewords), so a large lr overshoots.
+                model.sgd_step(&batch, 0.003);
+                let l1 = model.loss(&batch);
+                assert!(
+                    l1 < l0,
+                    "one SGD step on its own batch must reduce loss: {cat:?}/{num:?}/{bundle:?} {l0} -> {l1}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tsv_and_synthetic_streams_are_interchangeable() {
+    // Build a TSV text from synthetic-like data, parse it back, and feed
+    // both through the same encoder.
+    let mut lines = String::new();
+    for i in 0..50 {
+        let ints: Vec<String> = (0..13).map(|j| ((i * j) % 40).to_string()).collect();
+        let cats: Vec<String> = (0..26).map(|j| format!("{:08x}", i * 31 + j)).collect();
+        lines.push_str(&format!("{}\t{}\t{}\n", i % 2, ints.join("\t"), cats.join("\t")));
+    }
+    let mut tsv = TsvReader::new(Cursor::new(lines));
+    let cfg = EncoderCfg {
+        cat: CatCfg::Bloom { d: 1024, k: 4 },
+        num: NumCfg::DenseSign { d: 256 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 9,
+    };
+    let mut enc = cfg.build();
+    let mut n = 0;
+    while let Some(r) = tsv.next_record() {
+        let e = enc.encode(&r);
+        assert_eq!(e.dim(), 1280);
+        n += 1;
+    }
+    assert_eq!(n, 50);
+}
+
+#[test]
+fn bloom_encodings_separate_planted_classes_better_than_chance() {
+    // End-to-end sanity on raw encodings: planted-class centroid distance
+    // in HD space exceeds within-class spread.
+    let mut s = SyntheticStream::new(SyntheticConfig {
+        alphabet_size: 5_000,
+        noise: 0.0,
+        ..SyntheticConfig::sampled(3)
+    });
+    let cfg = EncoderCfg {
+        cat: CatCfg::Bloom { d: 4096, k: 4 },
+        num: NumCfg::None,
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 3,
+    };
+    let mut enc = cfg.build();
+    let mut pos = vec![0.0f64; 4096];
+    let mut neg = vec![0.0f64; 4096];
+    let (mut np, mut nn) = (0usize, 0usize);
+    for _ in 0..2000 {
+        let r = s.next_record().unwrap();
+        let e = enc.encode(&r).to_dense();
+        let acc = if r.label { &mut pos } else { &mut neg };
+        for (a, v) in acc.iter_mut().zip(&e) {
+            *a += *v as f64;
+        }
+        if r.label {
+            np += 1
+        } else {
+            nn += 1
+        }
+    }
+    assert!(np > 100 && nn > 100);
+    for v in pos.iter_mut() {
+        *v /= np as f64;
+    }
+    for v in neg.iter_mut() {
+        *v /= nn as f64;
+    }
+    let dist: f64 = pos.iter().zip(&neg).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    assert!(dist > 0.05, "class centroids indistinguishable: {dist}");
+}
+
+#[test]
+fn memory_contrast_bloom_vs_codebook_on_stream() {
+    let mut s = SyntheticStream::new(SyntheticConfig {
+        alphabet_size: 1_000_000,
+        zipf_alpha: 1.05,
+        ..SyntheticConfig::sampled(4)
+    });
+    let records: Vec<_> = (0..3_000).map(|_| s.next_record().unwrap()).collect();
+    use shdc::encoding::{BloomEncoder, CategoricalEncoder, CodebookEncoder};
+    use shdc::util::rng::Rng;
+    let mut bloom = BloomEncoder::new(10_000, 4, &mut Rng::new(1));
+    let mut codebook = CodebookEncoder::new(10_000, 1);
+    for r in &records {
+        let _ = CategoricalEncoder::encode(&mut bloom, &r.symbols);
+        let _ = codebook.try_encode(&r.symbols).unwrap();
+    }
+    let bm = CategoricalEncoder::memory_bytes(&mut bloom);
+    let cm = CategoricalEncoder::memory_bytes(&mut codebook);
+    assert!(
+        cm > 1000 * bm,
+        "codebook ({cm} B) must dwarf bloom ({bm} B) after {} records",
+        records.len()
+    );
+}

@@ -1,0 +1,254 @@
+//! Property-based invariant tests (hand-rolled: proptest is not cached
+//! offline). Each property runs across a seeded sweep of random cases
+//! with shrink-free but reproducible failure reporting (the case seed is
+//! in the assertion message).
+
+use shdc::encoding::{
+    bundle, sparse_from_indices, BloomEncoder, BundleMethod, CodebookEncoder, DenseHashEncoder,
+    DenseHashMode, Encoding, Sjlt,
+};
+use shdc::hash::{IndexHash, MurmurHash, PolyHash};
+use shdc::model::{auc, LogisticModel};
+use shdc::util::rng::Rng;
+
+/// Run `prop` over `cases` seeded random cases.
+fn forall(cases: u64, mut prop: impl FnMut(u64, &mut Rng)) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0x9e3779b97f4a7c15 ^ case.wrapping_mul(0x2545F4914F6CDD1D));
+        prop(case, &mut rng);
+    }
+}
+
+fn random_set(rng: &mut Rng, max_s: usize, universe: u64) -> Vec<u64> {
+    let s = 1 + rng.below_usize(max_s);
+    let mut v: Vec<u64> = (0..s).map(|_| rng.below(universe)).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+#[test]
+fn prop_bloom_encoding_invariants() {
+    forall(60, |case, rng| {
+        let d = 64 + rng.below_usize(4000);
+        let k = 1 + rng.below_usize(8);
+        let enc = BloomEncoder::new(d, k, rng);
+        let set = random_set(rng, 40, 1 << 40);
+        let code = enc.encode_set(&set);
+        // (1) dimension, (2) nnz bound, (3) sorted unique indices.
+        assert_eq!(code.dim(), d, "case {case}");
+        assert!(code.nnz() <= set.len() * k, "case {case}");
+        if let Encoding::SparseBinary { indices, .. } = &code {
+            let mut sorted = indices.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(&sorted, indices, "case {case}: not sorted-unique");
+            assert!(indices.iter().all(|&i| (i as usize) < d), "case {case}");
+        } else {
+            panic!("case {case}: bloom must be sparse");
+        }
+        // (4) permutation invariance.
+        let mut shuffled = set.clone();
+        rng.shuffle(&mut shuffled);
+        assert_eq!(code, enc.encode_set(&shuffled), "case {case}");
+        // (5) monotonicity: adding symbols never clears bits.
+        let mut bigger = set.clone();
+        bigger.push(rng.below(1 << 40));
+        let code2 = enc.encode_set(&bigger);
+        assert!(code2.dot(&code) as usize == code.nnz(), "case {case}: superset lost bits");
+    });
+}
+
+#[test]
+fn prop_bloom_membership_complete() {
+    // No false negatives, ever (the Bloom filter's defining guarantee).
+    forall(40, |case, rng| {
+        let d = 512 + rng.below_usize(8192);
+        let k = 1 + rng.below_usize(6);
+        let enc = BloomEncoder::new(d, k, rng);
+        let set = random_set(rng, 30, 1 << 30);
+        let code = enc.encode_set(&set);
+        for &a in &set {
+            assert!(enc.query(&code, a), "case {case}: false negative {a}");
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_vector_dot_symmetry_and_bounds() {
+    forall(80, |case, rng| {
+        let d = 16 + rng.below_usize(2000);
+        let a = sparse_from_indices(
+            (0..rng.below_usize(50)).map(|_| rng.below(d as u64) as u32).collect(),
+            d,
+        );
+        let b = sparse_from_indices(
+            (0..rng.below_usize(50)).map(|_| rng.below(d as u64) as u32).collect(),
+            d,
+        );
+        let ab = a.dot(&b);
+        assert_eq!(ab, b.dot(&a), "case {case}: dot asymmetric");
+        assert!(ab <= a.nnz().min(b.nnz()) as f64, "case {case}");
+        assert!(ab >= 0.0, "case {case}");
+        // Densified agreement.
+        let da = Encoding::Dense(a.to_dense());
+        let db = Encoding::Dense(b.to_dense());
+        assert_eq!(ab, da.dot(&db), "case {case}: sparse/dense dot mismatch");
+    });
+}
+
+#[test]
+fn prop_bundle_or_is_union_sum_is_sum() {
+    forall(60, |case, rng| {
+        let d = 8 + rng.below_usize(512);
+        let mk = |rng: &mut Rng| {
+            sparse_from_indices(
+                (0..rng.below_usize(30)).map(|_| rng.below(d as u64) as u32).collect(),
+                d,
+            )
+        };
+        let a = mk(rng);
+        let b = mk(rng);
+        let or = bundle(&a, &b, BundleMethod::ThresholdedSum).to_dense();
+        let sum = bundle(&a, &b, BundleMethod::Sum).to_dense();
+        let cat = bundle(&a, &b, BundleMethod::Concat).to_dense();
+        let (da, db) = (a.to_dense(), b.to_dense());
+        for i in 0..d {
+            assert_eq!(or[i], da[i].max(db[i]), "case {case} OR coord {i}");
+            assert_eq!(sum[i], da[i] + db[i], "case {case} SUM coord {i}");
+            assert_eq!(cat[i], da[i], "case {case} concat low half");
+            assert_eq!(cat[d + i], db[i], "case {case} concat high half");
+        }
+    });
+}
+
+#[test]
+fn prop_hash_families_uniform_and_deterministic() {
+    forall(20, |case, rng| {
+        let d = 2 + rng.below(500);
+        let mh = MurmurHash::new(rng.next_u32());
+        let ph = PolyHash::new(2 + rng.below_usize(6), rng);
+        let mut counts = vec![0usize; d as usize];
+        let n = 4000u64;
+        for key in 0..n {
+            let i = mh.index(key, d);
+            let j = ph.index(key, d);
+            assert_eq!(i, mh.index(key, d), "case {case}: murmur nondeterministic");
+            assert_eq!(j, ph.index(key, d), "case {case}: poly nondeterministic");
+            assert!(i < d && j < d, "case {case}: out of range");
+            counts[i as usize] += 1;
+        }
+        // Rough uniformity: no bucket more than 5x expectation (d small
+        // enough that expectation >= 8).
+        let expect = n as f64 / d as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) < 5.0 * expect + 10.0,
+                "case {case}: bucket {i} has {c} (expect {expect})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_codebook_bundling_linear() {
+    forall(25, |case, rng| {
+        let d = 32 + rng.below_usize(500);
+        let mut enc = CodebookEncoder::new(d, rng.next_u64());
+        let a = random_set(rng, 10, 1000);
+        let b: Vec<u64> = random_set(rng, 10, 1000).iter().map(|x| x + 2000).collect();
+        let ea = enc.try_encode(&a).unwrap().to_dense();
+        let eb = enc.try_encode(&b).unwrap().to_dense();
+        let mut both = a.clone();
+        both.extend(&b);
+        let eab = enc.try_encode(&both).unwrap().to_dense();
+        for i in 0..d {
+            assert_eq!(eab[i], ea[i] + eb[i], "case {case} coord {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_dense_hash_codes_deterministic_pm1() {
+    forall(25, |case, rng| {
+        let d = 16 + rng.below_usize(300);
+        let mode = if rng.bernoulli(0.5) { DenseHashMode::Literal } else { DenseHashMode::Packed };
+        let enc = DenseHashEncoder::new(d, mode, rng);
+        let sym = rng.below(1 << 40);
+        let a = enc.encode_symbol(sym).to_dense();
+        assert_eq!(a, enc.encode_symbol(sym).to_dense(), "case {case}");
+        assert!(a.iter().all(|&x| x == 1.0 || x == -1.0), "case {case}");
+    });
+}
+
+#[test]
+fn prop_sjlt_norm_bounded_by_k_normsq() {
+    // ||phi(x)||^2 <= k ||x||^2 always (each chunk is a partition sum).
+    forall(40, |case, rng| {
+        let n = 2 + rng.below_usize(30);
+        let k = 1 + rng.below_usize(4);
+        let dk = 4 + rng.below_usize(60);
+        let s = Sjlt::new(dk * k, n, k, rng);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let normsq: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+        let e = s.encode_record(&x);
+        // Cauchy-Schwarz within buckets can only lose mass to cancellation.
+        assert!(
+            e.norm_sq() <= k as f64 * normsq * n as f64 + 1e-6,
+            "case {case}: {} > {}",
+            e.norm_sq(),
+            k as f64 * normsq * n as f64
+        );
+    });
+}
+
+#[test]
+fn prop_sgd_sparse_dense_equivalence() {
+    forall(20, |case, rng| {
+        let d = 16 + rng.below_usize(200);
+        let batch_sparse: Vec<(Encoding, bool)> = (0..8)
+            .map(|_| {
+                let idx: Vec<u32> =
+                    (0..1 + rng.below_usize(10)).map(|_| rng.below(d as u64) as u32).collect();
+                (sparse_from_indices(idx, d), rng.bernoulli(0.5))
+            })
+            .collect();
+        let batch_dense: Vec<(Encoding, bool)> = batch_sparse
+            .iter()
+            .map(|(e, y)| (Encoding::Dense(e.to_dense()), *y))
+            .collect();
+        let mut ms = LogisticModel::new(d);
+        let mut md = LogisticModel::new(d);
+        for _ in 0..3 {
+            ms.sgd_step(&batch_sparse, 0.4);
+            md.sgd_step(&batch_dense, 0.4);
+        }
+        for i in 0..d {
+            assert!(
+                (ms.theta[i] - md.theta[i]).abs() < 1e-4,
+                "case {case}: coord {i} diverged"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_auc_invariant_to_monotone_transform() {
+    forall(30, |case, rng| {
+        let n = 20 + rng.below_usize(300);
+        let scores: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.4)).collect();
+        if labels.iter().all(|&l| l) || labels.iter().all(|&l| !l) {
+            return;
+        }
+        let a1 = auc(&scores, &labels);
+        // Monotone transforms preserve ranks hence AUC.
+        let t: Vec<f64> = scores.iter().map(|&s| (s * 0.5).exp() + 3.0).collect();
+        let a2 = auc(&t, &labels);
+        assert!((a1 - a2).abs() < 1e-12, "case {case}: {a1} vs {a2}");
+        // Label flip mirrors AUC.
+        let flipped: Vec<bool> = labels.iter().map(|&l| !l).collect();
+        let a3 = auc(&scores, &flipped);
+        assert!((a1 + a3 - 1.0).abs() < 1e-9, "case {case}");
+    });
+}
