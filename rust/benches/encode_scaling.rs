@@ -1,98 +1,13 @@
 //! Fig. 7A's benchmark twin: per-record encode latency for every
-//! categorical and numeric encoder at paper-like dimensions, plus the
-//! codebook-vs-bloom scaling contrast.
-
-use shdc::data::{RecordStream, SyntheticStream};
-use shdc::data::synthetic::SyntheticConfig;
-use shdc::encoding::{
-    BloomEncoder, CategoricalEncoder, CodebookEncoder, DenseHashEncoder, DenseHashMode,
-    DenseProjection, NumericEncoder, PermutationEncoder, ProjectionMode, RelaxedSjlt, Sjlt,
-    SparseProjection,
-};
-use shdc::util::bench::Harness;
-use shdc::util::rng::Rng;
+//! categorical and numeric encoder at paper-like dimensions, comparing
+//! the pre-refactor allocating paths against the scratch hot path, plus
+//! coordinator worker-scaling throughput.
+//!
+//! Thin wrapper over [`shdc::perf::encode_snapshot`] (shared with the
+//! `bench_snapshot` binary) so `cargo bench --bench encode_scaling` and
+//! `cargo run --release --bin bench_snapshot` produce the same
+//! `BENCH_encode.json` (path override: `BENCH_OUT`).
 
 fn main() {
-    let mut h = Harness::new("encode_scaling");
-    let mut rng = Rng::new(1);
-    let data = SyntheticConfig { alphabet_size: 10_000_000, ..SyntheticConfig::sampled(1) };
-    let mut stream = SyntheticStream::new(data);
-    let records: Vec<_> = (0..512).map(|_| stream.next_record().unwrap()).collect();
-    let d = 10_000;
-
-    // --- categorical encoders at d = 10k --------------------------------
-    let bloom = BloomEncoder::new(d, 4, &mut rng);
-    let mut i = 0usize;
-    h.bench("bloom d=10k k=4 (per record)", || {
-        i = (i + 1) % records.len();
-        bloom.encode_set(&records[i].symbols)
-    });
-    h.note_throughput(1.0, "records");
-
-    for k in [1usize, 8, 100] {
-        let b = BloomEncoder::new(d, k, &mut rng);
-        h.bench(&format!("bloom d=10k k={k}"), || {
-            i = (i + 1) % records.len();
-            b.encode_set(&records[i].symbols)
-        });
-    }
-
-    let dh = DenseHashEncoder::new(d, DenseHashMode::Packed, &mut rng);
-    h.bench("dense-hash packed d=10k", || {
-        i = (i + 1) % records.len();
-        dh.encode_set(&records[i].symbols)
-    });
-    let dh_lit = DenseHashEncoder::new(500, DenseHashMode::Literal, &mut rng);
-    h.bench("dense-hash literal d=500 (paper's slow baseline)", || {
-        i = (i + 1) % records.len();
-        dh_lit.encode_set(&records[i].symbols)
-    });
-
-    let mut cb = CodebookEncoder::new(d, 3);
-    // Pre-populate with the sample's symbols so we measure lookup+bundle.
-    for r in &records {
-        let _ = cb.try_encode(&r.symbols);
-    }
-    h.bench("codebook d=10k (warm)", || {
-        i = (i + 1) % records.len();
-        cb.encode(&records[i].symbols)
-    });
-
-    let perm = PermutationEncoder::new(d, 16, 16, &mut rng);
-    h.bench("permutation d=10k pool=16", || {
-        i = (i + 1) % records.len();
-        perm.encode_set(&records[i].symbols)
-    });
-
-    // --- numeric encoders at d = 10k -------------------------------------
-    let dp = DenseProjection::new(d, 13, ProjectionMode::Sign, &mut rng);
-    h.bench("dense sign-RP d=10k n=13", || {
-        i = (i + 1) % records.len();
-        dp.encode(&records[i].numeric)
-    });
-    h.note_throughput(1.0, "records");
-
-    let sp = SparseProjection::new_topk(d, 13, 100, &mut rng);
-    h.bench("sparse RP top-k d=10k k=100", || {
-        i = (i + 1) % records.len();
-        sp.encode(&records[i].numeric)
-    });
-    let st = SparseProjection::new_threshold(d, 13, 1.0, &mut rng);
-    h.bench("sparse RP threshold d=10k", || {
-        i = (i + 1) % records.len();
-        st.encode(&records[i].numeric)
-    });
-
-    let sj = Sjlt::new(d, 13, 4, &mut rng);
-    h.bench("SJLT structured d=10k k=4", || {
-        i = (i + 1) % records.len();
-        sj.encode(&records[i].numeric)
-    });
-    let rsj = RelaxedSjlt::new(d, 13, 0.4, true, &mut rng);
-    h.bench("SJLT relaxed d=10k p=0.4", || {
-        i = (i + 1) % records.len();
-        rsj.encode(&records[i].numeric)
-    });
-
-    h.finish();
+    shdc::perf::write_encode_snapshot().expect("writing BENCH_encode.json");
 }

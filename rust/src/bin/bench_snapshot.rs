@@ -1,0 +1,14 @@
+//! Regenerate `BENCH_encode.json` deterministically (fixed seeds; only
+//! wall-clock numbers vary with the host):
+//!
+//! ```text
+//! cargo run --release --bin bench_snapshot
+//! BENCH_MS=1000 SHDC_BENCH_RECORDS=200000 BENCH_OUT=BENCH_encode.json \
+//!     cargo run --release --bin bench_snapshot
+//! ```
+//!
+//! See also `scripts/bench_snapshot.sh`.
+
+fn main() {
+    shdc::perf::write_encode_snapshot().expect("writing BENCH_encode.json");
+}

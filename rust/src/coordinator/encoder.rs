@@ -8,9 +8,9 @@
 
 use crate::data::Record;
 use crate::encoding::{
-    bundle, BloomEncoder, BundleMethod, CategoricalEncoder, CodebookEncoder, DenseHashEncoder,
-    DenseHashMode, DenseProjection, Encoding, NumericEncoder, PermutationEncoder, ProjectionMode,
-    RelaxedSjlt, Sjlt, SparseProjection,
+    bundle, bundle_with, BloomEncoder, BundleMethod, CategoricalEncoder, CodebookEncoder,
+    DenseHashEncoder, DenseHashMode, DenseProjection, EncodeScratch, Encoding, NumericEncoder,
+    PermutationEncoder, ProjectionMode, RelaxedSjlt, Sjlt, SparseProjection,
 };
 use crate::util::rng::Rng;
 
@@ -142,7 +142,14 @@ impl EncoderCfg {
             ))),
             NumCfg::None => None,
         };
-        RecordEncoder { cat, num, bundle: self.bundle, out_dim: self.out_dim() }
+        RecordEncoder {
+            cat,
+            num,
+            bundle: self.bundle,
+            out_dim: self.out_dim(),
+            scratch: EncodeScratch::new(),
+            num_buf: Vec::new(),
+        }
     }
 }
 
@@ -151,11 +158,21 @@ impl EncoderCfg {
 const ENCODER_SEED_KEY: u64 = 0xe4c0_de00_5eed_0001;
 
 /// The composite encoder for one record.
+///
+/// Owns an [`EncodeScratch`] so the batch path
+/// ([`RecordEncoder::encode_batch_into`]) runs with zero steady-state
+/// allocations for all intermediate work: hashed-coordinate staging,
+/// dedup, the numeric branch's codes (recycled right after bundling) and
+/// bundling temporaries. Output buffers are pooled too when the caller
+/// returns consumed encodings via [`RecordEncoder::recycle`].
 pub struct RecordEncoder {
     cat: Option<Box<dyn CategoricalEncoder>>,
     num: Option<Box<dyn NumericEncoder>>,
     bundle: BundleMethod,
     out_dim: usize,
+    scratch: EncodeScratch,
+    /// Reused numeric-branch batch output.
+    num_buf: Vec<Encoding>,
 }
 
 impl RecordEncoder {
@@ -179,24 +196,58 @@ impl RecordEncoder {
         }
     }
 
-    /// Encode a whole batch, using the numeric encoder's row-blocked
-    /// batch path (projection rows loaded once per batch, not per
-    /// record — the §Perf fix that makes worker scaling linear).
-    pub fn encode_batch(&mut self, records: &[Record]) -> Vec<Encoding> {
-        let num_codes: Option<Vec<Encoding>> = self.num.as_ref().map(|n| {
+    /// Encode a whole batch into a caller-reused vector (cleared first).
+    ///
+    /// This is the coordinator workers' hot path: the numeric branch runs
+    /// its row-blocked batch encode (projection rows loaded once per
+    /// batch, not per record), the categorical branch encodes through the
+    /// scratch (pooled buffers, sort-free dedup), and every intermediate
+    /// — including the numeric and categorical codes once bundled — is
+    /// recycled. Bit-identical to per-record [`RecordEncoder::encode`].
+    pub fn encode_batch_into(&mut self, records: &[Record], out: &mut Vec<Encoding>) {
+        out.clear();
+        out.reserve(records.len());
+        let RecordEncoder { cat, num, bundle: method, scratch, num_buf, .. } = self;
+        if let Some(n) = num {
             let xs: Vec<&[f32]> = records.iter().map(|r| r.numeric.as_slice()).collect();
-            n.encode_batch(&xs)
-        });
-        match (num_codes, &mut self.cat) {
-            (Some(nums), Some(cat)) => records
-                .iter()
-                .zip(nums)
-                .map(|(r, ncode)| bundle(&ncode, &cat.encode(&r.symbols), self.bundle))
-                .collect(),
-            (Some(nums), None) => nums,
-            (None, Some(cat)) => records.iter().map(|r| cat.encode(&r.symbols)).collect(),
-            (None, None) => panic!("EncoderCfg with neither branch"),
+            n.encode_batch_with(&xs, scratch, num_buf);
+        } else {
+            num_buf.clear();
         }
+        match (num.is_some(), cat) {
+            (true, Some(cat)) => {
+                for (r, ncode) in records.iter().zip(num_buf.drain(..)) {
+                    let ccode = cat.encode_with(&r.symbols, scratch);
+                    out.push(bundle_with(&ncode, &ccode, *method, scratch));
+                    scratch.recycle(ncode);
+                    scratch.recycle(ccode);
+                }
+            }
+            (true, None) => out.extend(num_buf.drain(..)),
+            (false, Some(cat)) => {
+                out.extend(records.iter().map(|r| cat.encode_with(&r.symbols, scratch)));
+            }
+            (false, None) => panic!("EncoderCfg with neither branch"),
+        }
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`RecordEncoder::encode_batch_into`].
+    pub fn encode_batch(&mut self, records: &[Record]) -> Vec<Encoding> {
+        let mut out = Vec::with_capacity(records.len());
+        self.encode_batch_into(records, &mut out);
+        out
+    }
+
+    /// Return a consumed encoding's buffer to the internal pool, making
+    /// single-threaded encode→consume→recycle loops allocation-free.
+    pub fn recycle(&mut self, enc: Encoding) {
+        self.scratch.recycle(enc);
+    }
+
+    /// Recycle a whole batch of consumed encodings.
+    pub fn recycle_all(&mut self, encs: impl IntoIterator<Item = Encoding>) {
+        self.scratch.recycle_all(encs);
     }
 
     /// Encoder state size (the Fig. 7A memory axis).

@@ -12,9 +12,20 @@
 //! tool anyway). Stages:
 //!
 //! ```text
-//!  reader ──► raw batch channel (bounded) ──► encode workers (N)
-//!         ──► encoded channel (bounded) ──► reorderer ──► consumer
+//!           ┌─► raw channel 0 (bounded) ─► worker 0 ─┐
+//!  reader ──┼─► raw channel 1 (bounded) ─► worker 1 ─┼─► encoded channel
+//!           └─► raw channel N (bounded) ─► worker N ─┘   └► reorderer ─► consumer
 //! ```
+//!
+//! Each worker owns a private bounded channel and the reader dispatches
+//! batches round-robin (§Perf): the previous design funneled all workers
+//! through one `Arc<Mutex<Receiver>>`, so every batch handoff serialized
+//! on the mutex and worker scaling flattened right where the paper
+//! promises linearity. With per-worker channels the handoff is
+//! contention-free; `queue_depth` bounds each worker's private queue, so
+//! backpressure still propagates to the reader when any worker falls
+//! behind (round-robin means the stream can't run ahead of the slowest
+//! worker by more than `n_workers * queue_depth` batches).
 //!
 //! Batches carry sequence numbers; the tail reorders them so the
 //! consumer sees stream order regardless of worker scheduling — making
@@ -112,8 +123,15 @@ where
     F: FnMut(EncodedBatch) -> bool,
 {
     let stats = Arc::new(PipelineStats::new());
-    let (raw_tx, raw_rx) = sync_channel::<RawBatch>(cfg.queue_depth);
-    let raw_rx = Arc::new(std::sync::Mutex::new(raw_rx));
+    let n_workers = cfg.n_workers.max(1);
+    // Per-worker private bounded channels — no shared-receiver mutex.
+    let mut raw_txs = Vec::with_capacity(n_workers);
+    let mut raw_rxs = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let (tx, rx) = sync_channel::<RawBatch>(cfg.queue_depth);
+        raw_txs.push(tx);
+        raw_rxs.push(rx);
+    }
     let (enc_tx, enc_rx) = sync_channel::<EncodedBatch>(cfg.queue_depth);
 
     // --- reader ---------------------------------------------------------
@@ -136,40 +154,45 @@ where
             reader_stats
                 .records_read
                 .fetch_add(batch.len() as u64, Ordering::Relaxed);
-            if send_counted(&raw_tx, RawBatch { seq, records: batch }, &reader_stats).is_err() {
+            // Round-robin dispatch: seq mod N picks the worker, so batch
+            // assignment is deterministic (the reorderer makes output
+            // order-independent anyway, but determinism keeps per-worker
+            // encoder state — the codebook baseline — reproducible too).
+            let tx = &raw_txs[(seq % raw_txs.len() as u64) as usize];
+            if send_counted(tx, RawBatch { seq, records: batch }, &reader_stats).is_err() {
+                // A worker disappeared: only happens on early stop (or a
+                // worker panic); stop reading.
                 break;
             }
             seq += 1;
         }
-        // raw_tx drops here -> workers drain and exit.
+        // raw_txs drop here -> each worker drains its queue and exits.
     });
 
     // --- encode workers --------------------------------------------------
     let mut workers = Vec::new();
-    for w in 0..cfg.n_workers.max(1) {
-        let rx = Arc::clone(&raw_rx);
+    for rx in raw_rxs {
         let tx = enc_tx.clone();
         let wstats = Arc::clone(&stats);
         let ecfg = encoder_cfg.clone();
         let keep = cfg.keep_records;
         workers.push(thread::spawn(move || {
-            let _ = w;
             let mut enc = ecfg.build();
-            loop {
-                let raw = match rx.lock().unwrap().recv() {
-                    Ok(r) => r,
-                    Err(_) => break,
-                };
+            // The encoder's internal scratch recycles all intermediate
+            // buffers; the output buffers are owned by the consumer once
+            // the batch crosses the channel.
+            let mut encodings = Vec::new();
+            for raw in rx {
                 let n = raw.records.len() as u64;
                 let labels: Vec<bool> = raw.records.iter().map(|r| r.label).collect();
-                let encodings = {
+                {
                     let _t = ScopeTimer::new(&wstats.encode_ns);
-                    enc.encode_batch(&raw.records)
-                };
+                    enc.encode_batch_into(&raw.records, &mut encodings);
+                }
                 wstats.records_encoded.fetch_add(n, Ordering::Relaxed);
                 let out = EncodedBatch {
                     seq: raw.seq,
-                    encodings,
+                    encodings: std::mem::take(&mut encodings),
                     labels,
                     records: if keep { Some(raw.records) } else { None },
                 };
@@ -177,12 +200,11 @@ where
                     break;
                 }
             }
+            // rx drops here; a reader blocked on this worker's full
+            // queue sees the disconnect and stops.
         }));
     }
     drop(enc_tx); // consumers see EOF when all workers finish
-    // Drop our clone of the raw receiver: once every worker exits, the
-    // channel closes and a blocked reader unblocks (early-stop path).
-    drop(raw_rx);
 
     // --- in-order consumption -------------------------------------------
     consume_in_order(enc_rx, &mut consume);
@@ -278,6 +300,62 @@ mod tests {
             encs
         };
         assert_eq!(collect(1), collect(6));
+    }
+
+    #[test]
+    fn multi_worker_equals_single_worker_with_numeric_branch() {
+        // Exercises the per-worker-channel dispatch with both encoder
+        // branches live (numeric batch path + categorical scratch path).
+        let enc_cfg = EncoderCfg {
+            cat: CatCfg::Bloom { d: 256, k: 2 },
+            num: NumCfg::Sjlt { d: 128, k: 4 },
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 9,
+        };
+        let collect = |workers: usize| {
+            let stream = SyntheticStream::new(SyntheticConfig::sampled(9));
+            let mut encs = Vec::new();
+            run_pipeline(
+                stream,
+                &enc_cfg,
+                &CoordinatorCfg {
+                    batch_size: 16,
+                    n_workers: workers,
+                    max_records: Some(300),
+                    ..Default::default()
+                },
+                |b| {
+                    encs.extend(b.encodings);
+                    true
+                },
+            );
+            encs
+        };
+        assert_eq!(collect(1), collect(4));
+    }
+
+    #[test]
+    fn more_workers_than_batches() {
+        // Idle workers (empty private queues) must drain and join cleanly.
+        let stream = SyntheticStream::new(SyntheticConfig::sampled(10));
+        let mut total = 0usize;
+        let stats = run_pipeline(
+            stream,
+            &small_cfg(),
+            &CoordinatorCfg {
+                batch_size: 32,
+                n_workers: 8,
+                max_records: Some(64),
+                ..Default::default()
+            },
+            |b| {
+                total += b.encodings.len();
+                true
+            },
+        );
+        assert_eq!(total, 64);
+        assert_eq!(stats.snapshot().records_encoded, 64);
     }
 
     #[test]

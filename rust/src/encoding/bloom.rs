@@ -5,7 +5,14 @@
 //! (set union) of its symbols' codes. Encoding touches only `s·k`
 //! coordinates regardless of alphabet size m and dimension d, and the
 //! encoder's entire state is k hash seeds — nothing scales with m.
+//!
+//! The scratch path ([`BloomEncoder::encode_set_with`]) stages the `s·k`
+//! hashed coordinates in a pooled buffer and dedups them through the
+//! scratch bitset instead of `sort_unstable + dedup` — the sort was the
+//! dominant non-hashing cost of a Bloom encode at paper scale (s=26,
+//! k=4 → 104 coordinates per record).
 
+use crate::encoding::scratch::EncodeScratch;
 use crate::encoding::vector::{sparse_from_indices, Encoding};
 use crate::encoding::CategoricalEncoder;
 use crate::hash::{IndexHash, MurmurHash, PolyHash};
@@ -60,6 +67,8 @@ impl<H: IndexHash> BloomEncoder<H> {
     }
 
     /// Encode a feature vector (Eq. 3: element-wise max over symbols).
+    /// Allocating reference path; the hot path is
+    /// [`BloomEncoder::encode_set_with`].
     pub fn encode_set(&self, symbols: &[u64]) -> Encoding {
         let mut idx = Vec::with_capacity(symbols.len() * self.k());
         for &a in symbols {
@@ -68,18 +77,63 @@ impl<H: IndexHash> BloomEncoder<H> {
         sparse_from_indices(idx, self.d)
     }
 
-    /// Approximate membership query (Broder–Mitzenmacher): `a` is deemed
-    /// a member iff all k of its coordinates are set.
+    /// Scratch-path [`BloomEncoder::encode_set`]: hashes stage in a pooled
+    /// buffer, dedup goes through the scratch bitset (sort-free), and the
+    /// output index buffer comes from the pool. Bit-identical to
+    /// `encode_set`.
+    pub fn encode_set_with(&self, symbols: &[u64], scratch: &mut EncodeScratch) -> Encoding {
+        let mut staged = scratch.take_stage();
+        for &a in symbols {
+            self.symbol_indices_into(a, &mut staged);
+        }
+        let code = scratch.sparse_from_staged(&staged, self.d);
+        scratch.put_stage(staged);
+        code
+    }
+
+    /// Approximate membership query with Broder–Mitzenmacher semantics:
+    /// `symbol` is deemed a member iff **all of its distinct hashed
+    /// coordinates** are set in `set_code`.
+    ///
+    /// Two deliberate consequences of the sparse-vector formulation:
+    ///
+    /// * **No false negatives.** A member's coordinates are all set by
+    ///   construction (union encoding), so the test cannot reject it.
+    /// * **The threshold is `|distinct coords|`, not `k`.** When a
+    ///   symbol's own k hashes collide (|φ(a)| = k' < k, probability
+    ///   ≈ k(k−1)/2d per pair), the classical bit-array Bloom filter
+    ///   tests exactly those k' distinct bits too — `dot ≥ k` would
+    ///   instead *reject members* whose hashes collide, i.e. introduce
+    ///   false negatives. The price is the standard one: such symbols
+    ///   have slightly higher false-positive probability (fill^k' rather
+    ///   than fill^k). `dot` can never exceed `|φ(a)|`, so `>=` here is
+    ///   equality — the full-intersection test.
     pub fn query(&self, set_code: &Encoding, symbol: u64) -> bool {
         let code = self.encode_symbol(symbol);
-        // Thresholded dot product at k — but dedup means |code| can be < k.
         set_code.dot(&code) >= code.nnz() as f64
+    }
+
+    /// Allocation-free [`BloomEncoder::query`].
+    pub fn query_with(
+        &self,
+        set_code: &Encoding,
+        symbol: u64,
+        scratch: &mut EncodeScratch,
+    ) -> bool {
+        let code = self.encode_set_with(std::slice::from_ref(&symbol), scratch);
+        let hit = set_code.dot(&code) >= code.nnz() as f64;
+        scratch.recycle(code);
+        hit
     }
 }
 
 impl<H: IndexHash> CategoricalEncoder for BloomEncoder<H> {
     fn encode(&mut self, symbols: &[u64]) -> Encoding {
         self.encode_set(symbols)
+    }
+
+    fn encode_with(&mut self, symbols: &[u64], scratch: &mut EncodeScratch) -> Encoding {
+        self.encode_set_with(symbols, scratch)
     }
 
     fn dim(&self) -> usize {
@@ -128,6 +182,19 @@ mod tests {
     }
 
     #[test]
+    fn scratch_path_bit_identical() {
+        let e = enc(2048, 4, 11);
+        let mut scratch = EncodeScratch::new();
+        for s in 0..50u64 {
+            let set: Vec<u64> = (s..s + 20).map(|i| i * 31 + 5).collect();
+            let want = e.encode_set(&set);
+            let got = e.encode_set_with(&set, &mut scratch);
+            assert_eq!(got, want, "set seed {s}");
+            scratch.recycle(got); // exercise pooled output buffers
+        }
+    }
+
+    #[test]
     fn union_is_or_of_codes() {
         let e = enc(2048, 4, 4);
         let a = e.encode_set(&[10]);
@@ -156,6 +223,62 @@ mod tests {
         let code = e.encode_set(&set);
         for &a in &set {
             assert!(e.query(&code, a), "false negative for {a}");
+        }
+    }
+
+    #[test]
+    fn membership_no_false_negatives_under_self_collisions() {
+        // Tiny d forces a symbol's own k hashes to collide (|φ(a)| < k).
+        // The distinct-coordinate threshold must still accept all members
+        // — a fixed `dot >= k` threshold would reject them.
+        let e = enc(16, 8, 21);
+        let set: Vec<u64> = (0..40).collect();
+        let mut collided = 0usize;
+        for &a in &set {
+            if e.encode_symbol(a).nnz() < e.k() {
+                collided += 1;
+            }
+        }
+        assert!(collided > 0, "d=16, k=8 must produce self-collisions");
+        let code = e.encode_set(&set);
+        for &a in &set {
+            assert!(e.query(&code, a), "false negative for colliding symbol {a}");
+        }
+    }
+
+    #[test]
+    fn query_threshold_is_distinct_coordinate_count() {
+        // Construct a set code that misses exactly one of a symbol's
+        // distinct coordinates: the query must reject (full intersection
+        // required), demonstrating dot >= nnz is equality, not slack.
+        let e = enc(8192, 4, 22);
+        let sym = 12345u64;
+        let code = e.encode_symbol(sym);
+        if let Encoding::SparseBinary { indices, d } = &code {
+            assert!(indices.len() >= 2);
+            let partial = Encoding::SparseBinary {
+                indices: indices[..indices.len() - 1].to_vec(),
+                d: *d,
+            };
+            assert!(!e.query(&partial, sym), "partial match must not be a member");
+            assert!(e.query(&code, sym), "full match must be a member");
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn query_with_matches_query() {
+        let e = enc(4096, 4, 23);
+        let set: Vec<u64> = (0..40).map(|i| i * 7 + 1).collect();
+        let code = e.encode_set(&set);
+        let mut scratch = EncodeScratch::new();
+        for a in 0..500u64 {
+            assert_eq!(
+                e.query(&code, a),
+                e.query_with(&code, a, &mut scratch),
+                "symbol {a}"
+            );
         }
     }
 
@@ -206,5 +329,7 @@ mod tests {
         let e = enc(128, 4, 10);
         let code = e.encode_set(&[]);
         assert_eq!(code.nnz(), 0);
+        let mut scratch = EncodeScratch::new();
+        assert_eq!(e.encode_set_with(&[], &mut scratch), code);
     }
 }

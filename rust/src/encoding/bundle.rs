@@ -8,6 +8,7 @@
 //!                      this is the element-wise max / logical or, keeping
 //!                      the result binary.
 
+use crate::encoding::scratch::EncodeScratch;
 use crate::encoding::vector::{sparse_from_indices, Encoding};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,6 +46,99 @@ pub fn bundle(a: &Encoding, b: &Encoding, method: BundleMethod) -> Encoding {
         BundleMethod::Concat => concat(a, b),
         BundleMethod::Sum => sum(a, b),
         BundleMethod::ThresholdedSum => or(a, b),
+    }
+}
+
+/// Scratch-path [`bundle`]: the output buffer comes from the pool.
+/// Bit-identical results (enforced by tests below and the equivalence
+/// suite); the inputs themselves are typically recycled by the caller
+/// right after bundling.
+pub fn bundle_with(
+    a: &Encoding,
+    b: &Encoding,
+    method: BundleMethod,
+    scratch: &mut EncodeScratch,
+) -> Encoding {
+    match method {
+        BundleMethod::Concat => match (a, b) {
+            (
+                Encoding::SparseBinary { indices: ia, d: da },
+                Encoding::SparseBinary { indices: ib, d: db },
+            ) => {
+                let mut idx = scratch.take_index(ia.len() + ib.len());
+                idx.extend_from_slice(ia);
+                idx.extend(ib.iter().map(|&i| i + *da as u32));
+                Encoding::SparseBinary { indices: idx, d: da + db }
+            }
+            _ => {
+                let (da, db) = (a.dim(), b.dim());
+                let mut out = scratch.take_dense_zeroed(da + db);
+                a.scatter_into(&mut out[..da]);
+                b.scatter_into(&mut out[da..]);
+                Encoding::Dense(out)
+            }
+        },
+        BundleMethod::Sum => {
+            assert_eq!(a.dim(), b.dim(), "sum bundling needs equal dims");
+            Encoding::Dense(sum_into_pooled(a, b, scratch))
+        }
+        BundleMethod::ThresholdedSum => {
+            assert_eq!(a.dim(), b.dim(), "or bundling needs equal dims");
+            match (a, b) {
+                (
+                    Encoding::SparseBinary { indices: ia, d },
+                    Encoding::SparseBinary { indices: ib, .. },
+                ) => {
+                    let mut staged = scratch.take_stage();
+                    staged.extend_from_slice(ia);
+                    staged.extend_from_slice(ib);
+                    let code = scratch.sparse_from_staged(&staged, *d);
+                    scratch.put_stage(staged);
+                    code
+                }
+                _ => {
+                    // min(sum, 1): dense fallback, matching `or` exactly.
+                    let mut out = sum_into_pooled(a, b, scratch);
+                    for x in out.iter_mut() {
+                        *x = if *x >= 1.0 { 1.0 } else { x.max(0.0).min(1.0) };
+                    }
+                    Encoding::Dense(out)
+                }
+            }
+        }
+    }
+}
+
+/// Element-wise sum into a pooled buffer; same arithmetic as [`sum`].
+fn sum_into_pooled(a: &Encoding, b: &Encoding, scratch: &mut EncodeScratch) -> Vec<f32> {
+    let d = a.dim();
+    match (a, b) {
+        (Encoding::Dense(va), Encoding::Dense(vb)) => {
+            let mut out = scratch.take_dense_raw(d);
+            for ((o, x), y) in out.iter_mut().zip(va).zip(vb) {
+                *o = x + y;
+            }
+            out
+        }
+        (Encoding::Dense(v), Encoding::SparseBinary { indices, .. })
+        | (Encoding::SparseBinary { indices, .. }, Encoding::Dense(v)) => {
+            let mut out = scratch.take_dense_raw(d);
+            out.copy_from_slice(v);
+            for &i in indices {
+                out[i as usize] += 1.0;
+            }
+            out
+        }
+        (Encoding::SparseBinary { indices: ia, .. }, Encoding::SparseBinary { indices: ib, .. }) => {
+            let mut out = scratch.take_dense_zeroed(d);
+            for &i in ia {
+                out[i as usize] = 1.0;
+            }
+            for &i in ib {
+                out[i as usize] += 1.0;
+            }
+            out
+        }
     }
 }
 

@@ -12,6 +12,7 @@
 
 use std::collections::HashMap;
 
+use crate::encoding::scratch::EncodeScratch;
 use crate::encoding::vector::Encoding;
 use crate::encoding::CategoricalEncoder;
 use crate::util::rng::{mix64, Rng};
@@ -92,9 +93,9 @@ impl CodebookEncoder {
         &self.codebook[&symbol]
     }
 
-    /// Encode, returning an error if the memory budget is exhausted.
-    pub fn try_encode(&mut self, symbols: &[u64]) -> Result<Encoding, CodebookOom> {
-        let mut acc = vec![0.0f32; self.d];
+    /// Bundle `symbols`' codewords into a caller-provided zeroed
+    /// accumulator (shared by the allocating and scratch paths).
+    fn accumulate_set(&mut self, symbols: &[u64], acc: &mut [f32]) -> Result<(), CodebookOom> {
         for &a in symbols {
             let cw = self.lookup_or_insert(a);
             for (o, &c) in acc.iter_mut().zip(cw.iter()) {
@@ -107,7 +108,31 @@ impl CodebookEncoder {
                 return Err(CodebookOom { symbols: self.codebook.len(), bytes });
             }
         }
+        Ok(())
+    }
+
+    /// Encode, returning an error if the memory budget is exhausted.
+    pub fn try_encode(&mut self, symbols: &[u64]) -> Result<Encoding, CodebookOom> {
+        let mut acc = vec![0.0f32; self.d];
+        self.accumulate_set(symbols, &mut acc)?;
         Ok(Encoding::Dense(acc))
+    }
+
+    /// Scratch-path [`CodebookEncoder::try_encode`]: the accumulator is a
+    /// pooled zeroed buffer (the buffer is recycled on error).
+    pub fn try_encode_with(
+        &mut self,
+        symbols: &[u64],
+        scratch: &mut EncodeScratch,
+    ) -> Result<Encoding, CodebookOom> {
+        let mut acc = scratch.take_dense_zeroed(self.d);
+        match self.accumulate_set(symbols, &mut acc) {
+            Ok(()) => Ok(Encoding::Dense(acc)),
+            Err(e) => {
+                scratch.recycle(Encoding::Dense(acc));
+                Err(e)
+            }
+        }
     }
 
     fn memory_bytes_now(&self) -> usize {
@@ -121,6 +146,11 @@ impl CategoricalEncoder for CodebookEncoder {
     /// Use [`CodebookEncoder::try_encode`] to handle it gracefully.
     fn encode(&mut self, symbols: &[u64]) -> Encoding {
         self.try_encode(symbols).expect("codebook memory budget exceeded")
+    }
+
+    fn encode_with(&mut self, symbols: &[u64], scratch: &mut EncodeScratch) -> Encoding {
+        self.try_encode_with(symbols, scratch)
+            .expect("codebook memory budget exceeded")
     }
 
     fn dim(&self) -> usize {

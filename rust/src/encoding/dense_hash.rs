@@ -15,6 +15,7 @@
 //!   (each bit of Murmur3 is unbiased), ~32x faster; used where the
 //!   experiment only needs the *codes*, not the baseline's slowness.
 
+use crate::encoding::scratch::EncodeScratch;
 use crate::encoding::vector::Encoding;
 use crate::encoding::CategoricalEncoder;
 use crate::hash::murmur3_u64;
@@ -88,11 +89,25 @@ impl DenseHashEncoder {
         }
         Encoding::Dense(acc)
     }
+
+    /// Scratch-path [`DenseHashEncoder::encode_set`]: the accumulator is a
+    /// pooled zeroed buffer. Bit-identical to `encode_set`.
+    pub fn encode_set_with(&self, symbols: &[u64], scratch: &mut EncodeScratch) -> Encoding {
+        let mut acc = scratch.take_dense_zeroed(self.d);
+        for &a in symbols {
+            self.accumulate_symbol(a, &mut acc);
+        }
+        Encoding::Dense(acc)
+    }
 }
 
 impl CategoricalEncoder for DenseHashEncoder {
     fn encode(&mut self, symbols: &[u64]) -> Encoding {
         self.encode_set(symbols)
+    }
+
+    fn encode_with(&mut self, symbols: &[u64], scratch: &mut EncodeScratch) -> Encoding {
+        self.encode_set_with(symbols, scratch)
     }
 
     fn dim(&self) -> usize {

@@ -10,6 +10,24 @@
 //!
 //! [`bundle`] implements Sec. 5.4's three combination rules and
 //! [`vector`] the shared dense/sparse HD vector type.
+//!
+//! # The scratch hot path
+//!
+//! Every encoder has two encode paths:
+//!
+//! * the **allocating path** (`encode`) — allocates its working and
+//!   output buffers per record; simple, and the reference semantics;
+//! * the **scratch path** (`encode_with` / `encode_batch_with`) — all
+//!   working state comes from an [`EncodeScratch`] (pooled dense and
+//!   index buffers, a bitset dedup table replacing sort+dedup, a flat
+//!   batch buffer), so a caller that recycles consumed encodings via
+//!   [`EncodeScratch::recycle`] encodes with **zero steady-state
+//!   allocations**.
+//!
+//! The two paths are bit-identical by contract: `encode_with(x, s) ==
+//! encode(x)` for every encoder, every input and any scratch state
+//! (enforced by `tests/scratch_equivalence.rs`). Batch variants reuse
+//! the caller's output `Vec` and are the coordinator workers' hot path.
 
 pub mod bloom;
 pub mod bundle;
@@ -17,15 +35,17 @@ pub mod codebook;
 pub mod dense_hash;
 pub mod permutation;
 pub mod projection;
+pub mod scratch;
 pub mod sjlt;
 pub mod vector;
 
 pub use bloom::BloomEncoder;
-pub use bundle::{bundle, BundleMethod};
+pub use bundle::{bundle, bundle_with, BundleMethod};
 pub use codebook::{CodebookEncoder, CodebookOom};
 pub use dense_hash::{DenseHashEncoder, DenseHashMode};
 pub use permutation::PermutationEncoder;
 pub use projection::{DenseProjection, ProjectionMode, SparseProjection, SparsifyRule};
+pub use scratch::EncodeScratch;
 pub use sjlt::{RelaxedSjlt, Sjlt};
 pub use vector::{sparse_from_indices, Encoding};
 
@@ -33,6 +53,16 @@ pub use vector::{sparse_from_indices, Encoding};
 /// `&mut self` because the codebook baseline populates lazily.
 pub trait CategoricalEncoder: Send {
     fn encode(&mut self, symbols: &[u64]) -> Encoding;
+
+    /// Scratch-path encode: bit-identical to [`CategoricalEncoder::encode`],
+    /// but working buffers (and, when the caller recycles outputs, the
+    /// output buffer too) come from `scratch`. The default falls back to
+    /// the allocating path; every in-tree encoder overrides it.
+    fn encode_with(&mut self, symbols: &[u64], scratch: &mut EncodeScratch) -> Encoding {
+        let _ = scratch;
+        self.encode(symbols)
+    }
+
     fn dim(&self) -> usize;
     /// Persistent encoder state in bytes — the paper's scalability axis.
     fn memory_bytes(&self) -> usize;
@@ -42,16 +72,40 @@ pub trait CategoricalEncoder: Send {
 /// A numeric-feature encoder: x in R^n -> HD vector.
 pub trait NumericEncoder: Send + Sync {
     fn encode(&self, x: &[f32]) -> Encoding;
+
+    /// Scratch-path encode: bit-identical to [`NumericEncoder::encode`]
+    /// with pooled buffers. Default falls back to the allocating path.
+    fn encode_with(&self, x: &[f32], scratch: &mut EncodeScratch) -> Encoding {
+        let _ = scratch;
+        self.encode(x)
+    }
+
     fn dim(&self) -> usize;
     fn name(&self) -> &'static str;
 
-    /// Encode a batch. The default delegates per record; projection-style
-    /// encoders override it with a row-blocked loop that loads each
-    /// projection row once per *batch* instead of once per *record* —
-    /// the encode hot path is memory-bound on the projection matrix, so
-    /// this is the difference between flat and linear worker scaling
-    /// (EXPERIMENTS.md §Perf).
+    /// Encode a batch (allocating). The default delegates per record;
+    /// projection-style encoders override it with a row-blocked loop that
+    /// loads each projection row once per *batch* instead of once per
+    /// *record* — the encode hot path is memory-bound on the projection
+    /// matrix, so this is the difference between flat and linear worker
+    /// scaling (EXPERIMENTS.md §Perf).
     fn encode_batch(&self, xs: &[&[f32]]) -> Vec<Encoding> {
         xs.iter().map(|x| self.encode(x)).collect()
+    }
+
+    /// Scratch-path batch encode into a caller-reused `out` vector
+    /// (cleared first). Bit-identical to [`NumericEncoder::encode_batch`].
+    /// Row-blocked encoders override this to stage the whole batch in the
+    /// scratch's flat buffer.
+    fn encode_batch_with(
+        &self,
+        xs: &[&[f32]],
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<Encoding>,
+    ) {
+        out.clear();
+        for x in xs {
+            out.push(self.encode_with(x, scratch));
+        }
     }
 }

@@ -10,6 +10,7 @@
 //! encode must *materialize* a rotated copy, which is the data-movement
 //! bottleneck the paper measures (84–135x slower than hashing on FPGA).
 
+use crate::encoding::scratch::EncodeScratch;
 use crate::encoding::vector::Encoding;
 use crate::encoding::CategoricalEncoder;
 use crate::hash::{IndexHash, MurmurHash};
@@ -68,11 +69,32 @@ impl PermutationEncoder {
         }
         Encoding::Dense(acc)
     }
+
+    /// Scratch-path [`PermutationEncoder::encode_set`]: accumulator and
+    /// materialization temporary both come from the pool (the temporary is
+    /// recycled before returning). Bit-identical to `encode_set`.
+    pub fn encode_set_with(&self, symbols: &[u64], scratch: &mut EncodeScratch) -> Encoding {
+        let mut acc = scratch.take_dense_zeroed(self.d);
+        // materialize_symbol overwrites every element, so no zeroing.
+        let mut tmp = scratch.take_dense_raw(self.d);
+        for &a in symbols {
+            self.materialize_symbol(a, &mut tmp);
+            for (o, t) in acc.iter_mut().zip(&tmp) {
+                *o += *t;
+            }
+        }
+        scratch.recycle(Encoding::Dense(tmp));
+        Encoding::Dense(acc)
+    }
 }
 
 impl CategoricalEncoder for PermutationEncoder {
     fn encode(&mut self, symbols: &[u64]) -> Encoding {
         self.encode_set(symbols)
+    }
+
+    fn encode_with(&mut self, symbols: &[u64], scratch: &mut EncodeScratch) -> Encoding {
+        self.encode_set_with(symbols, scratch)
     }
 
     fn dim(&self) -> usize {

@@ -6,6 +6,7 @@
 //! this implementation serves the hardware simulators, single-record
 //! paths, and cross-validation tests (rust vs artifact numerics).
 
+use crate::encoding::scratch::EncodeScratch;
 use crate::encoding::vector::{sparse_from_indices, Encoding};
 use crate::encoding::NumericEncoder;
 use crate::util::rng::Rng;
@@ -65,15 +66,27 @@ impl DenseProjection {
     pub fn encode_record(&self, x: &[f32]) -> Encoding {
         let mut z = vec![0.0f32; self.d];
         self.project_into(x, &mut z);
-        match self.mode {
-            ProjectionMode::Raw => Encoding::Dense(z),
-            ProjectionMode::Sign => {
-                for zi in z.iter_mut() {
-                    *zi = if *zi >= 0.0 { 1.0 } else { -1.0 };
-                }
-                Encoding::Dense(z)
+        self.finish(&mut z);
+        Encoding::Dense(z)
+    }
+
+    /// Apply the mode (sign quantization) in place.
+    #[inline]
+    fn finish(&self, z: &mut [f32]) {
+        if self.mode == ProjectionMode::Sign {
+            for zi in z.iter_mut() {
+                *zi = if *zi >= 0.0 { 1.0 } else { -1.0 };
             }
         }
+    }
+
+    /// Scratch-path [`DenseProjection::encode_record`]: the output buffer
+    /// comes from the pool (project_into zeroes it). Bit-identical.
+    pub fn encode_record_with(&self, x: &[f32], scratch: &mut EncodeScratch) -> Encoding {
+        let mut z = scratch.take_dense_raw(self.d);
+        self.project_into(x, &mut z);
+        self.finish(&mut z);
+        Encoding::Dense(z)
     }
 
     /// Flattened Phi for feeding the PJRT artifact (same row-major layout).
@@ -146,6 +159,34 @@ impl NumericEncoder for DenseProjection {
             })
             .collect()
     }
+
+    fn encode_with(&self, x: &[f32], scratch: &mut EncodeScratch) -> Encoding {
+        self.encode_record_with(x, scratch)
+    }
+
+    fn encode_batch_with(
+        &self,
+        xs: &[&[f32]],
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<Encoding>,
+    ) {
+        let mut zs = scratch.take_flat(xs.len() * self.d);
+        self.project_batch_into(xs, &mut zs);
+        out.clear();
+        for z in zs.chunks_exact(self.d) {
+            let mut buf = scratch.take_dense_raw(self.d);
+            match self.mode {
+                ProjectionMode::Raw => buf.copy_from_slice(z),
+                ProjectionMode::Sign => {
+                    for (b, &v) in buf.iter_mut().zip(z) {
+                        *b = if v >= 0.0 { 1.0 } else { -1.0 };
+                    }
+                }
+            }
+            out.push(Encoding::Dense(buf));
+        }
+        scratch.put_flat(zs);
+    }
 }
 
 /// Sparse random projection (paper Eq. 6 and Sec. 5.3): binarize z by
@@ -202,6 +243,17 @@ impl SparseProjection {
         self.proj.project_into(x, &mut z);
         self.sparsify(&z)
     }
+
+    /// Scratch-path [`SparseProjection::encode_record`]: projection
+    /// staging, top-k selection and the output index buffer all come from
+    /// the pool. Bit-identical.
+    pub fn encode_record_with(&self, x: &[f32], scratch: &mut EncodeScratch) -> Encoding {
+        let mut z = scratch.take_flat(self.proj.d);
+        self.proj.project_into(x, &mut z);
+        let code = self.sparsify_with(&z, scratch);
+        scratch.put_flat(z);
+        code
+    }
 }
 
 impl SparseProjection {
@@ -224,6 +276,39 @@ impl SparseProjection {
                     .map(|(i, _)| i as u32)
                     .collect();
                 sparse_from_indices(idx, self.proj.d)
+            }
+        }
+    }
+
+    /// Pool-backed [`SparseProjection::sparsify`] — identical output.
+    fn sparsify_with(&self, z: &[f32], scratch: &mut EncodeScratch) -> Encoding {
+        match self.rule {
+            SparsifyRule::TopK(k) => {
+                let k = k.min(z.len());
+                // Permutation working buffer from the pool; the selected
+                // prefix dedups (a no-op on distinct indices) and sorts
+                // through the scratch bitset.
+                let mut idx = scratch.take_index(z.len());
+                idx.extend(0..z.len() as u32);
+                idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+                    z[b as usize].partial_cmp(&z[a as usize]).unwrap()
+                });
+                let code = scratch.sparse_from_staged(&idx[..k], self.proj.d);
+                idx.clear();
+                scratch.recycle(Encoding::SparseBinary { indices: idx, d: self.proj.d });
+                code
+            }
+            SparsifyRule::Threshold(t) => {
+                // Walking z in order yields sorted, unique indices
+                // directly — no dedup pass needed.
+                let mut idx = scratch.take_index(64);
+                idx.extend(
+                    z.iter()
+                        .enumerate()
+                        .filter(|(_, v)| v.abs() >= t)
+                        .map(|(i, _)| i as u32),
+                );
+                Encoding::SparseBinary { indices: idx, d: self.proj.d }
             }
         }
     }
@@ -250,6 +335,25 @@ impl NumericEncoder for SparseProjection {
         let mut zs = vec![0.0f32; bsz * self.proj.d];
         self.proj.project_batch_into(xs, &mut zs);
         zs.chunks_exact(self.proj.d).map(|z| self.sparsify(z)).collect()
+    }
+
+    fn encode_with(&self, x: &[f32], scratch: &mut EncodeScratch) -> Encoding {
+        self.encode_record_with(x, scratch)
+    }
+
+    fn encode_batch_with(
+        &self,
+        xs: &[&[f32]],
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<Encoding>,
+    ) {
+        let mut zs = scratch.take_flat(xs.len() * self.proj.d);
+        self.proj.project_batch_into(xs, &mut zs);
+        out.clear();
+        for z in zs.chunks_exact(self.proj.d) {
+            out.push(self.sparsify_with(z, scratch));
+        }
+        scratch.put_flat(zs);
     }
 }
 

@@ -1,0 +1,249 @@
+//! Reusable encode scratch state — the zero-allocation hot path (§Perf).
+//!
+//! Every encoder's `encode` allocates its working and output buffers per
+//! record: a `Vec<u32>` that gets sort+dedup'ed for the sparse encoders, a
+//! `vec![0.0; d]` accumulator for the dense ones. On the streaming hot
+//! path those allocations (and the sort) dominate encode latency and
+//! serialize on the allocator under multi-worker load. [`EncodeScratch`]
+//! removes them:
+//!
+//! * a **staging buffer** for unsorted hashed coordinates,
+//! * a **bitset dedup table** that replaces `sort_unstable + dedup`: mark
+//!   each coordinate's bit, then sweep words in order extracting set bits
+//!   (naturally sorted, naturally unique, and cleared during the sweep so
+//!   the table is all-zero again afterwards) — O(s·k + d/64) instead of
+//!   O(s·k·log(s·k)), branch-free inner loop,
+//! * **buffer pools** for dense (`Vec<f32>`) and sparse-index (`Vec<u32>`)
+//!   output buffers, refilled by [`EncodeScratch::recycle`],
+//! * a **flat batch buffer** for row-blocked numeric batch encodes.
+//!
+//! A worker that recycles consumed encodings encodes indefinitely with
+//! zero steady-state allocations. When outputs cross a thread boundary
+//! (the coordinator hands batches to the consumer) the output buffers are
+//! owned by the consumer and cannot return to the pool — intermediates
+//! (staging, bitset, bundling temporaries, numeric-branch codes) still
+//! recycle, which is where the per-record allocation churn lived.
+//!
+//! The scratch paths are **bit-identical** to the allocating paths; the
+//! property suite in `tests/scratch_equivalence.rs` enforces this for
+//! every encoder.
+
+use crate::encoding::vector::Encoding;
+
+/// Pooled scratch state shared by all encoders. Plain data (`Send`), one
+/// per worker thread; never shared across threads.
+#[derive(Debug, Default)]
+pub struct EncodeScratch {
+    /// Unsorted hashed-coordinate staging area (categorical encoders).
+    stage: Vec<u32>,
+    /// One bit per coordinate; all-zero between calls by invariant.
+    bitset: Vec<u64>,
+    /// Dense f32 output buffers returned by [`EncodeScratch::recycle`].
+    dense_pool: Vec<Vec<f32>>,
+    /// Sparse index output buffers returned by [`EncodeScratch::recycle`].
+    index_pool: Vec<Vec<u32>>,
+    /// Flat (batch × d) staging buffer for row-blocked batch encodes.
+    flat: Vec<f32>,
+}
+
+impl EncodeScratch {
+    pub fn new() -> EncodeScratch {
+        EncodeScratch::default()
+    }
+
+    /// Buffers currently pooled (diagnostics / tests).
+    pub fn pooled_buffers(&self) -> (usize, usize) {
+        (self.dense_pool.len(), self.index_pool.len())
+    }
+
+    /// Take the staging buffer (cleared). Return it with
+    /// [`EncodeScratch::put_stage`] when done — `std::mem::take` style so
+    /// the caller can hold it while also borrowing the scratch.
+    #[inline]
+    pub fn take_stage(&mut self) -> Vec<u32> {
+        let mut v = std::mem::take(&mut self.stage);
+        v.clear();
+        v
+    }
+
+    #[inline]
+    pub fn put_stage(&mut self, v: Vec<u32>) {
+        self.stage = v;
+    }
+
+    /// A cleared index buffer from the pool (or a fresh one with the
+    /// requested capacity).
+    #[inline]
+    pub fn take_index(&mut self, capacity: usize) -> Vec<u32> {
+        match self.index_pool.pop() {
+            Some(mut v) => {
+                v.clear();
+                v
+            }
+            None => Vec::with_capacity(capacity),
+        }
+    }
+
+    /// A dense buffer of length `d` with **unspecified contents** (callers
+    /// that overwrite every element skip the zeroing cost).
+    #[inline]
+    pub fn take_dense_raw(&mut self, d: usize) -> Vec<f32> {
+        match self.dense_pool.pop() {
+            Some(mut v) => {
+                v.resize(d, 0.0);
+                v
+            }
+            None => vec![0.0f32; d],
+        }
+    }
+
+    /// A dense all-zero buffer of length `d`.
+    #[inline]
+    pub fn take_dense_zeroed(&mut self, d: usize) -> Vec<f32> {
+        let mut v = self.take_dense_raw(d);
+        v.fill(0.0);
+        v
+    }
+
+    /// The flat batch buffer resized to `len`, contents unspecified.
+    /// Return it with [`EncodeScratch::put_flat`].
+    #[inline]
+    pub fn take_flat(&mut self, len: usize) -> Vec<f32> {
+        let mut v = std::mem::take(&mut self.flat);
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    #[inline]
+    pub fn put_flat(&mut self, v: Vec<f32>) {
+        self.flat = v;
+    }
+
+    /// Return a consumed encoding's buffer to the pool.
+    #[inline]
+    pub fn recycle(&mut self, e: Encoding) {
+        match e {
+            Encoding::Dense(v) => self.dense_pool.push(v),
+            Encoding::SparseBinary { indices, .. } => self.index_pool.push(indices),
+        }
+    }
+
+    /// Return a whole batch of consumed encodings to the pool.
+    pub fn recycle_all(&mut self, encs: impl IntoIterator<Item = Encoding>) {
+        for e in encs {
+            self.recycle(e);
+        }
+    }
+
+    fn ensure_bitset(&mut self, d: usize) {
+        let words = d.div_ceil(64);
+        if self.bitset.len() < words {
+            self.bitset.resize(words, 0);
+        }
+    }
+
+    /// Build a sorted-unique sparse encoding from unsorted (possibly
+    /// duplicated) staged coordinates — the allocation-free, sort-free
+    /// replacement for [`crate::encoding::sparse_from_indices`]. Produces
+    /// exactly the same index list (sorted ascending, deduplicated).
+    pub fn sparse_from_staged(&mut self, staged: &[u32], d: usize) -> Encoding {
+        debug_assert!(staged.iter().all(|&i| (i as usize) < d));
+        self.ensure_bitset(d);
+        let mut out = self.take_index(staged.len());
+        if !staged.is_empty() {
+            let mut min_w = usize::MAX;
+            let mut max_w = 0usize;
+            for &i in staged {
+                let w = (i >> 6) as usize;
+                self.bitset[w] |= 1u64 << (i & 63);
+                min_w = min_w.min(w);
+                max_w = max_w.max(w);
+            }
+            // Sweep in word order: emits sorted, unique indices and leaves
+            // the bitset all-zero again.
+            for w in min_w..=max_w {
+                let mut bits = self.bitset[w];
+                if bits == 0 {
+                    continue;
+                }
+                self.bitset[w] = 0;
+                let base = (w as u32) << 6;
+                while bits != 0 {
+                    out.push(base + bits.trailing_zeros());
+                    bits &= bits - 1;
+                }
+            }
+        }
+        Encoding::SparseBinary { indices: out, d }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::vector::sparse_from_indices;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn staged_matches_sort_dedup() {
+        let mut rng = Rng::new(1);
+        let mut scratch = EncodeScratch::new();
+        for case in 0..200 {
+            let d = 1 + rng.below_usize(5_000);
+            let n = rng.below_usize(300);
+            let staged: Vec<u32> = (0..n).map(|_| rng.below(d as u64) as u32).collect();
+            let want = sparse_from_indices(staged.clone(), d);
+            let got = scratch.sparse_from_staged(&staged, d);
+            assert_eq!(got, want, "case {case} d={d} n={n}");
+            scratch.recycle(got);
+        }
+    }
+
+    #[test]
+    fn bitset_left_clean_between_calls() {
+        let mut scratch = EncodeScratch::new();
+        let a = scratch.sparse_from_staged(&[5, 5, 70, 3], 128);
+        assert_eq!(
+            a,
+            Encoding::SparseBinary { indices: vec![3, 5, 70], d: 128 }
+        );
+        scratch.recycle(a);
+        // A second call over the same domain must not see stale bits.
+        let b = scratch.sparse_from_staged(&[9], 128);
+        assert_eq!(b, Encoding::SparseBinary { indices: vec![9], d: 128 });
+    }
+
+    #[test]
+    fn empty_staged_is_empty_code() {
+        let mut scratch = EncodeScratch::new();
+        let e = scratch.sparse_from_staged(&[], 64);
+        assert_eq!(e.nnz(), 0);
+        assert_eq!(e.dim(), 64);
+    }
+
+    #[test]
+    fn pools_round_trip() {
+        let mut scratch = EncodeScratch::new();
+        scratch.recycle(Encoding::Dense(vec![7.0; 16]));
+        let v = scratch.take_dense_zeroed(8);
+        assert_eq!(v, vec![0.0; 8]);
+        assert_eq!(scratch.pooled_buffers(), (0, 0));
+        scratch.recycle(Encoding::Dense(v));
+        assert_eq!(scratch.pooled_buffers(), (1, 0));
+        let raw = scratch.take_dense_raw(4);
+        assert_eq!(raw.len(), 4);
+    }
+
+    #[test]
+    fn stage_round_trip_reuses_capacity() {
+        let mut scratch = EncodeScratch::new();
+        let mut s = scratch.take_stage();
+        s.extend_from_slice(&[1, 2, 3]);
+        let cap = s.capacity();
+        scratch.put_stage(s);
+        let s2 = scratch.take_stage();
+        assert!(s2.is_empty());
+        assert!(s2.capacity() >= cap.min(3));
+    }
+}

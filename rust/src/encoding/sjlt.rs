@@ -9,68 +9,109 @@
 //!   Mirrors the Pallas kernel `kernels/sjlt.py` (cross-validated in the
 //!   integration tests).
 //! * [`RelaxedSjlt`] — the empirical-section variant: Phi_ij in
-//!   {+1 w.p. p/2, 0 w.p. 1-p, -1 w.p. p/2}, stored in CSR-like form so
+//!   {+1 w.p. p/2, 0 w.p. 1-p, -1 w.p. p/2}, stored in CSR form so
 //!   encode cost is proportional to nnz(Phi). Optionally sign-quantized
 //!   ("SJLT encodings are quantized using the sign function", Fig. 9).
+//!
+//! Layout (§Perf): both encoders keep their tables in flat row-major
+//! arrays — `Vec<Vec<_>>` puts every row behind its own pointer, so the
+//! per-record scatter loop chased pointers and missed caches. Signs are
+//! stored as `i8` (±1), making the inner scatter an add/subtract with no
+//! multiplication — exactly Sec. 4.2.2's multiplication-free cost model.
 
+use crate::encoding::scratch::EncodeScratch;
 use crate::encoding::vector::Encoding;
 use crate::encoding::NumericEncoder;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct Sjlt {
-    /// eta[c][j]: bucket of input j in chunk c, in [0, d/k).
-    pub eta: Vec<Vec<u32>>,
-    /// sigma[c][j]: sign of input j in chunk c.
-    pub sigma: Vec<Vec<f32>>,
+    /// Row-major (k, n): bucket of input j in chunk c at `eta[c*n + j]`,
+    /// in [0, d/k).
+    eta: Vec<u32>,
+    /// Row-major (k, n): sign of input j in chunk c, stored ±1 as i8.
+    sigma: Vec<i8>,
     pub d: usize,
     pub n: usize,
+    k: usize,
 }
 
 impl Sjlt {
     pub fn new(d: usize, n: usize, k: usize, rng: &mut Rng) -> Self {
         assert!(d % k == 0, "d={d} must be divisible by k={k}");
         let dk = (d / k) as u64;
-        let eta = (0..k)
-            .map(|_| (0..n).map(|_| rng.below(dk) as u32).collect())
-            .collect();
-        let sigma = (0..k).map(|_| (0..n).map(|_| rng.sign()).collect()).collect();
-        Sjlt { eta, sigma, d, n }
+        // Draw order matches the original nested construction (all eta
+        // rows, then all sigma rows) so seeds stay bit-compatible.
+        let eta: Vec<u32> = (0..k * n).map(|_| rng.below(dk) as u32).collect();
+        let sigma: Vec<i8> = (0..k * n).map(|_| rng.sign() as i8).collect();
+        Sjlt { eta, sigma, d, n, k }
     }
 
     pub fn k(&self) -> usize {
-        self.eta.len()
+        self.k
+    }
+
+    /// Bucket of input `j` in chunk `c` (tests / cross-validation).
+    pub fn eta_at(&self, c: usize, j: usize) -> u32 {
+        self.eta[c * self.n + j]
+    }
+
+    /// Sign of input `j` in chunk `c` as f32 (tests / cross-validation).
+    pub fn sigma_at(&self, c: usize, j: usize) -> f32 {
+        self.sigma[c * self.n + j] as f32
+    }
+
+    /// Scatter-add `x` into a zeroed output buffer of length d — one
+    /// fused pass over the flat (k, n) tables; the inner op is add/sub
+    /// (sign select), multiplication-free.
+    pub fn encode_into(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(out.len(), self.d);
+        let dk = self.d / self.k;
+        for c in 0..self.k {
+            let row = c * self.n;
+            let base = c * dk;
+            let eta = &self.eta[row..row + self.n];
+            let sigma = &self.sigma[row..row + self.n];
+            for j in 0..self.n {
+                let v = if sigma[j] >= 0 { x[j] } else { -x[j] };
+                out[base + eta[j] as usize] += v;
+            }
+        }
     }
 
     pub fn encode_record(&self, x: &[f32]) -> Encoding {
-        debug_assert_eq!(x.len(), self.n);
-        let k = self.k();
-        let dk = self.d / k;
         let mut out = vec![0.0f32; self.d];
-        for c in 0..k {
-            let base = c * dk;
-            let (eta, sigma) = (&self.eta[c], &self.sigma[c]);
-            for j in 0..self.n {
-                out[base + eta[j] as usize] += sigma[j] * x[j];
-            }
-        }
+        self.encode_into(x, &mut out);
+        Encoding::Dense(out)
+    }
+
+    /// Scratch-path [`Sjlt::encode_record`]: the dense output comes from
+    /// the pool (zeroed). Bit-identical.
+    pub fn encode_record_with(&self, x: &[f32], scratch: &mut EncodeScratch) -> Encoding {
+        let mut out = scratch.take_dense_zeroed(self.d);
+        self.encode_into(x, &mut out);
         Encoding::Dense(out)
     }
 
     /// Hash tables flattened for the PJRT artifact `encode_sjlt`
     /// (row-major (k, n) i32 / f32).
     pub fn eta_flat(&self) -> Vec<i32> {
-        self.eta.iter().flatten().map(|&v| v as i32).collect()
+        self.eta.iter().map(|&v| v as i32).collect()
     }
 
     pub fn sigma_flat(&self) -> Vec<f32> {
-        self.sigma.iter().flatten().copied().collect()
+        self.sigma.iter().map(|&s| s as f32).collect()
     }
 }
 
 impl NumericEncoder for Sjlt {
     fn encode(&self, x: &[f32]) -> Encoding {
         self.encode_record(x)
+    }
+
+    fn encode_with(&self, x: &[f32], scratch: &mut EncodeScratch) -> Encoding {
+        self.encode_record_with(x, scratch)
     }
 
     fn dim(&self) -> usize {
@@ -82,11 +123,14 @@ impl NumericEncoder for Sjlt {
     }
 }
 
-/// The relaxed construction used in the paper's experiments (Sec. 7.2.3).
+/// The relaxed construction used in the paper's experiments (Sec. 7.2.3),
+/// stored as CSR: `row_ptr[i]..row_ptr[i+1]` spans row i's entries in
+/// `cols` / `signs`.
 #[derive(Clone, Debug)]
 pub struct RelaxedSjlt {
-    /// Per output row: (input index, sign) of non-zero entries.
-    rows: Vec<Vec<(u32, f32)>>,
+    row_ptr: Vec<u32>,
+    cols: Vec<u32>,
+    signs: Vec<i8>,
     pub d: usize,
     pub n: usize,
     pub p: f64,
@@ -95,46 +139,75 @@ pub struct RelaxedSjlt {
 
 impl RelaxedSjlt {
     pub fn new(d: usize, n: usize, p: f64, quantize: bool, rng: &mut Rng) -> Self {
-        let rows = (0..d)
-            .map(|_| {
-                (0..n as u32)
-                    .filter_map(|j| {
-                        if rng.bernoulli(p) {
-                            Some((j, rng.sign()))
-                        } else {
-                            None
-                        }
-                    })
-                    .collect()
-            })
-            .collect();
-        RelaxedSjlt { rows, d, n, p, quantize }
+        // Same draw order as the original per-row construction.
+        let mut row_ptr = Vec::with_capacity(d + 1);
+        let mut cols = Vec::new();
+        let mut signs = Vec::new();
+        row_ptr.push(0u32);
+        for _ in 0..d {
+            for j in 0..n as u32 {
+                if rng.bernoulli(p) {
+                    cols.push(j);
+                    signs.push(rng.sign() as i8);
+                }
+            }
+            row_ptr.push(cols.len() as u32);
+        }
+        RelaxedSjlt { row_ptr, cols, signs, d, n, p, quantize }
     }
 
     /// Fraction of non-zero entries in Phi (should be ~p).
     pub fn density(&self) -> f64 {
-        let nnz: usize = self.rows.iter().map(Vec::len).sum();
-        nnz as f64 / (self.d * self.n) as f64
+        self.cols.len() as f64 / (self.d * self.n) as f64
+    }
+
+    /// Row i's (column, sign) entries.
+    #[inline]
+    fn row(&self, i: usize) -> (&[u32], &[i8]) {
+        let lo = self.row_ptr[i] as usize;
+        let hi = self.row_ptr[i + 1] as usize;
+        (&self.cols[lo..hi], &self.signs[lo..hi])
+    }
+
+    #[inline]
+    fn finish(&self, acc: f32) -> f32 {
+        if self.quantize {
+            if acc >= 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        } else {
+            acc
+        }
+    }
+
+    /// Compute every output coordinate into a caller buffer of length d.
+    pub fn encode_into(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(out.len(), self.d);
+        for i in 0..self.d {
+            let (cols, signs) = self.row(i);
+            let mut acc = 0.0f32;
+            for (&j, &s) in cols.iter().zip(signs) {
+                let v = x[j as usize];
+                acc += if s >= 0 { v } else { -v };
+            }
+            out[i] = self.finish(acc);
+        }
     }
 
     pub fn encode_record(&self, x: &[f32]) -> Encoding {
-        debug_assert_eq!(x.len(), self.n);
         let mut out = vec![0.0f32; self.d];
-        for (zi, row) in out.iter_mut().zip(&self.rows) {
-            let mut acc = 0.0f32;
-            for &(j, s) in row {
-                acc += s * x[j as usize];
-            }
-            *zi = if self.quantize {
-                if acc >= 0.0 {
-                    1.0
-                } else {
-                    -1.0
-                }
-            } else {
-                acc
-            };
-        }
+        self.encode_into(x, &mut out);
+        Encoding::Dense(out)
+    }
+
+    /// Scratch-path [`RelaxedSjlt::encode_record`] — every element is
+    /// overwritten, so the pooled buffer needs no zeroing.
+    pub fn encode_record_with(&self, x: &[f32], scratch: &mut EncodeScratch) -> Encoding {
+        let mut out = scratch.take_dense_raw(self.d);
+        self.encode_into(x, &mut out);
         Encoding::Dense(out)
     }
 }
@@ -142,6 +215,10 @@ impl RelaxedSjlt {
 impl NumericEncoder for RelaxedSjlt {
     fn encode(&self, x: &[f32]) -> Encoding {
         self.encode_record(x)
+    }
+
+    fn encode_with(&self, x: &[f32], scratch: &mut EncodeScratch) -> Encoding {
+        self.encode_record_with(x, scratch)
     }
 
     fn dim(&self) -> usize {
@@ -156,24 +233,48 @@ impl NumericEncoder for RelaxedSjlt {
         // Row-blocked: each CSR row of Phi is walked once per batch.
         let bsz = xs.len();
         let mut outs = vec![vec![0.0f32; self.d]; bsz];
-        for (i, row) in self.rows.iter().enumerate() {
+        for i in 0..self.d {
+            let (cols, signs) = self.row(i);
             for (b, x) in xs.iter().enumerate() {
                 let mut acc = 0.0f32;
-                for &(j, s) in row {
-                    acc += s * x[j as usize];
+                for (&j, &s) in cols.iter().zip(signs) {
+                    let v = x[j as usize];
+                    acc += if s >= 0 { v } else { -v };
                 }
-                outs[b][i] = if self.quantize {
-                    if acc >= 0.0 {
-                        1.0
-                    } else {
-                        -1.0
-                    }
-                } else {
-                    acc
-                };
+                outs[b][i] = self.finish(acc);
             }
         }
         outs.into_iter().map(Encoding::Dense).collect()
+    }
+
+    fn encode_batch_with(
+        &self,
+        xs: &[&[f32]],
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<Encoding>,
+    ) {
+        // Same row-blocked loop, staged through the flat batch buffer so
+        // the per-record outputs come from the pool.
+        let bsz = xs.len();
+        let mut zs = scratch.take_flat(bsz * self.d);
+        for i in 0..self.d {
+            let (cols, signs) = self.row(i);
+            for (b, x) in xs.iter().enumerate() {
+                let mut acc = 0.0f32;
+                for (&j, &s) in cols.iter().zip(signs) {
+                    let v = x[j as usize];
+                    acc += if s >= 0 { v } else { -v };
+                }
+                zs[b * self.d + i] = self.finish(acc);
+            }
+        }
+        out.clear();
+        for z in zs.chunks_exact(self.d) {
+            let mut buf = scratch.take_dense_raw(self.d);
+            buf.copy_from_slice(z);
+            out.push(Encoding::Dense(buf));
+        }
+        scratch.put_flat(zs);
     }
 }
 
@@ -186,8 +287,11 @@ mod tests {
         let mut rng = Rng::new(1);
         let s = Sjlt::new(64, 13, 4, &mut rng);
         for c in 0..4 {
-            assert!(s.eta[c].iter().all(|&b| b < 16));
-            assert!(s.sigma[c].iter().all(|&v| v == 1.0 || v == -1.0));
+            for j in 0..13 {
+                assert!(s.eta_at(c, j) < 16);
+                let sg = s.sigma_at(c, j);
+                assert!(sg == 1.0 || sg == -1.0);
+            }
         }
     }
 
@@ -205,6 +309,43 @@ mod tests {
         );
         for i in 0..32 {
             assert!((eab[i] - ea[i] - eb[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fused_pass_matches_chunked_reference() {
+        // Reference implementation: the original two-level loop over
+        // nested per-chunk tables. The fused flat pass must agree exactly.
+        let mut rng = Rng::new(42);
+        let (d, n, k) = (96, 13, 4);
+        let s = Sjlt::new(d, n, k, &mut rng);
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+        let mut want = vec![0.0f32; d];
+        let dk = d / k;
+        for c in 0..k {
+            for j in 0..n {
+                want[c * dk + s.eta_at(c, j) as usize] += s.sigma_at(c, j) * x[j];
+            }
+        }
+        assert_eq!(s.encode(&x).to_dense(), want);
+    }
+
+    #[test]
+    fn scratch_path_bit_identical() {
+        let mut rng = Rng::new(43);
+        let s = Sjlt::new(128, 13, 4, &mut rng);
+        let r = RelaxedSjlt::new(128, 13, 0.4, true, &mut rng);
+        let mut scratch = EncodeScratch::new();
+        for case in 0..20 {
+            let x: Vec<f32> = (0..13).map(|i| ((case * 13 + i) as f32 * 0.3).cos()).collect();
+            let a = s.encode(&x);
+            let b = s.encode_with(&x, &mut scratch);
+            assert_eq!(a, b, "sjlt case {case}");
+            scratch.recycle(b);
+            let a = r.encode(&x);
+            let b = r.encode_with(&x, &mut scratch);
+            assert_eq!(a, b, "relaxed case {case}");
+            scratch.recycle(b);
         }
     }
 
@@ -250,9 +391,9 @@ mod tests {
         let s = Sjlt::new(24, 7, 3, &mut rng);
         let ef = s.eta_flat();
         assert_eq!(ef.len(), 21);
-        assert_eq!(ef[7], s.eta[1][0] as i32);
+        assert_eq!(ef[7], s.eta_at(1, 0) as i32);
         let sf = s.sigma_flat();
-        assert_eq!(sf[14], s.sigma[2][0]);
+        assert_eq!(sf[14], s.sigma_at(2, 0));
     }
 
     #[test]
@@ -287,5 +428,22 @@ mod tests {
         for i in 0..128 {
             assert!((es[i] - 2.0 * ea[i]).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn relaxed_batch_paths_agree() {
+        let mut rng = Rng::new(9);
+        let s = RelaxedSjlt::new(96, 8, 0.4, false, &mut rng);
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|b| (0..8).map(|j| ((b * 8 + j) as f32 * 0.11).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let per_record: Vec<Encoding> = refs.iter().map(|x| s.encode(x)).collect();
+        let batched = s.encode_batch(&refs);
+        assert_eq!(batched, per_record);
+        let mut scratch = EncodeScratch::new();
+        let mut out = Vec::new();
+        s.encode_batch_with(&refs, &mut scratch, &mut out);
+        assert_eq!(out, per_record);
     }
 }

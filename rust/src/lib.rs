@@ -25,6 +25,7 @@ pub mod encoding;
 pub mod hash;
 pub mod hw;
 pub mod model;
+pub mod perf;
 pub mod pipeline;
 pub mod runtime;
 pub mod util;

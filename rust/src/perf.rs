@@ -1,0 +1,313 @@
+//! The encode perf snapshot suite — shared by `benches/encode_scaling.rs`
+//! and the `bench_snapshot` binary so `BENCH_encode.json` regenerates
+//! identically from either entry point.
+//!
+//! Everything is seeded (data seed 1, encoder seeds drawn from one Rng),
+//! so the *work measured* is deterministic run-to-run; only wall-clock
+//! numbers vary with the host. The snapshot compares the scratch hot
+//! path against faithful re-implementations of the pre-refactor paths
+//! ([`LegacySjlt`], and `BloomEncoder::encode_set`, which *is* the
+//! pre-refactor allocating sort+dedup path) and reports speedups, plus
+//! coordinator worker-scaling throughput — the two acceptance axes of
+//! the zero-allocation/batching PR.
+//!
+//! Knobs: `BENCH_MS` (per-measurement budget, default 300),
+//! `SHDC_BENCH_RECORDS` (pipeline-scaling record budget, default 60000),
+//! `BENCH_OUT` (snapshot path, default `BENCH_encode.json`).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use crate::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
+use crate::data::synthetic::SyntheticConfig;
+use crate::data::{Record, RecordStream, SyntheticStream};
+use crate::encoding::{
+    BloomEncoder, BundleMethod, CategoricalEncoder, CodebookEncoder, DenseHashEncoder,
+    DenseHashMode, DenseProjection, EncodeScratch, Encoding, NumericEncoder, PermutationEncoder,
+    ProjectionMode, RelaxedSjlt, Sjlt, SparseProjection,
+};
+use crate::util::bench::Harness;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// The pre-refactor structured SJLT: nested per-chunk `Vec<Vec<_>>` hash
+/// tables, f32 sigma, a fresh `vec![0.0; d]` per record, and the
+/// chunk-by-chunk scatter loop — kept verbatim as the bench baseline so
+/// the speedup reported in `BENCH_encode.json` measures the refactor,
+/// not a strawman. Tables are copied from a [`Sjlt`] so both paths hash
+/// identically.
+pub struct LegacySjlt {
+    eta: Vec<Vec<u32>>,
+    sigma: Vec<Vec<f32>>,
+    d: usize,
+    n: usize,
+}
+
+impl LegacySjlt {
+    pub fn mirror(s: &Sjlt) -> LegacySjlt {
+        let k = s.k();
+        let eta = (0..k)
+            .map(|c| (0..s.n).map(|j| s.eta_at(c, j)).collect())
+            .collect();
+        let sigma = (0..k)
+            .map(|c| (0..s.n).map(|j| s.sigma_at(c, j)).collect())
+            .collect();
+        LegacySjlt { eta, sigma, d: s.d, n: s.n }
+    }
+
+    pub fn encode_record(&self, x: &[f32]) -> Encoding {
+        debug_assert_eq!(x.len(), self.n);
+        let k = self.eta.len();
+        let dk = self.d / k;
+        let mut out = vec![0.0f32; self.d];
+        for c in 0..k {
+            let base = c * dk;
+            let (eta, sigma) = (&self.eta[c], &self.sigma[c]);
+            for j in 0..self.n {
+                out[base + eta[j] as usize] += sigma[j] * x[j];
+            }
+        }
+        Encoding::Dense(out)
+    }
+}
+
+fn sample_records(n: usize) -> Vec<Record> {
+    let data = SyntheticConfig { alphabet_size: 10_000_000, ..SyntheticConfig::sampled(1) };
+    let mut stream = SyntheticStream::new(data);
+    (0..n).map(|_| stream.next_record().unwrap()).collect()
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Encode-only pipeline throughput (records/s) at a worker count —
+/// exercises the per-worker-channel coordinator end to end.
+fn pipeline_records_per_sec(workers: usize, records: u64) -> f64 {
+    let data = SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(3) };
+    let enc = EncoderCfg {
+        cat: CatCfg::Bloom { d: 10_000, k: 4 },
+        num: NumCfg::Sjlt { d: 10_000, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 3,
+    };
+    let stream = SyntheticStream::new(data);
+    let coord = CoordinatorCfg {
+        batch_size: 256,
+        n_workers: workers,
+        max_records: Some(records),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let mut sink = 0usize;
+    let stats = run_pipeline(stream, &enc, &coord, |b| {
+        sink += b.encodings.len();
+        true
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(sink as u64, stats.snapshot().records_encoded);
+    records as f64 / dt
+}
+
+/// Run the full encode snapshot; returns the machine-readable document
+/// written to `BENCH_encode.json`.
+pub fn encode_snapshot() -> Json {
+    let mut h = Harness::new("encode_scaling");
+    let mut rng = Rng::new(1);
+    let records = sample_records(512);
+    let d = 10_000;
+    let mut scratch = EncodeScratch::new();
+    let mut i = 0usize;
+
+    // --- the two headline pairs: legacy vs scratch ------------------------
+    let bloom = BloomEncoder::new(d, 4, &mut rng);
+    h.bench("bloom d=10k k=4 legacy (alloc+sort)", || {
+        i = (i + 1) % records.len();
+        bloom.encode_set(&records[i].symbols)
+    });
+    h.note_throughput(1.0, "records");
+    h.bench("bloom d=10k k=4 scratch", || {
+        i = (i + 1) % records.len();
+        let e = bloom.encode_set_with(&records[i].symbols, &mut scratch);
+        black_box(&e);
+        scratch.recycle(e);
+    });
+    h.note_throughput(1.0, "records");
+
+    let sj = Sjlt::new(d, 13, 4, &mut rng);
+    let sj_legacy = LegacySjlt::mirror(&sj);
+    h.bench("SJLT d=10k k=4 legacy (nested tables)", || {
+        i = (i + 1) % records.len();
+        sj_legacy.encode_record(&records[i].numeric)
+    });
+    h.note_throughput(1.0, "records");
+    h.bench("SJLT d=10k k=4 scratch (flat tables)", || {
+        i = (i + 1) % records.len();
+        let e = sj.encode_record_with(&records[i].numeric, &mut scratch);
+        black_box(&e);
+        scratch.recycle(e);
+    });
+    h.note_throughput(1.0, "records");
+
+    // --- coverage of the remaining encoders (scratch path) ----------------
+    for k in [1usize, 8] {
+        let b = BloomEncoder::new(d, k, &mut rng);
+        h.bench(&format!("bloom d=10k k={k} scratch"), || {
+            i = (i + 1) % records.len();
+            let e = b.encode_set_with(&records[i].symbols, &mut scratch);
+            black_box(&e);
+            scratch.recycle(e);
+        });
+    }
+
+    let dh = DenseHashEncoder::new(d, DenseHashMode::Packed, &mut rng);
+    h.bench("dense-hash packed d=10k scratch", || {
+        i = (i + 1) % records.len();
+        let e = dh.encode_set_with(&records[i].symbols, &mut scratch);
+        black_box(&e);
+        scratch.recycle(e);
+    });
+    let dh_lit = DenseHashEncoder::new(500, DenseHashMode::Literal, &mut rng);
+    h.bench("dense-hash literal d=500 (paper's slow baseline)", || {
+        i = (i + 1) % records.len();
+        dh_lit.encode_set(&records[i].symbols)
+    });
+
+    let mut cb = CodebookEncoder::new(d, 3);
+    for r in &records {
+        let _ = cb.try_encode(&r.symbols);
+    }
+    h.bench("codebook d=10k (warm) scratch", || {
+        i = (i + 1) % records.len();
+        let e = cb.encode_with(&records[i].symbols, &mut scratch);
+        black_box(&e);
+        scratch.recycle(e);
+    });
+
+    let perm = PermutationEncoder::new(d, 16, 16, &mut rng);
+    h.bench("permutation d=10k pool=16 scratch", || {
+        i = (i + 1) % records.len();
+        let e = perm.encode_set_with(&records[i].symbols, &mut scratch);
+        black_box(&e);
+        scratch.recycle(e);
+    });
+
+    let dp = DenseProjection::new(d, 13, ProjectionMode::Sign, &mut rng);
+    h.bench("dense sign-RP d=10k n=13 scratch", || {
+        i = (i + 1) % records.len();
+        let e = dp.encode_with(&records[i].numeric, &mut scratch);
+        black_box(&e);
+        scratch.recycle(e);
+    });
+    h.note_throughput(1.0, "records");
+
+    let sp = SparseProjection::new_topk(d, 13, 100, &mut rng);
+    h.bench("sparse RP top-k d=10k k=100 scratch", || {
+        i = (i + 1) % records.len();
+        let e = sp.encode_with(&records[i].numeric, &mut scratch);
+        black_box(&e);
+        scratch.recycle(e);
+    });
+    let st = SparseProjection::new_threshold(d, 13, 1.0, &mut rng);
+    h.bench("sparse RP threshold d=10k scratch", || {
+        i = (i + 1) % records.len();
+        let e = st.encode_with(&records[i].numeric, &mut scratch);
+        black_box(&e);
+        scratch.recycle(e);
+    });
+
+    let rsj = RelaxedSjlt::new(d, 13, 0.4, true, &mut rng);
+    h.bench("SJLT relaxed d=10k p=0.4 scratch", || {
+        i = (i + 1) % records.len();
+        let e = rsj.encode_with(&records[i].numeric, &mut scratch);
+        black_box(&e);
+        scratch.recycle(e);
+    });
+
+    // --- batched encode through RecordEncoder -----------------------------
+    let cfg = EncoderCfg {
+        cat: CatCfg::Bloom { d, k: 4 },
+        num: NumCfg::Sjlt { d, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 7,
+    };
+    let mut renc = cfg.build();
+    let mut batch_out: Vec<Encoding> = Vec::new();
+    let batch = &records[..256];
+    h.bench("record-encoder batch=256 bloom+sjlt concat", || {
+        renc.encode_batch_into(batch, &mut batch_out);
+        black_box(&batch_out);
+        let n = batch_out.len();
+        renc.recycle_all(batch_out.drain(..));
+        n
+    });
+    h.note_throughput(256.0, "records");
+
+    // --- coordinator worker scaling ---------------------------------------
+    let scale_records = env_u64("SHDC_BENCH_RECORDS", 60_000);
+    let mut scaling = Vec::new();
+    let mut rps1 = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        let rps = pipeline_records_per_sec(workers, scale_records);
+        if workers == 1 {
+            rps1 = rps;
+        }
+        println!(
+            "  pipeline {workers} worker(s): {rps:.3e} records/s  (x{:.2} vs 1 worker)",
+            rps / rps1
+        );
+        scaling.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("records_per_sec", Json::num(rps)),
+            ("speedup_vs_1", Json::num(rps / rps1)),
+        ]));
+    }
+
+    h.finish();
+
+    let speedup = |legacy: &str, new: &str| -> Json {
+        match (h.median_ns(legacy), h.median_ns(new)) {
+            (Some(l), Some(n)) if n > 0.0 => Json::num(l / n),
+            _ => Json::Null,
+        }
+    };
+    let bloom_speedup = speedup("bloom d=10k k=4 legacy (alloc+sort)", "bloom d=10k k=4 scratch");
+    let sjlt_speedup = speedup(
+        "SJLT d=10k k=4 legacy (nested tables)",
+        "SJLT d=10k k=4 scratch (flat tables)",
+    );
+    println!("  speedup bloom d=10k k=4: {bloom_speedup:?}");
+    println!("  speedup SJLT  d=10k k=4: {sjlt_speedup:?}");
+
+    Json::obj(vec![
+        ("group", Json::str("encode")),
+        (
+            "config",
+            Json::obj(vec![
+                ("data_seed", Json::num(1.0)),
+                ("alphabet_size", Json::num(10_000_000.0)),
+                ("d", Json::num(d as f64)),
+                ("sample_records", Json::num(records.len() as f64)),
+                ("pipeline_records", Json::num(scale_records as f64)),
+            ]),
+        ),
+        ("results", h.to_json()),
+        (
+            "speedup",
+            Json::obj(vec![
+                ("bloom_d10k_k4", bloom_speedup),
+                ("sjlt_d10k_k4", sjlt_speedup),
+            ]),
+        ),
+        ("pipeline_scaling", Json::Arr(scaling)),
+    ])
+}
+
+/// Write the snapshot to `$BENCH_OUT` (default `BENCH_encode.json`).
+pub fn write_encode_snapshot() -> std::io::Result<()> {
+    let doc = encode_snapshot();
+    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_encode.json".to_string());
+    Harness::write_json(&path, &doc)
+}

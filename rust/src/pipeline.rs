@@ -230,9 +230,17 @@ fn eval_loss(
     model: &LogisticModel,
     records: &[Record],
 ) -> f64 {
-    let batch: Vec<(Encoding, bool)> =
-        records.iter().map(|r| (enc.encode(r), r.label)).collect();
-    model.loss(&batch)
+    // Batch path + recycle: repeated validation rounds reuse the same
+    // pooled buffers instead of re-allocating per record.
+    let mut encs = Vec::with_capacity(records.len());
+    enc.encode_batch_into(records, &mut encs);
+    let batch: Vec<(Encoding, bool)> = encs
+        .into_iter()
+        .zip(records.iter().map(|r| r.label))
+        .collect();
+    let loss = model.loss(&batch);
+    enc.recycle_all(batch.into_iter().map(|(e, _)| e));
+    loss
 }
 
 fn eval_auc_chunks(
@@ -241,7 +249,10 @@ fn eval_auc_chunks(
     records: &[Record],
     chunk: usize,
 ) -> (Vec<f64>, f64) {
-    let scores: Vec<f64> = records.iter().map(|r| model.predict(&enc.encode(r))).collect();
+    let mut encs = Vec::with_capacity(records.len());
+    enc.encode_batch_into(records, &mut encs);
+    let scores: Vec<f64> = encs.iter().map(|e| model.predict(e)).collect();
+    enc.recycle_all(encs);
     let labels: Vec<bool> = records.iter().map(|r| r.label).collect();
     let overall = auc(&scores, &labels);
     let mut chunks = Vec::new();

@@ -5,6 +5,15 @@
 //! `PjRtClient::compile` → `execute`. Executables are compiled once on
 //! first use and cached; the streaming hot loop then only pays host→
 //! device literal transfer + execution.
+//!
+//! All code touching the `xla` crate is gated behind the `shdc_xla`
+//! rustc cfg (enable with `RUSTFLAGS="--cfg shdc_xla"` after adding the
+//! `xla` crate to `[dependencies]` — it is not vendored in the offline
+//! image). A cfg rather than a cargo feature keeps `--all-features`
+//! builds green while the dependency is absent. Without the cfg,
+//! [`Runtime::load`] returns a descriptive error — the `PjrtFused`
+//! backend fails cleanly and the runtime integration tests skip, exactly
+//! as they do when artifacts are absent.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -48,10 +57,12 @@ impl HostTensor {
         }
     }
 
+    #[cfg_attr(not(shdc_xla), allow(dead_code))]
     fn matches(&self, spec: &TensorSpec) -> bool {
         self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
     }
 
+    #[cfg(shdc_xla)]
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -77,9 +88,12 @@ impl HostOutput {
 
 /// Compiled-executable cache keyed by artifact name.
 pub struct Runtime {
+    #[cfg(shdc_xla)]
     client: xla::PjRtClient,
+    #[cfg_attr(not(shdc_xla), allow(dead_code))]
     dir: PathBuf,
     pub manifest: Manifest,
+    #[cfg(shdc_xla)]
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
     /// Cumulative executions per artifact (metrics surface).
     pub exec_counts: HashMap<String, u64>,
@@ -87,6 +101,7 @@ pub struct Runtime {
 
 impl Runtime {
     /// Open the artifacts directory (must contain manifest.json).
+    #[cfg(shdc_xla)]
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
@@ -94,8 +109,26 @@ impl Runtime {
         Ok(Runtime { client, dir, manifest, cache: HashMap::new(), exec_counts: HashMap::new() })
     }
 
+    /// Built without the `shdc_xla` cfg: always an error (callers treat it
+    /// like missing artifacts and skip / fall back).
+    #[cfg(not(shdc_xla))]
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        bail!(
+            "PJRT runtime unavailable: shdc was built without the `shdc_xla` \
+             cfg (artifacts dir: {dir:?}). Add the `xla` crate to \
+             rust/Cargo.toml and build with RUSTFLAGS=\"--cfg shdc_xla\"."
+        )
+    }
+
+    #[cfg(shdc_xla)]
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    #[cfg(not(shdc_xla))]
+    pub fn platform(&self) -> String {
+        "disabled (built without the shdc_xla cfg)".to_string()
     }
 
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -106,6 +139,13 @@ impl Runtime {
     }
 
     /// Compile (or fetch cached) an artifact's executable.
+    #[cfg(not(shdc_xla))]
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        bail!("cannot prepare {name}: built without the `shdc_xla` cfg")
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    #[cfg(shdc_xla)]
     pub fn prepare(&mut self, name: &str) -> Result<()> {
         if self.cache.contains_key(name) {
             return Ok(());
@@ -124,6 +164,14 @@ impl Runtime {
     }
 
     /// Execute an artifact with shape/dtype-checked inputs.
+    #[cfg(not(shdc_xla))]
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostOutput>> {
+        let _ = inputs;
+        bail!("cannot execute {name}: built without the `shdc_xla` cfg")
+    }
+
+    /// Execute an artifact with shape/dtype-checked inputs.
+    #[cfg(shdc_xla)]
     pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostOutput>> {
         self.prepare(name)?;
         let spec = self.spec(name)?.clone();
@@ -188,10 +236,17 @@ impl Runtime {
     }
 
     /// Executables currently compiled.
+    #[cfg(shdc_xla)]
     pub fn compiled(&self) -> Vec<String> {
         let mut v: Vec<String> = self.cache.keys().cloned().collect();
         v.sort();
         v
+    }
+
+    /// Executables currently compiled (none without the `shdc_xla` cfg).
+    #[cfg(not(shdc_xla))]
+    pub fn compiled(&self) -> Vec<String> {
+        Vec::new()
     }
 }
 

@@ -9,10 +9,15 @@
 //! Each benchmark is warmed up, then timed over adaptively-chosen
 //! iteration counts until `min_time` has elapsed; we report median /
 //! p10 / p90 per-iteration latency and derived throughput.
+//!
+//! Results can be exported machine-readably ([`Harness::to_json`] /
+//! [`Harness::write_json`]) so snapshots like `BENCH_encode.json` track
+//! the perf trajectory PR over PR.
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 pub struct BenchResult {
@@ -26,6 +31,17 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn per_sec(&self) -> f64 {
         1e9 / self.median_ns
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("median_ns", Json::num(self.median_ns)),
+            ("p10_ns", Json::num(self.p10_ns)),
+            ("p90_ns", Json::num(self.p90_ns)),
+            ("iters", Json::num(self.iters as f64)),
+            ("per_sec", Json::num(self.per_sec())),
+        ])
     }
 }
 
@@ -118,6 +134,24 @@ impl Harness {
             let per_sec = items_per_iter * 1e9 / r.median_ns;
             println!("      -> {per_sec:.3e} {unit}/s");
         }
+    }
+
+    /// Median latency of a named result (None if it was never run).
+    pub fn median_ns(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.median_ns)
+    }
+
+    /// All results as a JSON array.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(BenchResult::to_json).collect())
+    }
+
+    /// Write `doc` (typically assembled around [`Harness::to_json`]) to
+    /// `path` as pretty JSON.
+    pub fn write_json(path: &str, doc: &Json) -> std::io::Result<()> {
+        std::fs::write(path, doc.pretty())?;
+        println!("  wrote {path}");
+        Ok(())
     }
 
     pub fn finish(&self) {

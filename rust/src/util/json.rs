@@ -1,9 +1,11 @@
-//! Minimal JSON reader for the AOT artifact manifest.
+//! Minimal JSON reader/writer.
 //!
-//! serde is not available in this offline image, and the manifest
-//! (artifacts -> shapes/dtypes/params) is the only JSON we consume, so a
-//! small recursive-descent parser suffices. It supports the full JSON
-//! grammar minus exotic number forms we never emit.
+//! serde is not available in this offline image; the AOT artifact
+//! manifest is the only JSON we consume and the bench snapshots
+//! (`BENCH_encode.json`) the only JSON we emit, so a small
+//! recursive-descent parser plus a pretty-printer suffice. The reader
+//! supports the full JSON grammar minus exotic number forms we never
+//! emit; the writer round-trips through the reader.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -80,6 +82,111 @@ impl Json {
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|m| m.get(key))
     }
+
+    /// Convenience constructors for the writer side.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    /// Pretty-print with 2-space indentation and a trailing newline —
+    /// stable output (object keys are sorted by the BTreeMap), so
+    /// regenerated snapshots diff cleanly.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => out.push_str(&fmt_number(*x)),
+            Json::Str(s) => write_string(out, s),
+            Json::Arr(v) => {
+                if v.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    item.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    write_string(out, k);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn push_indent(out: &mut String, levels: usize) {
+    for _ in 0..levels {
+        out.push_str("  ");
+    }
+}
+
+fn fmt_number(x: f64) -> String {
+    if !x.is_finite() {
+        // JSON has no inf/nan; encode as null like most emitters.
+        return "null".to_string();
+    }
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        // Shortest round-trippable form rust gives us.
+        format!("{x}")
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -324,5 +431,33 @@ mod tests {
     fn unicode_strings() {
         assert_eq!(Json::parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
         assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn pretty_round_trips() {
+        let v = Json::obj(vec![
+            ("name", Json::str("bloom d=10k")),
+            ("median_ns", Json::num(1234.5)),
+            ("iters", Json::num(1_000_000.0)),
+            ("tags", Json::Arr(vec![Json::str("a\"b"), Json::Null, Json::Bool(true)])),
+            ("empty", Json::Arr(vec![])),
+            ("nested", Json::obj(vec![("x", Json::num(-3.0))])),
+        ]);
+        let text = v.pretty();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        // Integral numbers print without a fraction.
+        assert!(text.contains("\"iters\": 1000000"), "{text}");
+    }
+
+    #[test]
+    fn pretty_escapes_and_nonfinite() {
+        let v = Json::obj(vec![
+            ("s", Json::str("line\nbreak\ttab")),
+            ("inf", Json::num(f64::INFINITY)),
+        ]);
+        let text = v.pretty();
+        assert!(text.contains("\\n"));
+        assert!(text.contains("\"inf\": null"));
+        assert!(Json::parse(&text).is_ok());
     }
 }

@@ -1,0 +1,277 @@
+//! Property suite for the zero-allocation refactor: the scratch/batch
+//! encode paths must be **bit-identical** to the allocating per-record
+//! `encode` reference for every categorical and numeric encoder, under
+//! heavy scratch reuse (pooled buffers recycled across cases), and the
+//! multi-worker pipeline must equal the single-worker pipeline after the
+//! per-worker-channel refactor.
+
+use shdc::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::data::{RecordStream, SyntheticStream};
+use shdc::encoding::{
+    bundle, bundle_with, sparse_from_indices, BloomEncoder, BundleMethod, CategoricalEncoder,
+    CodebookEncoder, DenseHashEncoder, DenseHashMode, DenseProjection, EncodeScratch, Encoding,
+    NumericEncoder, PermutationEncoder, ProjectionMode, RelaxedSjlt, Sjlt, SparseProjection,
+};
+use shdc::util::rng::Rng;
+
+/// Run `prop` over `cases` seeded random cases.
+fn forall(cases: u64, mut prop: impl FnMut(u64, &mut Rng)) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0x5c4a7c8_u64 ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        prop(case, &mut rng);
+    }
+}
+
+fn random_symbols(rng: &mut Rng, max_s: usize) -> Vec<u64> {
+    let s = rng.below_usize(max_s + 1);
+    (0..s).map(|_| rng.below(1u64 << 40)).collect()
+}
+
+fn random_numeric(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+/// Assert scratch == allocating for one categorical encoder, recycling
+/// outputs so later cases hit pooled buffers.
+fn check_categorical(enc: &mut dyn CategoricalEncoder, cases: u64, max_s: usize) {
+    let mut scratch = EncodeScratch::new();
+    forall(cases, |case, rng| {
+        let symbols = random_symbols(rng, max_s);
+        let want = enc.encode(&symbols);
+        let got = enc.encode_with(&symbols, &mut scratch);
+        assert_eq!(got, want, "{} case {case} s={}", enc.name(), symbols.len());
+        scratch.recycle(got);
+    });
+}
+
+#[test]
+fn bloom_scratch_matches_encode() {
+    let mut rng = Rng::new(1);
+    let mut e = BloomEncoder::new(4096, 4, &mut rng);
+    check_categorical(&mut e, 60, 40);
+}
+
+#[test]
+fn bloom_poly_scratch_matches_encode() {
+    let mut rng = Rng::new(2);
+    let mut e = BloomEncoder::new_poly(1024, 3, 8, &mut rng);
+    check_categorical(&mut e, 40, 30);
+}
+
+#[test]
+fn bloom_tiny_d_with_collisions_scratch_matches_encode() {
+    // Tiny dimension: heavy hash collisions stress the bitset dedup.
+    let mut rng = Rng::new(3);
+    let mut e = BloomEncoder::new(64, 8, &mut rng);
+    check_categorical(&mut e, 60, 50);
+}
+
+#[test]
+fn dense_hash_scratch_matches_encode() {
+    let mut rng = Rng::new(4);
+    for mode in [DenseHashMode::Literal, DenseHashMode::Packed] {
+        let mut e = DenseHashEncoder::new(257, mode, &mut rng);
+        check_categorical(&mut e, 30, 12);
+    }
+}
+
+#[test]
+fn codebook_scratch_matches_encode() {
+    let mut e = CodebookEncoder::new(512, 5);
+    check_categorical(&mut e, 40, 20);
+}
+
+#[test]
+fn permutation_scratch_matches_encode() {
+    let mut rng = Rng::new(6);
+    let mut e = PermutationEncoder::new(512, 4, 16, &mut rng);
+    check_categorical(&mut e, 40, 15);
+}
+
+/// Assert scratch (per-record and batch) == allocating per-record encode
+/// for one numeric encoder.
+fn check_numeric(enc: &dyn NumericEncoder, cases: u64, n: usize) {
+    let mut scratch = EncodeScratch::new();
+    forall(cases, |case, rng| {
+        let x = random_numeric(rng, n);
+        let want = enc.encode(&x);
+        let got = enc.encode_with(&x, &mut scratch);
+        assert_eq!(got, want, "{} case {case}", enc.name());
+        scratch.recycle(got);
+    });
+    // Batch paths: allocating batch, scratch batch, per-record reference.
+    let mut rng = Rng::new(0xbeef);
+    let xs: Vec<Vec<f32>> = (0..17).map(|_| random_numeric(&mut rng, n)).collect();
+    let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let want: Vec<Encoding> = refs.iter().map(|x| enc.encode(x)).collect();
+    assert_eq!(enc.encode_batch(&refs), want, "{} encode_batch", enc.name());
+    let mut out = Vec::new();
+    enc.encode_batch_with(&refs, &mut scratch, &mut out);
+    assert_eq!(out, want, "{} encode_batch_with", enc.name());
+    // Second round over recycled buffers.
+    scratch.recycle_all(out.drain(..));
+    enc.encode_batch_with(&refs, &mut scratch, &mut out);
+    assert_eq!(out, want, "{} encode_batch_with (recycled)", enc.name());
+}
+
+#[test]
+fn dense_projection_scratch_matches_encode() {
+    let mut rng = Rng::new(7);
+    for mode in [ProjectionMode::Raw, ProjectionMode::Sign] {
+        let e = DenseProjection::new(300, 13, mode, &mut rng);
+        check_numeric(&e, 30, 13);
+    }
+}
+
+#[test]
+fn sparse_projection_scratch_matches_encode() {
+    let mut rng = Rng::new(8);
+    let topk = SparseProjection::new_topk(400, 13, 37, &mut rng);
+    check_numeric(&topk, 30, 13);
+    let thr = SparseProjection::new_threshold(400, 13, 0.8, &mut rng);
+    check_numeric(&thr, 30, 13);
+}
+
+#[test]
+fn sjlt_scratch_matches_encode() {
+    let mut rng = Rng::new(9);
+    let e = Sjlt::new(512, 13, 4, &mut rng);
+    check_numeric(&e, 30, 13);
+}
+
+#[test]
+fn relaxed_sjlt_scratch_matches_encode() {
+    let mut rng = Rng::new(10);
+    for quantize in [false, true] {
+        let e = RelaxedSjlt::new(256, 13, 0.4, quantize, &mut rng);
+        check_numeric(&e, 30, 13);
+    }
+}
+
+#[test]
+fn bundle_with_matches_bundle() {
+    let mut rng = Rng::new(11);
+    let mut scratch = EncodeScratch::new();
+    let d = 96usize;
+    let mk_sparse = |rng: &mut Rng| {
+        let s = rng.below_usize(20);
+        let idx: Vec<u32> = (0..s).map(|_| rng.below(d as u64) as u32).collect();
+        sparse_from_indices(idx, d)
+    };
+    let mk_dense = |rng: &mut Rng| {
+        Encoding::Dense((0..d).map(|_| rng.normal_f32()).collect::<Vec<f32>>())
+    };
+    for case in 0..60 {
+        let a = if rng.bernoulli(0.5) { mk_sparse(&mut rng) } else { mk_dense(&mut rng) };
+        let b = if rng.bernoulli(0.5) { mk_sparse(&mut rng) } else { mk_dense(&mut rng) };
+        for method in [BundleMethod::Concat, BundleMethod::Sum, BundleMethod::ThresholdedSum] {
+            let want = bundle(&a, &b, method);
+            let got = bundle_with(&a, &b, method, &mut scratch);
+            assert_eq!(got, want, "case {case} {method:?}");
+            scratch.recycle(got);
+        }
+    }
+}
+
+/// RecordEncoder's batched scratch path vs the per-record reference,
+/// across encoder/bundle combinations.
+#[test]
+fn record_encoder_batch_matches_per_record() {
+    let combos = vec![
+        EncoderCfg {
+            cat: CatCfg::Bloom { d: 512, k: 4 },
+            num: NumCfg::Sjlt { d: 256, k: 4 },
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 21,
+        },
+        EncoderCfg {
+            cat: CatCfg::DenseHash { d: 128, literal: false },
+            num: NumCfg::DenseSign { d: 128 },
+            bundle: BundleMethod::Sum,
+            n_numeric: 13,
+            seed: 22,
+        },
+        EncoderCfg {
+            cat: CatCfg::Bloom { d: 256, k: 3 },
+            num: NumCfg::SparseThreshold { d: 256, t: 1.0 },
+            bundle: BundleMethod::ThresholdedSum,
+            n_numeric: 13,
+            seed: 23,
+        },
+        EncoderCfg {
+            cat: CatCfg::Codebook { d: 128, budget_bytes: None },
+            num: NumCfg::RelaxedSjlt { d: 64, p: 0.4, quantize: true },
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 24,
+        },
+        EncoderCfg {
+            cat: CatCfg::Permutation { d: 128, pool: 2, granularity: 16 },
+            num: NumCfg::None,
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 25,
+        },
+        EncoderCfg {
+            cat: CatCfg::None,
+            num: NumCfg::SparseTopK { d: 256, k: 25 },
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 26,
+        },
+    ];
+    for cfg in combos {
+        let mut stream = SyntheticStream::new(SyntheticConfig::sampled(cfg.seed));
+        let records: Vec<_> = (0..48).map(|_| stream.next_record().unwrap()).collect();
+        // Reference: a fresh encoder, per-record allocating path.
+        let mut ref_enc = cfg.build();
+        let want: Vec<Encoding> = records.iter().map(|r| ref_enc.encode(r)).collect();
+        // Batched scratch path, run twice so round 2 uses pooled buffers.
+        let mut enc = cfg.build();
+        let mut out = Vec::new();
+        for round in 0..2 {
+            enc.encode_batch_into(&records, &mut out);
+            assert_eq!(out, want, "cfg {:?}/{:?} round {round}", cfg.cat, cfg.num);
+            enc.recycle_all(out.drain(..));
+        }
+    }
+}
+
+#[test]
+fn pipeline_output_worker_count_invariant() {
+    // After the per-worker-channel refactor, 1/2/4-worker runs must be
+    // bit-identical (seq reorderer + deterministic encoders).
+    let enc_cfg = EncoderCfg {
+        cat: CatCfg::Bloom { d: 512, k: 4 },
+        num: NumCfg::Sjlt { d: 256, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 31,
+    };
+    let collect = |workers: usize| {
+        let stream = SyntheticStream::new(SyntheticConfig::sampled(31));
+        let mut encs = Vec::new();
+        let mut labels = Vec::new();
+        run_pipeline(
+            stream,
+            &enc_cfg,
+            &CoordinatorCfg {
+                batch_size: 32,
+                n_workers: workers,
+                max_records: Some(512),
+                ..Default::default()
+            },
+            |b| {
+                encs.extend(b.encodings);
+                labels.extend(b.labels);
+                true
+            },
+        );
+        (encs, labels)
+    };
+    let single = collect(1);
+    assert_eq!(single, collect(2));
+    assert_eq!(single, collect(4));
+}

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Local CI: formatting gate + tier-1 build/test. Run from anywhere.
+#
+#   scripts/ci.sh          # fmt check + build + test
+#   scripts/ci.sh --bench  # additionally refresh BENCH_encode.json
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== bench snapshot =="
+    scripts/bench_snapshot.sh
+fi
