@@ -1,6 +1,9 @@
 //! Fig. 7A's benchmark twin: per-record encode latency for every
 //! categorical and numeric encoder at paper-like dimensions, comparing
-//! the pre-refactor allocating paths against the scratch hot path, plus
+//! the pre-refactor allocating paths against the scratch hot path,
+//! kernel-layer scalar-vs-active pairs (the active backend is
+//! `std::simd` under `cargo bench --features simd`, scalar otherwise —
+//! the `kernel_backend` field in the snapshot records which), plus
 //! coordinator worker-scaling throughput.
 //!
 //! Thin wrapper over [`shdc::perf::encode_snapshot`] (shared with the

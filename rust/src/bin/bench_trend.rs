@@ -1,0 +1,161 @@
+//! CI bench-trend gate: compare a freshly measured `BENCH_encode.json`
+//! against the previously committed snapshot and **fail** when any
+//! encode median regresses beyond the tolerance.
+//!
+//! ```text
+//! cargo run --release --bin bench_trend -- <baseline.json> <candidate.json>
+//! ```
+//!
+//! * Benchmarks are matched by `name` across the two snapshots; names
+//!   present in only one side are reported but not compared (new or
+//!   retired benchmarks must not fail the gate).
+//! * Tolerance defaults to 15% slower (`ratio > 1.15`) and can be
+//!   overridden with `SHDC_TREND_TOL` (e.g. `0.25` for 25%).
+//! * **Skips cleanly** (exit 0, with a message) when the baseline is
+//!   missing, unparsable, or holds no measured results — i.e. the
+//!   committed file is still the nulls-only schema placeholder from a
+//!   container without a Rust toolchain.
+//!
+//! Wall-clock medians are host-dependent; this gate is meant for a CI
+//! host comparing against a snapshot measured on the same class of
+//! machine, which is why the tolerance is wide and only *regressions*
+//! fail (improvements simply become the new baseline when committed).
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use shdc::util::json::Json;
+
+/// Extract `(name, median_ns)` pairs from a snapshot's `results` array,
+/// dropping entries without a finite median.
+fn medians(doc: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    if let Some(results) = doc.get("results").and_then(Json::as_arr) {
+        for r in results {
+            let name = r.get("name").and_then(Json::as_str);
+            let median = r.get("median_ns").and_then(Json::as_f64);
+            if let (Some(name), Some(m)) = (name, median) {
+                if m.is_finite() && m > 0.0 {
+                    out.push((name.to_string(), m));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() != 3 {
+        eprintln!("usage: bench_trend <baseline.json> <candidate.json>");
+        return ExitCode::from(2);
+    }
+    let tol: f64 = std::env::var("SHDC_TREND_TOL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.15);
+
+    // Baseline problems skip (the gate has nothing to compare against);
+    // candidate problems fail (the snapshot we just generated must parse).
+    let base_doc = match std::fs::read_to_string(&args[1]) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(doc) => doc,
+            Err(e) => {
+                println!("bench-trend: baseline {} unparsable ({e}) — skipping", args[1]);
+                return ExitCode::SUCCESS;
+            }
+        },
+        Err(_) => {
+            println!("bench-trend: no baseline at {} — skipping", args[1]);
+            return ExitCode::SUCCESS;
+        }
+    };
+    let base = medians(&base_doc);
+    if base.is_empty() {
+        println!(
+            "bench-trend: baseline {} holds no measured results (nulls-only schema \
+             placeholder) — skipping",
+            args[1]
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let cand_text = match std::fs::read_to_string(&args[2]) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench-trend: cannot read candidate {}: {e}", args[2]);
+            return ExitCode::from(2);
+        }
+    };
+    let cand_doc = match Json::parse(&cand_text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("bench-trend: candidate {} unparsable: {e}", args[2]);
+            return ExitCode::from(2);
+        }
+    };
+    let cand: BTreeMap<String, f64> = medians(&cand_doc).into_iter().collect();
+
+    // Every benchmark — the "kernel ... active" pairs AND the encoder
+    // scratch paths that route through the active kernel backend —
+    // measures whichever backend the build selected, so a simd-built
+    // baseline vs a scalar-built candidate (or vice versa) is not a
+    // regression comparison at all. Skip the whole gate on mismatch
+    // (same contract as the nulls placeholder: nothing comparable to
+    // gate against).
+    let backend = |doc: &Json| {
+        doc.get("kernel_backend")
+            .and_then(Json::as_str)
+            .unwrap_or("scalar")
+            .to_string()
+    };
+    let (base_backend, cand_backend) = (backend(&base_doc), backend(&cand_doc));
+    if base_backend != cand_backend {
+        println!(
+            "bench-trend: kernel_backend differs (baseline {base_backend}, candidate \
+             {cand_backend}) — snapshots measure different kernel builds; skipping. \
+             Regenerate the committed baseline with this build's features to re-arm \
+             the gate."
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let mut compared = 0usize;
+    let mut regressions: Vec<String> = Vec::new();
+    for (name, b) in &base {
+        match cand.get(name) {
+            Some(&c) => {
+                compared += 1;
+                let ratio = c / b;
+                let flag = if ratio > 1.0 + tol {
+                    regressions.push(format!("{name}: {b:.0} ns -> {c:.0} ns (x{ratio:.3})"));
+                    "  << REGRESSION"
+                } else {
+                    ""
+                };
+                println!("  {name:<48} {b:>12.0} -> {c:>12.0} ns  x{ratio:.3}{flag}");
+            }
+            None => println!("  {name:<48} (retired: not in candidate)"),
+        }
+    }
+    for name in cand.keys() {
+        if !base.iter().any(|(n, _)| n == name) {
+            println!("  {name:<48} (new: no baseline)");
+        }
+    }
+
+    println!(
+        "bench-trend: compared {compared} benchmarks at {:.0}% tolerance — {}",
+        tol * 100.0,
+        if regressions.is_empty() { "OK" } else { "FAIL" }
+    );
+    if regressions.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("bench-trend: encode medians regressed beyond {:.0}%:", tol * 100.0);
+        for r in &regressions {
+            eprintln!("  {r}");
+        }
+        ExitCode::FAILURE
+    }
+}

@@ -14,7 +14,12 @@
 //!   using each output bit as a sign. Statistically identical codes
 //!   (each bit of Murmur3 is unbiased), ~32x faster; used where the
 //!   experiment only needs the *codes*, not the baseline's slowness.
+//!   The bit → ±1 unpack is [`kernels::unpack_sign_bits_accumulate`]
+//!   (SIMD under `--features simd`, bit-identical either way); the
+//!   Literal mode stays a plain hash loop — its cost is the d Murmur3
+//!   evaluations, which is the point of the baseline.
 
+use crate::encoding::kernels;
 use crate::encoding::scratch::EncodeScratch;
 use crate::encoding::vector::Encoding;
 use crate::encoding::CategoricalEncoder;
@@ -61,13 +66,10 @@ impl DenseHashEncoder {
             }
             DenseHashMode::Packed => {
                 for (w, &seed) in self.seeds.iter().enumerate() {
-                    let mut word = murmur3_u64(symbol, seed);
+                    let word = murmur3_u64(symbol, seed);
                     let base = w * 32;
                     let n = (self.d - base).min(32);
-                    for j in 0..n {
-                        acc[base + j] += if word & 1 == 0 { 1.0 } else { -1.0 };
-                        word >>= 1;
-                    }
+                    kernels::unpack_sign_bits_accumulate(word, &mut acc[base..base + n]);
                 }
             }
         }

@@ -1,0 +1,440 @@
+//! The encode kernel layer: every hot inner loop of the encoders, behind
+//! scalar and SIMD implementations selected by the `simd` cargo feature.
+//!
+//! PR 1 flattened the encode hot paths into contiguous-array loops; this
+//! module centralizes those loops so there is exactly **one** place where
+//! each inner loop lives, and so an explicit-SIMD variant can be swapped
+//! in without touching any encoder. The callers:
+//!
+//! | kernel                        | caller(s)                                           | SIMD variant |
+//! |-------------------------------|-----------------------------------------------------|--------------|
+//! | [`scatter_signed`]            | `Sjlt::encode_into` (fused ±1 scatter, Eq. 5)       | yes          |
+//! | [`bitset_sweep`] + [`bitset_mark`] | `EncodeScratch::sparse_from_staged` (Bloom dedup) | yes (sweep)  |
+//! | [`unpack_sign_bits_accumulate`] | `DenseHashEncoder` packed mode (bit → ±1 unpack)  | yes          |
+//! | [`axpy`], [`sign_quantize`]   | `DenseProjection` project / batch-project / finish  | yes          |
+//! | [`signed_sum`]                | `RelaxedSjlt` CSR rows                              | no (see below) |
+//! | [`sort_dedup`]                | `sparse_from_indices` (legacy allocating dedup)     | no (see below) |
+//!
+//! # Feature matrix
+//!
+//! * default (no features) — the `scalar` implementations are used. They
+//!   are written autovectorization-friendly (contiguous slices, no
+//!   index arithmetic in the inner loop, branch-free bodies where
+//!   possible) and build on **stable** rustc.
+//! * `--features simd` — the `simd` implementations are used, built on
+//!   portable `std::simd` ([`LANES`] = 8 f32 lanes, i.e. 256-bit vectors;
+//!   wider hardware executes two ops per vector, narrower hardware
+//!   splits — portable SIMD legalizes either way). Requires a **nightly**
+//!   toolchain (`portable_simd` is not stabilized); `lib.rs` enables the
+//!   feature gate only when the cargo feature is on, so default builds
+//!   stay on stable.
+//!
+//! Both backends are always *compiled* when the feature is on (`scalar`
+//! is a plain module, the active backend is a re-export), which is what
+//! makes differential testing possible: `tests/kernel_equivalence.rs`
+//! asserts the active backend is **bit-identical** to `scalar` in the
+//! same process, across randomized shapes, alignments and tail lengths.
+//!
+//! # Why bit-identity is required (not just numerical closeness)
+//!
+//! "A Theoretical Perspective on Hyperdimensional Computing" (Thomas et
+//! al., 2020) shows the learning guarantees depend only on the encoding
+//! map φ itself, not on how it is computed — *provided the map is
+//! preserved exactly*. The repo leans on that: multi-worker pipelines are
+//! asserted bit-identical to single-worker runs, scratch paths
+//! bit-identical to allocating paths, and the PJRT artifacts are
+//! cross-validated against these host implementations. A SIMD path that
+//! changed results in the last ulp would silently break every one of
+//! those equivalences. So each SIMD kernel is constructed to perform the
+//! **same floating-point operations in the same per-element order** as
+//! its scalar twin:
+//!
+//! * [`axpy`], [`sign_quantize`], [`unpack_sign_bits_accumulate`] are
+//!   element-independent (one mul+add / compare+select per coordinate,
+//!   never reassociated, never contracted into FMA — `std::simd` emits
+//!   distinct mul and add ops), so lane-parallelism cannot change any
+//!   result bit.
+//! * [`scatter_signed`] computes the sign-applied values in vector lanes
+//!   but performs the scatter-adds scalar, in ascending `j` order —
+//!   colliding buckets accumulate in exactly the scalar order.
+//! * [`bitset_sweep`] emits set bits in word order either way; the SIMD
+//!   variant only adds a vectorized all-zero block skip.
+//! * [`signed_sum`] is a *sequential reduction*: a lane-parallel version
+//!   would reassociate the sum and change low bits, so it intentionally
+//!   has no SIMD variant (both backends share the scalar loop). Same for
+//!   [`sort_dedup`], which is the comparison-sort legacy reference with
+//!   nothing to vectorize portably.
+
+/// f32 lanes per vector op in the `simd` backend (256-bit vectors).
+pub const LANES: usize = 8;
+
+/// True when this build selected the `std::simd` backend.
+pub const SIMD_ENABLED: bool = cfg!(feature = "simd");
+
+/// Human-readable name of the active backend (lands in
+/// `BENCH_encode.json` so snapshots record what they measured).
+pub const BACKEND: &str = if SIMD_ENABLED { "simd" } else { "scalar" };
+
+#[cfg(not(feature = "simd"))]
+pub use scalar::{axpy, bitset_sweep, scatter_signed, sign_quantize, unpack_sign_bits_accumulate};
+#[cfg(feature = "simd")]
+pub use simd::{axpy, bitset_sweep, scatter_signed, sign_quantize, unpack_sign_bits_accumulate};
+
+// ---------------------------------------------------------------------------
+// Shared (backend-independent) kernels
+// ---------------------------------------------------------------------------
+
+/// Sequential signed gather-sum over one CSR row:
+/// `Σ_j sign(signs[j]) · x[cols[j]]`, accumulated left to right.
+///
+/// Order-sensitive reduction — a lane-parallel version would reassociate
+/// the f32 sum and break bit-identity, so both backends share this loop
+/// (the gather itself is the memory-bound part and does not vectorize
+/// portably anyway).
+#[inline]
+pub fn signed_sum(x: &[f32], cols: &[u32], signs: &[i8]) -> f32 {
+    debug_assert_eq!(cols.len(), signs.len());
+    let mut acc = 0.0f32;
+    for (&j, &s) in cols.iter().zip(signs) {
+        let v = x[j as usize];
+        acc += if s >= 0 { v } else { -v };
+    }
+    acc
+}
+
+/// Sort + dedup an index buffer in place — the legacy allocating-path
+/// dedup primitive (`sparse_from_indices` funnels through this, so the
+/// legacy and scratch paths both terminate in this module). Comparison
+/// sort; no SIMD variant.
+#[inline]
+pub fn sort_dedup(indices: &mut Vec<u32>) {
+    indices.sort_unstable();
+    indices.dedup();
+}
+
+/// Mark `staged` coordinates in the bitset (one bit per coordinate) and
+/// return the inclusive `(min_word, max_word)` span touched. The sweep
+/// half of the pair is [`bitset_sweep`]. Scatter of single bits — data-
+/// dependent addresses, no SIMD variant.
+///
+/// `staged` must be non-empty (the returned span would be meaningless)
+/// and every index must fall inside `bitset.len() * 64`.
+#[inline]
+pub fn bitset_mark(bitset: &mut [u64], staged: &[u32]) -> (usize, usize) {
+    debug_assert!(!staged.is_empty());
+    let mut min_w = usize::MAX;
+    let mut max_w = 0usize;
+    for &i in staged {
+        let w = (i >> 6) as usize;
+        bitset[w] |= 1u64 << (i & 63);
+        min_w = min_w.min(w);
+        max_w = max_w.max(w);
+    }
+    (min_w, max_w)
+}
+
+/// Emit the set bits of word `w` (ascending) into `out` and clear it.
+#[inline(always)]
+fn emit_word(bitset: &mut [u64], w: usize, out: &mut Vec<u32>) {
+    let mut bits = bitset[w];
+    if bits == 0 {
+        return;
+    }
+    bitset[w] = 0;
+    let base = (w as u32) << 6;
+    while bits != 0 {
+        out.push(base + bits.trailing_zeros());
+        bits &= bits - 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar backend — always compiled; the stable-toolchain default.
+// ---------------------------------------------------------------------------
+
+/// Scalar implementations of the vectorizable kernels. Always compiled
+/// (even with `--features simd`) so the differential suite can compare
+/// the active backend against these in one process.
+pub mod scalar {
+    /// `z[i] += col[i] * xv` for all i. One mul + one add per element,
+    /// in element order; contiguous, so LLVM autovectorizes it on the
+    /// stable toolchain.
+    #[inline]
+    pub fn axpy(z: &mut [f32], col: &[f32], xv: f32) {
+        debug_assert_eq!(z.len(), col.len());
+        for (zi, &c) in z.iter_mut().zip(col) {
+            *zi += c * xv;
+        }
+    }
+
+    /// `z[i] = if z[i] >= 0 { 1.0 } else { -1.0 }` (Eq. 4's sign with
+    /// sign(0) := +1; NaN compares false, hence -1.0 — the SIMD backend
+    /// matches both conventions exactly).
+    #[inline]
+    pub fn sign_quantize(z: &mut [f32]) {
+        for zi in z.iter_mut() {
+            *zi = if *zi >= 0.0 { 1.0 } else { -1.0 };
+        }
+    }
+
+    /// The fused SJLT chunk scatter: `out[eta[j]] += ±x[j]` with the sign
+    /// taken from `sigma[j]` (±1 as i8), for ascending j. Multiplication-
+    /// free (Sec. 4.2.2 cost model): the sign is a select, the update an
+    /// add.
+    #[inline]
+    pub fn scatter_signed(x: &[f32], eta: &[u32], sigma: &[i8], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), eta.len());
+        debug_assert_eq!(x.len(), sigma.len());
+        for j in 0..x.len() {
+            let v = if sigma[j] >= 0 { x[j] } else { -x[j] };
+            out[eta[j] as usize] += v;
+        }
+    }
+
+    /// Dense-hash packed unpack: bit i of `word` becomes ±1 added to
+    /// `acc[i]` (`0 → +1.0`, `1 → -1.0`). `acc.len() <= 32` selects how
+    /// many bits are consumed.
+    #[inline]
+    pub fn unpack_sign_bits_accumulate(word: u32, acc: &mut [f32]) {
+        debug_assert!(acc.len() <= 32);
+        let mut w = word;
+        for a in acc.iter_mut() {
+            *a += if w & 1 == 0 { 1.0 } else { -1.0 };
+            w >>= 1;
+        }
+    }
+
+    /// Sweep bitset words `min_w..=max_w` in order, emitting set bits
+    /// (sorted, unique by construction) into `out` and clearing each
+    /// visited word — the sort-free Bloom dedup sweep.
+    #[inline]
+    pub fn bitset_sweep(bitset: &mut [u64], min_w: usize, max_w: usize, out: &mut Vec<u32>) {
+        for w in min_w..=max_w {
+            super::emit_word(bitset, w, out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD backend — portable std::simd, compiled only with `--features simd`
+// (nightly toolchain: lib.rs enables `portable_simd` under the feature).
+// ---------------------------------------------------------------------------
+
+/// Portable-SIMD implementations. Bit-identical to [`scalar`] by
+/// construction (see the module docs); enforced by
+/// `tests/kernel_equivalence.rs`.
+#[cfg(feature = "simd")]
+pub mod simd {
+    use super::LANES;
+    use std::simd::prelude::*;
+
+    type F32s = Simd<f32, LANES>;
+    type U32s = Simd<u32, LANES>;
+    type I8s = Simd<i8, LANES>;
+
+    /// Words per vectorized zero-skip block in [`bitset_sweep`].
+    const SWEEP_BLOCK: usize = 4;
+
+    /// See [`super::scalar::axpy`]. `zv + cv * xs` lowers to distinct
+    /// vector mul and add ops (std::simd never contracts to FMA), so
+    /// every element sees exactly the scalar arithmetic.
+    #[inline]
+    pub fn axpy(z: &mut [f32], col: &[f32], xv: f32) {
+        debug_assert_eq!(z.len(), col.len());
+        let xs = F32s::splat(xv);
+        let mut zc = z.chunks_exact_mut(LANES);
+        let mut cc = col.chunks_exact(LANES);
+        for (zch, cch) in zc.by_ref().zip(cc.by_ref()) {
+            let zv = F32s::from_slice(zch);
+            let cv = F32s::from_slice(cch);
+            (zv + cv * xs).copy_to_slice(zch);
+        }
+        for (zi, &c) in zc.into_remainder().iter_mut().zip(cc.remainder()) {
+            *zi += c * xv;
+        }
+    }
+
+    /// See [`super::scalar::sign_quantize`]. `simd_ge` follows IEEE
+    /// compare semantics: `-0.0 >= 0.0` is true (→ +1.0), NaN compares
+    /// false (→ -1.0) — identical to the scalar branch.
+    #[inline]
+    pub fn sign_quantize(z: &mut [f32]) {
+        let zero = F32s::splat(0.0);
+        let pos = F32s::splat(1.0);
+        let neg = F32s::splat(-1.0);
+        let mut zc = z.chunks_exact_mut(LANES);
+        for chunk in zc.by_ref() {
+            let v = F32s::from_slice(chunk);
+            v.simd_ge(zero).select(pos, neg).copy_to_slice(chunk);
+        }
+        for zi in zc.into_remainder() {
+            *zi = if *zi >= 0.0 { 1.0 } else { -1.0 };
+        }
+    }
+
+    /// See [`super::scalar::scatter_signed`]. The sign select runs in
+    /// vector lanes; the scatter-adds stay scalar in ascending j order,
+    /// so colliding buckets accumulate in exactly the scalar order and
+    /// the result is bit-identical.
+    #[inline]
+    pub fn scatter_signed(x: &[f32], eta: &[u32], sigma: &[i8], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), eta.len());
+        debug_assert_eq!(x.len(), sigma.len());
+        let n = x.len();
+        let main = n - n % LANES;
+        let mut vals = [0.0f32; LANES];
+        let mut j = 0;
+        while j < main {
+            let xv = F32s::from_slice(&x[j..j + LANES]);
+            let sg = I8s::from_slice(&sigma[j..j + LANES]).simd_ge(I8s::splat(0));
+            sg.cast::<i32>().select(xv, -xv).copy_to_slice(&mut vals);
+            for (l, &v) in vals.iter().enumerate() {
+                out[eta[j + l] as usize] += v;
+            }
+            j += LANES;
+        }
+        for jj in j..n {
+            let v = if sigma[jj] >= 0 { x[jj] } else { -x[jj] };
+            out[eta[jj] as usize] += v;
+        }
+    }
+
+    /// See [`super::scalar::unpack_sign_bits_accumulate`]. Each lane
+    /// extracts its own bit of `word` (shift amounts stay < 32 because
+    /// `acc.len() <= 32`) and adds ±1.0 to its own accumulator element —
+    /// element-independent, hence bit-identical.
+    #[inline]
+    pub fn unpack_sign_bits_accumulate(word: u32, acc: &mut [f32]) {
+        debug_assert!(acc.len() <= 32);
+        let lane_idx = U32s::from_array({
+            let mut a = [0u32; LANES];
+            let mut i = 0;
+            while i < LANES {
+                a[i] = i as u32;
+                i += 1;
+            }
+            a
+        });
+        let wv = U32s::splat(word);
+        let one = U32s::splat(1);
+        let zero = U32s::splat(0);
+        let pos = F32s::splat(1.0);
+        let neg = F32s::splat(-1.0);
+        let mut base = 0u32;
+        let mut chunks = acc.chunks_exact_mut(LANES);
+        for chunk in chunks.by_ref() {
+            let bits = (wv >> (lane_idx + U32s::splat(base))) & one;
+            let delta = bits.simd_eq(zero).select(pos, neg);
+            (F32s::from_slice(chunk) + delta).copy_to_slice(chunk);
+            base += LANES as u32;
+        }
+        for (i, a) in chunks.into_remainder().iter_mut().enumerate() {
+            *a += if (word >> (base + i as u32)) & 1 == 0 { 1.0 } else { -1.0 };
+        }
+    }
+
+    /// See [`super::scalar::bitset_sweep`]. Identical output: the only
+    /// difference is that runs of all-zero words are skipped
+    /// [`SWEEP_BLOCK`] at a time with one vector reduce-or — sparse
+    /// codes leave most of the span empty, which is exactly where the
+    /// scalar sweep spends its time.
+    #[inline]
+    pub fn bitset_sweep(bitset: &mut [u64], min_w: usize, max_w: usize, out: &mut Vec<u32>) {
+        let mut w = min_w;
+        while w + SWEEP_BLOCK <= max_w + 1 {
+            let v = Simd::<u64, SWEEP_BLOCK>::from_slice(&bitset[w..w + SWEEP_BLOCK]);
+            if v.reduce_or() != 0 {
+                for ww in w..w + SWEEP_BLOCK {
+                    super::emit_word(bitset, ww, out);
+                }
+            }
+            w += SWEEP_BLOCK;
+        }
+        while w <= max_w {
+            super::emit_word(bitset, w, out);
+            w += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_constants_consistent() {
+        assert_eq!(SIMD_ENABLED, cfg!(feature = "simd"));
+        assert_eq!(BACKEND, if SIMD_ENABLED { "simd" } else { "scalar" });
+    }
+
+    #[test]
+    fn scalar_axpy_basic() {
+        let mut z = vec![1.0f32, 2.0, 3.0];
+        scalar::axpy(&mut z, &[10.0, 20.0, 30.0], 0.5);
+        assert_eq!(z, vec![6.0, 12.0, 18.0]);
+        // Empty slices are a no-op.
+        scalar::axpy(&mut [], &[], 1.0);
+    }
+
+    #[test]
+    fn scalar_sign_quantize_conventions() {
+        let mut z = vec![0.0f32, -0.0, 1.5, -1.5, f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        scalar::sign_quantize(&mut z);
+        // sign(0) := +1 for both zero encodings; NaN -> -1 (compare false).
+        assert_eq!(z, vec![1.0, 1.0, 1.0, -1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn scalar_scatter_accumulates_collisions_in_order() {
+        let x = [1.0f32, 2.0, 4.0];
+        let eta = [1u32, 1, 0];
+        let sigma = [1i8, -1, 1];
+        let mut out = vec![0.0f32; 2];
+        scalar::scatter_signed(&x, &eta, &sigma, &mut out);
+        assert_eq!(out, vec![4.0, -1.0]);
+    }
+
+    #[test]
+    fn scalar_unpack_low_bits() {
+        // word 0b...0101: bit0=1 -> -1, bit1=0 -> +1, bit2=1 -> -1.
+        let mut acc = vec![0.0f32; 3];
+        scalar::unpack_sign_bits_accumulate(0b101, &mut acc);
+        assert_eq!(acc, vec![-1.0, 1.0, -1.0]);
+        // Full 32-bit width with an all-ones word.
+        let mut acc = vec![0.0f32; 32];
+        scalar::unpack_sign_bits_accumulate(u32::MAX, &mut acc);
+        assert!(acc.iter().all(|&a| a == -1.0));
+        scalar::unpack_sign_bits_accumulate(0, &mut []);
+    }
+
+    #[test]
+    fn mark_sweep_round_trip_sorted_unique_and_clean() {
+        let mut bs = vec![0u64; 4];
+        let staged = [130u32, 5, 64, 5, 191, 0];
+        let (lo, hi) = bitset_mark(&mut bs, &staged);
+        assert_eq!((lo, hi), (0, 2));
+        let mut out = Vec::new();
+        scalar::bitset_sweep(&mut bs, lo, hi, &mut out);
+        assert_eq!(out, vec![0, 5, 64, 130, 191]);
+        assert!(bs.iter().all(|&w| w == 0), "sweep must clear the bitset");
+    }
+
+    #[test]
+    fn signed_sum_sequential_order() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let cols = [3u32, 0, 2];
+        let signs = [1i8, -1, 1];
+        assert_eq!(signed_sum(&x, &cols, &signs), 4.0 - 1.0 + 3.0);
+        assert_eq!(signed_sum(&x, &[], &[]), 0.0);
+    }
+
+    #[test]
+    fn sort_dedup_matches_contract() {
+        let mut v = vec![5u32, 1, 5, 3, 1];
+        sort_dedup(&mut v);
+        assert_eq!(v, vec![1, 3, 5]);
+        let mut e: Vec<u32> = Vec::new();
+        sort_dedup(&mut e);
+        assert!(e.is_empty());
+    }
+}

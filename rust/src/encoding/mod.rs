@@ -28,11 +28,22 @@
 //! encode(x)` for every encoder, every input and any scratch state
 //! (enforced by `tests/scratch_equivalence.rs`). Batch variants reuse
 //! the caller's output `Vec` and are the coordinator workers' hot path.
+//!
+//! # The kernel layer
+//!
+//! Both paths' hot inner loops (SJLT scatter, Bloom bitset dedup,
+//! dense-hash bit unpack, projection AXPY/quantize) live in [`kernels`],
+//! which selects an explicit portable-SIMD backend under `--features
+//! simd` (nightly) and an autovectorization-friendly scalar backend
+//! otherwise. The backends are bit-identical — enforced by
+//! `tests/kernel_equivalence.rs` — so every equivalence above holds
+//! regardless of the feature.
 
 pub mod bloom;
 pub mod bundle;
 pub mod codebook;
 pub mod dense_hash;
+pub mod kernels;
 pub mod permutation;
 pub mod projection;
 pub mod scratch;

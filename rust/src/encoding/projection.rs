@@ -6,6 +6,7 @@
 //! this implementation serves the hardware simulators, single-record
 //! paths, and cross-validation tests (rust vs artifact numerics).
 
+use crate::encoding::kernels;
 use crate::encoding::scratch::EncodeScratch;
 use crate::encoding::vector::{sparse_from_indices, Encoding};
 use crate::encoding::NumericEncoder;
@@ -48,18 +49,16 @@ impl DenseProjection {
         DenseProjection { phi, phi_t, d, n, mode }
     }
 
-    /// z = Phi x into a caller buffer (hot path: no allocation).
-    /// SIMD-friendly: n accumulating AXPY passes over contiguous
-    /// d-length rows of the transposed matrix.
+    /// z = Phi x into a caller buffer (hot path: no allocation): n
+    /// accumulating [`kernels::axpy`] passes over contiguous d-length
+    /// rows of the transposed matrix (explicit SIMD under `--features
+    /// simd`, autovectorized scalar otherwise — bit-identical results).
     pub fn project_into(&self, x: &[f32], z: &mut [f32]) {
         debug_assert_eq!(x.len(), self.n);
         debug_assert_eq!(z.len(), self.d);
         z.fill(0.0);
         for (j, &xv) in x.iter().enumerate() {
-            let col = &self.phi_t[j * self.d..(j + 1) * self.d];
-            for (zi, &c) in z.iter_mut().zip(col) {
-                *zi += c * xv;
-            }
+            kernels::axpy(z, &self.phi_t[j * self.d..(j + 1) * self.d], xv);
         }
     }
 
@@ -74,9 +73,7 @@ impl DenseProjection {
     #[inline]
     fn finish(&self, z: &mut [f32]) {
         if self.mode == ProjectionMode::Sign {
-            for zi in z.iter_mut() {
-                *zi = if *zi >= 0.0 { 1.0 } else { -1.0 };
-            }
+            kernels::sign_quantize(z);
         }
     }
 
@@ -118,9 +115,7 @@ impl DenseProjection {
                         let xv = xs[b][j];
                         let zrow =
                             &mut zs[b * self.d + tile_start..b * self.d + tile_start + tile_len];
-                        for (zi, &c) in zrow.iter_mut().zip(col) {
-                            *zi += c * xv;
-                        }
+                        kernels::axpy(zrow, col, xv);
                     }
                 }
                 b0 = bend;
@@ -151,11 +146,12 @@ impl NumericEncoder for DenseProjection {
         let mut zs = vec![0.0f32; bsz * self.d];
         self.project_batch_into(xs, &mut zs);
         zs.chunks_exact(self.d)
-            .map(|z| match self.mode {
-                ProjectionMode::Raw => Encoding::Dense(z.to_vec()),
-                ProjectionMode::Sign => Encoding::Dense(
-                    z.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect(),
-                ),
+            .map(|z| {
+                let mut buf = z.to_vec();
+                if self.mode == ProjectionMode::Sign {
+                    kernels::sign_quantize(&mut buf);
+                }
+                Encoding::Dense(buf)
             })
             .collect()
     }
@@ -175,13 +171,9 @@ impl NumericEncoder for DenseProjection {
         out.clear();
         for z in zs.chunks_exact(self.d) {
             let mut buf = scratch.take_dense_raw(self.d);
-            match self.mode {
-                ProjectionMode::Raw => buf.copy_from_slice(z),
-                ProjectionMode::Sign => {
-                    for (b, &v) in buf.iter_mut().zip(z) {
-                        *b = if v >= 0.0 { 1.0 } else { -1.0 };
-                    }
-                }
+            buf.copy_from_slice(z);
+            if self.mode == ProjectionMode::Sign {
+                kernels::sign_quantize(&mut buf);
             }
             out.push(Encoding::Dense(buf));
         }
@@ -223,7 +215,13 @@ impl SparseProjection {
 
     /// Calibrate t so that the expected activation count on the sample is
     /// ~k ("selecting a threshold t such that Pr(|Phi_i . x| >= t) = k/d").
-    pub fn calibrate_threshold(d: usize, n: usize, k: usize, sample: &[Vec<f32>], rng: &mut Rng) -> Self {
+    pub fn calibrate_threshold(
+        d: usize,
+        n: usize,
+        k: usize,
+        sample: &[Vec<f32>],
+        rng: &mut Rng,
+    ) -> Self {
         let proj = DenseProjection::new(d, n, ProjectionMode::Raw, rng);
         let mut mags: Vec<f32> = Vec::with_capacity(sample.len() * d);
         let mut z = vec![0.0f32; d];

@@ -12,7 +12,10 @@
 //!   each coordinate's bit, then sweep words in order extracting set bits
 //!   (naturally sorted, naturally unique, and cleared during the sweep so
 //!   the table is all-zero again afterwards) — O(s·k + d/64) instead of
-//!   O(s·k·log(s·k)), branch-free inner loop,
+//!   O(s·k·log(s·k)), branch-free inner loop. Mark and sweep are the
+//!   [`crate::encoding::kernels`] pair [`kernels::bitset_mark`] /
+//!   [`kernels::bitset_sweep`] (the sweep gains a vectorized zero-block
+//!   skip under `--features simd`; output is bit-identical),
 //! * **buffer pools** for dense (`Vec<f32>`) and sparse-index (`Vec<u32>`)
 //!   output buffers, refilled by [`EncodeScratch::recycle`],
 //! * a **flat batch buffer** for row-blocked numeric batch encodes.
@@ -28,6 +31,7 @@
 //! property suite in `tests/scratch_equivalence.rs` enforces this for
 //! every encoder.
 
+use crate::encoding::kernels;
 use crate::encoding::vector::Encoding;
 
 /// Pooled scratch state shared by all encoders. Plain data (`Send`), one
@@ -89,11 +93,16 @@ impl EncodeScratch {
     #[inline]
     pub fn take_dense_raw(&mut self, d: usize) -> Vec<f32> {
         match self.dense_pool.pop() {
-            Some(mut v) => {
+            // A pooled buffer below the requested capacity would
+            // grow-realloc and memcpy its stale contents (e.g. a recycled
+            // d=10k numeric code popped for a d=20k Concat bundle);
+            // dropping it for a fresh zeroed allocation is the same
+            // free+alloc without the copy.
+            Some(mut v) if v.capacity() >= d => {
                 v.resize(d, 0.0);
                 v
             }
-            None => vec![0.0f32; d],
+            _ => vec![0.0f32; d],
         }
     }
 
@@ -110,7 +119,10 @@ impl EncodeScratch {
     #[inline]
     pub fn take_flat(&mut self, len: usize) -> Vec<f32> {
         let mut v = std::mem::take(&mut self.flat);
-        v.clear();
+        // resize without a clear: only growth is zero-filled, retained
+        // elements keep stale contents — the contract is "unspecified"
+        // and every caller re-zeroes or fully overwrites, so a full
+        // clear+resize would memset batch*d floats per batch for nothing.
         v.resize(len, 0.0);
         v
     }
@@ -152,28 +164,10 @@ impl EncodeScratch {
         self.ensure_bitset(d);
         let mut out = self.take_index(staged.len());
         if !staged.is_empty() {
-            let mut min_w = usize::MAX;
-            let mut max_w = 0usize;
-            for &i in staged {
-                let w = (i >> 6) as usize;
-                self.bitset[w] |= 1u64 << (i & 63);
-                min_w = min_w.min(w);
-                max_w = max_w.max(w);
-            }
+            let (min_w, max_w) = kernels::bitset_mark(&mut self.bitset, staged);
             // Sweep in word order: emits sorted, unique indices and leaves
             // the bitset all-zero again.
-            for w in min_w..=max_w {
-                let mut bits = self.bitset[w];
-                if bits == 0 {
-                    continue;
-                }
-                self.bitset[w] = 0;
-                let base = (w as u32) << 6;
-                while bits != 0 {
-                    out.push(base + bits.trailing_zeros());
-                    bits &= bits - 1;
-                }
-            }
+            kernels::bitset_sweep(&mut self.bitset, min_w, max_w, &mut out);
         }
         Encoding::SparseBinary { indices: out, d }
     }

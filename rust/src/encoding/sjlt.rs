@@ -18,7 +18,12 @@
 //! per-record scatter loop chased pointers and missed caches. Signs are
 //! stored as `i8` (±1), making the inner scatter an add/subtract with no
 //! multiplication — exactly Sec. 4.2.2's multiplication-free cost model.
+//! The inner loops themselves live in [`crate::encoding::kernels`]
+//! ([`kernels::scatter_signed`] for the structured scatter,
+//! [`kernels::signed_sum`] for the relaxed CSR rows), shared by the
+//! legacy and scratch paths and SIMD-accelerated under `--features simd`.
 
+use crate::encoding::kernels;
 use crate::encoding::scratch::EncodeScratch;
 use crate::encoding::vector::Encoding;
 use crate::encoding::NumericEncoder;
@@ -63,7 +68,9 @@ impl Sjlt {
 
     /// Scatter-add `x` into a zeroed output buffer of length d — one
     /// fused pass over the flat (k, n) tables; the inner op is add/sub
-    /// (sign select), multiplication-free.
+    /// (sign select), multiplication-free. Per-chunk scatter is
+    /// [`kernels::scatter_signed`] (scalar or SIMD per the `simd`
+    /// feature; bit-identical either way).
     pub fn encode_into(&self, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.n);
         debug_assert_eq!(out.len(), self.d);
@@ -71,12 +78,12 @@ impl Sjlt {
         for c in 0..self.k {
             let row = c * self.n;
             let base = c * dk;
-            let eta = &self.eta[row..row + self.n];
-            let sigma = &self.sigma[row..row + self.n];
-            for j in 0..self.n {
-                let v = if sigma[j] >= 0 { x[j] } else { -x[j] };
-                out[base + eta[j] as usize] += v;
-            }
+            kernels::scatter_signed(
+                x,
+                &self.eta[row..row + self.n],
+                &self.sigma[row..row + self.n],
+                &mut out[base..base + dk],
+            );
         }
     }
 
@@ -183,17 +190,15 @@ impl RelaxedSjlt {
     }
 
     /// Compute every output coordinate into a caller buffer of length d.
+    /// Row accumulation is [`kernels::signed_sum`] — a sequential
+    /// reduction in both backends (reassociating it would break
+    /// bit-identity; see the kernels module docs).
     pub fn encode_into(&self, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.n);
         debug_assert_eq!(out.len(), self.d);
         for i in 0..self.d {
             let (cols, signs) = self.row(i);
-            let mut acc = 0.0f32;
-            for (&j, &s) in cols.iter().zip(signs) {
-                let v = x[j as usize];
-                acc += if s >= 0 { v } else { -v };
-            }
-            out[i] = self.finish(acc);
+            out[i] = self.finish(kernels::signed_sum(x, cols, signs));
         }
     }
 
@@ -236,12 +241,7 @@ impl NumericEncoder for RelaxedSjlt {
         for i in 0..self.d {
             let (cols, signs) = self.row(i);
             for (b, x) in xs.iter().enumerate() {
-                let mut acc = 0.0f32;
-                for (&j, &s) in cols.iter().zip(signs) {
-                    let v = x[j as usize];
-                    acc += if s >= 0 { v } else { -v };
-                }
-                outs[b][i] = self.finish(acc);
+                outs[b][i] = self.finish(kernels::signed_sum(x, cols, signs));
             }
         }
         outs.into_iter().map(Encoding::Dense).collect()
@@ -260,12 +260,7 @@ impl NumericEncoder for RelaxedSjlt {
         for i in 0..self.d {
             let (cols, signs) = self.row(i);
             for (b, x) in xs.iter().enumerate() {
-                let mut acc = 0.0f32;
-                for (&j, &s) in cols.iter().zip(signs) {
-                    let v = x[j as usize];
-                    acc += if s >= 0 { v } else { -v };
-                }
-                zs[b * self.d + i] = self.finish(acc);
+                zs[b * self.d + i] = self.finish(kernels::signed_sum(x, cols, signs));
             }
         }
         out.clear();

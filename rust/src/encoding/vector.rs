@@ -139,11 +139,12 @@ impl Encoding {
 }
 
 /// Sort + dedup an index buffer in place and wrap it as a sparse encoding.
-/// All sparse encoders funnel through this so the "sorted unique"
-/// invariant holds by construction.
+/// All sparse encoders' allocating paths funnel through this so the
+/// "sorted unique" invariant holds by construction; the dedup primitive
+/// itself is [`crate::encoding::kernels::sort_dedup`] (the scratch paths
+/// use the kernel layer's bitset mark/sweep pair instead).
 pub fn sparse_from_indices(mut indices: Vec<u32>, d: usize) -> Encoding {
-    indices.sort_unstable();
-    indices.dedup();
+    crate::encoding::kernels::sort_dedup(&mut indices);
     debug_assert!(indices.last().map_or(true, |&i| (i as usize) < d));
     Encoding::SparseBinary { indices, d }
 }

@@ -18,6 +18,18 @@
 //! `xla` crate); python never runs on the request path.
 //!
 //! Start with [`pipeline::TrainPipeline`] or the `examples/` directory.
+//!
+//! # Cargo features
+//!
+//! * `simd` — switch the encode kernel layer ([`encoding::kernels`]) to
+//!   explicit portable `std::simd` implementations. Requires a nightly
+//!   toolchain (`portable_simd` is unstable); the default scalar
+//!   backend builds on stable and is bit-identical (enforced by
+//!   `tests/kernel_equivalence.rs`).
+
+// `portable_simd` is gated on the cargo feature so default builds stay
+// on stable rustc; only `--features simd` (nightly) enables it.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod coordinator;
 pub mod data;

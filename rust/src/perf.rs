@@ -11,6 +11,15 @@
 //! coordinator worker-scaling throughput — the two acceptance axes of
 //! the zero-allocation/batching PR.
 //!
+//! The snapshot also emits **kernel-layer pairs**: each vectorizable
+//! kernel (`axpy`, SJLT scatter, dense-hash bit unpack, Bloom bitset
+//! sweep) is measured once through the always-compiled scalar backend
+//! and once through the *active* backend — `std::simd` when built with
+//! `--features simd`, scalar otherwise. The `kernel_backend` /
+//! `simd_feature` fields record which pairing a given snapshot measured,
+//! so scalar-vs-SIMD comparisons read directly out of
+//! `BENCH_encode.json`.
+//!
 //! Knobs: `BENCH_MS` (per-measurement budget, default 300),
 //! `SHDC_BENCH_RECORDS` (pipeline-scaling record budget, default 60000),
 //! `BENCH_OUT` (snapshot path, default `BENCH_encode.json`).
@@ -21,6 +30,7 @@ use std::time::Instant;
 use crate::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use crate::data::synthetic::SyntheticConfig;
 use crate::data::{Record, RecordStream, SyntheticStream};
+use crate::encoding::kernels;
 use crate::encoding::{
     BloomEncoder, BundleMethod, CategoricalEncoder, CodebookEncoder, DenseHashEncoder,
     DenseHashMode, DenseProjection, EncodeScratch, Encoding, NumericEncoder, PermutationEncoder,
@@ -225,6 +235,106 @@ pub fn encode_snapshot() -> Json {
         scratch.recycle(e);
     });
 
+    // --- kernel layer: scalar backend vs active backend -------------------
+    // "active" is std::simd when built with --features simd, scalar
+    // otherwise (see the kernel_backend field); the pair quantifies the
+    // explicit-SIMD win per kernel on this host. Workloads mirror the
+    // encoders' call shapes at paper dimensions.
+    {
+        let mut krng = Rng::new(0x6b65); // "ke"(rnel)
+        // axpy: one projection column pass at d=10k.
+        let col: Vec<f32> = (0..d).map(|_| krng.normal_f32()).collect();
+        let mut z = vec![0.0f32; d];
+        h.bench("kernel axpy d=10k scalar", || {
+            kernels::scalar::axpy(&mut z, &col, 1.000_001);
+            black_box(z[0])
+        });
+        h.bench("kernel axpy d=10k active", || {
+            kernels::axpy(&mut z, &col, 1.000_001);
+            black_box(z[0])
+        });
+
+        // sign_quantize: one full-record finish at d=10k.
+        h.bench("kernel sign-quantize d=10k scalar", || {
+            kernels::scalar::sign_quantize(&mut z);
+            black_box(z[0])
+        });
+        h.bench("kernel sign-quantize d=10k active", || {
+            kernels::sign_quantize(&mut z);
+            black_box(z[0])
+        });
+
+        // SJLT scatter: one full record (k=4 chunks, n=13) at d=10k.
+        let (kchunks, n) = (4usize, 13usize);
+        let dk = d / kchunks;
+        let eta: Vec<u32> =
+            (0..kchunks * n).map(|_| krng.below(dk as u64) as u32).collect();
+        let sigma: Vec<i8> = (0..kchunks * n).map(|_| krng.sign() as i8).collect();
+        let x: Vec<f32> = (0..n).map(|_| krng.normal_f32()).collect();
+        let mut sj_out = vec![0.0f32; d];
+        h.bench("kernel sjlt-scatter d=10k k=4 scalar", || {
+            for c in 0..kchunks {
+                kernels::scalar::scatter_signed(
+                    &x,
+                    &eta[c * n..(c + 1) * n],
+                    &sigma[c * n..(c + 1) * n],
+                    &mut sj_out[c * dk..(c + 1) * dk],
+                );
+            }
+            black_box(sj_out[0])
+        });
+        h.bench("kernel sjlt-scatter d=10k k=4 active", || {
+            for c in 0..kchunks {
+                kernels::scatter_signed(
+                    &x,
+                    &eta[c * n..(c + 1) * n],
+                    &sigma[c * n..(c + 1) * n],
+                    &mut sj_out[c * dk..(c + 1) * dk],
+                );
+            }
+            black_box(sj_out[0])
+        });
+
+        // Dense-hash bit unpack: one full packed record at d=10k.
+        let words: Vec<u32> = (0..d.div_ceil(32)).map(|_| krng.next_u32()).collect();
+        let mut acc = vec![0.0f32; d];
+        h.bench("kernel bit-unpack d=10k scalar", || {
+            for (w, &word) in words.iter().enumerate() {
+                let base = w * 32;
+                let nn = (d - base).min(32);
+                kernels::scalar::unpack_sign_bits_accumulate(word, &mut acc[base..base + nn]);
+            }
+            black_box(acc[0])
+        });
+        h.bench("kernel bit-unpack d=10k active", || {
+            for (w, &word) in words.iter().enumerate() {
+                let base = w * 32;
+                let nn = (d - base).min(32);
+                kernels::unpack_sign_bits_accumulate(word, &mut acc[base..base + nn]);
+            }
+            black_box(acc[0])
+        });
+
+        // Bloom bitset mark+sweep: one paper-scale record (s·k = 104
+        // staged coordinates) at d=10k. The sweep clears the bitset, so
+        // every iteration starts clean.
+        let staged: Vec<u32> = (0..104).map(|_| krng.below(d as u64) as u32).collect();
+        let mut bs = vec![0u64; d.div_ceil(64)];
+        let mut swept: Vec<u32> = Vec::with_capacity(staged.len());
+        h.bench("kernel bloom-sweep d=10k sk=104 scalar", || {
+            swept.clear();
+            let (lo, hi) = kernels::bitset_mark(&mut bs, &staged);
+            kernels::scalar::bitset_sweep(&mut bs, lo, hi, &mut swept);
+            swept.len()
+        });
+        h.bench("kernel bloom-sweep d=10k sk=104 active", || {
+            swept.clear();
+            let (lo, hi) = kernels::bitset_mark(&mut bs, &staged);
+            kernels::bitset_sweep(&mut bs, lo, hi, &mut swept);
+            swept.len()
+        });
+    }
+
     // --- batched encode through RecordEncoder -----------------------------
     let cfg = EncoderCfg {
         cat: CatCfg::Bloom { d, k: 4 },
@@ -280,9 +390,24 @@ pub fn encode_snapshot() -> Json {
     );
     println!("  speedup bloom d=10k k=4: {bloom_speedup:?}");
     println!("  speedup SJLT  d=10k k=4: {sjlt_speedup:?}");
+    // Active-backend kernel speedups vs the scalar twins (≈1.0 in a
+    // default build; the SIMD win when built with --features simd).
+    let kernel_pair = |work: &str| {
+        speedup(&format!("kernel {work} scalar"), &format!("kernel {work} active"))
+    };
+    let kernel_speedups = Json::obj(vec![
+        ("axpy_d10k", kernel_pair("axpy d=10k")),
+        ("sign_quantize_d10k", kernel_pair("sign-quantize d=10k")),
+        ("sjlt_scatter_d10k_k4", kernel_pair("sjlt-scatter d=10k k=4")),
+        ("bit_unpack_d10k", kernel_pair("bit-unpack d=10k")),
+        ("bloom_sweep_d10k_sk104", kernel_pair("bloom-sweep d=10k sk=104")),
+    ]);
+    println!("  kernel active-vs-scalar ({}): {kernel_speedups:?}", kernels::BACKEND);
 
     Json::obj(vec![
         ("group", Json::str("encode")),
+        ("kernel_backend", Json::str(kernels::BACKEND)),
+        ("simd_feature", Json::Bool(kernels::SIMD_ENABLED)),
         (
             "config",
             Json::obj(vec![
@@ -301,6 +426,7 @@ pub fn encode_snapshot() -> Json {
                 ("sjlt_d10k_k4", sjlt_speedup),
             ]),
         ),
+        ("kernel_speedup_active_vs_scalar", kernel_speedups),
         ("pipeline_scaling", Json::Arr(scaling)),
     ])
 }

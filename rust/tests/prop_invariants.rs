@@ -3,6 +3,7 @@
 //! with shrink-free but reproducible failure reporting (the case seed is
 //! in the assertion message).
 
+use shdc::encoding::kernels::{self, scalar};
 use shdc::encoding::{
     bundle, sparse_from_indices, BloomEncoder, BundleMethod, CodebookEncoder, DenseHashEncoder,
     DenseHashMode, Encoding, Sjlt,
@@ -199,6 +200,74 @@ fn prop_sjlt_norm_bounded_by_k_normsq() {
             e.norm_sq(),
             k as f64 * normsq * n as f64
         );
+    });
+}
+
+/// The active kernel backend (std::simd under `--features simd`, scalar
+/// otherwise) is bit-identical to the scalar backend on random shapes —
+/// including empty inputs and tails that are not a multiple of the SIMD
+/// lane width. The deeper structured suites (alignment sweeps, IEEE edge
+/// values, encoder-level wiring) live in tests/kernel_equivalence.rs.
+#[test]
+fn prop_kernels_bit_identical_to_scalar() {
+    forall(80, |case, rng| {
+        let len = rng.below_usize(300);
+        // axpy
+        let col: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        let base: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        let xv = rng.normal_f32();
+        let (mut za, mut zb) = (base.clone(), base.clone());
+        scalar::axpy(&mut za, &col, xv);
+        kernels::axpy(&mut zb, &col, xv);
+        assert!(
+            za.iter().zip(&zb).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "case {case}: axpy len={len} diverged"
+        );
+        // sign_quantize
+        let (mut qa, mut qb) = (base.clone(), base.clone());
+        scalar::sign_quantize(&mut qa);
+        kernels::sign_quantize(&mut qb);
+        assert_eq!(qa, qb, "case {case}: sign_quantize len={len}");
+        // scatter_signed (collision-heavy small output)
+        let out_len = 1 + rng.below_usize(1 + len);
+        let eta: Vec<u32> = (0..len).map(|_| rng.below(out_len as u64) as u32).collect();
+        let sigma: Vec<i8> = (0..len).map(|_| rng.sign() as i8).collect();
+        let (mut sa, mut sb) = (vec![0.0f32; out_len], vec![0.0f32; out_len]);
+        scalar::scatter_signed(&base, &eta, &sigma, &mut sa);
+        kernels::scatter_signed(&base, &eta, &sigma, &mut sb);
+        assert!(
+            sa.iter().zip(&sb).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "case {case}: scatter len={len} out={out_len} diverged"
+        );
+        // unpack_sign_bits_accumulate
+        let word = rng.next_u32();
+        let ulen = rng.below_usize(33);
+        let (mut ua, mut ub) = (vec![0.0f32; ulen], vec![0.0f32; ulen]);
+        scalar::unpack_sign_bits_accumulate(word, &mut ua);
+        kernels::unpack_sign_bits_accumulate(word, &mut ub);
+        assert_eq!(ua, ub, "case {case}: unpack len={ulen}");
+    });
+}
+
+/// The bitset mark/sweep dedup (Bloom scratch path) equals the legacy
+/// sort+dedup kernel on the same staged coordinates, and leaves the
+/// bitset all-zero — for the active backend, whichever it is.
+#[test]
+fn prop_bitset_sweep_matches_sort_dedup() {
+    forall(60, |case, rng| {
+        let d = 1 + rng.below_usize(4096);
+        let n = rng.below_usize(200);
+        let staged: Vec<u32> = (0..n).map(|_| rng.below(d as u64) as u32).collect();
+        let mut bs = vec![0u64; d.div_ceil(64)];
+        let mut swept: Vec<u32> = Vec::new();
+        if !staged.is_empty() {
+            let (lo, hi) = kernels::bitset_mark(&mut bs, &staged);
+            kernels::bitset_sweep(&mut bs, lo, hi, &mut swept);
+        }
+        let mut want = staged.clone();
+        kernels::sort_dedup(&mut want);
+        assert_eq!(swept, want, "case {case}: d={d} n={n}");
+        assert!(bs.iter().all(|&w| w == 0), "case {case}: dirty bitset");
     });
 }
 

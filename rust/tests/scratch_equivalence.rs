@@ -7,7 +7,7 @@
 
 use shdc::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use shdc::data::synthetic::SyntheticConfig;
-use shdc::data::{RecordStream, SyntheticStream};
+use shdc::data::{Record, RecordStream, SyntheticStream};
 use shdc::encoding::{
     bundle, bundle_with, sparse_from_indices, BloomEncoder, BundleMethod, CategoricalEncoder,
     CodebookEncoder, DenseHashEncoder, DenseHashMode, DenseProjection, EncodeScratch, Encoding,
@@ -274,4 +274,75 @@ fn pipeline_output_worker_count_invariant() {
     let single = collect(1);
     assert_eq!(single, collect(2));
     assert_eq!(single, collect(4));
+}
+
+/// Deterministic stream with *heavily ragged* categorical sets: every
+/// 16th record is a whale (hundreds of symbols), the rest carry 0–3.
+/// With a small batch size, whole batches end up orders of magnitude
+/// more expensive than their neighbors, so round-robin dispatch leaves
+/// some workers far behind others — the skew regime that motivates the
+/// planned work-stealing change.
+struct RaggedStream {
+    i: u64,
+    remaining: u64,
+}
+
+impl RecordStream for RaggedStream {
+    fn next_record(&mut self) -> Option<Record> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let i = self.i;
+        self.i += 1;
+        let s = if i % 16 == 0 { 350 } else { (i % 4) as usize };
+        let symbols: Vec<u64> = (0..s as u64)
+            .map(|j| shdc::util::rng::mix64(i.wrapping_mul(1_000_003) ^ j))
+            .collect();
+        let numeric: Vec<f32> =
+            (0..13u64).map(|j| (((i * 13 + j) % 97) as f32) * 0.11 - 5.0).collect();
+        Some(Record { numeric, symbols, label: i % 3 == 0 })
+    }
+}
+
+/// Regression guard for the round-robin coordinator under skew: ragged
+/// batches must not change output vs a single worker — batches may
+/// *finish* wildly out of order, but the seq reorderer plus
+/// deterministic encoders must keep the consumer's view bit-identical.
+/// (Any future work-stealing dispatch must keep this green.)
+#[test]
+fn pipeline_ragged_skew_worker_count_invariant() {
+    let enc_cfg = EncoderCfg {
+        cat: CatCfg::Bloom { d: 1024, k: 4 },
+        num: NumCfg::Sjlt { d: 256, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 77,
+    };
+    let collect = |workers: usize| {
+        let stream = RaggedStream { i: 0, remaining: 600 };
+        let mut encs = Vec::new();
+        let mut labels = Vec::new();
+        run_pipeline(
+            stream,
+            &enc_cfg,
+            &CoordinatorCfg {
+                batch_size: 8,
+                n_workers: workers,
+                queue_depth: 2,
+                max_records: Some(600),
+                ..Default::default()
+            },
+            |b| {
+                encs.extend(b.encodings);
+                labels.extend(b.labels);
+                true
+            },
+        );
+        (encs, labels)
+    };
+    let single = collect(1);
+    assert_eq!(single.0.len(), 600, "stream must deliver every record");
+    assert_eq!(single, collect(3), "3-worker skewed run diverged from single-worker");
+    assert_eq!(single, collect(8), "8-worker skewed run diverged from single-worker");
 }

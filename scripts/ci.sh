@@ -1,10 +1,33 @@
 #!/usr/bin/env bash
 # Local CI: formatting gate + tier-1 build/test. Run from anywhere.
 #
-#   scripts/ci.sh          # fmt check + build + test
-#   scripts/ci.sh --bench  # additionally refresh BENCH_encode.json
+#   scripts/ci.sh                  # fmt check + build + test
+#   scripts/ci.sh --bench          # additionally refresh BENCH_encode.json
+#                                  # and run the bench-trend gate against
+#                                  # the previously committed snapshot
+#                                  # (fails on >15% encode-median
+#                                  # regressions; skips cleanly while the
+#                                  # committed snapshot is the nulls-only
+#                                  # placeholder)
+#   scripts/ci.sh --simd           # additionally run the test suite with
+#                                  # the std::simd kernel backend (needs a
+#                                  # nightly toolchain via rustup)
+#   scripts/ci.sh --simd --bench   # flags combine in any order
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+run_simd=0
+run_bench=0
+for arg in "$@"; do
+    case "$arg" in
+        --simd) run_simd=1 ;;
+        --bench) run_bench=1 ;;
+        *)
+            echo "unknown flag: $arg (expected --simd and/or --bench)" >&2
+            exit 2
+            ;;
+    esac
+done
 
 echo "== cargo fmt --check =="
 cargo fmt --check
@@ -15,7 +38,36 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-if [[ "${1:-}" == "--bench" ]]; then
-    echo "== bench snapshot =="
+if [[ "$run_simd" == 1 ]]; then
+    # The kernel differential suite (tests/kernel_equivalence.rs) must
+    # pass with the simd feature both on and off, and the encoder
+    # equivalence suites must behave identically in both builds.
+    echo "== cargo +nightly test -q --features simd =="
+    cargo +nightly test -q --features simd
+fi
+
+if [[ "$run_bench" == 1 ]]; then
+    echo "== bench snapshot + trend gate =="
+    # The snapshot path honors BENCH_OUT (bench_snapshot.sh default:
+    # BENCH_encode.json); gate against the same file we regenerate.
+    out="${BENCH_OUT:-BENCH_encode.json}"
+    # Baseline = the COMMITTED snapshot (not the working-tree file, which
+    # may hold a previous uncommitted regeneration — gating against it
+    # would let a regressed run become its own baseline on the next run).
+    # Falls back to the on-disk file when the path is untracked (e.g. a
+    # BENCH_OUT override outside the repo).
+    baseline="$(mktemp)"
+    trap 'rm -f "$baseline"' EXIT
+    if ! git show "HEAD:$out" > "$baseline" 2>/dev/null; then
+        if [[ -f "$out" ]]; then
+            cp "$out" "$baseline"
+        else
+            : > "$baseline"
+        fi
+    fi
     scripts/bench_snapshot.sh
+    # Fails (non-zero) when any encode median regressed >15% vs the
+    # committed snapshot; skips cleanly when the baseline held no
+    # measured results. Tolerance override: SHDC_TREND_TOL=0.25.
+    cargo run --release --bin bench_trend -- "$baseline" "$out"
 fi
