@@ -5,7 +5,7 @@
 use shdc::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use shdc::data::synthetic::SyntheticConfig;
 use shdc::data::SyntheticStream;
-use shdc::encoding::{BundleMethod, Encoding};
+use shdc::encoding::BundleMethod;
 use shdc::model::LogisticModel;
 use shdc::util::bench::Harness;
 
@@ -25,6 +25,7 @@ fn pipeline_throughput(workers: usize, records: u64, no_count: bool, train: bool
     let mut model = LogisticModel::new(cfg.out_dim());
     let stream = SyntheticStream::new(data);
     let t0 = std::time::Instant::now();
+    let mut errs: Vec<f32> = Vec::new();
     run_pipeline(
         stream,
         &cfg,
@@ -36,12 +37,8 @@ fn pipeline_throughput(workers: usize, records: u64, no_count: bool, train: bool
         },
         |batch| {
             if train {
-                let pairs: Vec<(Encoding, bool)> = batch
-                    .encodings
-                    .into_iter()
-                    .zip(batch.labels.iter().copied())
-                    .collect();
-                model.sgd_step(&pairs, 0.3);
+                // Borrowed batch: buffers recycle back to the workers.
+                model.sgd_step_parts(&batch.encodings, &batch.labels, 0.3, &mut errs);
             }
             true
         },

@@ -10,7 +10,7 @@ mod common;
 use shdc::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use shdc::data::synthetic::SyntheticConfig;
 use shdc::data::SyntheticStream;
-use shdc::encoding::{BundleMethod, Encoding};
+use shdc::encoding::BundleMethod;
 use shdc::hw::cpu::PAPER_CPU_WATTS;
 use shdc::hw::fpga;
 use shdc::hw::{comparison_table, PlatformRow};
@@ -38,6 +38,7 @@ fn cpu_train_throughput(bundle: BundleMethod, no_count: bool, records: u64) -> f
     let data = SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(6) };
     let stream = SyntheticStream::new(data);
     let t0 = std::time::Instant::now();
+    let mut errs: Vec<f32> = Vec::new();
     run_pipeline(
         stream,
         &cfg,
@@ -48,12 +49,8 @@ fn cpu_train_throughput(bundle: BundleMethod, no_count: bool, records: u64) -> f
             ..Default::default()
         },
         |batch| {
-            let pairs: Vec<(Encoding, bool)> = batch
-                .encodings
-                .into_iter()
-                .zip(batch.labels.iter().copied())
-                .collect();
-            model.sgd_step(&pairs, 0.3);
+            // Borrow the batch; its buffers recycle back to the workers.
+            model.sgd_step_parts(&batch.encodings, &batch.labels, 0.3, &mut errs);
             true
         },
     );

@@ -149,6 +149,7 @@ impl EncoderCfg {
             out_dim: self.out_dim(),
             scratch: EncodeScratch::new(),
             num_buf: Vec::new(),
+            xflat: Vec::new(),
         }
     }
 }
@@ -173,6 +174,11 @@ pub struct RecordEncoder {
     scratch: EncodeScratch,
     /// Reused numeric-branch batch output.
     num_buf: Vec<Encoding>,
+    /// Reused row-major (batch × n) staging for the numeric inputs. The
+    /// slice-based batch API needs a per-batch `Vec<&[f32]>`; copying
+    /// the 13-wide rows into one flat reused buffer is cheaper than that
+    /// allocation and keeps the worker hot loop allocation-free.
+    xflat: Vec<f32>,
 }
 
 impl RecordEncoder {
@@ -207,10 +213,29 @@ impl RecordEncoder {
     pub fn encode_batch_into(&mut self, records: &[Record], out: &mut Vec<Encoding>) {
         out.clear();
         out.reserve(records.len());
-        let RecordEncoder { cat, num, bundle: method, scratch, num_buf, .. } = self;
+        let RecordEncoder { cat, num, bundle: method, scratch, num_buf, xflat, .. } = self;
         if let Some(n) = num {
-            let xs: Vec<&[f32]> = records.iter().map(|r| r.numeric.as_slice()).collect();
-            n.encode_batch_with(&xs, scratch, num_buf);
+            let nfeat = records.first().map_or(0, |r| r.numeric.len());
+            if nfeat == 0 {
+                // Degenerate width: nothing to stage; encode per record.
+                // The width still must be uniform — a non-empty record
+                // here would silently lose its features otherwise.
+                num_buf.clear();
+                for r in records {
+                    assert_eq!(r.numeric.len(), 0, "ragged numeric widths");
+                    num_buf.push(n.encode_with(&[], scratch));
+                }
+            } else {
+                xflat.clear();
+                xflat.reserve(records.len() * nfeat);
+                for r in records {
+                    // Hard assert: a ragged width would silently shift
+                    // every subsequent flat row in a release build.
+                    assert_eq!(r.numeric.len(), nfeat, "ragged numeric widths");
+                    xflat.extend_from_slice(&r.numeric);
+                }
+                n.encode_batch_flat_with(xflat, nfeat, scratch, num_buf);
+            }
         } else {
             num_buf.clear();
         }

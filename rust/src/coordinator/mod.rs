@@ -7,29 +7,53 @@
 //! buffering unboundedly, and deliver encoded batches to the learner
 //! in deterministic order.
 //!
-//! Implementation: std threads + bounded `sync_channel`s (tokio is not
-//! available offline; the pipeline is CPU-bound so threads are the right
-//! tool anyway). Stages:
+//! Implementation: std threads + work-stealing deques + bounded
+//! `sync_channel`s (tokio is not available offline; the pipeline is
+//! CPU-bound so threads are the right tool anyway). Stages:
 //!
 //! ```text
-//!           ┌─► raw channel 0 (bounded) ─► worker 0 ─┐
-//!  reader ──┼─► raw channel 1 (bounded) ─► worker 1 ─┼─► encoded channel
-//!           └─► raw channel N (bounded) ─► worker N ─┘   └► reorderer ─► consumer
+//!           ┌─► deque 0 (bounded) ──► worker 0 ─┐
+//!  reader ──┼─► deque 1 (bounded) ──► worker 1 ─┼─► encoded channel
+//!     ▲     ├─► deque N (bounded) ──► worker N ─┤    └► seq reorderer ─► consumer
+//!     │     └─► injector  (bounded overflow) ───┘         │ &mut batch
+//!     │              ▲         idle workers steal          ▼
+//!     │              └── siblings' deque backs ◄── recycle channel
+//!     └──────── record-spine returns ◄─────────────  (consumer → workers)
 //! ```
 //!
-//! Each worker owns a private bounded channel and the reader dispatches
-//! batches round-robin (§Perf): the previous design funneled all workers
-//! through one `Arc<Mutex<Receiver>>`, so every batch handoff serialized
-//! on the mutex and worker scaling flattened right where the paper
-//! promises linearity. With per-worker channels the handoff is
-//! contention-free; `queue_depth` bounds each worker's private queue, so
-//! backpressure still propagates to the reader when any worker falls
-//! behind (round-robin means the stream can't run ahead of the slowest
-//! worker by more than `n_workers * queue_depth` batches).
+//! **Dispatch (§Perf).** The reader round-robins batches onto per-worker
+//! bounded deques (`Mutex<VecDeque>`, one per worker: the mutex guards a
+//! single push/pop — nanoseconds against a millisecond-scale batch
+//! encode, so the data path stays effectively contention-free, which is
+//! what the previous per-worker-channel design bought). Unlike static
+//! round-robin, a worker that runs dry does not idle behind a whale
+//! batch elsewhere: it pops the global injector (fed when a target deque
+//! overflows) and then *steals* from the back of the longest sibling
+//! deque. Skewed streams (ragged categorical sets) therefore keep every
+//! worker busy instead of letting one stalled worker gate the stream.
+//! Total in-flight work stays bounded by the deques plus the injector,
+//! so backpressure still propagates to the reader when all workers fall
+//! behind. Parking/wakeup goes through one small control mutex (`ctl`)
+//! locked only on the notify edge of a push/pop — never across an
+//! encode.
 //!
-//! Batches carry sequence numbers; the tail reorders them so the
-//! consumer sees stream order regardless of worker scheduling — making
-//! multi-worker runs bit-identical to single-worker runs.
+//! **Determinism.** Batches carry sequence numbers; the tail reorders
+//! them so the consumer sees stream order regardless of which worker
+//! encoded what. Because every worker builds an identical encoder from
+//! the seed and encoding is a pure function of the record (codebook
+//! codewords are keyed by (seed, symbol), not arrival order), any steal
+//! interleaving yields bit-identical output to a single-worker run —
+//! enforced by `tests/coordinator_stealing.rs` under adversarial skew.
+//!
+//! **Buffer recycling (§Perf).** Consumers receive `&mut EncodedBatch`;
+//! whatever buffers they leave in the batch are shipped back to the
+//! workers over a bounded recycle channel and returned to each worker's
+//! [`crate::encoding::EncodeScratch`] pool, and the raw-record spines
+//! flow further back to the reader, which refills them in place
+//! ([`RecordStream::next_batch_into`]). After warmup the whole
+//! reader → encode → consume loop runs with **zero steady-state
+//! allocations** (pinned by `tests/alloc_regression.rs`); a consumer
+//! that takes ownership (`drain(..)`) simply opts those buffers out.
 
 pub mod encoder;
 pub mod stats;
@@ -37,11 +61,12 @@ pub mod stats;
 pub use encoder::{CatCfg, EncoderCfg, NumCfg, RecordEncoder};
 pub use stats::{PipelineStats, ScopeTimer, StatsSnapshot};
 
-use std::collections::BTreeMap;
+use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Duration;
 
 use crate::data::{Record, RecordStream};
 use crate::encoding::Encoding;
@@ -55,6 +80,11 @@ pub struct EncodedBatch {
     /// Raw records retained when the consumer needs them (PJRT fused path
     /// encodes numerics on-device and needs the raw features).
     pub records: Option<Vec<Record>>,
+    /// Index of the worker that encoded the batch; consumed shells are
+    /// recycled back to this worker, so under skew (stealing) each pool
+    /// receives returns in proportion to what that worker actually
+    /// encoded — round-robin returns would starve fast workers' pools.
+    pub(crate) origin: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -67,6 +97,10 @@ pub struct CoordinatorCfg {
     pub keep_records: bool,
     /// Stop after this many records (None = until stream end).
     pub max_records: Option<u64>,
+    /// Test hook for forced-steal scenarios: worker `i` sleeps for the
+    /// given duration before encoding each batch, so its deque backs up
+    /// and siblings must steal. Leave `None` outside scheduler tests.
+    pub slow_worker: Option<(usize, Duration)>,
 }
 
 impl Default for CoordinatorCfg {
@@ -77,6 +111,7 @@ impl Default for CoordinatorCfg {
             queue_depth: 8,
             keep_records: false,
             max_records: None,
+            slow_worker: None,
         }
     }
 }
@@ -84,6 +119,235 @@ impl Default for CoordinatorCfg {
 struct RawBatch {
     seq: u64,
     records: Vec<Record>,
+}
+
+/// Work-stealing dispatch state shared by the reader and the workers.
+///
+/// Lock order is `ctl` → deque (the parking paths hold `ctl` while
+/// peeking deques); no path ever acquires `ctl` while holding a deque
+/// lock, so the order is acyclic. Every state change that can unblock a
+/// parked thread notifies the matching condvar *while holding `ctl`*,
+/// and every thread that parks re-checks its condition under `ctl`
+/// before waiting — the classic recipe that makes lost wakeups
+/// impossible (the notifier serializes behind the parker's critical
+/// section or the parker sees the new state).
+struct StealScheduler {
+    /// Per-worker bounded deques: the owner pops the front, thieves take
+    /// the back.
+    queues: Vec<Mutex<VecDeque<RawBatch>>>,
+    /// Global bounded overflow ring, popped by any worker.
+    injector: Mutex<VecDeque<RawBatch>>,
+    queue_depth: usize,
+    injector_cap: usize,
+    ctl: Mutex<Ctl>,
+    /// Workers park here when no queue holds work.
+    work_cv: Condvar,
+    /// The reader parks here when its target deque and the injector are
+    /// both full.
+    space_cv: Condvar,
+}
+
+#[derive(Default)]
+struct Ctl {
+    /// The reader is done; no further pushes will ever arrive.
+    eof: bool,
+    /// The consumer stopped early; every stage unwinds.
+    stopped: bool,
+}
+
+/// What `try_take` popped: the batch, whether it came from a sibling's
+/// deque (a steal), and whether the source queue was full before the pop
+/// (i.e. the pop may have unblocked a parked reader).
+type Taken = (RawBatch, bool, bool);
+
+impl StealScheduler {
+    fn new(n_workers: usize, queue_depth: usize) -> StealScheduler {
+        let queues = (0..n_workers)
+            .map(|_| Mutex::new(VecDeque::with_capacity(queue_depth)))
+            .collect();
+        let injector_cap = (n_workers * queue_depth).max(1);
+        StealScheduler {
+            queues,
+            injector: Mutex::new(VecDeque::with_capacity(injector_cap)),
+            queue_depth,
+            injector_cap,
+            ctl: Mutex::new(Ctl::default()),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+        }
+    }
+
+    /// Non-blocking push: `target`'s deque first, overflowing into the
+    /// injector. Returns the batch when both are full.
+    fn try_push(
+        &self,
+        target: usize,
+        batch: RawBatch,
+        stats: &PipelineStats,
+    ) -> Result<(), RawBatch> {
+        {
+            let mut q = self.queues[target].lock().unwrap();
+            if q.len() < self.queue_depth {
+                q.push_back(batch);
+                return Ok(());
+            }
+        }
+        let mut inj = self.injector.lock().unwrap();
+        if inj.len() < self.injector_cap {
+            inj.push_back(batch);
+            drop(inj);
+            stats.injector_batches.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        } else {
+            Err(batch)
+        }
+    }
+
+    /// Blocking push with backpressure accounting. `Err(())` when the
+    /// pipeline stopped early.
+    fn push(&self, target: usize, batch: RawBatch, stats: &PipelineStats) -> Result<(), ()> {
+        let mut batch = match self.try_push(target, batch, stats) {
+            Ok(()) => {
+                self.notify_work();
+                return Ok(());
+            }
+            Err(b) => b,
+        };
+        stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
+        let mut ctl = self.ctl.lock().unwrap();
+        loop {
+            if ctl.stopped {
+                return Err(());
+            }
+            match self.try_push(target, batch, stats) {
+                Ok(()) => {
+                    // Holding ctl, so a worker cannot slip into a park
+                    // between this push and the notify.
+                    self.work_cv.notify_one();
+                    return Ok(());
+                }
+                Err(b) => batch = b,
+            }
+            ctl = self.space_cv.wait(ctl).unwrap();
+        }
+    }
+
+    fn notify_work(&self) {
+        let _ctl = self.ctl.lock().unwrap();
+        self.work_cv.notify_one();
+    }
+
+    fn notify_space(&self) {
+        let _ctl = self.ctl.lock().unwrap();
+        self.space_cv.notify_all();
+    }
+
+    /// One batch for worker `wid`: own deque front, else injector front,
+    /// else the back of the longest sibling deque (a steal).
+    fn try_take(&self, wid: usize) -> Option<Taken> {
+        {
+            let mut q = self.queues[wid].lock().unwrap();
+            let was_full = q.len() == self.queue_depth;
+            if let Some(b) = q.pop_front() {
+                return Some((b, false, was_full));
+            }
+        }
+        {
+            let mut inj = self.injector.lock().unwrap();
+            let was_full = inj.len() == self.injector_cap;
+            if let Some(b) = inj.pop_front() {
+                return Some((b, false, was_full));
+            }
+        }
+        // Pick the most backed-up victim, then re-lock and take from the
+        // back (the victim keeps its cheap front-pop path; output order
+        // is irrelevant here — the seq reorderer restores stream order).
+        let mut victim = None;
+        let mut best = 0usize;
+        for (i, q) in self.queues.iter().enumerate() {
+            if i == wid {
+                continue;
+            }
+            let len = q.lock().unwrap().len();
+            if len > best {
+                best = len;
+                victim = Some(i);
+            }
+        }
+        if let Some(v) = victim {
+            let mut q = self.queues[v].lock().unwrap();
+            let was_full = q.len() == self.queue_depth;
+            if let Some(b) = q.pop_back() {
+                return Some((b, true, was_full));
+            }
+        }
+        None
+    }
+
+    /// Blocking pop for worker `wid`. `None` once the stream is fully
+    /// drained after EOF, or immediately on early stop.
+    fn pop(&self, wid: usize, stats: &PipelineStats) -> Option<RawBatch> {
+        let taken = self.try_take(wid).or_else(|| {
+            let mut ctl = self.ctl.lock().unwrap();
+            loop {
+                if ctl.stopped {
+                    return None;
+                }
+                if let Some(t) = self.try_take(wid) {
+                    return Some(t);
+                }
+                if ctl.eof {
+                    return None;
+                }
+                ctl = self.work_cv.wait(ctl).unwrap();
+            }
+        });
+        let (batch, stolen, was_full) = taken?;
+        if stolen {
+            stats.batches_stolen.fetch_add(1, Ordering::Relaxed);
+        }
+        if was_full {
+            // Freed a slot in a queue that was at capacity — the reader
+            // may be parked on exactly that condition.
+            self.notify_space();
+        }
+        Some(batch)
+    }
+
+    fn set_eof(&self) {
+        let mut ctl = self.ctl.lock().unwrap();
+        ctl.eof = true;
+        self.work_cv.notify_all();
+    }
+
+    fn stop(&self) {
+        let mut ctl = self.ctl.lock().unwrap();
+        ctl.stopped = true;
+        self.work_cv.notify_all();
+        self.space_cv.notify_all();
+    }
+}
+
+/// Marks EOF when the reader thread exits — normally *or* by panic — so
+/// workers never park forever behind a dead reader.
+struct EofOnDrop(Arc<StealScheduler>);
+
+impl Drop for EofOnDrop {
+    fn drop(&mut self) {
+        self.0.set_eof();
+    }
+}
+
+/// Stops the pipeline if a worker thread unwinds, so the reader and its
+/// siblings never park behind a dead worker. Normal exits do nothing.
+struct StopOnPanic(Arc<StealScheduler>);
+
+impl Drop for StopOnPanic {
+    fn drop(&mut self) {
+        if thread::panicking() {
+            self.0.stop();
+        }
+    }
 }
 
 /// Blocking send that counts backpressure events.
@@ -107,6 +371,12 @@ fn send_counted<T>(tx: &SyncSender<T>, mut v: T, stats: &PipelineStats) -> Resul
 /// pipeline early (early stopping, record budgets). Returns the shared
 /// stats.
 ///
+/// The consumer borrows each batch (`&mut EncodedBatch`): buffers it
+/// leaves in place are recycled back into the worker pools, closing the
+/// allocation loop across the thread boundary. Take ownership with
+/// `batch.encodings.drain(..)` (etc.) when the contents must outlive the
+/// call — those buffers are then simply replaced by fresh allocations.
+///
 /// `encoder_cfg.build()` is called once per worker; because encoders are
 /// deterministic from the seed, every worker holds an identical encoder
 /// (the paper's "no codebook to synchronize" property makes this free
@@ -120,24 +390,39 @@ pub fn run_pipeline<S, F>(
 ) -> Arc<PipelineStats>
 where
     S: RecordStream + 'static,
-    F: FnMut(EncodedBatch) -> bool,
+    F: FnMut(&mut EncodedBatch) -> bool,
 {
     let stats = Arc::new(PipelineStats::new());
     let n_workers = cfg.n_workers.max(1);
-    // Per-worker private bounded channels — no shared-receiver mutex.
-    let mut raw_txs = Vec::with_capacity(n_workers);
-    let mut raw_rxs = Vec::with_capacity(n_workers);
+    let queue_depth = cfg.queue_depth.max(1);
+    let sched = Arc::new(StealScheduler::new(n_workers, queue_depth));
+    let (enc_tx, enc_rx) = sync_channel::<EncodedBatch>(queue_depth);
+    // Recycle path (consumer → workers): consumed batch shells return to
+    // a worker, which drains the encoding buffers into its scratch pool.
+    // Bounded + try_send so a stalled worker can never block the
+    // consumer; overflow just falls back to the allocator. Capacity
+    // covers a full reorder-backlog burst landing on one worker, so in
+    // steady state nothing is ever dropped.
+    let mut ret_txs = Vec::with_capacity(n_workers);
+    let mut ret_rxs = Vec::with_capacity(n_workers);
     for _ in 0..n_workers {
-        let (tx, rx) = sync_channel::<RawBatch>(cfg.queue_depth);
-        raw_txs.push(tx);
-        raw_rxs.push(rx);
+        let (tx, rx) = sync_channel::<EncodedBatch>(4 * queue_depth + 8);
+        ret_txs.push(tx);
+        ret_rxs.push(rx);
     }
-    let (enc_tx, enc_rx) = sync_channel::<EncodedBatch>(cfg.queue_depth);
+    // Record-spine path (workers → reader): raw-record vectors go back to
+    // be refilled in place. Capacity covers every spine that can be in
+    // flight at once (deques + injector + one per worker + slack) so
+    // steady state never drops one.
+    let spine_cap = (2 * n_workers + 2) * (queue_depth + 2);
+    let (spine_tx, spine_rx) = sync_channel::<Vec<Record>>(spine_cap);
 
     // --- reader ---------------------------------------------------------
     let reader_stats = Arc::clone(&stats);
     let reader_cfg = cfg.clone();
+    let reader_sched = Arc::clone(&sched);
     let reader = thread::spawn(move || {
+        let eof_guard = EofOnDrop(Arc::clone(&reader_sched));
         let mut seq = 0u64;
         let mut emitted = 0u64;
         loop {
@@ -146,68 +431,105 @@ where
                 Some(maxn) => ((maxn - emitted) as usize).min(reader_cfg.batch_size),
                 None => reader_cfg.batch_size,
             };
-            let mut batch = Vec::with_capacity(budget);
-            if stream.next_batch(&mut batch, budget) == 0 {
+            // Reuse a recycled spine (and the records inside it) when one
+            // has made it back around the loop.
+            let mut batch = spine_rx.try_recv().unwrap_or_default();
+            if stream.next_batch_into(&mut batch, budget) == 0 {
                 break;
             }
             emitted += batch.len() as u64;
             reader_stats
                 .records_read
                 .fetch_add(batch.len() as u64, Ordering::Relaxed);
-            // Round-robin dispatch: seq mod N picks the worker, so batch
-            // assignment is deterministic (the reorderer makes output
-            // order-independent anyway, but determinism keeps per-worker
-            // encoder state — the codebook baseline — reproducible too).
-            let tx = &raw_txs[(seq % raw_txs.len() as u64) as usize];
-            if send_counted(tx, RawBatch { seq, records: batch }, &reader_stats).is_err() {
-                // A worker disappeared: only happens on early stop (or a
-                // worker panic); stop reading.
-                break;
+            // Round-robin target: deterministic dispatch keeps per-worker
+            // load even in the common case; stealing handles the skewed
+            // tail. (Output is order-independent either way — the seq
+            // reorderer and pure encoders guarantee it.)
+            let target = (seq % n_workers as u64) as usize;
+            let raw = RawBatch { seq, records: batch };
+            if reader_sched.push(target, raw, &reader_stats).is_err() {
+                break; // early stop
             }
             seq += 1;
         }
-        // raw_txs drop here -> each worker drains its queue and exits.
+        drop(eof_guard); // set_eof: workers drain the queues and exit
     });
 
     // --- encode workers --------------------------------------------------
     let mut workers = Vec::new();
-    for rx in raw_rxs {
+    for (wid, ret_rx) in ret_rxs.into_iter().enumerate() {
         let tx = enc_tx.clone();
         let wstats = Arc::clone(&stats);
         let ecfg = encoder_cfg.clone();
         let keep = cfg.keep_records;
+        let slow = cfg.slow_worker;
+        let wsched = Arc::clone(&sched);
+        let wspine_tx = spine_tx.clone();
         workers.push(thread::spawn(move || {
+            let panic_guard = StopOnPanic(Arc::clone(&wsched));
             let mut enc = ecfg.build();
-            // The encoder's internal scratch recycles all intermediate
-            // buffers; the output buffers are owned by the consumer once
-            // the batch crosses the channel.
-            let mut encodings = Vec::new();
-            for raw in rx {
+            // Pooled batch spines, refilled from the recycle channel.
+            let mut enc_spines: Vec<Vec<Encoding>> = Vec::new();
+            let mut label_spines: Vec<Vec<bool>> = Vec::new();
+            loop {
+                // Drain returned batches: encoding buffers go back into
+                // the scratch pool, spines into the local pools, record
+                // vectors onward to the reader.
+                while let Ok(mut ret) = ret_rx.try_recv() {
+                    let n = ret.encodings.len() as u64;
+                    enc.recycle_all(ret.encodings.drain(..));
+                    wstats.buffers_recycled.fetch_add(n, Ordering::Relaxed);
+                    enc_spines.push(ret.encodings);
+                    ret.labels.clear();
+                    label_spines.push(ret.labels);
+                    if let Some(recs) = ret.records.take() {
+                        let _ = wspine_tx.try_send(recs);
+                    }
+                }
+                let Some(raw) = wsched.pop(wid, &wstats) else { break };
+                if let Some((slow_wid, delay)) = slow {
+                    if slow_wid == wid {
+                        thread::sleep(delay);
+                    }
+                }
                 let n = raw.records.len() as u64;
-                let labels: Vec<bool> = raw.records.iter().map(|r| r.label).collect();
+                let mut labels = label_spines.pop().unwrap_or_default();
+                labels.clear();
+                labels.extend(raw.records.iter().map(|r| r.label));
+                let mut encodings = enc_spines.pop().unwrap_or_default();
                 {
                     let _t = ScopeTimer::new(&wstats.encode_ns);
                     enc.encode_batch_into(&raw.records, &mut encodings);
                 }
                 wstats.records_encoded.fetch_add(n, Ordering::Relaxed);
-                let out = EncodedBatch {
-                    seq: raw.seq,
-                    encodings: std::mem::take(&mut encodings),
-                    labels,
-                    records: if keep { Some(raw.records) } else { None },
+                let records = if keep {
+                    Some(raw.records)
+                } else {
+                    // Return the spine to the reader right away.
+                    let _ = wspine_tx.try_send(raw.records);
+                    None
                 };
+                let out = EncodedBatch { seq: raw.seq, encodings, labels, records, origin: wid };
                 if send_counted(&tx, out, &wstats).is_err() {
+                    // Consumer dropped the channel: stop the pipeline so
+                    // the reader and parked siblings unwind too.
+                    wsched.stop();
                     break;
                 }
             }
-            // rx drops here; a reader blocked on this worker's full
-            // queue sees the disconnect and stops.
+            drop(panic_guard);
         }));
     }
     drop(enc_tx); // consumers see EOF when all workers finish
+    drop(spine_tx);
 
     // --- in-order consumption -------------------------------------------
-    consume_in_order(enc_rx, &mut consume);
+    // Reorder-ring preallocation: the common-case gap is bounded by the
+    // batches that can be in flight at once (deques + injector + one per
+    // worker + the encoded channel); pathological stalls can exceed it
+    // (the ring then grows), but steady state never reallocates.
+    let ring_hint = 2 * n_workers * queue_depth + n_workers + queue_depth + 8;
+    consume_in_order(enc_rx, &ret_txs, ring_hint, &stats, &mut consume);
 
     reader.join().expect("reader panicked");
     for w in workers {
@@ -216,27 +538,50 @@ where
     stats
 }
 
-/// Reorder batches by sequence number before invoking the consumer.
-/// Returns early (dropping the receiver, which unwinds the upstream
-/// stages via send errors) if the consumer asks to stop.
-fn consume_in_order<F: FnMut(EncodedBatch) -> bool>(rx: Receiver<EncodedBatch>, consume: &mut F) {
+/// Reorder batches by sequence number before invoking the consumer, then
+/// ship the consumed shells back over the recycle channels. Returns early
+/// (dropping the receiver, which unwinds the upstream stages via send
+/// errors and `StealScheduler::stop`) if the consumer asks to stop.
+///
+/// Pending batches live in a ring indexed by `seq - next` — bounded by
+/// the total in-flight batch count, so it stops allocating once warm
+/// (a `BTreeMap` would pay a node allocation per out-of-order batch).
+fn consume_in_order<F: FnMut(&mut EncodedBatch) -> bool>(
+    rx: Receiver<EncodedBatch>,
+    ret_txs: &[SyncSender<EncodedBatch>],
+    ring_hint: usize,
+    stats: &PipelineStats,
+    consume: &mut F,
+) {
     let mut next = 0u64;
-    let mut pending: BTreeMap<u64, EncodedBatch> = BTreeMap::new();
-    for batch in rx {
-        pending.insert(batch.seq, batch);
-        while let Some(b) = pending.remove(&next) {
-            if !consume(b) {
-                return; // rx drops; workers/reader see disconnects
-            }
+    let mut ring: VecDeque<Option<EncodedBatch>> = VecDeque::with_capacity(ring_hint);
+    loop {
+        // Deliver the ready prefix in stream order.
+        while matches!(ring.front(), Some(Some(_))) {
+            let mut b = ring.pop_front().flatten().expect("front checked Some");
             next += 1;
+            let keep = consume(&mut b);
+            // Recycle the shell back to the worker that encoded it, so
+            // each pool receives returns in proportion to its actual
+            // encode rate (stealing makes that uneven across workers).
+            let origin = b.origin;
+            if ret_txs[origin].try_send(b).is_err() {
+                stats.recycle_misses.fetch_add(1, Ordering::Relaxed);
+            }
+            if !keep {
+                return;
+            }
         }
-    }
-    // Channel closed: drain whatever is contiguous (should be everything).
-    while let Some(b) = pending.remove(&next) {
-        if !consume(b) {
-            return;
+        match rx.recv() {
+            Ok(batch) => {
+                let off = (batch.seq - next) as usize;
+                if ring.len() <= off {
+                    ring.resize_with(off + 1, || None);
+                }
+                ring[off] = Some(batch);
+            }
+            Err(_) => return, // all workers exited; ring prefix is empty
         }
-        next += 1;
     }
 }
 
@@ -295,7 +640,7 @@ mod tests {
                     max_records: Some(200),
                     ..Default::default()
                 },
-                |b| { encs.extend(b.encodings); true },
+                |b| { encs.extend(b.encodings.drain(..)); true },
             );
             encs
         };
@@ -304,8 +649,8 @@ mod tests {
 
     #[test]
     fn multi_worker_equals_single_worker_with_numeric_branch() {
-        // Exercises the per-worker-channel dispatch with both encoder
-        // branches live (numeric batch path + categorical scratch path).
+        // Exercises the stealing dispatch with both encoder branches live
+        // (numeric batch path + categorical scratch path).
         let enc_cfg = EncoderCfg {
             cat: CatCfg::Bloom { d: 256, k: 2 },
             num: NumCfg::Sjlt { d: 128, k: 4 },
@@ -326,7 +671,7 @@ mod tests {
                     ..Default::default()
                 },
                 |b| {
-                    encs.extend(b.encodings);
+                    encs.extend(b.encodings.drain(..));
                     true
                 },
             );
@@ -337,7 +682,8 @@ mod tests {
 
     #[test]
     fn more_workers_than_batches() {
-        // Idle workers (empty private queues) must drain and join cleanly.
+        // Idle workers (empty deques, nothing to steal) must park, wake
+        // on EOF and join cleanly.
         let stream = SyntheticStream::new(SyntheticConfig::sampled(10));
         let mut total = 0usize;
         let stats = run_pipeline(
@@ -373,7 +719,7 @@ mod tests {
                 ..Default::default()
             },
             |b| {
-                let recs = b.records.expect("records kept");
+                let recs = b.records.as_ref().expect("records kept");
                 assert_eq!(recs.len(), b.encodings.len());
                 n_rec += recs.len();
                 true
@@ -427,6 +773,63 @@ mod tests {
             &small_cfg(),
             &CoordinatorCfg { batch_size: 64, max_records: Some(128), ..Default::default() },
             |b| { assert_eq!(b.labels.len(), b.encodings.len()); true },
+        );
+    }
+
+    #[test]
+    fn slow_worker_forces_steals() {
+        // Worker 0 sleeps 2ms per batch; its queued batches must be
+        // stolen by idle siblings, and the output must not change.
+        let collect = |slow: Option<(usize, Duration)>, workers: usize| {
+            let stream = SyntheticStream::new(SyntheticConfig::sampled(12));
+            let mut encs = Vec::new();
+            let stats = run_pipeline(
+                stream,
+                &small_cfg(),
+                &CoordinatorCfg {
+                    batch_size: 8,
+                    n_workers: workers,
+                    queue_depth: 2,
+                    max_records: Some(480),
+                    slow_worker: slow,
+                    ..Default::default()
+                },
+                |b| {
+                    encs.extend(b.encodings.drain(..));
+                    true
+                },
+            );
+            (encs, stats.snapshot())
+        };
+        let (baseline, _) = collect(None, 1);
+        let (stalled, snap) = collect(Some((0, Duration::from_millis(2))), 4);
+        assert_eq!(baseline, stalled, "steals must not change output");
+        assert!(
+            snap.batches_stolen > 0,
+            "a 2ms-per-batch worker must get robbed: {snap:?}"
+        );
+    }
+
+    #[test]
+    fn recycle_loop_returns_buffers() {
+        // A consumer that leaves the batch intact sends every encoding
+        // buffer back to a worker pool.
+        let stream = SyntheticStream::new(SyntheticConfig::sampled(13));
+        let stats = run_pipeline(
+            stream,
+            &small_cfg(),
+            &CoordinatorCfg {
+                batch_size: 16,
+                n_workers: 2,
+                max_records: Some(640),
+                ..Default::default()
+            },
+            |b| { assert!(!b.encodings.is_empty()); true },
+        );
+        let snap = stats.snapshot();
+        assert!(
+            snap.buffers_recycled > 0,
+            "recycle channel never round-tripped: {snap:?}"
         );
     }
 }

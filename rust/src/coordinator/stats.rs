@@ -16,6 +16,17 @@ pub struct PipelineStats {
     pub train_ns: AtomicU64,
     /// Times a bounded channel send blocked (backpressure events).
     pub backpressure_events: AtomicU64,
+    /// Batches a worker took from a sibling's deque (work stealing).
+    pub batches_stolen: AtomicU64,
+    /// Batches routed through the global injector because the round-robin
+    /// target deque was full (skew overflow).
+    pub injector_batches: AtomicU64,
+    /// Encoding buffers returned to a worker's scratch pool through the
+    /// consumer→worker recycle channel.
+    pub buffers_recycled: AtomicU64,
+    /// Consumed batches whose buffers were dropped instead of recycled
+    /// (recycle channel full or already closed).
+    pub recycle_misses: AtomicU64,
 }
 
 impl PipelineStats {
@@ -37,6 +48,10 @@ impl PipelineStats {
             encode_ns: self.encode_ns.load(Ordering::Relaxed),
             train_ns: self.train_ns.load(Ordering::Relaxed),
             backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
+            batches_stolen: self.batches_stolen.load(Ordering::Relaxed),
+            injector_batches: self.injector_batches.load(Ordering::Relaxed),
+            buffers_recycled: self.buffers_recycled.load(Ordering::Relaxed),
+            recycle_misses: self.recycle_misses.load(Ordering::Relaxed),
         }
     }
 }
@@ -50,6 +65,10 @@ pub struct StatsSnapshot {
     pub encode_ns: u64,
     pub train_ns: u64,
     pub backpressure_events: u64,
+    pub batches_stolen: u64,
+    pub injector_batches: u64,
+    pub buffers_recycled: u64,
+    pub recycle_misses: u64,
 }
 
 impl StatsSnapshot {
@@ -97,9 +116,17 @@ mod tests {
         s.add(&s.records_read, 10);
         s.add(&s.records_read, 5);
         s.add(&s.records_encoded, 7);
+        s.add(&s.batches_stolen, 2);
+        s.add(&s.buffers_recycled, 9);
+        s.add(&s.injector_batches, 1);
+        s.add(&s.recycle_misses, 3);
         let snap = s.snapshot();
         assert_eq!(snap.records_read, 15);
         assert_eq!(snap.records_encoded, 7);
+        assert_eq!(snap.batches_stolen, 2);
+        assert_eq!(snap.buffers_recycled, 9);
+        assert_eq!(snap.injector_batches, 1);
+        assert_eq!(snap.recycle_misses, 3);
     }
 
     #[test]
@@ -122,6 +149,10 @@ mod tests {
             encode_ns: 1_000_000_000,
             train_ns: 500_000_000,
             backpressure_events: 0,
+            batches_stolen: 0,
+            injector_batches: 0,
+            buffers_recycled: 0,
+            recycle_misses: 0,
         };
         assert!((snap.encode_throughput() - 1000.0).abs() < 1e-9);
         assert!((snap.train_throughput() - 1000.0).abs() < 1e-9);

@@ -42,6 +42,46 @@ pub trait RecordStream: Send {
         }
         out.len()
     }
+
+    /// Overwrite `rec` with the next record, reusing its buffers where
+    /// the stream supports it; returns `false` when exhausted. The
+    /// default materializes via [`RecordStream::next_record`] (correct
+    /// but allocating); generators override it to refill in place —
+    /// [`SyntheticStream`] does, which is what makes the coordinator's
+    /// record-spine recycling allocation-free end to end.
+    fn refill_record(&mut self, rec: &mut Record) -> bool {
+        match self.next_record() {
+            Some(r) => {
+                *rec = r;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Fill a batch reusing the records already in `out` (recycled
+    /// spines from the coordinator's return path): the first
+    /// `min(out.len(), n)` records are refilled in place, the rest
+    /// pushed; surplus is truncated. Produces the identical record
+    /// sequence as [`RecordStream::next_batch`].
+    fn next_batch_into(&mut self, out: &mut Vec<Record>, n: usize) -> usize {
+        let mut filled = 0;
+        while filled < n {
+            if filled < out.len() {
+                if !self.refill_record(&mut out[filled]) {
+                    break;
+                }
+            } else {
+                match self.next_record() {
+                    Some(r) => out.push(r),
+                    None => break,
+                }
+            }
+            filled += 1;
+        }
+        out.truncate(filled);
+        filled
+    }
 }
 
 #[cfg(test)]
@@ -67,5 +107,33 @@ mod tests {
         assert_eq!(s.next_batch(&mut buf, 3), 3);
         assert_eq!(s.next_batch(&mut buf, 3), 2);
         assert_eq!(s.next_batch(&mut buf, 3), 0);
+    }
+
+    #[test]
+    fn batch_into_reuses_and_truncates() {
+        let mut s = CountStream(5);
+        // Pre-populated spine longer than the budget: refilled in place,
+        // surplus truncated.
+        let stale = Record { numeric: vec![9.0; 4], symbols: vec![7; 3], label: false };
+        let mut buf = vec![stale.clone(), stale.clone(), stale.clone(), stale];
+        assert_eq!(s.next_batch_into(&mut buf, 3), 3);
+        assert_eq!(buf.len(), 3);
+        assert!(buf.iter().all(|r| r.label && r.symbols == vec![1]));
+        // Exhaustion mid-batch truncates to what was produced.
+        assert_eq!(s.next_batch_into(&mut buf, 3), 2);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(s.next_batch_into(&mut buf, 3), 0);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn batch_into_matches_next_batch_sequence() {
+        let mut a = CountStream(7);
+        let mut b = CountStream(7);
+        let mut va = Vec::new();
+        let mut vb = vec![Record { numeric: vec![1.0], symbols: vec![], label: false }];
+        a.next_batch(&mut va, 4);
+        b.next_batch_into(&mut vb, 4);
+        assert_eq!(va, vb);
     }
 }

@@ -95,6 +95,9 @@ pub struct SyntheticStream {
     nu: f32,
     /// Cholesky-ish correlation mixer for numeric features (lower tri.).
     num_mix: Vec<f32>,
+    /// Reused gaussian staging for [`SyntheticStream::fill_raw_features`]
+    /// (keeps the in-place refill path allocation-free).
+    g_buf: Vec<f32>,
     records_emitted: u64,
 }
 
@@ -125,6 +128,7 @@ impl SyntheticStream {
             theta_n,
             nu: 0.0,
             num_mix,
+            g_buf: Vec::new(),
             records_emitted: 0,
         };
         s.calibrate_intercept();
@@ -158,25 +162,57 @@ impl SyntheticStream {
         num + cat + self.nu
     }
 
-    fn raw_features(&mut self) -> (Vec<f32>, Vec<u64>) {
+    /// Draw the next record's raw features into caller buffers (cleared
+    /// first, capacity reused) — the allocation-free core shared by
+    /// [`RecordStream::next_record`] and the in-place refill path. RNG
+    /// consumption order is fixed (n gaussians, then one Zipf draw per
+    /// categorical slot), so both entry points produce the identical
+    /// stream.
+    fn fill_raw_features(&mut self, numeric: &mut Vec<f32>, symbols: &mut Vec<u64>) {
         let n = self.cfg.n_numeric;
         // Correlated gaussians through the lower-triangular mixer.
-        let g: Vec<f32> = (0..n).map(|_| self.rng.normal_f32()).collect();
-        let mut numeric = vec![0.0f32; n];
+        self.g_buf.clear();
+        for _ in 0..n {
+            let v = self.rng.normal_f32();
+            self.g_buf.push(v);
+        }
+        numeric.clear();
+        numeric.resize(n, 0.0);
         for i in 0..n {
             let mut acc = 0.0f32;
             for j in 0..=i {
-                acc += self.num_mix[i * n + j] * g[j];
+                acc += self.num_mix[i * n + j] * self.g_buf[j];
             }
             numeric[i] = acc;
         }
-        let symbols: Vec<u64> = (0..self.cfg.s_categorical as u64)
-            .map(|slot| {
-                let rank = self.zipf.sample(&mut self.rng);
-                slot * self.slot_size + rank
-            })
-            .collect();
+        symbols.clear();
+        for slot in 0..self.cfg.s_categorical as u64 {
+            let rank = self.zipf.sample(&mut self.rng);
+            symbols.push(slot * self.slot_size + rank);
+        }
+    }
+
+    fn raw_features(&mut self) -> (Vec<f32>, Vec<u64>) {
+        let mut numeric = Vec::new();
+        let mut symbols = Vec::new();
+        self.fill_raw_features(&mut numeric, &mut symbols);
         (numeric, symbols)
+    }
+
+    /// Overwrite `rec` with the next record, reusing its buffers.
+    /// Identical RNG consumption (and therefore identical records) to
+    /// [`RecordStream::next_record`].
+    fn fill_record_in_place(&mut self, rec: &mut Record) {
+        let Record { numeric, symbols, label } = rec;
+        self.fill_raw_features(numeric, symbols);
+        let f = self.score(numeric, symbols);
+        *label = if self.cfg.noise <= 0.0 {
+            f >= 0.0
+        } else {
+            let p = 1.0 / (1.0 + (-f / self.cfg.noise).exp());
+            self.rng.bernoulli(p as f64)
+        };
+        self.records_emitted += 1;
     }
 
     /// Choose nu so that P(y=1) ~ positive_rate on a calibration sample.
@@ -227,16 +263,17 @@ const CAT_WEIGHT_KEY: u64 = 0xc473_a70b_5c41_e117;
 
 impl RecordStream for SyntheticStream {
     fn next_record(&mut self) -> Option<Record> {
-        let (numeric, symbols) = self.raw_features();
-        let f = self.score(&numeric, &symbols);
-        let label = if self.cfg.noise <= 0.0 {
-            f >= 0.0
-        } else {
-            let p = 1.0 / (1.0 + (-f / self.cfg.noise).exp());
-            self.rng.bernoulli(p as f64)
-        };
-        self.records_emitted += 1;
-        Some(Record { numeric, symbols, label })
+        let mut rec = Record { numeric: Vec::new(), symbols: Vec::new(), label: false };
+        self.fill_record_in_place(&mut rec);
+        Some(rec)
+    }
+
+    /// In-place refill: the stream is unbounded, so this always succeeds,
+    /// and it never allocates once the record's buffers have grown to the
+    /// schema width.
+    fn refill_record(&mut self, rec: &mut Record) -> bool {
+        self.fill_record_in_place(rec);
+        true
     }
 }
 
@@ -253,6 +290,21 @@ mod tests {
         let mut a = SyntheticStream::new(SyntheticConfig::sampled(7));
         let mut b = SyntheticStream::new(SyntheticConfig::sampled(7));
         assert_eq!(take(&mut a, 20), take(&mut b, 20));
+    }
+
+    #[test]
+    fn refill_matches_next_record() {
+        // The in-place path must emit the identical record stream, even
+        // when refilling a stale record with mismatched buffer widths.
+        let mut a = SyntheticStream::new(SyntheticConfig::sampled(9));
+        let mut b = SyntheticStream::new(SyntheticConfig::sampled(9));
+        let mut rec = Record { numeric: vec![0.5; 2], symbols: vec![1, 2, 3], label: true };
+        for i in 0..50 {
+            let want = a.next_record().unwrap();
+            assert!(b.refill_record(&mut rec));
+            assert_eq!(rec, want, "record {i}");
+        }
+        assert_eq!(a.emitted(), b.emitted());
     }
 
     #[test]

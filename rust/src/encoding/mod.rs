@@ -119,4 +119,28 @@ pub trait NumericEncoder: Send + Sync {
             out.push(self.encode_with(x, scratch));
         }
     }
+
+    /// Scratch-path batch encode over a row-major flat input
+    /// (`xs_flat.len() = batch · n`, `n > 0`). Bit-identical to
+    /// [`NumericEncoder::encode_batch_with`] over the same rows; exists
+    /// so callers can stage records into one reused flat buffer instead
+    /// of building a per-batch `Vec<&[f32]>` — the last per-batch
+    /// allocation on the coordinator's encode hot path. Row-blocked
+    /// encoders override it with the same blocked loop as the slice
+    /// variant (shared core, so the two stay bit-identical by
+    /// construction).
+    fn encode_batch_flat_with(
+        &self,
+        xs_flat: &[f32],
+        n: usize,
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<Encoding>,
+    ) {
+        assert!(n > 0, "encode_batch_flat_with needs a positive row width");
+        assert_eq!(xs_flat.len() % n, 0, "flat batch not a multiple of n={n}");
+        out.clear();
+        for x in xs_flat.chunks_exact(n) {
+            out.push(self.encode_with(x, scratch));
+        }
+    }
 }

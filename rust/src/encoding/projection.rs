@@ -93,14 +93,15 @@ impl DenseProjection {
 }
 
 impl DenseProjection {
-    /// Tiled batch projection (§Perf): iterate d in L2-sized tiles; for
-    /// each record-block the 13 transposed-Phi tile rows are reused, so
-    /// Phi traffic per record drops by the block factor, and the inner
-    /// loop stays a vectorizable contiguous AXPY.
-    pub fn project_batch_into(&self, xs: &[&[f32]], zs: &mut [f32]) {
+    /// Tiled batch projection core (§Perf): iterate d in L2-sized tiles;
+    /// for each record-block the 13 transposed-Phi tile rows are reused,
+    /// so Phi traffic per record drops by the block factor, and the inner
+    /// loop stays a vectorizable contiguous AXPY. Generic over the input
+    /// accessor so the slice-of-rows and flat-buffer entry points share
+    /// one loop (identical op order → bit-identical outputs).
+    fn project_batch_core<X: Fn(usize, usize) -> f32>(&self, bsz: usize, x: X, zs: &mut [f32]) {
         const TILE: usize = 4096; // 16 KiB of f32 per tile row
         const BLOCK: usize = 8; // records sharing one tile pass
-        let bsz = xs.len();
         debug_assert_eq!(zs.len(), bsz * self.d);
         zs.fill(0.0);
         let mut tile_start = 0;
@@ -112,7 +113,7 @@ impl DenseProjection {
                 for (j, col_all) in self.phi_t.chunks_exact(self.d).enumerate() {
                     let col = &col_all[tile_start..tile_start + tile_len];
                     for b in b0..bend {
-                        let xv = xs[b][j];
+                        let xv = x(b, j);
                         let zrow =
                             &mut zs[b * self.d + tile_start..b * self.d + tile_start + tile_len];
                         kernels::axpy(zrow, col, xv);
@@ -122,6 +123,21 @@ impl DenseProjection {
             }
             tile_start += tile_len;
         }
+    }
+
+    /// Tiled batch projection over per-record slices.
+    pub fn project_batch_into(&self, xs: &[&[f32]], zs: &mut [f32]) {
+        self.project_batch_core(xs.len(), |b, j| xs[b][j], zs);
+    }
+
+    /// Tiled batch projection over a row-major flat input
+    /// (`xs_flat.len() = batch · n`). Bit-identical to
+    /// [`DenseProjection::project_batch_into`] over the same rows.
+    pub fn project_batch_flat_into(&self, xs_flat: &[f32], zs: &mut [f32]) {
+        debug_assert!(self.n > 0);
+        debug_assert_eq!(xs_flat.len() % self.n, 0);
+        let n = self.n;
+        self.project_batch_core(xs_flat.len() / n, |b, j| xs_flat[b * n + j], zs);
     }
 }
 
@@ -168,6 +184,32 @@ impl NumericEncoder for DenseProjection {
     ) {
         let mut zs = scratch.take_flat(xs.len() * self.d);
         self.project_batch_into(xs, &mut zs);
+        self.finish_batch(&zs, scratch, out);
+        scratch.put_flat(zs);
+    }
+
+    fn encode_batch_flat_with(
+        &self,
+        xs_flat: &[f32],
+        n: usize,
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<Encoding>,
+    ) {
+        assert!(n > 0, "encode_batch_flat_with needs a positive row width");
+        assert_eq!(n, self.n, "row width must match the projection input dim");
+        assert_eq!(xs_flat.len() % n, 0, "flat batch not a multiple of n={n}");
+        let bsz = xs_flat.len() / n;
+        let mut zs = scratch.take_flat(bsz * self.d);
+        self.project_batch_flat_into(xs_flat, &mut zs);
+        self.finish_batch(&zs, scratch, out);
+        scratch.put_flat(zs);
+    }
+}
+
+impl DenseProjection {
+    /// Copy projected rows into pooled per-record buffers, applying the
+    /// mode — the shared tail of both batch entry points.
+    fn finish_batch(&self, zs: &[f32], scratch: &mut EncodeScratch, out: &mut Vec<Encoding>) {
         out.clear();
         for z in zs.chunks_exact(self.d) {
             let mut buf = scratch.take_dense_raw(self.d);
@@ -177,7 +219,6 @@ impl NumericEncoder for DenseProjection {
             }
             out.push(Encoding::Dense(buf));
         }
-        scratch.put_flat(zs);
     }
 }
 
@@ -347,6 +388,26 @@ impl NumericEncoder for SparseProjection {
     ) {
         let mut zs = scratch.take_flat(xs.len() * self.proj.d);
         self.proj.project_batch_into(xs, &mut zs);
+        out.clear();
+        for z in zs.chunks_exact(self.proj.d) {
+            out.push(self.sparsify_with(z, scratch));
+        }
+        scratch.put_flat(zs);
+    }
+
+    fn encode_batch_flat_with(
+        &self,
+        xs_flat: &[f32],
+        n: usize,
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<Encoding>,
+    ) {
+        assert!(n > 0, "encode_batch_flat_with needs a positive row width");
+        assert_eq!(n, self.proj.n, "row width must match the projection input dim");
+        assert_eq!(xs_flat.len() % n, 0, "flat batch not a multiple of n={n}");
+        let bsz = xs_flat.len() / n;
+        let mut zs = scratch.take_flat(bsz * self.proj.d);
+        self.proj.project_batch_flat_into(xs_flat, &mut zs);
         out.clear();
         for z in zs.chunks_exact(self.proj.d) {
             out.push(self.sparsify_with(z, scratch));

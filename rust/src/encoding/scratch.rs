@@ -21,11 +21,13 @@
 //! * a **flat batch buffer** for row-blocked numeric batch encodes.
 //!
 //! A worker that recycles consumed encodings encodes indefinitely with
-//! zero steady-state allocations. When outputs cross a thread boundary
-//! (the coordinator hands batches to the consumer) the output buffers are
-//! owned by the consumer and cannot return to the pool — intermediates
-//! (staging, bitset, bundling temporaries, numeric-branch codes) still
-//! recycle, which is where the per-record allocation churn lived.
+//! zero steady-state allocations. Outputs that cross a thread boundary
+//! come back too: the coordinator's consumer→worker recycle channel
+//! returns consumed batches to [`EncodeScratch::recycle_all`], so the
+//! pools hold a mix of output capacities (bundled d=20k next to numeric
+//! d=10k) — [`EncodeScratch::take_dense_raw`] picks a fitting buffer
+//! instead of popping blindly, keeping the loop allocation-free
+//! (pinned end-to-end by `tests/alloc_regression.rs`).
 //!
 //! The scratch paths are **bit-identical** to the allocating paths; the
 //! property suite in `tests/scratch_equivalence.rs` enforces this for
@@ -90,20 +92,23 @@ impl EncodeScratch {
 
     /// A dense buffer of length `d` with **unspecified contents** (callers
     /// that overwrite every element skip the zeroing cost).
+    ///
+    /// The pool holds mixed capacities once consumers recycle outputs
+    /// across the coordinator (e.g. d=20k Concat bundles next to d=10k
+    /// numeric codes), so this scans from the most recently pushed buffer
+    /// for one that already fits: a too-small pop would either
+    /// grow-realloc (memcpy of stale contents) or get dropped, and either
+    /// way steady-state allocation churn comes back. The pool is
+    /// round-trip bounded (a few dozen buffers), so the scan is a few
+    /// pointer-sized compares against a ~40 KiB memset+alloc it avoids.
     #[inline]
     pub fn take_dense_raw(&mut self, d: usize) -> Vec<f32> {
-        match self.dense_pool.pop() {
-            // A pooled buffer below the requested capacity would
-            // grow-realloc and memcpy its stale contents (e.g. a recycled
-            // d=10k numeric code popped for a d=20k Concat bundle);
-            // dropping it for a fresh zeroed allocation is the same
-            // free+alloc without the copy.
-            Some(mut v) if v.capacity() >= d => {
-                v.resize(d, 0.0);
-                v
-            }
-            _ => vec![0.0f32; d],
+        if let Some(pos) = self.dense_pool.iter().rposition(|v| v.capacity() >= d) {
+            let mut v = self.dense_pool.swap_remove(pos);
+            v.resize(d, 0.0);
+            return v;
         }
+        vec![0.0f32; d]
     }
 
     /// A dense all-zero buffer of length `d`.

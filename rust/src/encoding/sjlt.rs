@@ -215,6 +215,34 @@ impl RelaxedSjlt {
         self.encode_into(x, &mut out);
         Encoding::Dense(out)
     }
+
+    /// Row-blocked batch core: walk each CSR row of Phi once per batch,
+    /// staging through the flat scratch buffer, with records read via the
+    /// accessor. Shared by the slice and flat batch entry points so the
+    /// two loops (whose bit-identity the determinism suite pins) can
+    /// never drift apart.
+    fn encode_batch_core<'a, X: Fn(usize) -> &'a [f32]>(
+        &self,
+        bsz: usize,
+        x: X,
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<Encoding>,
+    ) {
+        let mut zs = scratch.take_flat(bsz * self.d);
+        for i in 0..self.d {
+            let (cols, signs) = self.row(i);
+            for b in 0..bsz {
+                zs[b * self.d + i] = self.finish(kernels::signed_sum(x(b), cols, signs));
+            }
+        }
+        out.clear();
+        for z in zs.chunks_exact(self.d) {
+            let mut buf = scratch.take_dense_raw(self.d);
+            buf.copy_from_slice(z);
+            out.push(Encoding::Dense(buf));
+        }
+        scratch.put_flat(zs);
+    }
 }
 
 impl NumericEncoder for RelaxedSjlt {
@@ -253,23 +281,25 @@ impl NumericEncoder for RelaxedSjlt {
         scratch: &mut EncodeScratch,
         out: &mut Vec<Encoding>,
     ) {
-        // Same row-blocked loop, staged through the flat batch buffer so
-        // the per-record outputs come from the pool.
-        let bsz = xs.len();
-        let mut zs = scratch.take_flat(bsz * self.d);
-        for i in 0..self.d {
-            let (cols, signs) = self.row(i);
-            for (b, x) in xs.iter().enumerate() {
-                zs[b * self.d + i] = self.finish(kernels::signed_sum(x, cols, signs));
-            }
-        }
-        out.clear();
-        for z in zs.chunks_exact(self.d) {
-            let mut buf = scratch.take_dense_raw(self.d);
-            buf.copy_from_slice(z);
-            out.push(Encoding::Dense(buf));
-        }
-        scratch.put_flat(zs);
+        // Row-blocked core staged through the flat batch buffer so the
+        // per-record outputs come from the pool.
+        self.encode_batch_core(xs.len(), |b| xs[b], scratch, out);
+    }
+
+    fn encode_batch_flat_with(
+        &self,
+        xs_flat: &[f32],
+        n: usize,
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<Encoding>,
+    ) {
+        // Same core as the slice variant, reading records out of the
+        // flat buffer — bit-identical by construction.
+        assert!(n > 0, "encode_batch_flat_with needs a positive row width");
+        assert_eq!(n, self.n, "row width must match the SJLT input dim");
+        assert_eq!(xs_flat.len() % n, 0, "flat batch not a multiple of n={n}");
+        let bsz = xs_flat.len() / n;
+        self.encode_batch_core(bsz, |b| &xs_flat[b * n..(b + 1) * n], scratch, out);
     }
 }
 

@@ -113,6 +113,56 @@ impl LogisticModel {
         loss_acc / batch.len() as f64
     }
 
+    /// One mini-batch SGD step over parallel slices, staging residuals in
+    /// a caller-reused buffer — the allocation-free twin of
+    /// [`LogisticModel::sgd_step`] for consumers that borrow batches from
+    /// the coordinator (encodings + labels arrive as separate slices and
+    /// go back to the worker pools afterwards). Same two-pass math, same
+    /// accumulation order, bit-identical updates (asserted by
+    /// `step_paths_agree` below).
+    pub fn sgd_step_parts(
+        &mut self,
+        encs: &[Encoding],
+        labels: &[bool],
+        lr: f32,
+        errs: &mut Vec<f32>,
+    ) -> f64 {
+        debug_assert_eq!(encs.len(), labels.len());
+        if encs.is_empty() {
+            return 0.0;
+        }
+        let scale = lr / encs.len() as f32;
+        let mut loss_acc = 0.0f64;
+        let mut bias_grad = 0.0f32;
+        errs.clear();
+        // Pass 1: residuals at the current parameters.
+        for (enc, &y) in encs.iter().zip(labels) {
+            let z = self.score(enc);
+            loss_acc += nll(z, y);
+            let err = (if y { 1.0 } else { 0.0 } - sigmoid(z)) as f32;
+            bias_grad += err;
+            errs.push(err);
+        }
+        // Pass 2: apply the accumulated gradient.
+        for (enc, &err) in encs.iter().zip(errs.iter()) {
+            match enc {
+                Encoding::Dense(v) => {
+                    debug_assert_eq!(v.len(), self.theta.len());
+                    for (t, &x) in self.theta.iter_mut().zip(v) {
+                        *t += scale * err * x;
+                    }
+                }
+                Encoding::SparseBinary { indices, .. } => {
+                    for &i in indices {
+                        self.theta[i as usize] += scale * err;
+                    }
+                }
+            }
+        }
+        self.bias += scale * bias_grad;
+        loss_acc / encs.len() as f64
+    }
+
     /// Scores for a batch (for AUC evaluation).
     pub fn predict_batch(&self, encs: &[Encoding]) -> Vec<f64> {
         encs.iter().map(|e| self.predict(e)).collect()
@@ -159,6 +209,38 @@ mod tests {
             assert!((ms.theta[i] - md.theta[i]).abs() < 1e-5, "coord {i}");
         }
         assert!((ms.bias - md.bias).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_paths_agree() {
+        // sgd_step (owned pairs) and sgd_step_parts (borrowed slices +
+        // reused residual buffer) must produce bit-identical models.
+        let d = 48;
+        let mut rng = Rng::new(7);
+        let mut ma = LogisticModel::new(d);
+        let mut mb = LogisticModel::new(d);
+        let mut errs = Vec::new();
+        for round in 0..5 {
+            let batch: Vec<(Encoding, bool)> = (0..12)
+                .map(|_| {
+                    if rng.bernoulli(0.5) {
+                        let idx: Vec<u32> =
+                            (0..6).map(|_| rng.below(d as u64) as u32).collect();
+                        (sparse_from_indices(idx, d), rng.bernoulli(0.4))
+                    } else {
+                        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                        (Encoding::Dense(x), rng.bernoulli(0.4))
+                    }
+                })
+                .collect();
+            let encs: Vec<Encoding> = batch.iter().map(|(e, _)| e.clone()).collect();
+            let labels: Vec<bool> = batch.iter().map(|(_, y)| *y).collect();
+            let la = ma.sgd_step(&batch, 0.3);
+            let lb = mb.sgd_step_parts(&encs, &labels, 0.3, &mut errs);
+            assert_eq!(la, lb, "round {round}");
+            assert_eq!(ma.theta, mb.theta, "round {round}");
+            assert_eq!(ma.bias, mb.bias, "round {round}");
+        }
     }
 
     #[test]

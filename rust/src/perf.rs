@@ -91,9 +91,13 @@ fn env_u64(key: &str, default: u64) -> u64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-/// Encode-only pipeline throughput (records/s) at a worker count —
-/// exercises the per-worker-channel coordinator end to end.
-fn pipeline_records_per_sec(workers: usize, records: u64) -> f64 {
+/// Encode-only pipeline throughput (records/s) at a worker count, plus
+/// the run's counter snapshot (steals, recycles, backpressure) —
+/// exercises the work-stealing coordinator end to end.
+fn pipeline_records_per_sec(
+    workers: usize,
+    records: u64,
+) -> (f64, crate::coordinator::StatsSnapshot) {
     let data = SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(3) };
     let enc = EncoderCfg {
         cat: CatCfg::Bloom { d: 10_000, k: 4 },
@@ -116,8 +120,9 @@ fn pipeline_records_per_sec(workers: usize, records: u64) -> f64 {
         true
     });
     let dt = t0.elapsed().as_secs_f64();
-    assert_eq!(sink as u64, stats.snapshot().records_encoded);
-    records as f64 / dt
+    let snap = stats.snapshot();
+    assert_eq!(sink as u64, snap.records_encoded);
+    (records as f64 / dt, snap)
 }
 
 /// Run the full encode snapshot; returns the machine-readable document
@@ -360,18 +365,27 @@ pub fn encode_snapshot() -> Json {
     let mut scaling = Vec::new();
     let mut rps1 = 0.0f64;
     for workers in [1usize, 2, 4] {
-        let rps = pipeline_records_per_sec(workers, scale_records);
+        let (rps, snap) = pipeline_records_per_sec(workers, scale_records);
         if workers == 1 {
             rps1 = rps;
         }
         println!(
-            "  pipeline {workers} worker(s): {rps:.3e} records/s  (x{:.2} vs 1 worker)",
-            rps / rps1
+            "  pipeline {workers} worker(s): {rps:.3e} records/s  (x{:.2} vs 1 worker, \
+             {} stolen, {} recycled, {} recycle misses)",
+            rps / rps1,
+            snap.batches_stolen,
+            snap.buffers_recycled,
+            snap.recycle_misses,
         );
         scaling.push(Json::obj(vec![
             ("workers", Json::num(workers as f64)),
             ("records_per_sec", Json::num(rps)),
             ("speedup_vs_1", Json::num(rps / rps1)),
+            ("batches_stolen", Json::num(snap.batches_stolen as f64)),
+            ("injector_batches", Json::num(snap.injector_batches as f64)),
+            ("buffers_recycled", Json::num(snap.buffers_recycled as f64)),
+            ("recycle_misses", Json::num(snap.recycle_misses as f64)),
+            ("backpressure_events", Json::num(snap.backpressure_events as f64)),
         ]));
     }
 

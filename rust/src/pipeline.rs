@@ -168,20 +168,19 @@ fn train_rust(cfg: &TrainCfg, data_cfg: &SyntheticConfig) -> Result<TrainReport>
         ..Default::default()
     };
     let mut train_ns_local = 0u64;
+    // Residual staging reused across steps; batches are *borrowed* from
+    // the coordinator, so their encoding buffers recycle back to the
+    // worker pools after every step (zero steady-state allocations).
+    let mut errs: Vec<f32> = Vec::new();
     let stats: Arc<PipelineStats> = run_pipeline(stream, &cfg.encoder, &coord, |batch| {
-        let pairs: Vec<(Encoding, bool)> = batch
-            .encodings
-            .into_iter()
-            .zip(batch.labels.iter().copied())
-            .collect();
         let t_step = Instant::now();
-        let loss = model.sgd_step(&pairs, cfg.lr);
+        let loss = model.sgd_step_parts(&batch.encodings, &batch.labels, cfg.lr, &mut errs);
         train_ns_local += t_step.elapsed().as_nanos() as u64;
         recent_train_losses.push(loss);
         if recent_train_losses.len() > 50 {
             recent_train_losses.remove(0);
         }
-        trained += pairs.len() as u64;
+        trained += batch.encodings.len() as u64;
         if trained >= next_validation {
             next_validation += cfg.validate_every;
             let vloss = eval_loss(&mut eval_enc, &model, &val);

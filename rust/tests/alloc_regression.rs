@@ -1,0 +1,153 @@
+//! Allocation-regression harness for the coordinator's zero-allocation
+//! claim: after warmup, the full reader → encode-worker → reorder →
+//! consume loop — including the cross-thread buffer recycling added with
+//! the work-stealing dispatch — must run **without a single heap
+//! allocation per batch**.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; since it
+//! is process-global it observes every pipeline thread, not just the
+//! consumer. The consumer callback snapshots the counter once the
+//! pipeline is warm (pools populated, recycle loops primed, every thread
+//! past its first blocking park) and again a few hundred batches later;
+//! the delta must be exactly zero. Any regression in the recycling loop
+//! — a dropped return channel, a pool that stops fitting its buffers, a
+//! reintroduced per-batch `Vec` — shows up here as a nonzero count.
+//!
+//! The whole file is one `#[test]` on purpose: libtest runs tests
+//! concurrently and the allocator counter is global, so independent
+//! tests would pollute each other's windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use shdc::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::data::SyntheticStream;
+use shdc::encoding::BundleMethod;
+
+/// System allocator wrapper counting every allocation-ish event
+/// (alloc, alloc_zeroed, realloc) and every dealloc.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn counts() -> (u64, u64) {
+    (ALLOCS.load(Ordering::SeqCst), DEALLOCS.load(Ordering::SeqCst))
+}
+
+/// Paper-shaped (scaled-down) encoder: sparse Bloom categorical +
+/// structured SJLT numeric, concat-bundled — exercises the index pool,
+/// the dense pool at two capacities (numeric codes vs bundled outputs)
+/// and the flat numeric staging.
+fn enc_cfg(seed: u64) -> EncoderCfg {
+    EncoderCfg {
+        cat: CatCfg::Bloom { d: 2048, k: 4 },
+        num: NumCfg::Sjlt { d: 512, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed,
+    }
+}
+
+/// Run `total` batches through the pipeline and return the allocation /
+/// deallocation deltas observed between consumer-side batch `warmup` and
+/// batch `warmup + window`.
+///
+/// During the first `stall` batches the consumer sleeps briefly: that
+/// forces the encoded channel to fill at least once, so every worker
+/// takes its first blocking-send park (the lazily initialized per-thread
+/// channel context) inside the warmup, not inside the window.
+fn measure(workers: usize, queue_depth: usize, warmup: u64, window: u64, total: u64) -> (u64, u64) {
+    let batch_size = 48usize;
+    let stream = SyntheticStream::new(SyntheticConfig::sampled(workers as u64));
+    let stall = warmup / 3;
+    let mut batches = 0u64;
+    let mut start = (0u64, 0u64);
+    let mut end = (0u64, 0u64);
+    run_pipeline(
+        stream,
+        &enc_cfg(42),
+        &CoordinatorCfg {
+            batch_size,
+            n_workers: workers,
+            queue_depth,
+            max_records: Some(batch_size as u64 * total),
+            ..Default::default()
+        },
+        |b| {
+            assert_eq!(b.encodings.len(), b.labels.len());
+            batches += 1;
+            if batches < stall {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+            if batches == warmup {
+                start = counts();
+            }
+            if batches == warmup + window {
+                end = counts();
+            }
+            true
+        },
+    );
+    assert!(
+        batches >= warmup + window,
+        "pipeline ended before the measurement window ({batches} batches)"
+    );
+    (end.0 - start.0, end.1 - start.1)
+}
+
+/// Assert a clean (zero-alloc, zero-dealloc) window, retrying up to
+/// three runs. A genuine per-batch regression allocates on *every* batch
+/// of *every* window (hundreds of counts), so retries cannot mask it;
+/// they only absorb one-off scheduler noise (e.g. a descheduled worker
+/// forcing a single reorder-ring growth past its preallocated hint).
+fn assert_alloc_free(label: &str, workers: usize, queue_depth: usize) {
+    let mut observed = Vec::new();
+    for attempt in 0..3 {
+        let (allocs, deallocs) = measure(workers, queue_depth, 300, 200, 620);
+        if allocs == 0 && deallocs == 0 {
+            return;
+        }
+        observed.push((attempt, allocs, deallocs));
+    }
+    panic!(
+        "{label}: every steady-state window allocated — per-batch \
+         allocation has regressed (attempt, allocs, deallocs): {observed:?}"
+    );
+}
+
+#[test]
+fn steady_state_pipeline_is_allocation_free() {
+    // Phase 1: single worker — the fully deterministic baseline.
+    assert_alloc_free("single-worker", 1, 8);
+    // Phase 2: multi-worker with stealing and cross-thread recycling
+    // live. Same contract: once warm, not one allocation per batch.
+    assert_alloc_free("3-worker stealing", 3, 4);
+}

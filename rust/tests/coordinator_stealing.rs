@@ -1,0 +1,261 @@
+//! Scheduler determinism suite for the work-stealing coordinator.
+//!
+//! The paper's guarantees (Thomas et al., arXiv 2209.09868; Thomas,
+//! Dasgupta & Rosing, arXiv 2010.07426) assume the encoding is a pure
+//! function of the input, so the scheduler may move batches between
+//! workers *arbitrarily* — steals, injector overflow, slow workers —
+//! without changing a single output bit. This suite drives the
+//! coordinator through adversarial skew (whale-heavy ragged batches),
+//! tiny and large queue depths, 1/3/8 workers, and forced-steal
+//! scenarios (the `slow_worker` injection hook), asserting bitwise
+//! identity against the single-worker run every time.
+//!
+//! (`pipeline_ragged_skew_worker_count_invariant` in
+//! `scratch_equivalence.rs` is the original, unchanged regression guard;
+//! this file is the stealing-specific superset.)
+
+use std::time::Duration;
+
+use shdc::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
+use shdc::data::{Record, RecordStream};
+use shdc::encoding::{BundleMethod, Encoding};
+use shdc::util::rng::mix64;
+
+/// Deterministic stream with *heavily ragged* categorical sets: every
+/// 16th record is a whale (hundreds of symbols) and every 64th a
+/// mega-whale, the rest carry 0–3 symbols. With a small batch size,
+/// whole batches end up orders of magnitude more expensive than their
+/// neighbors — the skew regime work stealing exists for.
+struct WhaleStream {
+    i: u64,
+    remaining: u64,
+}
+
+impl WhaleStream {
+    fn new(n: u64) -> WhaleStream {
+        WhaleStream { i: 0, remaining: n }
+    }
+}
+
+impl RecordStream for WhaleStream {
+    fn next_record(&mut self) -> Option<Record> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let i = self.i;
+        self.i += 1;
+        let s = if i % 64 == 0 {
+            900
+        } else if i % 16 == 0 {
+            350
+        } else {
+            (i % 4) as usize
+        };
+        let symbols: Vec<u64> = (0..s as u64)
+            .map(|j| mix64(i.wrapping_mul(1_000_003) ^ j))
+            .collect();
+        let numeric: Vec<f32> =
+            (0..13u64).map(|j| (((i * 13 + j) % 97) as f32) * 0.11 - 5.0).collect();
+        Some(Record { numeric, symbols, label: i % 3 == 0 })
+    }
+}
+
+fn enc_cfg() -> EncoderCfg {
+    EncoderCfg {
+        cat: CatCfg::Bloom { d: 1024, k: 4 },
+        num: NumCfg::Sjlt { d: 256, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 0xacce,
+    }
+}
+
+/// Run the pipeline over `records` whale records and collect the full
+/// output (encodings + labels + batch seqs) plus the stats snapshot.
+fn collect(
+    records: u64,
+    workers: usize,
+    queue_depth: usize,
+    slow_worker: Option<(usize, Duration)>,
+) -> ((Vec<Encoding>, Vec<bool>, Vec<u64>), shdc::coordinator::StatsSnapshot) {
+    let stream = WhaleStream::new(records);
+    let mut encs = Vec::new();
+    let mut labels = Vec::new();
+    let mut seqs = Vec::new();
+    let stats = run_pipeline(
+        stream,
+        &enc_cfg(),
+        &CoordinatorCfg {
+            batch_size: 8,
+            n_workers: workers,
+            queue_depth,
+            max_records: Some(records),
+            slow_worker,
+            ..Default::default()
+        },
+        |b| {
+            seqs.push(b.seq);
+            encs.extend(b.encodings.drain(..));
+            labels.extend(b.labels.drain(..));
+            true
+        },
+    );
+    ((encs, labels, seqs), stats.snapshot())
+}
+
+#[test]
+fn skewed_output_invariant_across_workers_and_depths() {
+    // The core determinism matrix: worker counts 1/3/8 × queue depths
+    // {1, 2, 32} must all be bit-identical to the single-worker run.
+    let records = 600u64;
+    let (baseline, _) = collect(records, 1, 8, None);
+    assert_eq!(baseline.0.len(), records as usize, "stream must deliver every record");
+    for workers in [1usize, 3, 8] {
+        for depth in [1usize, 2, 32] {
+            let (got, snap) = collect(records, workers, depth, None);
+            assert_eq!(
+                got, baseline,
+                "{workers}-worker depth-{depth} run diverged from single-worker"
+            );
+            assert_eq!(snap.records_encoded, records);
+            assert_eq!(snap.records_read, records);
+        }
+    }
+}
+
+#[test]
+fn forced_steals_leave_output_bit_identical() {
+    // Stall one worker hard enough that its deque *must* be robbed, and
+    // check both that steals actually happened and that they are
+    // invisible in the output.
+    let records = 480u64;
+    let (baseline, _) = collect(records, 1, 8, None);
+    for (slow_wid, workers) in [(0usize, 3usize), (2, 8)] {
+        let slow = Some((slow_wid, Duration::from_millis(3)));
+        let (got, snap) = collect(records, workers, 2, slow);
+        assert_eq!(
+            got, baseline,
+            "steals from slow worker {slow_wid}/{workers} changed the output"
+        );
+        assert!(
+            snap.batches_stolen > 0,
+            "slow worker {slow_wid}/{workers} was never robbed: {snap:?}"
+        );
+    }
+}
+
+#[test]
+fn forced_steals_with_tiny_queue_use_injector() {
+    // queue_depth=1 + a stalled worker: its single slot fills instantly,
+    // so overflow must route through the injector — and the output still
+    // must not move.
+    let records = 320u64;
+    let (baseline, _) = collect(records, 1, 8, None);
+    let (got, snap) = collect(records, 4, 1, Some((0, Duration::from_millis(2))));
+    assert_eq!(got, baseline, "injector overflow changed the output");
+    assert!(
+        snap.injector_batches > 0,
+        "depth-1 queues with a stalled worker never overflowed: {snap:?}"
+    );
+}
+
+#[test]
+fn consumer_sees_stream_order_under_steals() {
+    let (out, _) = collect(400, 8, 1, Some((1, Duration::from_millis(1))));
+    let seqs = out.2;
+    let mut sorted = seqs.clone();
+    sorted.sort();
+    assert_eq!(seqs, sorted, "reorderer must deliver stream order under steals");
+    assert_eq!(seqs.len(), 50, "400 records / batch 8");
+}
+
+#[test]
+fn early_stop_under_forced_steals_unwinds_cleanly() {
+    // Stop after 5 batches while a worker is stalled: the reader, parked
+    // siblings and the stalled worker must all unwind (no deadlock, no
+    // panic), which `run_pipeline` proves by returning at all.
+    let stream = WhaleStream::new(100_000);
+    let mut batches = 0usize;
+    run_pipeline(
+        stream,
+        &enc_cfg(),
+        &CoordinatorCfg {
+            batch_size: 8,
+            n_workers: 4,
+            queue_depth: 2,
+            max_records: Some(100_000),
+            slow_worker: Some((0, Duration::from_millis(2))),
+            ..Default::default()
+        },
+        |_| {
+            batches += 1;
+            batches < 5
+        },
+    );
+    assert_eq!(batches, 5);
+}
+
+#[test]
+fn keep_records_survives_stealing() {
+    // Raw records must stay aligned with their encodings no matter which
+    // worker encoded the batch.
+    let stream = WhaleStream::new(240);
+    let mut n = 0usize;
+    run_pipeline(
+        stream,
+        &enc_cfg(),
+        &CoordinatorCfg {
+            batch_size: 8,
+            n_workers: 3,
+            queue_depth: 2,
+            keep_records: true,
+            max_records: Some(240),
+            slow_worker: Some((1, Duration::from_millis(1))),
+            ..Default::default()
+        },
+        |b| {
+            let recs = b.records.as_ref().expect("records kept");
+            assert_eq!(recs.len(), b.encodings.len());
+            assert_eq!(recs.len(), b.labels.len());
+            for (r, y) in recs.iter().zip(b.labels.iter()) {
+                assert_eq!(r.label, *y, "labels must track their records");
+            }
+            n += recs.len();
+            true
+        },
+    );
+    assert_eq!(n, 240);
+}
+
+#[test]
+fn recycling_round_trips_under_skew() {
+    // A *borrowing* consumer (leaves the batch intact, unlike `collect`,
+    // which drains and therefore opts out of recycling) keeps the pools
+    // warm even while batches hop between workers; after enough batches
+    // the recycle counter must be well past zero.
+    let records = 1600u64;
+    let stream = WhaleStream::new(records);
+    let mut n = 0usize;
+    let stats = run_pipeline(
+        stream,
+        &enc_cfg(),
+        &CoordinatorCfg {
+            batch_size: 8,
+            n_workers: 3,
+            queue_depth: 4,
+            max_records: Some(records),
+            ..Default::default()
+        },
+        |b| {
+            n += b.encodings.len();
+            true
+        },
+    );
+    assert_eq!(n as u64, records);
+    let snap = stats.snapshot();
+    assert!(
+        snap.buffers_recycled > records / 2,
+        "recycle loop barely ran: {snap:?}"
+    );
+}

@@ -113,6 +113,15 @@ fn check_numeric(enc: &dyn NumericEncoder, cases: u64, n: usize) {
     scratch.recycle_all(out.drain(..));
     enc.encode_batch_with(&refs, &mut scratch, &mut out);
     assert_eq!(out, want, "{} encode_batch_with (recycled)", enc.name());
+    // Flat path (the coordinator's staging layout): same rows, one
+    // contiguous buffer — must stay bit-identical to the slice path.
+    let mut flat: Vec<f32> = Vec::with_capacity(xs.len() * n);
+    for x in &xs {
+        flat.extend_from_slice(x);
+    }
+    scratch.recycle_all(out.drain(..));
+    enc.encode_batch_flat_with(&flat, n, &mut scratch, &mut out);
+    assert_eq!(out, want, "{} encode_batch_flat_with", enc.name());
 }
 
 #[test]
@@ -264,8 +273,8 @@ fn pipeline_output_worker_count_invariant() {
                 ..Default::default()
             },
             |b| {
-                encs.extend(b.encodings);
-                labels.extend(b.labels);
+                encs.extend(b.encodings.drain(..));
+                labels.extend(b.labels.drain(..));
                 true
             },
         );
@@ -334,8 +343,8 @@ fn pipeline_ragged_skew_worker_count_invariant() {
                 ..Default::default()
             },
             |b| {
-                encs.extend(b.encodings);
-                labels.extend(b.labels);
+                encs.extend(b.encodings.drain(..));
+                labels.extend(b.labels.drain(..));
                 true
             },
         );
