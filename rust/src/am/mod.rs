@@ -1,0 +1,567 @@
+//! Associative memory (AM): the inference half of the HDC pipeline.
+//!
+//! Classical HDC inference is a nearest-prototype lookup — encode the
+//! query, score it against one prototype hypervector per class, return
+//! the best class ("Classification using Hyperdimensional Computing: A
+//! Review"). The streaming encoders make the *featurization* cheap
+//! enough for a serving hot path (the paper's whole point); this module
+//! makes the *lookup* equally cheap: prototypes are stored row-major in
+//! three precisions and scored with the branch-free similarity kernels
+//! in [`crate::encoding::kernels`]:
+//!
+//! * **f32** — exact dot-product scoring ([`kernels::dot_f32`]); the
+//!   reference precision, bit-compatible with offline
+//!   [`LogisticModel`] scoring up to f32-vs-f64 accumulation.
+//! * **int8** — symmetric per-class quantization ([`quantize_i8`]); 4×
+//!   smaller, scored with the widening integer dot ([`kernels::dot_i8`])
+//!   and rescaled once per class.
+//! * **binary** — sign-binarized, bit-packed 64 coordinates per word;
+//!   32× smaller than f32, scored with popcount-Hamming
+//!   ([`kernels::hamming_packed`] for dense queries,
+//!   [`kernels::and_popcount`] for sparse ones). "A Theoretical
+//!   Perspective on Hyperdimensional Computing" shows sign quantization
+//!   preserves the class-separation guarantees, which is why the tiny
+//!   store still classifies.
+//!
+//! Stores are built either from a trained [`LogisticModel`]
+//! ([`AmStore::from_logistic`] — two classes, ±θ) or by bundling
+//! per-class encoding sums ([`AmBuilder`] — the classic HDC training
+//! rule). Scoring is borrow-based: all staging lives in an
+//! [`AmScratch`], so the serving loop scores with zero steady-state
+//! allocations.
+
+pub mod quantize;
+
+pub use quantize::{pack_indices, pack_signs, quantize_i8, words_for};
+
+use crate::encoding::kernels;
+use crate::encoding::Encoding;
+use crate::model::LogisticModel;
+
+/// Which prototype representation a scoring call reads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Int8,
+    Binary,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+            Precision::Binary => "binary",
+        }
+    }
+}
+
+/// Reusable scoring scratch: per-class score staging plus the quantized
+/// views of the current query. One per scoring thread; recycling it
+/// keeps the serve loop allocation-free after warmup.
+#[derive(Debug, Default)]
+pub struct AmScratch {
+    /// Scores of the most recent [`AmStore::score_into`] call, one per
+    /// class, in class order.
+    pub scores: Vec<f32>,
+    /// Packed query bits (dense sign rows or sparse active-coordinate
+    /// rows, depending on the query representation).
+    qbits: Vec<u64>,
+    /// Int8-quantized dense query.
+    q_i8: Vec<i8>,
+}
+
+impl AmScratch {
+    pub fn new() -> AmScratch {
+        AmScratch::default()
+    }
+}
+
+/// Per-class prototype store, all three precisions materialized at
+/// construction (the store is tiny next to the encoder state: C·d f32s
+/// plus the int8 and packed-sign mirrors — for the paper's d=20k and a
+/// binary task that is ~160 KiB + ~40 KiB + ~5 KiB).
+#[derive(Clone, Debug)]
+pub struct AmStore {
+    d: usize,
+    n_classes: usize,
+    /// Row-major (n_classes × d) f32 prototypes.
+    protos: Vec<f32>,
+    /// Per-class additive bias, applied to f32 and int8 scores
+    /// (logistic-derived stores carry ±bias; bundled stores carry 0).
+    biases: Vec<f32>,
+    /// Row-major (n_classes × d) symmetric int8 prototypes.
+    protos_i8: Vec<i8>,
+    /// Per-class int8 dequantization scales.
+    scales: Vec<f32>,
+    /// Row-major (n_classes × words_per_row) packed sign rows
+    /// (bit set ⇔ coordinate negative).
+    protos_bits: Vec<u64>,
+    words_per_row: usize,
+}
+
+impl AmStore {
+    /// Build a store from per-class f32 prototype rows (all of length
+    /// `d`) and optional per-class biases. The int8 and binary mirrors
+    /// are derived immediately.
+    pub fn from_prototypes(d: usize, rows: &[Vec<f32>], biases: Option<&[f32]>) -> AmStore {
+        let n_classes = rows.len();
+        assert!(n_classes > 0, "AmStore needs at least one class");
+        if let Some(b) = biases {
+            assert_eq!(b.len(), n_classes, "one bias per class");
+        }
+        let words_per_row = words_for(d);
+        let mut protos = Vec::with_capacity(n_classes * d);
+        let mut protos_i8 = Vec::with_capacity(n_classes * d);
+        let mut scales = Vec::with_capacity(n_classes);
+        let mut protos_bits = Vec::with_capacity(n_classes * words_per_row);
+        let mut qrow: Vec<i8> = Vec::with_capacity(d);
+        let mut brow: Vec<u64> = Vec::with_capacity(words_per_row);
+        for row in rows {
+            assert_eq!(row.len(), d, "prototype row length != d");
+            protos.extend_from_slice(row);
+            scales.push(quantize_i8(row, &mut qrow));
+            protos_i8.extend_from_slice(&qrow);
+            pack_signs(row, &mut brow);
+            protos_bits.extend_from_slice(&brow);
+        }
+        let biases = match biases {
+            Some(b) => b.to_vec(),
+            None => vec![0.0; n_classes],
+        };
+        AmStore { d, n_classes, protos, biases, protos_i8, scales, protos_bits, words_per_row }
+    }
+
+    /// A two-class store from a trained binary logistic model: class 1
+    /// holds (+θ, +bias), class 0 holds (−θ, −bias), so f32 top-1 equals
+    /// the sign of the offline score `θ·φ + b` (ties — score exactly
+    /// zero — break to class 0; [`LogisticModel`] rounds them up to
+    /// class 1, and f32-vs-f64 accumulation can differ in the last ulp,
+    /// so callers comparing the two should margin-guard near-zero
+    /// scores).
+    pub fn from_logistic(m: &LogisticModel) -> AmStore {
+        let neg: Vec<f32> = m.theta.iter().map(|t| -t).collect();
+        AmStore::from_prototypes(
+            m.dim(),
+            &[neg, m.theta.clone()],
+            Some(&[-m.bias, m.bias]),
+        )
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Prototype bytes resident for one precision (the serving-memory
+    /// axis: binary is 32× smaller than f32).
+    pub fn memory_bytes(&self, prec: Precision) -> usize {
+        match prec {
+            Precision::F32 => self.protos.len() * 4 + self.biases.len() * 4,
+            Precision::Int8 => self.protos_i8.len() + self.scales.len() * 4 + self.biases.len() * 4,
+            Precision::Binary => self.protos_bits.len() * 8,
+        }
+    }
+
+    #[inline]
+    fn row_f32(&self, c: usize) -> &[f32] {
+        &self.protos[c * self.d..(c + 1) * self.d]
+    }
+
+    #[inline]
+    fn row_i8(&self, c: usize) -> &[i8] {
+        &self.protos_i8[c * self.d..(c + 1) * self.d]
+    }
+
+    #[inline]
+    fn row_bits(&self, c: usize) -> &[u64] {
+        &self.protos_bits[c * self.words_per_row..(c + 1) * self.words_per_row]
+    }
+
+    /// Score `enc` against every class prototype at the requested
+    /// precision, into `scratch.scores` (class order). Allocation-free
+    /// once the scratch buffers are warm.
+    ///
+    /// Score semantics per precision:
+    /// * `F32`: `dot(q, proto_c) + bias_c` (f32, lane-striped kernel).
+    /// * `Int8`: `dot_i8(q8, p8_c) · scale_q · scale_c + bias_c` for
+    ///   dense queries (the query is quantized once per call); sparse
+    ///   0/1 queries skip query quantization and sum `p8_c` at the
+    ///   active coordinates.
+    /// * `Binary`: the ±1 dot `d − 2·hamming` for dense queries,
+    ///   `nnz − 2·overlap(active, negative)` for sparse ones. No bias —
+    ///   a Hamming count and an f32 bias live on different scales, and
+    ///   binarized scoring is only meaningful as a ranking.
+    pub fn score_into(&self, enc: &Encoding, prec: Precision, scratch: &mut AmScratch) {
+        assert_eq!(enc.dim(), self.d, "query dim != store dim");
+        scratch.scores.clear();
+        match (prec, enc) {
+            (Precision::F32, Encoding::Dense(q)) => {
+                for c in 0..self.n_classes {
+                    scratch.scores.push(kernels::dot_f32(q, self.row_f32(c)) + self.biases[c]);
+                }
+            }
+            (Precision::F32, Encoding::SparseBinary { indices, .. }) => {
+                for c in 0..self.n_classes {
+                    let row = self.row_f32(c);
+                    let mut acc = 0.0f32;
+                    for &i in indices.iter() {
+                        acc += row[i as usize];
+                    }
+                    scratch.scores.push(acc + self.biases[c]);
+                }
+            }
+            (Precision::Int8, Encoding::Dense(q)) => {
+                let qscale = quantize_i8(q, &mut scratch.q_i8);
+                for c in 0..self.n_classes {
+                    let dot = kernels::dot_i8(&scratch.q_i8, self.row_i8(c));
+                    scratch.scores.push(dot as f32 * (qscale * self.scales[c]) + self.biases[c]);
+                }
+            }
+            (Precision::Int8, Encoding::SparseBinary { indices, .. }) => {
+                for c in 0..self.n_classes {
+                    let row = self.row_i8(c);
+                    let mut acc = 0i64;
+                    for &i in indices.iter() {
+                        acc += row[i as usize] as i64;
+                    }
+                    scratch.scores.push(acc as f32 * self.scales[c] + self.biases[c]);
+                }
+            }
+            (Precision::Binary, Encoding::Dense(q)) => {
+                pack_signs(q, &mut scratch.qbits);
+                for c in 0..self.n_classes {
+                    let h = kernels::hamming_packed(&scratch.qbits, self.row_bits(c));
+                    scratch.scores.push(self.d as f32 - 2.0 * h as f32);
+                }
+            }
+            (Precision::Binary, Encoding::SparseBinary { indices, d }) => {
+                pack_indices(indices, *d, &mut scratch.qbits);
+                for c in 0..self.n_classes {
+                    let overlap = kernels::and_popcount(&scratch.qbits, self.row_bits(c));
+                    scratch.scores.push(indices.len() as f32 - 2.0 * overlap as f32);
+                }
+            }
+        }
+    }
+
+    /// Best class and its score (ties break to the lowest class index).
+    pub fn top1(&self, enc: &Encoding, prec: Precision, scratch: &mut AmScratch) -> (u32, f32) {
+        self.score_into(enc, prec, scratch);
+        let mut best = 0usize;
+        let mut best_score = scratch.scores[0];
+        for (c, &s) in scratch.scores.iter().enumerate().skip(1) {
+            if s > best_score {
+                best = c;
+                best_score = s;
+            }
+        }
+        (best as u32, best_score)
+    }
+
+    /// Top-k classes by score, descending (stable within ties by class
+    /// index), into a caller-reused `out`. O(C·k) insertion — class and
+    /// k counts are small on the serving path.
+    pub fn topk_into(
+        &self,
+        enc: &Encoding,
+        prec: Precision,
+        k: usize,
+        scratch: &mut AmScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        self.score_into(enc, prec, scratch);
+        out.clear();
+        let k = k.min(self.n_classes).max(1);
+        for (c, &s) in scratch.scores.iter().enumerate() {
+            // `>=` keeps earlier classes ahead of later equal scores.
+            let pos = out.partition_point(|&(_, os)| os >= s);
+            if pos < k {
+                if out.len() == k {
+                    out.pop();
+                }
+                out.insert(pos, (c as u32, s));
+            }
+        }
+    }
+}
+
+/// Bundling-rule trainer: prototypes as per-class sums (optionally
+/// means) of encoded examples — the classic one-pass HDC learning rule,
+/// streamable and merge-able across shards (sums commute).
+#[derive(Clone, Debug)]
+pub struct AmBuilder {
+    d: usize,
+    /// Row-major (n_classes × d) running sums.
+    sums: Vec<f32>,
+    counts: Vec<u64>,
+}
+
+impl AmBuilder {
+    pub fn new(d: usize, n_classes: usize) -> AmBuilder {
+        assert!(n_classes > 0);
+        AmBuilder { d, sums: vec![0.0; n_classes * d], counts: vec![0; n_classes] }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Accumulate one encoded example into its class sum.
+    pub fn add(&mut self, class: usize, enc: &Encoding) {
+        assert_eq!(enc.dim(), self.d, "encoding dim != builder dim");
+        let row = &mut self.sums[class * self.d..(class + 1) * self.d];
+        match enc {
+            Encoding::Dense(v) => kernels::axpy(row, v, 1.0),
+            Encoding::SparseBinary { indices, .. } => {
+                for &i in indices.iter() {
+                    row[i as usize] += 1.0;
+                }
+            }
+        }
+        self.counts[class] += 1;
+    }
+
+    /// Merge another builder's sums (shard-parallel training).
+    pub fn merge(&mut self, other: &AmBuilder) {
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, &b) in self.sums.iter_mut().zip(&other.sums) {
+            *a += b;
+        }
+        for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    /// Finish into a store. `normalize` divides each sum by its class
+    /// count (mean prototypes — insensitive to class imbalance; raw sums
+    /// favor frequent classes, which is sometimes what a CTR-style task
+    /// wants).
+    pub fn finish(self, normalize: bool) -> AmStore {
+        let d = self.d;
+        let rows: Vec<Vec<f32>> = self
+            .sums
+            .chunks_exact(d)
+            .zip(&self.counts)
+            .map(|(row, &n)| {
+                if normalize && n > 0 {
+                    let inv = 1.0f32 / n as f32;
+                    row.iter().map(|&x| x * inv).collect()
+                } else {
+                    row.to_vec()
+                }
+            })
+            .collect();
+        AmStore::from_prototypes(d, &rows, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::sparse_from_indices;
+    use crate::util::rng::Rng;
+
+    fn dense(v: &[f32]) -> Encoding {
+        Encoding::Dense(v.to_vec())
+    }
+
+    #[test]
+    fn f32_scoring_matches_manual_dot() {
+        let store = AmStore::from_prototypes(
+            4,
+            &[vec![1.0, 0.0, -1.0, 2.0], vec![0.5, 0.5, 0.5, 0.5]],
+            Some(&[0.25, -0.25]),
+        );
+        let mut s = AmScratch::new();
+        store.score_into(&dense(&[1.0, 2.0, 3.0, 4.0]), Precision::F32, &mut s);
+        assert_eq!(s.scores.len(), 2);
+        assert!((s.scores[0] - (1.0 - 3.0 + 8.0 + 0.25)).abs() < 1e-6);
+        assert!((s.scores[1] - (5.0 - 0.25)).abs() < 1e-6);
+        // Sparse query: sum of prototype coords at active indices.
+        store.score_into(&sparse_from_indices(vec![0, 3], 4), Precision::F32, &mut s);
+        assert!((s.scores[0] - (1.0 + 2.0 + 0.25)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logistic_store_top1_matches_score_sign() {
+        let mut rng = Rng::new(11);
+        let d = 64;
+        let mut m = LogisticModel::new(d);
+        for t in m.theta.iter_mut() {
+            *t = rng.normal_f32();
+        }
+        m.bias = 0.3;
+        let store = AmStore::from_logistic(&m);
+        let mut s = AmScratch::new();
+        for _ in 0..100 {
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let enc = dense(&q);
+            let z = m.score(&enc);
+            if z.abs() < 1e-3 {
+                continue; // margin-guard f32-vs-f64 accumulation
+            }
+            let (top, _) = store.top1(&enc, Precision::F32, &mut s);
+            assert_eq!(top == 1, z > 0.0, "z={z}");
+        }
+    }
+
+    #[test]
+    fn binary_scoring_matches_naive_sign_dot() {
+        let mut rng = Rng::new(12);
+        let d = 130; // straddles two packed words + a tail
+        let rows: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+        let store = AmStore::from_prototypes(d, &rows, None);
+        let mut s = AmScratch::new();
+        for case in 0..20 {
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            store.score_into(&dense(&q), Precision::Binary, &mut s);
+            for (c, row) in rows.iter().enumerate() {
+                // Naive ±1 dot of the two sign vectors.
+                let want: i64 = q
+                    .iter()
+                    .zip(row)
+                    .map(|(&x, &p)| {
+                        let sx = if x >= 0.0 { 1i64 } else { -1 };
+                        let sp = if p >= 0.0 { 1i64 } else { -1 };
+                        sx * sp
+                    })
+                    .sum();
+                assert_eq!(s.scores[c], want as f32, "case {case} class {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn binary_sparse_scoring_matches_naive() {
+        let mut rng = Rng::new(13);
+        let d = 200;
+        let rows: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+        let store = AmStore::from_prototypes(d, &rows, None);
+        let mut s = AmScratch::new();
+        for _ in 0..20 {
+            let idx: Vec<u32> = (0..30).map(|_| rng.below(d as u64) as u32).collect();
+            let enc = sparse_from_indices(idx, d);
+            store.score_into(&enc, Precision::Binary, &mut s);
+            if let Encoding::SparseBinary { indices, .. } = &enc {
+                for (c, row) in rows.iter().enumerate() {
+                    let want: i64 = indices
+                        .iter()
+                        .map(|&i| if row[i as usize] >= 0.0 { 1i64 } else { -1 })
+                        .sum();
+                    assert_eq!(s.scores[c], want as f32, "class {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_scoring_matches_exact_formula() {
+        let mut rng = Rng::new(14);
+        let d = 50;
+        let rows: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+        let store = AmStore::from_prototypes(d, &rows, None);
+        let mut s = AmScratch::new();
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        store.score_into(&dense(&q), Precision::Int8, &mut s);
+        // Replicate the quantize + integer-dot + rescale pipeline.
+        let mut q8 = Vec::new();
+        let qscale = quantize_i8(&q, &mut q8);
+        for (c, row) in rows.iter().enumerate() {
+            let mut p8 = Vec::new();
+            let pscale = quantize_i8(row, &mut p8);
+            let dot: i64 = q8.iter().zip(&p8).map(|(&a, &b)| a as i64 * b as i64).sum();
+            let want = dot as f32 * (qscale * pscale);
+            assert_eq!(s.scores[c], want, "class {c}");
+        }
+    }
+
+    #[test]
+    fn builder_bundles_and_classifies_clustered_data() {
+        // Two well-separated clusters of dense vectors; mean prototypes
+        // must classify fresh samples from each cluster.
+        let mut rng = Rng::new(15);
+        let d = 256;
+        let centers: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..d).map(|_| rng.normal_f32() * 2.0).collect()).collect();
+        let sample = |rng: &mut Rng, c: usize| -> Vec<f32> {
+            centers[c].iter().map(|&x| x + rng.normal_f32() * 0.5).collect()
+        };
+        let mut b = AmBuilder::new(d, 2);
+        for _ in 0..50 {
+            for c in 0..2 {
+                b.add(c, &dense(&sample(&mut rng, c)));
+            }
+        }
+        let store = b.finish(true);
+        let mut s = AmScratch::new();
+        let mut correct = 0;
+        for _ in 0..40 {
+            for c in 0..2 {
+                let (top, _) = store.top1(&dense(&sample(&mut rng, c)), Precision::F32, &mut s);
+                if top as usize == c {
+                    correct += 1;
+                }
+            }
+        }
+        assert!(correct >= 72, "only {correct}/80 correct");
+    }
+
+    #[test]
+    fn topk_orders_and_breaks_ties_by_class() {
+        let store = AmStore::from_prototypes(
+            2,
+            &[vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 0.0]],
+            None,
+        );
+        let mut s = AmScratch::new();
+        let mut out = Vec::new();
+        // Query [1, 0]: classes 0 and 2 tie at 1.0, class 1 scores 0.
+        store.topk_into(&dense(&[1.0, 0.0]), Precision::F32, 3, &mut s, &mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!((out[0].0, out[1].0, out[2].0), (0, 2, 1));
+        store.topk_into(&dense(&[1.0, 0.0]), Precision::F32, 1, &mut s, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 0);
+    }
+
+    #[test]
+    fn memory_accounting_orders_precisions() {
+        let store = AmStore::from_prototypes(1000, &[vec![1.0; 1000]; 4], None);
+        let f = store.memory_bytes(Precision::F32);
+        let i = store.memory_bytes(Precision::Int8);
+        let b = store.memory_bytes(Precision::Binary);
+        assert!(b < i && i < f, "{b} {i} {f}");
+        assert!(f >= 16_000);
+        assert_eq!(b, 4 * 16 * 8); // 1000 bits -> 16 words per class
+    }
+
+    #[test]
+    fn builder_merge_equals_single_builder() {
+        let mut rng = Rng::new(16);
+        let d = 32;
+        let encs: Vec<(usize, Encoding)> = (0..20)
+            .map(|i| {
+                let idx: Vec<u32> = (0..5).map(|_| rng.below(d as u64) as u32).collect();
+                (i % 2, sparse_from_indices(idx, d))
+            })
+            .collect();
+        let mut whole = AmBuilder::new(d, 2);
+        let mut a = AmBuilder::new(d, 2);
+        let mut b = AmBuilder::new(d, 2);
+        for (i, (c, e)) in encs.iter().enumerate() {
+            whole.add(*c, e);
+            if i % 2 == 0 { a.add(*c, e) } else { b.add(*c, e) }
+        }
+        a.merge(&b);
+        assert_eq!(a.sums, whole.sums);
+        assert_eq!(a.counts, whole.counts);
+    }
+}

@@ -1,0 +1,132 @@
+//! Prototype quantization for the associative-memory store: symmetric
+//! int8 and sign-binarized bit-packed forms of an f32 hypervector.
+//!
+//! Both are *lossy re-representations of the same prototype*, which is
+//! exactly what the HDC theory permits: "A Theoretical Perspective on
+//! Hyperdimensional Computing" shows the class-separation margins that
+//! make AM lookup work survive coordinate-wise quantization down to
+//! signs (the information lives in the high-dimensional direction, not
+//! the per-coordinate magnitudes). The store therefore keeps all three
+//! precisions and lets the serving layer pick its point on the
+//! memory/accuracy curve.
+//!
+//! Conventions (shared with the kernel layer):
+//! * int8 is **symmetric**: `scale = max|v| / 127` (1.0 for an all-zero
+//!   or non-finite-max row), `q[i] = round(v[i] / scale)` clamped to
+//!   ±127, dequantized as `q[i] · scale`.
+//! * sign packing matches [`crate::encoding::kernels::sign_quantize`]:
+//!   `sign(0) := +1` (both zero encodings), NaN compares false hence −1.
+//!   A **set** bit means *negative*, so an all-zero row packs to all-zero
+//!   words.
+
+/// Symmetric int8 quantization of `v`, appended into `out` (cleared
+/// first); returns the scale. `q · scale` reconstructs each coordinate
+/// to within `scale / 2`.
+pub fn quantize_i8(v: &[f32], out: &mut Vec<i8>) -> f32 {
+    out.clear();
+    out.reserve(v.len());
+    let mut max_abs = 0.0f32;
+    for &x in v {
+        let a = x.abs();
+        if a > max_abs {
+            max_abs = a;
+        }
+    }
+    // All-zero rows (and rows whose max is NaN/inf, which never occur
+    // from finite encodings) quantize against scale 1.0: q = clamp(round(v)).
+    let scale = if max_abs > 0.0 && max_abs.is_finite() { max_abs / 127.0 } else { 1.0 };
+    for &x in v {
+        let q = (x / scale).round();
+        out.push(q.clamp(-127.0, 127.0) as i8);
+    }
+    scale
+}
+
+/// Number of packed u64 words a `d`-dimensional sign row occupies.
+#[inline]
+pub fn words_for(d: usize) -> usize {
+    d.div_ceil(64)
+}
+
+/// Sign-binarize `v` into packed words appended to `out` (cleared
+/// first): bit `i` of the row is set iff `v[i]` is negative under the
+/// `sign(0) := +1` convention (NaN packs as negative, matching
+/// `sign_quantize`). Trailing pad bits of the last word are zero.
+pub fn pack_signs(v: &[f32], out: &mut Vec<u64>) {
+    out.clear();
+    out.resize(words_for(v.len()), 0);
+    for (i, &x) in v.iter().enumerate() {
+        if !(x >= 0.0) {
+            out[i >> 6] |= 1u64 << (i & 63);
+        }
+    }
+}
+
+/// Pack a sparse-binary encoding's active coordinates into a `d`-wide
+/// bit row (bit set ⇔ coordinate active), appended to `out` (cleared
+/// first). Used to score sparse queries against packed sign rows via
+/// `and_popcount`.
+pub fn pack_indices(indices: &[u32], d: usize, out: &mut Vec<u64>) {
+    out.clear();
+    out.resize(words_for(d), 0);
+    for &i in indices {
+        debug_assert!((i as usize) < d);
+        out[(i >> 6) as usize] |= 1u64 << (i & 63);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_round_trips_within_half_scale() {
+        let v = vec![0.0f32, 1.0, -2.5, 127.0, -127.0, 0.3];
+        let mut q = Vec::new();
+        let scale = quantize_i8(&v, &mut q);
+        assert_eq!(q.len(), v.len());
+        for (&x, &qi) in v.iter().zip(&q) {
+            let rec = qi as f32 * scale;
+            assert!((x - rec).abs() <= scale / 2.0 + 1e-6, "{x} -> {qi} ({rec})");
+        }
+        // Extremes hit exactly ±127.
+        assert_eq!(q[3], 127);
+        assert_eq!(q[4], -127);
+    }
+
+    #[test]
+    fn quantize_all_zero_row() {
+        let mut q = Vec::new();
+        let scale = quantize_i8(&[0.0, 0.0, -0.0], &mut q);
+        assert_eq!(scale, 1.0);
+        assert_eq!(q, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn pack_signs_convention_and_padding() {
+        let v = vec![1.0f32, -1.0, 0.0, -0.0, f32::NAN];
+        let mut bits = Vec::new();
+        pack_signs(&v, &mut bits);
+        assert_eq!(bits.len(), 1);
+        // -1.0 at bit 1; -0.0 is non-negative under >= 0; NaN packs set.
+        assert_eq!(bits[0], (1 << 1) | (1 << 4));
+        // 65 coords -> 2 words, pad bits clear.
+        let v2 = vec![-1.0f32; 65];
+        pack_signs(&v2, &mut bits);
+        assert_eq!(bits.len(), 2);
+        assert_eq!(bits[0], u64::MAX);
+        assert_eq!(bits[1], 1);
+    }
+
+    #[test]
+    fn pack_indices_sets_active_bits() {
+        let mut bits = Vec::new();
+        pack_indices(&[0, 63, 64, 100], 128, &mut bits);
+        assert_eq!(bits.len(), 2);
+        assert_eq!(bits[0], 1 | (1 << 63));
+        assert_eq!(bits[1], 1 | (1 << 36));
+        // Reused buffer is fully reset.
+        pack_indices(&[], 64, &mut bits);
+        assert_eq!(bits, vec![0]);
+    }
+}

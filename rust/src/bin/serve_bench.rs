@@ -1,0 +1,92 @@
+//! Closed-loop load generator for the online serving subsystem: stands
+//! up the full stack (submission queue → size-or-deadline micro-batcher
+//! → work-stealing encode workers → associative-memory scoring) and
+//! drives it from closed-loop synthetic clients, sweeping store
+//! precision and client concurrency.
+//!
+//! ```text
+//! cargo run --release --bin serve_bench
+//! SHDC_SERVE_REQUESTS=200000 SHDC_SERVE_CLIENTS=16 \
+//!     cargo run --release --bin serve_bench
+//! ```
+//!
+//! Closed-loop means each client submits, blocks for the response, and
+//! immediately submits again — offered load self-regulates to server
+//! capacity, so the reported latency distribution is honest (no
+//! coordinated omission from an open-loop script outrunning the server).
+
+use std::time::Duration;
+
+use shdc::am::{AmBuilder, Precision};
+use shdc::coordinator::{CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::encoding::BundleMethod;
+use shdc::serve::{run_closed_loop, LoadCfg, ServeCfg};
+use shdc::util::env_u64;
+
+fn main() {
+    let total_requests = env_u64("SHDC_SERVE_REQUESTS", 50_000);
+    let max_clients = env_u64("SHDC_SERVE_CLIENTS", 8) as usize;
+
+    let enc = EncoderCfg {
+        cat: CatCfg::Bloom { d: 10_000, k: 4 },
+        num: NumCfg::Sjlt { d: 10_000, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 31,
+    };
+    // A 2-class bundled store (content is irrelevant to throughput;
+    // shape is the paper's d=20k concat).
+    let store = {
+        let mut b = AmBuilder::new(enc.out_dim(), 2);
+        let mut renc = enc.build();
+        let mut stream =
+            shdc::data::SyntheticStream::new(SyntheticConfig::sampled(32));
+        use shdc::data::RecordStream;
+        for _ in 0..512 {
+            let rec = stream.next_record().unwrap();
+            b.add(rec.label as usize, &renc.encode(&rec));
+        }
+        b.finish(true)
+    };
+
+    println!("== serve_bench: closed-loop synthetic load ==");
+    println!(
+        "   encoder bloom d=10k k=4 + sjlt d=10k k=4 (concat, d=20k); \
+         {total_requests} requests per scenario"
+    );
+    println!(
+        "   store: 2 classes — f32 {} B, int8 {} B, binary {} B",
+        store.memory_bytes(Precision::F32),
+        store.memory_bytes(Precision::Int8),
+        store.memory_bytes(Precision::Binary),
+    );
+
+    for precision in [Precision::F32, Precision::Int8, Precision::Binary] {
+        for clients in [1usize, max_clients.max(1)] {
+            let cfg = ServeCfg {
+                coordinator: CoordinatorCfg {
+                    batch_size: 64,
+                    n_workers: 2,
+                    queue_depth: 4,
+                    ..Default::default()
+                },
+                max_batch_delay: Duration::from_micros(500),
+                queue_cap: 256,
+                slots: (2 * clients).max(16),
+                precision,
+                ..ServeCfg::new(enc.clone())
+            };
+            let load = LoadCfg {
+                clients,
+                requests_per_client: (total_requests / clients as u64).max(1),
+                data: SyntheticConfig {
+                    alphabet_size: 1_000_000,
+                    ..SyntheticConfig::sampled(33)
+                },
+            };
+            let report = run_closed_loop(cfg, store.clone(), &load);
+            println!("  {:<7} {clients:>3} client(s): {}", precision.name(), report.row());
+        }
+    }
+}

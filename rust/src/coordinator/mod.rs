@@ -19,6 +19,17 @@
 //!     │              ▲         idle workers steal          ▼
 //!     │              └── siblings' deque backs ◄── recycle channel
 //!     └──────── record-spine returns ◄─────────────  (consumer → workers)
+//!
+//!  The serving subsystem plugs into both ends of the same pipeline
+//!  (`crate::serve`): the reader's stream is the request micro-batcher
+//!  and the consumer is the AM scorer — no serving-specific dispatch:
+//!
+//!  clients ─► submission queue ─► RequestStream ──► reader (above)
+//!     ▲        (bounded)           (size/idle/deadline cut; one
+//!     │                             `Pending` per request, in order)
+//!     └── completion slots ◄── consumer: `am::AmStore` top-1 over
+//!         (responses + recycled      f32 / int8 / binarized prototypes
+//!          record buffers)           + latency/queue-depth stats
 //! ```
 //!
 //! **Dispatch (§Perf).** The reader round-robins batches onto per-worker
@@ -101,6 +112,14 @@ pub struct CoordinatorCfg {
     /// given duration before encoding each batch, so its deque backs up
     /// and siblings must steal. Leave `None` outside scheduler tests.
     pub slow_worker: Option<(usize, Duration)>,
+    /// Raised (stored `true`) by the scheduler whenever the pipeline
+    /// stops abnormally — a worker panic, or the consumer dropping out —
+    /// so a *blocking* [`RecordStream`] (e.g. the serve subsystem's
+    /// request batcher, which can park indefinitely waiting for traffic)
+    /// has a flag to poll and unblock on instead of stranding the reader
+    /// thread forever. Streams that never block (all the data-layer
+    /// streams) can ignore it; leave `None` when unused.
+    pub stop_flag: Option<Arc<std::sync::atomic::AtomicBool>>,
 }
 
 impl Default for CoordinatorCfg {
@@ -112,6 +131,7 @@ impl Default for CoordinatorCfg {
             keep_records: false,
             max_records: None,
             slow_worker: None,
+            stop_flag: None,
         }
     }
 }
@@ -145,6 +165,9 @@ struct StealScheduler {
     /// The reader parks here when its target deque and the injector are
     /// both full.
     space_cv: Condvar,
+    /// Mirror of [`CoordinatorCfg::stop_flag`]: raised on [`Self::stop`]
+    /// so blocking streams can observe abnormal termination.
+    stop_flag: Option<Arc<std::sync::atomic::AtomicBool>>,
 }
 
 #[derive(Default)]
@@ -161,7 +184,11 @@ struct Ctl {
 type Taken = (RawBatch, bool, bool);
 
 impl StealScheduler {
-    fn new(n_workers: usize, queue_depth: usize) -> StealScheduler {
+    fn new(
+        n_workers: usize,
+        queue_depth: usize,
+        stop_flag: Option<Arc<std::sync::atomic::AtomicBool>>,
+    ) -> StealScheduler {
         let queues = (0..n_workers)
             .map(|_| Mutex::new(VecDeque::with_capacity(queue_depth)))
             .collect();
@@ -174,6 +201,7 @@ impl StealScheduler {
             ctl: Mutex::new(Ctl::default()),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
+            stop_flag,
         }
     }
 
@@ -323,6 +351,12 @@ impl StealScheduler {
     fn stop(&self) {
         let mut ctl = self.ctl.lock().unwrap();
         ctl.stopped = true;
+        if let Some(flag) = &self.stop_flag {
+            // Visible to blocking streams (which poll it with a bounded
+            // wait), so a dead pipeline can never strand the reader
+            // inside the stream's own park.
+            flag.store(true, Ordering::Release);
+        }
         self.work_cv.notify_all();
         self.space_cv.notify_all();
     }
@@ -395,7 +429,7 @@ where
     let stats = Arc::new(PipelineStats::new());
     let n_workers = cfg.n_workers.max(1);
     let queue_depth = cfg.queue_depth.max(1);
-    let sched = Arc::new(StealScheduler::new(n_workers, queue_depth));
+    let sched = Arc::new(StealScheduler::new(n_workers, queue_depth, cfg.stop_flag.clone()));
     let (enc_tx, enc_rx) = sync_channel::<EncodedBatch>(queue_depth);
     // Recycle path (consumer → workers): consumed batch shells return to
     // a worker, which drains the encoding buffers into its scratch pool.

@@ -12,6 +12,9 @@
 //! | [`bitset_sweep`] + [`bitset_mark`] | `EncodeScratch::sparse_from_staged` (Bloom dedup) | yes (sweep)  |
 //! | [`unpack_sign_bits_accumulate`] | `DenseHashEncoder` packed mode (bit → ±1 unpack)  | yes          |
 //! | [`axpy`], [`sign_quantize`]   | `DenseProjection` project / batch-project / finish  | yes          |
+//! | [`dot_f32`]                   | `am::AmStore` f32 prototype scoring                 | yes          |
+//! | [`dot_i8`]                    | `am::AmStore` int8 prototype scoring                | yes          |
+//! | [`hamming_packed`], [`and_popcount`] | `am::AmStore` binarized prototype scoring    | yes          |
 //! | [`signed_sum`]                | `RelaxedSjlt` CSR rows                              | no (see below) |
 //! | [`sort_dedup`]                | `sparse_from_indices` (legacy allocating dedup)     | no (see below) |
 //!
@@ -64,6 +67,16 @@
 //!   has no SIMD variant (both backends share the scalar loop). Same for
 //!   [`sort_dedup`], which is the comparison-sort legacy reference with
 //!   nothing to vectorize portably.
+//! * [`dot_f32`] *is* a reduction, but unlike [`signed_sum`] it gets a
+//!   SIMD variant by fixing the association order in the kernel
+//!   **contract**: both backends accumulate [`LANES`] lane-striped
+//!   partial sums over the full chunks, fold them with the fixed tree
+//!   [`fold_lanes`], and add a sequentially-accumulated tail. The scalar
+//!   backend performs that exact schedule without vector ops, so the
+//!   backends stay bit-identical (enforced like the rest of the suite).
+//! * [`dot_i8`], [`hamming_packed`] and [`and_popcount`] are integer
+//!   reductions — associative and exact — so the SIMD variants are free
+//!   to reassociate and bit-identity is automatic.
 
 /// f32 lanes per vector op in the `simd` backend (256-bit vectors).
 pub const LANES: usize = 8;
@@ -76,9 +89,15 @@ pub const SIMD_ENABLED: bool = cfg!(feature = "simd");
 pub const BACKEND: &str = if SIMD_ENABLED { "simd" } else { "scalar" };
 
 #[cfg(not(feature = "simd"))]
-pub use scalar::{axpy, bitset_sweep, scatter_signed, sign_quantize, unpack_sign_bits_accumulate};
+pub use scalar::{
+    and_popcount, axpy, bitset_sweep, dot_f32, dot_i8, hamming_packed, scatter_signed,
+    sign_quantize, unpack_sign_bits_accumulate,
+};
 #[cfg(feature = "simd")]
-pub use simd::{axpy, bitset_sweep, scatter_signed, sign_quantize, unpack_sign_bits_accumulate};
+pub use simd::{
+    and_popcount, axpy, bitset_sweep, dot_f32, dot_i8, hamming_packed, scatter_signed,
+    sign_quantize, unpack_sign_bits_accumulate,
+};
 
 // ---------------------------------------------------------------------------
 // Shared (backend-independent) kernels
@@ -131,6 +150,15 @@ pub fn bitset_mark(bitset: &mut [u64], staged: &[u32]) -> (usize, usize) {
         max_w = max_w.max(w);
     }
     (min_w, max_w)
+}
+
+/// The fixed fold tree both [`dot_f32`] backends use to combine their
+/// [`LANES`] striped partial sums: pairwise, then pairwise again, then
+/// one final add — the same shape a binary vector reduction performs, so
+/// the SIMD backend can reuse it verbatim on the extracted lanes.
+#[inline]
+pub fn fold_lanes(acc: [f32; LANES]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
 }
 
 /// Emit the set bits of word `w` (ascending) into `out` and clear it.
@@ -212,6 +240,68 @@ pub mod scalar {
         for w in min_w..=max_w {
             super::emit_word(bitset, w, out);
         }
+    }
+
+    /// Lane-striped f32 dot product (the AM scoring primitive, one class
+    /// prototype per call). The association order is part of the kernel
+    /// contract — [`super::LANES`] striped partial sums over the full
+    /// chunks, [`super::fold_lanes`] tree, sequential tail — so the SIMD
+    /// twin performs the identical f32 ops in the identical order.
+    #[inline]
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0.0f32; super::LANES];
+        let mut ac = a.chunks_exact(super::LANES);
+        let mut bc = b.chunks_exact(super::LANES);
+        for (av, bv) in ac.by_ref().zip(bc.by_ref()) {
+            for l in 0..super::LANES {
+                acc[l] += av[l] * bv[l];
+            }
+        }
+        let mut tail = 0.0f32;
+        for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+            tail += x * y;
+        }
+        super::fold_lanes(acc) + tail
+    }
+
+    /// Widening int8 dot product (quantized AM scoring): `Σ a[i]·b[i]`
+    /// accumulated in i64 so no input length can overflow. Integer, hence
+    /// exact under any association order.
+    #[inline]
+    pub fn dot_i8(a: &[i8], b: &[i8]) -> i64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0i64;
+        for (&x, &y) in a.iter().zip(b) {
+            acc += x as i64 * y as i64;
+        }
+        acc
+    }
+
+    /// Popcount-Hamming distance between two equal-length packed bit
+    /// rows: `Σ popcount(a[w] ^ b[w])` — the binarized-AM scoring
+    /// primitive (a ±1 dot product is `d - 2·hamming`).
+    #[inline]
+    pub fn hamming_packed(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0u64;
+        for (&x, &y) in a.iter().zip(b) {
+            acc += (x ^ y).count_ones() as u64;
+        }
+        acc
+    }
+
+    /// Popcount of the intersection `Σ popcount(a[w] & b[w])` — scores a
+    /// packed *sparse* (0/1) query against a packed sign row: the ±1 dot
+    /// is `nnz - 2·overlap` with the negative-coordinate mask.
+    #[inline]
+    pub fn and_popcount(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0u64;
+        for (&x, &y) in a.iter().zip(b) {
+            acc += (x & y).count_ones() as u64;
+        }
+        acc
     }
 }
 
@@ -355,6 +445,94 @@ pub mod simd {
             w += 1;
         }
     }
+
+    /// See [`super::scalar::dot_f32`]. One vector accumulator holds the
+    /// LANES striped partial sums (per-lane `acc + a*b` — distinct mul
+    /// and add ops, never contracted to FMA, exactly the scalar per-lane
+    /// schedule); the lanes are extracted and folded with the shared
+    /// [`super::fold_lanes`] tree, and the tail accumulates sequentially.
+    #[inline]
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = F32s::splat(0.0);
+        let mut ac = a.chunks_exact(LANES);
+        let mut bc = b.chunks_exact(LANES);
+        for (av, bv) in ac.by_ref().zip(bc.by_ref()) {
+            acc = acc + F32s::from_slice(av) * F32s::from_slice(bv);
+        }
+        let mut tail = 0.0f32;
+        for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+            tail += x * y;
+        }
+        super::fold_lanes(acc.to_array()) + tail
+    }
+
+    /// See [`super::scalar::dot_i8`]. Products are computed widened to
+    /// i32 lanes (127·127 cannot overflow), accumulated in i64 lanes and
+    /// reduced at the end — integer arithmetic, so any association order
+    /// gives the exact scalar result.
+    #[inline]
+    pub fn dot_i8(a: &[i8], b: &[i8]) -> i64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = Simd::<i64, LANES>::splat(0);
+        let mut ac = a.chunks_exact(LANES);
+        let mut bc = b.chunks_exact(LANES);
+        for (av, bv) in ac.by_ref().zip(bc.by_ref()) {
+            let prod = I8s::from_slice(av).cast::<i32>() * I8s::from_slice(bv).cast::<i32>();
+            acc += prod.cast::<i64>();
+        }
+        let mut tail = 0i64;
+        for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+            tail += x as i64 * y as i64;
+        }
+        acc.reduce_sum() + tail
+    }
+
+    /// See [`super::scalar::hamming_packed`]. The xor runs in u64×4
+    /// vectors; the per-word popcounts stay scalar (`count_ones` lowers
+    /// to the hardware popcount and keeps us off the still-moving
+    /// `std::simd` popcount API). Integer sum — exact in any order.
+    #[inline]
+    pub fn hamming_packed(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0u64;
+        let mut ac = a.chunks_exact(POP_BLOCK);
+        let mut bc = b.chunks_exact(POP_BLOCK);
+        for (av, bv) in ac.by_ref().zip(bc.by_ref()) {
+            let v = U64x4::from_slice(av) ^ U64x4::from_slice(bv);
+            for w in v.to_array() {
+                acc += w.count_ones() as u64;
+            }
+        }
+        for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+            acc += (x ^ y).count_ones() as u64;
+        }
+        acc
+    }
+
+    /// See [`super::scalar::and_popcount`] — same schedule as
+    /// [`hamming_packed`] with `&` in place of `^`.
+    #[inline]
+    pub fn and_popcount(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0u64;
+        let mut ac = a.chunks_exact(POP_BLOCK);
+        let mut bc = b.chunks_exact(POP_BLOCK);
+        for (av, bv) in ac.by_ref().zip(bc.by_ref()) {
+            let v = U64x4::from_slice(av) & U64x4::from_slice(bv);
+            for w in v.to_array() {
+                acc += w.count_ones() as u64;
+            }
+        }
+        for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+            acc += (x & y).count_ones() as u64;
+        }
+        acc
+    }
+
+    /// Words per vector op in the packed-popcount kernels (256-bit).
+    const POP_BLOCK: usize = 4;
+    type U64x4 = Simd<u64, POP_BLOCK>;
 }
 
 #[cfg(test)]
@@ -426,6 +604,43 @@ mod tests {
         let signs = [1i8, -1, 1];
         assert_eq!(signed_sum(&x, &cols, &signs), 4.0 - 1.0 + 3.0);
         assert_eq!(signed_sum(&x, &[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dot_f32_striped_contract_and_empty() {
+        // 10 elements = one full LANES chunk + a 2-element tail.
+        let a: Vec<f32> = (1..=10).map(|i| i as f32).collect();
+        let b: Vec<f32> = (1..=10).map(|i| (i as f32) * 0.5).collect();
+        // Striped reference: acc[l] = a[l]*b[l] over the single chunk,
+        // fold tree, then the sequential tail.
+        let mut acc = [0.0f32; LANES];
+        for l in 0..LANES {
+            acc[l] += a[l] * b[l];
+        }
+        let want = fold_lanes(acc) + (a[8] * b[8] + a[9] * b[9]);
+        assert_eq!(scalar::dot_f32(&a, &b).to_bits(), want.to_bits());
+        assert_eq!(scalar::dot_f32(&[], &[]), 0.0);
+        // Sub-lane input is tail-only (pure sequential accumulation).
+        assert_eq!(scalar::dot_f32(&a[..3], &b[..3]), a[0] * b[0] + a[1] * b[1] + a[2] * b[2]);
+    }
+
+    #[test]
+    fn dot_i8_widens_without_overflow() {
+        let a = vec![127i8; 1000];
+        let b = vec![-127i8; 1000];
+        assert_eq!(scalar::dot_i8(&a, &b), -127i64 * 127 * 1000);
+        assert_eq!(scalar::dot_i8(&[], &[]), 0);
+        assert_eq!(scalar::dot_i8(&[3, -2], &[-4, 5]), -22);
+    }
+
+    #[test]
+    fn packed_popcounts_basic() {
+        let a = [0b1011u64, u64::MAX, 0];
+        let b = [0b0001u64, 0, 0];
+        assert_eq!(scalar::hamming_packed(&a, &b), 2 + 64);
+        assert_eq!(scalar::and_popcount(&a, &b), 1);
+        assert_eq!(scalar::hamming_packed(&[], &[]), 0);
+        assert_eq!(scalar::and_popcount(&a, &a), 3 + 64);
     }
 
     #[test]

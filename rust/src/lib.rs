@@ -17,6 +17,11 @@
 //! The [`runtime`] module loads the AOT artifacts through PJRT (the
 //! `xla` crate); python never runs on the request path.
 //!
+//! Inference serving lives in [`am`] (the quantized associative-memory
+//! class store: f32 / int8 / sign-binarized prototypes scored by the
+//! similarity kernels) and [`serve`] (request micro-batching over the
+//! same work-stealing encode pipeline the trainer uses).
+//!
 //! Start with [`pipeline::TrainPipeline`] or the `examples/` directory.
 //!
 //! # Cargo features
@@ -31,6 +36,7 @@
 // on stable rustc; only `--features simd` (nightly) enables it.
 #![cfg_attr(feature = "simd", feature(portable_simd))]
 
+pub mod am;
 pub mod coordinator;
 pub mod data;
 pub mod encoding;
@@ -40,4 +46,5 @@ pub mod model;
 pub mod perf;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod util;

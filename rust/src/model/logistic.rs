@@ -165,7 +165,33 @@ impl LogisticModel {
 
     /// Scores for a batch (for AUC evaluation).
     pub fn predict_batch(&self, encs: &[Encoding]) -> Vec<f64> {
-        encs.iter().map(|e| self.predict(e)).collect()
+        let mut out = Vec::new();
+        self.predict_batch_into(encs, &mut out);
+        out
+    }
+
+    /// Batch prediction into a caller-reused buffer (cleared first) —
+    /// the allocation-free twin of [`LogisticModel::predict_batch`] for
+    /// the serving and repeated-eval paths, where a fresh `Vec<f64>` per
+    /// round is pure churn. Identical values to the allocating form.
+    pub fn predict_batch_into(&self, encs: &[Encoding], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(encs.len());
+        out.extend(encs.iter().map(|e| self.predict(e)));
+    }
+
+    /// Mean NLL over parallel slices — the borrow-based twin of
+    /// [`LogisticModel::loss`] for consumers holding encodings and
+    /// labels in separate (pooled, recyclable) buffers; building the
+    /// owned `(Encoding, bool)` pair vector just to evaluate would
+    /// re-introduce a per-round allocation.
+    pub fn loss_parts(&self, encs: &[Encoding], labels: &[bool]) -> f64 {
+        debug_assert_eq!(encs.len(), labels.len());
+        if encs.is_empty() {
+            return 0.0;
+        }
+        encs.iter().zip(labels).map(|(e, &y)| nll(self.score(e), y)).sum::<f64>()
+            / encs.len() as f64
     }
 }
 
@@ -329,5 +355,29 @@ mod tests {
         assert_eq!(m.loss(&[]), 0.0);
         let mut m2 = m.clone();
         assert_eq!(m2.sgd_step(&[], 0.1), 0.0);
+        assert_eq!(m.loss_parts(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn borrowing_eval_paths_match_owning_paths() {
+        let d = 24;
+        let mut rng = Rng::new(9);
+        let mut m = LogisticModel::new(d);
+        for t in m.theta.iter_mut() {
+            *t = rng.normal_f32() * 0.5;
+        }
+        let batch: Vec<(Encoding, bool)> = (0..17)
+            .map(|_| {
+                let idx: Vec<u32> = (0..5).map(|_| rng.below(d as u64) as u32).collect();
+                (sparse_from_indices(idx, d), rng.bernoulli(0.5))
+            })
+            .collect();
+        let encs: Vec<Encoding> = batch.iter().map(|(e, _)| e.clone()).collect();
+        let labels: Vec<bool> = batch.iter().map(|(_, y)| *y).collect();
+        assert_eq!(m.loss(&batch), m.loss_parts(&encs, &labels));
+        let want = m.predict_batch(&encs);
+        let mut got = vec![99.0; 3]; // stale contents must be cleared
+        m.predict_batch_into(&encs, &mut got);
+        assert_eq!(want, got);
     }
 }

@@ -20,13 +20,24 @@
 //! so scalar-vs-SIMD comparisons read directly out of
 //! `BENCH_encode.json`.
 //!
+//! The snapshot's **serve** section runs the closed-loop load generator
+//! ([`crate::serve::bench::run_closed_loop`]) against the full serving
+//! stack — submission queue → micro-batcher → work-stealing encode →
+//! AM scoring — once per store precision (f32 and binary), recording
+//! end-to-end request latency p50/p99, queue-depth distribution and
+//! batch-cut mix, so the serving hot path's tail behaviour tracks PR
+//! over PR next to the encode medians.
+//!
 //! Knobs: `BENCH_MS` (per-measurement budget, default 300),
 //! `SHDC_BENCH_RECORDS` (pipeline-scaling record budget, default 60000),
-//! `BENCH_OUT` (snapshot path, default `BENCH_encode.json`).
+//! `SHDC_BENCH_SERVE_REQUESTS` (closed-loop serve budget per precision,
+//! default 20000), `BENCH_OUT` (snapshot path, default
+//! `BENCH_encode.json`).
 
 use std::hint::black_box;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::am::{AmBuilder, AmStore, Precision};
 use crate::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use crate::data::synthetic::SyntheticConfig;
 use crate::data::{Record, RecordStream, SyntheticStream};
@@ -37,6 +48,7 @@ use crate::encoding::{
     ProjectionMode, RelaxedSjlt, Sjlt, SparseProjection,
 };
 use crate::util::bench::Harness;
+use crate::util::env_u64;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -87,10 +99,6 @@ fn sample_records(n: usize) -> Vec<Record> {
     (0..n).map(|_| stream.next_record().unwrap()).collect()
 }
 
-fn env_u64(key: &str, default: u64) -> u64 {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
 /// Encode-only pipeline throughput (records/s) at a worker count, plus
 /// the run's counter snapshot (steals, recycles, backpressure) —
 /// exercises the work-stealing coordinator end to end.
@@ -123,6 +131,66 @@ fn pipeline_records_per_sec(
     let snap = stats.snapshot();
     assert_eq!(sink as u64, snap.records_encoded);
     (records as f64 / dt, snap)
+}
+
+/// One closed-loop serve scenario at paper-shaped encode dims; returns
+/// the JSON record for the snapshot's `serve` array.
+fn serve_scenario(precision: Precision, requests: u64) -> Json {
+    use crate::serve::{run_closed_loop, LoadCfg, ServeCfg};
+    let enc = EncoderCfg {
+        cat: CatCfg::Bloom { d: 10_000, k: 4 },
+        num: NumCfg::Sjlt { d: 10_000, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 17,
+    };
+    // Bundle a 2-class store from a few hundred encoded records — the
+    // classic AM rule. Store *content* is irrelevant to the timing;
+    // shape (d, class count, precision) is what's measured.
+    let store: AmStore = {
+        let mut builder = AmBuilder::new(enc.out_dim(), 2);
+        let mut renc = enc.build();
+        for rec in sample_records(256) {
+            builder.add(rec.label as usize, &renc.encode(&rec));
+        }
+        builder.finish(true)
+    };
+    let clients = 8usize;
+    let load = LoadCfg {
+        clients,
+        requests_per_client: (requests / clients as u64).max(1),
+        data: SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(18) },
+    };
+    let cfg = ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 64,
+            n_workers: 2,
+            queue_depth: 4,
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(500),
+        queue_cap: 256,
+        slots: 64,
+        precision,
+        ..ServeCfg::new(enc)
+    };
+    let report = run_closed_loop(cfg, store, &load);
+    println!("  serve {:<7} {}", precision.name(), report.row());
+    Json::obj(vec![
+        ("precision", Json::str(precision.name())),
+        ("clients", Json::num(clients as f64)),
+        ("report", report.to_json()),
+    ])
+}
+
+/// The serve section of the snapshot: every store precision — f32
+/// (reference), int8 (4× smaller) and binary (the 32×-smaller popcount
+/// store) — under identical closed-loop load.
+fn serve_scenarios(requests: u64) -> Vec<Json> {
+    [Precision::F32, Precision::Int8, Precision::Binary]
+        .into_iter()
+        .map(|p| serve_scenario(p, requests))
+        .collect()
 }
 
 /// Run the full encode snapshot; returns the machine-readable document
@@ -338,6 +406,24 @@ pub fn encode_snapshot() -> Json {
             kernels::bitset_sweep(&mut bs, lo, hi, &mut swept);
             swept.len()
         });
+
+        // AM similarity kernels: one class-prototype row scan at the
+        // paper's bundled d=20k (serving's per-class scoring unit).
+        let ds = 2 * d;
+        let qa: Vec<f32> = (0..ds).map(|_| krng.normal_f32()).collect();
+        let qb: Vec<f32> = (0..ds).map(|_| krng.normal_f32()).collect();
+        h.bench("kernel dot-f32 d=20k scalar", || kernels::scalar::dot_f32(&qa, &qb));
+        h.bench("kernel dot-f32 d=20k active", || kernels::dot_f32(&qa, &qb));
+
+        let ia: Vec<i8> = (0..ds).map(|_| krng.next_u32() as i8).collect();
+        let ib: Vec<i8> = (0..ds).map(|_| krng.next_u32() as i8).collect();
+        h.bench("kernel dot-i8 d=20k scalar", || kernels::scalar::dot_i8(&ia, &ib));
+        h.bench("kernel dot-i8 d=20k active", || kernels::dot_i8(&ia, &ib));
+
+        let wa: Vec<u64> = (0..ds.div_ceil(64)).map(|_| krng.next_u64()).collect();
+        let wb: Vec<u64> = (0..ds.div_ceil(64)).map(|_| krng.next_u64()).collect();
+        h.bench("kernel hamming d=20k scalar", || kernels::scalar::hamming_packed(&wa, &wb));
+        h.bench("kernel hamming d=20k active", || kernels::hamming_packed(&wa, &wb));
     }
 
     // --- batched encode through RecordEncoder -----------------------------
@@ -359,6 +445,10 @@ pub fn encode_snapshot() -> Json {
         n
     });
     h.note_throughput(256.0, "records");
+
+    // --- serving: closed-loop latency per store precision ------------------
+    let serve_requests = env_u64("SHDC_BENCH_SERVE_REQUESTS", 20_000);
+    let serve_results = serve_scenarios(serve_requests);
 
     // --- coordinator worker scaling ---------------------------------------
     let scale_records = env_u64("SHDC_BENCH_RECORDS", 60_000);
@@ -415,6 +505,9 @@ pub fn encode_snapshot() -> Json {
         ("sjlt_scatter_d10k_k4", kernel_pair("sjlt-scatter d=10k k=4")),
         ("bit_unpack_d10k", kernel_pair("bit-unpack d=10k")),
         ("bloom_sweep_d10k_sk104", kernel_pair("bloom-sweep d=10k sk=104")),
+        ("dot_f32_d20k", kernel_pair("dot-f32 d=20k")),
+        ("dot_i8_d20k", kernel_pair("dot-i8 d=20k")),
+        ("hamming_d20k", kernel_pair("hamming d=20k")),
     ]);
     println!("  kernel active-vs-scalar ({}): {kernel_speedups:?}", kernels::BACKEND);
 
@@ -442,6 +535,7 @@ pub fn encode_snapshot() -> Json {
         ),
         ("kernel_speedup_active_vs_scalar", kernel_speedups),
         ("pipeline_scaling", Json::Arr(scaling)),
+        ("serve", Json::Arr(serve_results)),
     ])
 }
 

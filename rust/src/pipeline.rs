@@ -148,8 +148,12 @@ fn train_rust(cfg: &TrainCfg, data_cfg: &SyntheticConfig) -> Result<TrainReport>
     let dim = cfg.encoder.out_dim();
     let mut model = LogisticModel::new(dim);
     let mut stopper = EarlyStopper::new(cfg.patience);
-    // Separate encoder instance for evaluation (identical by determinism).
+    // Separate encoder instance for evaluation (identical by determinism),
+    // plus reused eval staging: repeated validation rounds borrow the
+    // same encoding/label/score buffers instead of collecting a fresh
+    // pair vector per round (the last drain-style opt-out of recycling).
     let mut eval_enc = cfg.encoder.build();
+    let mut eval_bufs = EvalBuffers::default();
 
     let mut stream_cfg = data_cfg.clone();
     stream_cfg.stream_salt = stream_cfg.stream_salt ^ 0x77a1;
@@ -183,7 +187,7 @@ fn train_rust(cfg: &TrainCfg, data_cfg: &SyntheticConfig) -> Result<TrainReport>
         trained += batch.encodings.len() as u64;
         if trained >= next_validation {
             next_validation += cfg.validate_every;
-            let vloss = eval_loss(&mut eval_enc, &model, &val);
+            let vloss = eval_loss(&mut eval_enc, &model, &val, &mut eval_bufs);
             if stopper.observe(vloss) {
                 stopped_early = true;
                 return false;
@@ -197,13 +201,14 @@ fn train_rust(cfg: &TrainCfg, data_cfg: &SyntheticConfig) -> Result<TrainReport>
     // validation can be a full validation period stale. The train-side
     // loss is measured on *seen* training records with the same final
     // parameters, so the gap isolates memorization (not convergence lag).
-    let final_val_loss = eval_loss(&mut eval_enc, &model, &val);
-    let final_train_loss = eval_loss(&mut eval_enc, &model, &train_sample);
+    let final_val_loss = eval_loss(&mut eval_enc, &model, &val, &mut eval_bufs);
+    let final_train_loss = eval_loss(&mut eval_enc, &model, &train_sample, &mut eval_bufs);
     let _ = crate::util::stats::mean(&recent_train_losses);
 
     // Chunked AUC over the test set; validation AUC over the whole val set.
-    let (test_auc_chunks, _) = eval_auc_chunks(&mut eval_enc, &model, &test, cfg.auc_chunk);
-    let (_, val_auc) = eval_auc_chunks(&mut eval_enc, &model, &val, usize::MAX);
+    let (test_auc_chunks, _) =
+        eval_auc_chunks(&mut eval_enc, &model, &test, cfg.auc_chunk, &mut eval_bufs);
+    let (_, val_auc) = eval_auc_chunks(&mut eval_enc, &model, &val, usize::MAX, &mut eval_bufs);
 
     let mut snap = stats.snapshot();
     snap.train_ns = train_ns_local; // trainer runs in the consumer thread
@@ -224,21 +229,30 @@ fn train_rust(cfg: &TrainCfg, data_cfg: &SyntheticConfig) -> Result<TrainReport>
     })
 }
 
+/// Reused evaluation staging: encodings round-trip through the eval
+/// encoder's scratch pools, labels and scores reuse their spines, so
+/// every validation round after the first runs allocation-free — the
+/// same borrow-based scoring discipline the coordinator consumers use
+/// ([`LogisticModel::loss_parts`] / [`LogisticModel::predict_batch_into`]
+/// replace the owned pair-vector collects).
+#[derive(Default)]
+struct EvalBuffers {
+    encs: Vec<Encoding>,
+    labels: Vec<bool>,
+    scores: Vec<f64>,
+}
+
 fn eval_loss(
     enc: &mut crate::coordinator::RecordEncoder,
     model: &LogisticModel,
     records: &[Record],
+    bufs: &mut EvalBuffers,
 ) -> f64 {
-    // Batch path + recycle: repeated validation rounds reuse the same
-    // pooled buffers instead of re-allocating per record.
-    let mut encs = Vec::with_capacity(records.len());
-    enc.encode_batch_into(records, &mut encs);
-    let batch: Vec<(Encoding, bool)> = encs
-        .into_iter()
-        .zip(records.iter().map(|r| r.label))
-        .collect();
-    let loss = model.loss(&batch);
-    enc.recycle_all(batch.into_iter().map(|(e, _)| e));
+    enc.encode_batch_into(records, &mut bufs.encs);
+    bufs.labels.clear();
+    bufs.labels.extend(records.iter().map(|r| r.label));
+    let loss = model.loss_parts(&bufs.encs, &bufs.labels);
+    enc.recycle_all(bufs.encs.drain(..));
     loss
 }
 
@@ -247,20 +261,21 @@ fn eval_auc_chunks(
     model: &LogisticModel,
     records: &[Record],
     chunk: usize,
+    bufs: &mut EvalBuffers,
 ) -> (Vec<f64>, f64) {
-    let mut encs = Vec::with_capacity(records.len());
-    enc.encode_batch_into(records, &mut encs);
-    let scores: Vec<f64> = encs.iter().map(|e| model.predict(e)).collect();
-    enc.recycle_all(encs);
-    let labels: Vec<bool> = records.iter().map(|r| r.label).collect();
-    let overall = auc(&scores, &labels);
+    enc.encode_batch_into(records, &mut bufs.encs);
+    model.predict_batch_into(&bufs.encs, &mut bufs.scores);
+    enc.recycle_all(bufs.encs.drain(..));
+    bufs.labels.clear();
+    bufs.labels.extend(records.iter().map(|r| r.label));
+    let overall = auc(&bufs.scores, &bufs.labels);
     let mut chunks = Vec::new();
     let chunk = chunk.max(1);
     let mut i = 0;
-    while i < scores.len() {
-        let j = (i + chunk).min(scores.len());
+    while i < bufs.scores.len() {
+        let j = (i + chunk).min(bufs.scores.len());
         if j - i >= 50 {
-            chunks.push(auc(&scores[i..j], &labels[i..j]));
+            chunks.push(auc(&bufs.scores[i..j], &bufs.labels[i..j]));
         }
         i = j;
     }

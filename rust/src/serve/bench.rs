@@ -1,0 +1,181 @@
+//! Closed-loop synthetic load generation for the serving subsystem —
+//! shared by the `serve_bench` binary and `perf::encode_snapshot` so
+//! `BENCH_encode.json` carries serve-path latency distributions.
+//!
+//! Closed loop: each client thread submits one request, blocks for its
+//! response, rotates the returned record buffer and submits again —
+//! offered load self-regulates to the server's capacity (no coordinated
+//! omission from a fixed-rate script outrunning the server), and
+//! `clients` is the concurrency knob.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::am::AmStore;
+use crate::coordinator::StatsSnapshot;
+use crate::data::synthetic::SyntheticConfig;
+use crate::data::{RecordStream, SyntheticStream};
+use crate::serve::{ServeCfg, ServeSnapshot, Server};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct LoadCfg {
+    /// Concurrent closed-loop client threads.
+    pub clients: usize,
+    /// Requests each client issues.
+    pub requests_per_client: u64,
+    /// The synthetic record distribution clients draw from (each client
+    /// salts its own stream so requests differ across clients).
+    pub data: SyntheticConfig,
+}
+
+impl LoadCfg {
+    pub fn quick(seed: u64) -> LoadCfg {
+        LoadCfg {
+            clients: 4,
+            requests_per_client: 1_000,
+            data: SyntheticConfig::sampled(seed),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeBenchReport {
+    pub total_requests: u64,
+    pub wall: Duration,
+    pub throughput_rps: f64,
+    pub serve: ServeSnapshot,
+    pub pipeline: StatsSnapshot,
+}
+
+impl ServeBenchReport {
+    /// Machine-readable form for `BENCH_encode.json`.
+    pub fn to_json(&self) -> Json {
+        let hist = |h: &crate::serve::HistSnapshot| {
+            Json::obj(vec![
+                ("count", Json::num(h.count as f64)),
+                ("mean", Json::num(h.mean)),
+                ("p50", Json::num(h.p50 as f64)),
+                ("p90", Json::num(h.p90 as f64)),
+                ("p99", Json::num(h.p99 as f64)),
+                ("max", Json::num(h.max as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("total_requests", Json::num(self.total_requests as f64)),
+            ("wall_s", Json::num(self.wall.as_secs_f64())),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("latency_ns", hist(&self.serve.latency_ns)),
+            ("queue_depth", hist(&self.serve.queue_depth)),
+            ("batches", Json::num(self.serve.batches as f64)),
+            ("size_cuts", Json::num(self.serve.size_cuts as f64)),
+            ("deadline_cuts", Json::num(self.serve.deadline_cuts as f64)),
+            ("idle_cuts", Json::num(self.serve.idle_cuts as f64)),
+            ("buffers_recycled", Json::num(self.pipeline.buffers_recycled as f64)),
+            ("batches_stolen", Json::num(self.pipeline.batches_stolen as f64)),
+        ])
+    }
+
+    /// The one-line human summary the bench binary prints per scenario.
+    pub fn row(&self) -> String {
+        format!(
+            "{:>9.0} req/s  p50 {:>9} ns  p99 {:>9} ns  max {:>10} ns  \
+             qdepth p50 {:>3}  ({} batches: {} size / {} idle / {} deadline cuts)",
+            self.throughput_rps,
+            self.serve.latency_ns.p50,
+            self.serve.latency_ns.p99,
+            self.serve.latency_ns.max,
+            self.serve.queue_depth.p50,
+            self.serve.batches,
+            self.serve.size_cuts,
+            self.serve.idle_cuts,
+            self.serve.deadline_cuts,
+        )
+    }
+}
+
+/// Run a closed-loop load test against a freshly started server; returns
+/// after every client finishes and the server drains.
+pub fn run_closed_loop(cfg: ServeCfg, store: AmStore, load: &LoadCfg) -> ServeBenchReport {
+    let (server, handle) = Server::new(cfg, store);
+    let server_thread = thread::spawn(move || server.run());
+    let total = load.clients as u64 * load.requests_per_client;
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..load.clients)
+        .map(|c| {
+            let h = handle.clone();
+            let mut data = load.data.clone();
+            data.stream_salt ^= 0x5e7e ^ ((c as u64) << 32);
+            let per = load.requests_per_client;
+            thread::spawn(move || {
+                let mut stream = SyntheticStream::new(data);
+                let mut rec = stream.next_record().expect("unbounded stream");
+                for _ in 0..per {
+                    let resp = h.classify(rec).expect("serve rejected mid-load");
+                    rec = resp.record;
+                    stream.refill_record(&mut rec);
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    let wall = t0.elapsed();
+    handle.shutdown();
+    let pipeline: Arc<_> = server_thread.join().expect("server thread");
+    let serve = handle.stats();
+    assert_eq!(serve.completed, total, "closed loop lost responses");
+    ServeBenchReport {
+        total_requests: total,
+        wall,
+        throughput_rps: total as f64 / wall.as_secs_f64(),
+        serve,
+        pipeline: pipeline.snapshot(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
+    use crate::encoding::BundleMethod;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn closed_loop_report_is_consistent() {
+        let enc = EncoderCfg {
+            cat: CatCfg::Bloom { d: 256, k: 2 },
+            num: NumCfg::None,
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 21,
+        };
+        let mut rng = Rng::new(22);
+        let rows: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..256).map(|_| rng.normal_f32()).collect()).collect();
+        let store = crate::am::AmStore::from_prototypes(256, &rows, None);
+        let cfg = ServeCfg {
+            coordinator: CoordinatorCfg {
+                batch_size: 16,
+                n_workers: 2,
+                ..Default::default()
+            },
+            ..ServeCfg::new(enc)
+        };
+        let load = LoadCfg {
+            clients: 3,
+            requests_per_client: 60,
+            data: SyntheticConfig::sampled(23),
+        };
+        let report = run_closed_loop(cfg, store, &load);
+        assert_eq!(report.total_requests, 180);
+        assert_eq!(report.serve.completed, 180);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.serve.latency_ns.count == 180);
+        // JSON form parses back.
+        let s = report.to_json().pretty();
+        assert!(crate::util::json::Json::parse(&s).is_ok());
+    }
+}

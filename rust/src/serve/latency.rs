@@ -1,0 +1,205 @@
+//! Lock-free log-bucketed histogram for serve-path latencies and queue
+//! depths (HdrHistogram-lite; the real thing is not vendored offline).
+//!
+//! Values map to power-of-two octaves subdivided into 8 linear
+//! sub-buckets, so quantile estimates carry ≤ ~6% relative error — ample
+//! for p50/p99 latency reporting — while `record` is one atomic add on a
+//! preallocated table (no allocation, no locks: safe to call from every
+//! pipeline thread on the request hot path). Exact count / sum / max /
+//! min ride alongside in dedicated atomics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2(sub-buckets per octave).
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS;
+/// Bucket table size: values 0..SUB exact, then (64 − SUB_BITS) octaves
+/// of SUB sub-buckets each.
+const BUCKETS: usize = (SUB + (64 - SUB_BITS as u64) * SUB) as usize;
+
+fn index_of(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as u64; // >= SUB_BITS
+    let shift = msb - SUB_BITS as u64;
+    let sub = (v >> shift) & (SUB - 1);
+    ((msb - SUB_BITS as u64) * SUB + SUB + sub) as usize
+}
+
+/// Lower edge of bucket `idx` (its representative value is the
+/// midpoint of [lower, next lower)).
+fn lower_of(idx: usize) -> u64 {
+    if idx < SUB as usize {
+        return idx as u64;
+    }
+    let octave = (idx as u64 - SUB) / SUB;
+    let sub = (idx as u64 - SUB) % SUB;
+    (SUB + sub) << octave
+}
+
+fn representative_of(idx: usize) -> u64 {
+    if idx < SUB as usize {
+        return idx as u64;
+    }
+    let octave = (idx as u64 - SUB) / SUB;
+    let width = 1u64 << octave;
+    lower_of(idx) + width / 2
+}
+
+/// Concurrent histogram; `record` from any thread, `snapshot` whenever.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[index_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time summary. Quantiles are bucket representatives
+    /// (≤ ~6% relative error); count/sum/max/min are exact.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count: u64 = counts.iter().sum();
+        let quantile = |p: f64| -> u64 {
+            if count == 0 {
+                return 0;
+            }
+            let target = ((p * count as f64).ceil() as u64).clamp(1, count);
+            let mut seen = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                seen += c;
+                if seen >= target {
+                    return representative_of(i);
+                }
+            }
+            representative_of(counts.len() - 1)
+        };
+        let sum = self.sum.load(Ordering::Relaxed);
+        HistSnapshot {
+            count,
+            mean: if count == 0 { 0.0 } else { sum as f64 / count as f64 },
+            p50: quantile(0.50),
+            p90: quantile(0.90),
+            p99: quantile(0.99),
+            max: if count == 0 { 0 } else { self.max.load(Ordering::Relaxed) },
+            min: if count == 0 { 0 } else { self.min.load(Ordering::Relaxed) },
+        }
+    }
+}
+
+/// Summary of a [`Histogram`] at one instant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub max: u64,
+    pub min: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_is_monotone_and_contiguous() {
+        let mut prev = 0usize;
+        let mut v = 0u64;
+        while v < 1 << 20 {
+            let i = index_of(v);
+            // Monotone, and the (≤ bucket-width) step never skips more
+            // than one boundary.
+            assert!(i >= prev && i <= prev + 2, "v={v}: {prev} -> {i}");
+            assert!(lower_of(i) <= v, "v={v} idx={i} lower={}", lower_of(i));
+            prev = i;
+            v += 1 + v / 16; // dense near 0, sparse later
+        }
+        assert!(index_of(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn small_values_exact() {
+        for v in 0..SUB {
+            assert_eq!(representative_of(index_of(v)), v);
+        }
+    }
+
+    #[test]
+    fn quantiles_approximate_uniform_ramp() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10_000);
+        assert_eq!(s.max, 10_000);
+        assert_eq!(s.min, 1);
+        let rel = |got: u64, want: f64| (got as f64 - want).abs() / want;
+        assert!(rel(s.p50, 5_000.0) < 0.10, "p50={}", s.p50);
+        assert!(rel(s.p99, 9_900.0) < 0.10, "p99={}", s.p99);
+        assert!((s.mean - 5_000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0);
+        assert_eq!(s.max, 0);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.snapshot().count, 4000);
+    }
+}

@@ -1,0 +1,836 @@
+//! Online inference serving: a request micro-batching front end over the
+//! streaming encode pipeline and the associative-memory class store.
+//!
+//! The ROADMAP north star is "serving heavy traffic from millions of
+//! users"; the paper's contribution is that hash-defined streaming
+//! encoders make per-request featurization cheap enough to sit on a
+//! serving hot path (no codebook to ship, no state to synchronize).
+//! This module closes the loop from encoded stream to *answered query*:
+//!
+//! ```text
+//!  clients ──► bounded submission queue ──► RequestStream (size/idle/
+//!     ▲            (backpressure)            deadline batch cut)
+//!     │                                          │ raw batches
+//!     │                                          ▼
+//!     │                               run_pipeline: StealScheduler
+//!     │                               encode workers + EncodeScratch
+//!     │                               (the zero-alloc encode path)
+//!     │                                          │ EncodedBatch, in order
+//!     │        completion slots                  ▼
+//!     └──── (preallocated, recycled) ◄── consumer: AmStore::top1
+//!                                        latency/queue-depth stats
+//! ```
+//!
+//! **Micro-batching.** Requests are cut into encode batches
+//! adaptively, by size-or-deadline plus an idle cut:
+//! * **size** — the batch holds `coordinator.batch_size` requests;
+//! * **deadline** — `max_batch_delay` elapsed since the batch's first
+//!   request was taken (a request never waits longer than this);
+//! * **idle** — the queue is empty and every in-flight request is
+//!   already in this batch, so *no* request can arrive before this
+//!   batch's responses unblock the clients: waiting out the deadline
+//!   would be pure added latency. This is what keeps closed-loop (and
+//!   low-concurrency) traffic from paying the deadline on every batch.
+//!
+//! Under load the pipeline runs full batches (throughput); a lone
+//! request is cut immediately (idle) or at worst at the deadline.
+//!
+//! **Reuse, not reimplementation.** The batcher *is* a
+//! [`RecordStream`]: the coordinator's reader pulls request batches from
+//! the submission queue exactly as it pulls synthetic batches, so
+//! serving inherits the work-stealing dispatch, the scratch encode path,
+//! cross-thread buffer recycling and the in-order reorderer untouched.
+//! Record buffers are never copied — submission records are swapped into
+//! the pipeline's pooled spines and the displaced spine travels back to
+//! the client inside its [`Response`], so a closed-loop client rotates
+//! buffers indefinitely with **zero steady-state allocations**
+//! (extended `tests/alloc_regression.rs` pins this).
+//!
+//! **Correlation.** The stream emits one `Pending` per request, in batch
+//! order, over a bounded channel; the in-order consumer pairs
+//! `pending[i]` with `encodings[i]`. Stream order is restored by the
+//! coordinator's seq reorderer, so the pairing is exact under any steal
+//! interleaving (covered by `tests/serve_smoke.rs` with per-client
+//! response checking under concurrency).
+
+pub mod bench;
+pub mod latency;
+
+pub use bench::{run_closed_loop, LoadCfg, ServeBenchReport};
+pub use latency::{HistSnapshot, Histogram};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::am::{AmScratch, AmStore, Precision};
+use crate::coordinator::{run_pipeline, CoordinatorCfg, EncoderCfg, PipelineStats};
+use crate::data::{Record, RecordStream};
+
+/// Serving configuration. `coordinator.batch_size` doubles as the
+/// micro-batch size cut; `max_records` and `keep_records` are
+/// overridden by the server (a serving pipeline runs until shutdown and
+/// never needs raw records downstream).
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    pub encoder: EncoderCfg,
+    pub coordinator: CoordinatorCfg,
+    /// Deadline bound of the adaptive batch cut (a request never waits
+    /// in the batcher longer than this; idle cuts usually ship sooner).
+    pub max_batch_delay: Duration,
+    /// Bounded submission-queue capacity (`submit` blocks when full —
+    /// backpressure reaches the clients, same policy as the pipeline).
+    pub queue_cap: usize,
+    /// Preallocated completion slots = the maximum number of in-flight
+    /// requests (each outstanding request holds one). Size it at or
+    /// above the expected concurrent-client count.
+    pub slots: usize,
+    /// Which prototype representation scoring reads.
+    pub precision: Precision,
+}
+
+impl ServeCfg {
+    pub fn new(encoder: EncoderCfg) -> ServeCfg {
+        ServeCfg {
+            encoder,
+            coordinator: CoordinatorCfg {
+                batch_size: 64,
+                n_workers: 2,
+                queue_depth: 4,
+                ..Default::default()
+            },
+            max_batch_delay: Duration::from_micros(500),
+            queue_cap: 256,
+            slots: 128,
+            precision: Precision::F32,
+        }
+    }
+}
+
+/// What a completed request returns.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub top_class: u32,
+    pub score: f32,
+    /// Submit-to-completion wall time (queueing + encode + score).
+    pub latency: Duration,
+    /// A recycled record buffer handed back for reuse — *not*
+    /// necessarily the submitted allocation; closed-loop clients refill
+    /// it for their next request to stay allocation-free.
+    pub record: Record,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The server no longer accepts submissions.
+    Shutdown,
+    /// The request was accepted but the pipeline terminated before
+    /// completing it (worker panic / forced stop).
+    Aborted,
+    /// The record's numeric width doesn't match the encoder's (the
+    /// record is dropped; micro-batches mix requests from many clients,
+    /// so one ragged width would panic an encode worker for everyone).
+    InvalidNumericWidth { got: usize, want: usize },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shutdown => write!(f, "server is shut down"),
+            ServeError::Aborted => write!(f, "request aborted by pipeline shutdown"),
+            ServeError::InvalidNumericWidth { got, want } => {
+                write!(f, "record has {got} numeric features, encoder expects {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Serve-path counters + distributions; shared, lock-free to record.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    /// Submissions refused without entering the pipeline: the server was
+    /// shutting down, or the record failed validation
+    /// ([`ServeError::InvalidNumericWidth`]).
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    /// Batches closed because they reached `batch_size`.
+    pub size_cuts: AtomicU64,
+    /// Batches closed by the deadline (or the shutdown drain).
+    pub deadline_cuts: AtomicU64,
+    /// Batches closed by the idle cut (queue empty, nothing else in
+    /// flight anywhere — waiting could not add work).
+    pub idle_cuts: AtomicU64,
+    /// Per-request submit→complete latency, nanoseconds.
+    pub latency_ns: Histogram,
+    /// Submission-queue depth sampled at every batch cut.
+    pub queue_depth: Histogram,
+}
+
+/// Point-in-time serve statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub size_cuts: u64,
+    pub deadline_cuts: u64,
+    pub idle_cuts: u64,
+    pub latency_ns: HistSnapshot,
+    pub queue_depth: HistSnapshot,
+}
+
+impl ServeStats {
+    pub fn snapshot(&self) -> ServeSnapshot {
+        ServeSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            size_cuts: self.size_cuts.load(Ordering::Relaxed),
+            deadline_cuts: self.deadline_cuts.load(Ordering::Relaxed),
+            idle_cuts: self.idle_cuts.load(Ordering::Relaxed),
+            latency_ns: self.latency_ns.snapshot(),
+            queue_depth: self.queue_depth.snapshot(),
+        }
+    }
+}
+
+/// One queued request: its completion slot, its record, and when it
+/// entered `classify` (latency starts at the user-visible boundary).
+struct Submission {
+    slot: usize,
+    record: Record,
+    t_submit: Instant,
+}
+
+/// Completion-order companion to one in-flight request; paired with its
+/// encoding by position (stream order == pending order).
+struct Pending {
+    slot: usize,
+    t_submit: Instant,
+    /// The buffer handed back to the client in its [`Response`].
+    record: Record,
+}
+
+enum SlotState {
+    Empty,
+    Done(Response),
+    Aborted,
+}
+
+/// A preallocated completion slot; clients park on `cv` until the
+/// consumer fills `state`.
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Submission>>,
+    /// Batcher parks here for the next submission.
+    nonempty_cv: Condvar,
+    /// Submitters park here when the queue is full.
+    space_cv: Condvar,
+    /// Submitters park here when every slot is in flight.
+    slot_cv: Condvar,
+    free_slots: Mutex<Vec<usize>>,
+    slots: Vec<Slot>,
+    shutdown: AtomicBool,
+    /// Raised by the coordinator ([`CoordinatorCfg::stop_flag`]) when
+    /// the pipeline dies abnormally (worker panic, consumer gone); the
+    /// batcher polls it with a bounded park so a dead pipeline can never
+    /// strand the reader — and with it every client — forever.
+    pipeline_stop: Arc<AtomicBool>,
+    /// Numeric width every submission must carry (None when the encoder
+    /// has no numeric branch): the encode workers hard-assert uniform
+    /// widths, so one malformed request in a mixed batch would panic a
+    /// worker — reject it at `classify` instead.
+    expect_numeric: Option<usize>,
+    stats: ServeStats,
+    queue_cap: usize,
+}
+
+fn empty_record() -> Record {
+    Record { numeric: Vec::new(), symbols: Vec::new(), label: false }
+}
+
+/// Client handle: cheap to clone, one per client thread.
+#[derive(Clone)]
+pub struct ServeHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServeHandle {
+    /// Classify one record, blocking until the response (closed-loop
+    /// call). Backpressure: blocks while all completion slots are in
+    /// flight or the submission queue is full.
+    pub fn classify(&self, record: Record) -> Result<Response, ServeError> {
+        let sh = &*self.shared;
+        // Reject malformed records before they can reach a shared
+        // micro-batch (the encode workers assert uniform numeric widths).
+        if let Some(want) = sh.expect_numeric {
+            if record.numeric.len() != want {
+                sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::InvalidNumericWidth {
+                    got: record.numeric.len(),
+                    want,
+                });
+            }
+        }
+        let t_submit = Instant::now();
+        // Acquire a completion slot.
+        let slot = {
+            let mut free = sh.free_slots.lock().unwrap();
+            loop {
+                if sh.shutdown.load(Ordering::Acquire) {
+                    sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServeError::Shutdown);
+                }
+                if let Some(i) = free.pop() {
+                    break i;
+                }
+                free = sh.slot_cv.wait(free).unwrap();
+            }
+        };
+        // Enqueue under the bounded-queue backpressure policy.
+        {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if sh.shutdown.load(Ordering::Acquire) {
+                    drop(q);
+                    self.release_slot(slot);
+                    sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServeError::Shutdown);
+                }
+                if q.len() < sh.queue_cap {
+                    // Counted under the queue lock, so the batcher's
+                    // idle-cut read of (submitted − completed) — also
+                    // under this lock — can never miss a request that
+                    // is about to be pushed.
+                    sh.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                    q.push_back(Submission { slot, record, t_submit });
+                    sh.nonempty_cv.notify_one();
+                    break;
+                }
+                q = sh.space_cv.wait(q).unwrap();
+            }
+        }
+        // Park until the consumer completes the slot.
+        let s = &sh.slots[slot];
+        let mut st = s.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, SlotState::Empty) {
+                SlotState::Done(resp) => {
+                    drop(st);
+                    self.release_slot(slot);
+                    return Ok(resp);
+                }
+                SlotState::Aborted => {
+                    drop(st);
+                    self.release_slot(slot);
+                    return Err(ServeError::Aborted);
+                }
+                SlotState::Empty => st = s.cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    fn release_slot(&self, slot: usize) {
+        let sh = &*self.shared;
+        sh.free_slots.lock().unwrap().push(slot);
+        sh.slot_cv.notify_one();
+    }
+
+    /// Stop accepting submissions; queued requests still drain through
+    /// the pipeline and complete, then [`Server::run`] returns.
+    pub fn shutdown(&self) {
+        let sh = &*self.shared;
+        sh.shutdown.store(true, Ordering::Release);
+        // Wake every parked party so it re-checks the flag.
+        let _q = sh.queue.lock().unwrap();
+        sh.nonempty_cv.notify_all();
+        sh.space_cv.notify_all();
+        drop(_q);
+        let _f = sh.free_slots.lock().unwrap();
+        sh.slot_cv.notify_all();
+    }
+
+    pub fn stats(&self) -> ServeSnapshot {
+        self.shared.stats.snapshot()
+    }
+}
+
+/// The batcher side: a [`RecordStream`] over the submission queue.
+struct RequestStream {
+    shared: Arc<Shared>,
+    pending_tx: SyncSender<Pending>,
+    max_delay: Duration,
+    /// Surplus records popped off recycled spines when a batch comes up
+    /// shorter than its predecessor; reused as hand-back buffers so
+    /// variable batch sizes never drop (deallocate) a record. Bounded by
+    /// the records in circulation (slots + in-flight spines).
+    spare: Vec<Record>,
+}
+
+impl RequestStream {
+    /// Move one submission into the outgoing batch: swap its record with
+    /// the recycled spine at `out[*filled]` (or push it when the spine
+    /// pool is still cold) and forward the displaced buffer through the
+    /// pending channel for hand-back at completion.
+    fn place(&mut self, out: &mut Vec<Record>, filled: &mut usize, sub: Submission) {
+        let Submission { slot, record, t_submit } = sub;
+        let handback = if *filled < out.len() {
+            std::mem::replace(&mut out[*filled], record)
+        } else {
+            out.push(record);
+            self.spare.pop().unwrap_or_else(empty_record)
+        };
+        *filled += 1;
+        // Capacity covers every slot, so this never blocks; a send error
+        // means the consumer died — run() aborts the slot on drain.
+        let _ = self.pending_tx.send(Pending { slot, t_submit, record: handback });
+    }
+}
+
+impl RecordStream for RequestStream {
+    fn next_record(&mut self) -> Option<Record> {
+        // The coordinator only calls `next_batch_into`; this exists for
+        // trait completeness and single-record callers.
+        let mut out = Vec::new();
+        if RecordStream::next_batch_into(self, &mut out, 1) == 0 {
+            None
+        } else {
+            out.pop()
+        }
+    }
+
+    fn next_batch_into(&mut self, out: &mut Vec<Record>, n: usize) -> usize {
+        let sh = &*self.shared;
+        let mut filled = 0usize;
+        // Block for the batch's first request — or EOF at shutdown, or
+        // on the coordinator's stop flag. The park is *bounded* (not an
+        // untimed wait) because the stop flag is raised by scheduler
+        // paths that cannot reach our condvar (worker panic unwind): the
+        // reader must never be strandable by a dead pipeline.
+        {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(sub) = q.pop_front() {
+                    sh.space_cv.notify_one();
+                    drop(q);
+                    self.place(out, &mut filled, sub);
+                    break;
+                }
+                if sh.shutdown.load(Ordering::Acquire)
+                    || sh.pipeline_stop.load(Ordering::Acquire)
+                {
+                    out.clear();
+                    return 0;
+                }
+                let (guard, _timeout) = sh
+                    .nonempty_cv
+                    .wait_timeout(q, Duration::from_millis(5))
+                    .unwrap();
+                q = guard;
+            }
+        }
+        // Adaptive gather: size, idle or deadline cut, measured from the
+        // first take.
+        let deadline = Instant::now() + self.max_delay;
+        let depth;
+        let mut idle_cut = false;
+        {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if filled >= n {
+                    break;
+                }
+                if let Some(sub) = q.pop_front() {
+                    sh.space_cv.notify_one();
+                    drop(q);
+                    self.place(out, &mut filled, sub);
+                    q = sh.queue.lock().unwrap();
+                    continue;
+                }
+                if sh.shutdown.load(Ordering::Acquire)
+                    || sh.pipeline_stop.load(Ordering::Acquire)
+                {
+                    break; // drain cut: ship what we have
+                }
+                // Idle cut: `submitted` moves only under this queue lock
+                // and `completed ≤ submitted` always, so if everything
+                // in flight is already in this batch, no new request can
+                // arrive before these responses unblock their clients —
+                // waiting out the deadline would be pure latency.
+                let in_flight = sh
+                    .stats
+                    .submitted
+                    .load(Ordering::Relaxed)
+                    .saturating_sub(sh.stats.completed.load(Ordering::Relaxed));
+                if in_flight <= filled as u64 {
+                    idle_cut = true;
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) = sh.nonempty_cv.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+            }
+            depth = q.len();
+        }
+        sh.stats.queue_depth.record(depth as u64);
+        sh.stats.batches.fetch_add(1, Ordering::Relaxed);
+        if filled >= n {
+            sh.stats.size_cuts.fetch_add(1, Ordering::Relaxed);
+        } else if idle_cut {
+            sh.stats.idle_cuts.fetch_add(1, Ordering::Relaxed);
+        } else {
+            sh.stats.deadline_cuts.fetch_add(1, Ordering::Relaxed);
+        }
+        // Stash (don't drop) surplus spine records from a larger
+        // previous batch — they become future hand-back buffers.
+        while out.len() > filled {
+            self.spare.push(out.pop().expect("len checked"));
+        }
+        filled
+    }
+}
+
+/// The serving engine: owns the class store and drives the encode
+/// pipeline until shutdown.
+pub struct Server {
+    cfg: ServeCfg,
+    store: AmStore,
+    shared: Arc<Shared>,
+    pending_tx: SyncSender<Pending>,
+    pending_rx: Receiver<Pending>,
+}
+
+impl Server {
+    pub fn new(cfg: ServeCfg, store: AmStore) -> (Server, ServeHandle) {
+        assert_eq!(
+            cfg.encoder.out_dim(),
+            store.dim(),
+            "encoder output dim must match the AM store"
+        );
+        let slots = cfg.slots.max(1);
+        let expect_numeric = match cfg.encoder.num {
+            crate::coordinator::NumCfg::None => None,
+            _ => Some(cfg.encoder.n_numeric),
+        };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::with_capacity(cfg.queue_cap.max(1))),
+            nonempty_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            slot_cv: Condvar::new(),
+            free_slots: Mutex::new((0..slots).rev().collect()),
+            slots: (0..slots)
+                .map(|_| Slot { state: Mutex::new(SlotState::Empty), cv: Condvar::new() })
+                .collect(),
+            shutdown: AtomicBool::new(false),
+            pipeline_stop: Arc::new(AtomicBool::new(false)),
+            expect_numeric,
+            stats: ServeStats::default(),
+            queue_cap: cfg.queue_cap.max(1),
+        });
+        // One pending per in-flight request; each holds a slot, so
+        // `slots` bounds the channel and sends never block.
+        let (pending_tx, pending_rx) = sync_channel::<Pending>(slots + 1);
+        let handle = ServeHandle { shared: Arc::clone(&shared) };
+        (Server { cfg, store, shared, pending_tx, pending_rx }, handle)
+    }
+
+    /// Run the serve loop on the current thread until
+    /// [`ServeHandle::shutdown`]; queued requests drain first. Returns
+    /// the pipeline stats (spawn this on a dedicated thread and keep the
+    /// [`ServeHandle`] for clients).
+    pub fn run(self) -> Arc<PipelineStats> {
+        let Server { cfg, store, shared, pending_tx, pending_rx } = self;
+        let stream = RequestStream {
+            shared: Arc::clone(&shared),
+            pending_tx,
+            max_delay: cfg.max_batch_delay,
+            spare: Vec::new(),
+        };
+        // Whatever way this function exits — clean drain, or a panic
+        // propagating out of `run_pipeline` after a worker died — every
+        // parked client must be released. The guard rejects future
+        // submissions and aborts all unanswered slots on drop.
+        let _abort_guard = AbortOnDrop(Arc::clone(&shared));
+        // Serving pipelines run until shutdown, never retain raw records,
+        // score in the consumer below, and expose the scheduler's stop
+        // flag so the batcher's park stays bounded (serve owns the flag,
+        // like the two overrides).
+        let coord = CoordinatorCfg {
+            keep_records: false,
+            max_records: None,
+            stop_flag: Some(Arc::clone(&shared.pipeline_stop)),
+            ..cfg.coordinator.clone()
+        };
+        let mut scratch = AmScratch::new();
+        let precision = cfg.precision;
+        let stats = run_pipeline(stream, &cfg.encoder, &coord, |batch| {
+            for enc in batch.encodings.iter() {
+                let Ok(pending) = pending_rx.recv() else {
+                    // Stream half dropped mid-batch: nothing left to pair.
+                    return false;
+                };
+                let (top_class, score) = store.top1(enc, precision, &mut scratch);
+                let latency = pending.t_submit.elapsed();
+                shared.stats.latency_ns.record(latency.as_nanos() as u64);
+                shared.stats.completed.fetch_add(1, Ordering::Relaxed);
+                let slot = &shared.slots[pending.slot];
+                let mut st = slot.state.lock().unwrap();
+                *st = SlotState::Done(Response {
+                    top_class,
+                    score,
+                    latency,
+                    record: pending.record,
+                });
+                slot.cv.notify_one();
+            }
+            true
+        });
+        stats
+        // _abort_guard drops here (and on any panic path above): see
+        // AbortOnDrop.
+    }
+}
+
+/// Releases every parked client when [`Server::run`] exits by ANY path:
+/// reject future submissions, drop still-queued requests, and mark every
+/// unanswered slot `Aborted`. On a clean shutdown drain this is a no-op
+/// beyond the flag (all slots are `Empty` in the free list, and stale
+/// `Aborted` states are unreachable because `classify` rejects at slot
+/// acquisition once `shutdown` is set); after an abnormal termination —
+/// `run_pipeline` panicking on a dead worker — it is what turns a
+/// wedged-forever client into a clean [`ServeError::Aborted`].
+struct AbortOnDrop(Arc<Shared>);
+
+impl Drop for AbortOnDrop {
+    fn drop(&mut self) {
+        let sh = &*self.0;
+        sh.shutdown.store(true, Ordering::Release);
+        {
+            let mut q = sh.queue.lock().unwrap();
+            q.clear();
+            sh.nonempty_cv.notify_all();
+            sh.space_cv.notify_all();
+        }
+        // Every slot not currently answered is either free (harmless to
+        // mark: shutdown already gates acquisition) or awaited by a
+        // parked client that will now observe the abort.
+        for slot in &sh.slots {
+            let mut st = slot.state.lock().unwrap();
+            if matches!(*st, SlotState::Empty) {
+                *st = SlotState::Aborted;
+            }
+            drop(st);
+            slot.cv.notify_one();
+        }
+        sh.free_slots.lock().unwrap();
+        sh.slot_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CatCfg, NumCfg};
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::data::SyntheticStream;
+    use crate::encoding::BundleMethod;
+    use std::thread;
+
+    fn small_encoder(seed: u64) -> EncoderCfg {
+        EncoderCfg {
+            cat: CatCfg::Bloom { d: 256, k: 2 },
+            num: NumCfg::None,
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed,
+        }
+    }
+
+    fn small_store(d: usize) -> AmStore {
+        // Deterministic 2-class store; scores differ for any non-empty code.
+        let mut rng = crate::util::rng::Rng::new(99);
+        let rows: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+        AmStore::from_prototypes(d, &rows, None)
+    }
+
+    fn serve_round_trip(n_clients: usize, per_client: usize) -> ServeSnapshot {
+        let cfg = ServeCfg {
+            max_batch_delay: Duration::from_micros(200),
+            queue_cap: 64,
+            slots: 32,
+            ..ServeCfg::new(small_encoder(5))
+        };
+        let store = small_store(256);
+        let (server, handle) = Server::new(cfg, store);
+        let server_thread = thread::spawn(move || server.run());
+        let clients: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let h = handle.clone();
+                thread::spawn(move || {
+                    let mut stream =
+                        SyntheticStream::new(SyntheticConfig::sampled(1000 + c as u64));
+                    let mut rec = stream.next_record().unwrap();
+                    for _ in 0..per_client {
+                        let resp = h.classify(rec).expect("classify");
+                        assert!(resp.top_class < 2);
+                        rec = resp.record;
+                        if !stream.refill_record(&mut rec) {
+                            panic!("synthetic stream ended");
+                        }
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().expect("client");
+        }
+        handle.shutdown();
+        server_thread.join().expect("server");
+        handle.stats()
+    }
+
+    #[test]
+    fn single_client_round_trips() {
+        let snap = serve_round_trip(1, 50);
+        assert_eq!(snap.completed, 50);
+        assert_eq!(snap.submitted, 50);
+        assert!(snap.latency_ns.count == 50);
+        assert!(snap.batches >= 1);
+    }
+
+    #[test]
+    fn concurrent_clients_all_complete() {
+        let snap = serve_round_trip(6, 40);
+        assert_eq!(snap.completed, 240);
+        assert!(snap.latency_ns.p99 >= snap.latency_ns.p50);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_submissions() {
+        let cfg = ServeCfg::new(small_encoder(6));
+        let store = small_store(256);
+        let (server, handle) = Server::new(cfg, store);
+        let t = thread::spawn(move || server.run());
+        handle.shutdown();
+        t.join().unwrap();
+        let mut s = SyntheticStream::new(SyntheticConfig::sampled(7));
+        let rec = s.next_record().unwrap();
+        assert_eq!(handle.classify(rec).unwrap_err(), ServeError::Shutdown);
+        assert_eq!(handle.stats().rejected, 1);
+    }
+
+    #[test]
+    fn lone_requests_close_by_idle_cut_not_deadline() {
+        // One closed-loop client with a large batch size and a deadline
+        // long enough that paying it per request would be obvious: the
+        // idle cut must ship each 1-request batch immediately (nothing
+        // else is in flight), and every batch is accounted to exactly
+        // one cut kind.
+        let cfg = ServeCfg {
+            coordinator: CoordinatorCfg { batch_size: 64, n_workers: 1, ..Default::default() },
+            max_batch_delay: Duration::from_millis(200),
+            ..ServeCfg::new(small_encoder(8))
+        };
+        let (server, handle) = Server::new(cfg, small_store(256));
+        let t = thread::spawn(move || server.run());
+        let mut s = SyntheticStream::new(SyntheticConfig::sampled(9));
+        let mut rec = s.next_record().unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..10 {
+            rec = handle.classify(rec).unwrap().record;
+            s.refill_record(&mut rec);
+        }
+        let elapsed = t0.elapsed();
+        handle.shutdown();
+        t.join().unwrap();
+        let snap = handle.stats();
+        assert_eq!(snap.completed, 10);
+        assert!(snap.idle_cuts >= 1, "{snap:?}");
+        assert_eq!(snap.batches, snap.size_cuts + snap.deadline_cuts + snap.idle_cuts);
+        // 10 sequential requests must come nowhere near 10 deadlines.
+        assert!(elapsed < Duration::from_millis(1000), "deadline paid per request: {elapsed:?}");
+    }
+
+    #[test]
+    fn ragged_numeric_width_rejected_before_batching() {
+        // Micro-batches mix clients, and the encode workers hard-assert
+        // uniform numeric widths — a malformed record must be rejected
+        // at classify (and must NOT wedge the server for anyone else).
+        let enc = EncoderCfg {
+            cat: CatCfg::Bloom { d: 128, k: 2 },
+            num: NumCfg::Sjlt { d: 128, k: 2 },
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 12,
+        };
+        let (server, handle) = Server::new(ServeCfg::new(enc), small_store(256));
+        let t = thread::spawn(move || server.run());
+        let mut s = SyntheticStream::new(SyntheticConfig::sampled(13));
+        let good = s.next_record().unwrap();
+        let mut bad = good.clone();
+        bad.numeric.pop();
+        assert_eq!(
+            handle.classify(bad).unwrap_err(),
+            ServeError::InvalidNumericWidth { got: 12, want: 13 }
+        );
+        // The server is still healthy for well-formed traffic.
+        let resp = handle.classify(good).expect("good record must serve");
+        assert!(resp.top_class < 2);
+        handle.shutdown();
+        t.join().unwrap();
+        let snap = handle.stats();
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn scores_match_offline_store_lookup() {
+        // Every response's (class, score) must equal an offline lookup
+        // of the same record — the correlation correctness check.
+        let enc_cfg = small_encoder(10);
+        let store = small_store(256);
+        let offline_store = store.clone();
+        let cfg = ServeCfg {
+            coordinator: CoordinatorCfg {
+                batch_size: 8,
+                n_workers: 3,
+                queue_depth: 2,
+                ..Default::default()
+            },
+            max_batch_delay: Duration::from_micros(100),
+            ..ServeCfg::new(enc_cfg.clone())
+        };
+        let (server, handle) = Server::new(cfg, store);
+        let t = thread::spawn(move || server.run());
+        let mut offline_enc = enc_cfg.build();
+        let mut scratch = AmScratch::new();
+        let mut s = SyntheticStream::new(SyntheticConfig::sampled(11));
+        for _ in 0..200 {
+            let rec = s.next_record().unwrap();
+            let code = offline_enc.encode(&rec);
+            let (want_class, want_score) =
+                offline_store.top1(&code, Precision::F32, &mut scratch);
+            let resp = handle.classify(rec).unwrap();
+            assert_eq!(resp.top_class, want_class);
+            assert_eq!(resp.score, want_score);
+        }
+        handle.shutdown();
+        t.join().unwrap();
+    }
+}

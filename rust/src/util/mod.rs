@@ -5,3 +5,10 @@ pub mod bench;
 pub mod json;
 pub mod rng;
 pub mod stats;
+
+/// Parse a `u64` scale knob from the environment, falling back to
+/// `default` when unset or malformed — shared by the bench entry points
+/// (`perf::encode_snapshot`, `serve_bench`).
+pub fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}

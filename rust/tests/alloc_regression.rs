@@ -21,10 +21,12 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use shdc::am::{AmStore, Precision};
 use shdc::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use shdc::data::synthetic::SyntheticConfig;
-use shdc::data::SyntheticStream;
+use shdc::data::{RecordStream, SyntheticStream};
 use shdc::encoding::BundleMethod;
+use shdc::serve::{ServeCfg, Server};
 
 /// System allocator wrapper counting every allocation-ish event
 /// (alloc, alloc_zeroed, realloc) and every dealloc.
@@ -143,6 +145,68 @@ fn assert_alloc_free(label: &str, workers: usize, queue_depth: usize) {
     );
 }
 
+/// Closed-loop serve phase: one client rotates record buffers through
+/// `classify` while the allocation counters watch every thread — the
+/// submission queue, slot machinery, micro-batcher swap path, encode
+/// workers, AM scoring scratch and response hand-back must all run
+/// without per-request heap traffic once warm.
+fn measure_serve(warmup: u64, window: u64, total: u64) -> (u64, u64) {
+    // 2-class prototype store at the encoder's output dim (2048 + 512).
+    let d = 2048 + 512;
+    let mut rng = shdc::util::rng::Rng::new(7);
+    let rows: Vec<Vec<f32>> =
+        (0..2).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+    let store = AmStore::from_prototypes(d, &rows, None);
+    let cfg = ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 4,
+            n_workers: 2,
+            queue_depth: 4,
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(50),
+        queue_cap: 16,
+        slots: 8,
+        precision: Precision::Binary, // exercises query packing too
+        ..ServeCfg::new(enc_cfg(43))
+    };
+    let (server, handle) = Server::new(cfg, store);
+    let server_thread = std::thread::spawn(move || server.run());
+    let mut stream = SyntheticStream::new(SyntheticConfig::sampled(44));
+    let mut rec = stream.next_record().expect("unbounded");
+    let mut start = (0u64, 0u64);
+    let mut end = (0u64, 0u64);
+    for i in 1..=total {
+        let resp = handle.classify(rec).expect("serve");
+        rec = resp.record;
+        stream.refill_record(&mut rec);
+        if i == warmup {
+            start = counts();
+        }
+        if i == warmup + window {
+            end = counts();
+        }
+    }
+    handle.shutdown();
+    server_thread.join().expect("server");
+    (end.0 - start.0, end.1 - start.1)
+}
+
+fn assert_serve_alloc_free(label: &str) {
+    let mut observed = Vec::new();
+    for attempt in 0..3 {
+        let (allocs, deallocs) = measure_serve(400, 300, 720);
+        if allocs == 0 && deallocs == 0 {
+            return;
+        }
+        observed.push((attempt, allocs, deallocs));
+    }
+    panic!(
+        "{label}: every steady-state window allocated — per-request \
+         allocation has regressed (attempt, allocs, deallocs): {observed:?}"
+    );
+}
+
 #[test]
 fn steady_state_pipeline_is_allocation_free() {
     // Phase 1: single worker — the fully deterministic baseline.
@@ -150,4 +214,7 @@ fn steady_state_pipeline_is_allocation_free() {
     // Phase 2: multi-worker with stealing and cross-thread recycling
     // live. Same contract: once warm, not one allocation per batch.
     assert_alloc_free("3-worker stealing", 3, 4);
+    // Phase 3: the serving loop — submit → micro-batch → encode → AM
+    // score → respond — is allocation-free per request once warm.
+    assert_serve_alloc_free("closed-loop serve");
 }

@@ -195,6 +195,95 @@ fn bitset_sweep_active_matches_scalar_and_sort_dedup() {
     }
 }
 
+#[test]
+fn dot_f32_active_matches_scalar_bitwise_and_striped_reference() {
+    let mut rng = Rng::new(0xa5);
+    for &len in SIZES {
+        for &off in OFFSETS {
+            let a = edgy_f32s(&mut rng, off + len);
+            let b = random_f32s(&mut rng, off + len);
+            let xs = scalar::dot_f32(&a[off..], &b[off..]);
+            let xa = kernels::dot_f32(&a[off..], &b[off..]);
+            assert_eq!(
+                xs.to_bits(),
+                xa.to_bits(),
+                "dot_f32 len={len} off={off}: {xs:?} vs {xa:?}"
+            );
+            // Independent reference implementing the striped contract:
+            // LANES partial sums over full chunks, fixed fold tree,
+            // sequential tail.
+            let (aa, bb) = (&a[off..], &b[off..]);
+            let main = len - len % LANES;
+            let mut acc = [0.0f32; LANES];
+            for i in (0..main).step_by(LANES) {
+                for l in 0..LANES {
+                    acc[l] += aa[i + l] * bb[i + l];
+                }
+            }
+            let mut tail = 0.0f32;
+            for i in main..len {
+                tail += aa[i] * bb[i];
+            }
+            let want = kernels::fold_lanes(acc) + tail;
+            assert_eq!(want.to_bits(), xa.to_bits(), "dot_f32-vs-ref len={len} off={off}");
+        }
+    }
+}
+
+#[test]
+fn dot_i8_active_matches_scalar_and_naive_exactly() {
+    let mut rng = Rng::new(0xa6);
+    for &len in SIZES {
+        for &off in OFFSETS {
+            let a: Vec<i8> = (0..off + len).map(|_| (rng.next_u32() as i8)).collect();
+            let b: Vec<i8> = (0..off + len)
+                .map(|i| if i % 7 == 0 { i8::MIN } else { rng.next_u32() as i8 })
+                .collect();
+            let xs = scalar::dot_i8(&a[off..], &b[off..]);
+            let xa = kernels::dot_i8(&a[off..], &b[off..]);
+            // Naive independent i64 sum — integer, so all three exact.
+            let want: i64 =
+                a[off..].iter().zip(&b[off..]).map(|(&x, &y)| x as i64 * y as i64).sum();
+            assert_eq!(xs, want, "scalar dot_i8 len={len} off={off}");
+            assert_eq!(xa, want, "active dot_i8 len={len} off={off}");
+        }
+    }
+}
+
+#[test]
+fn packed_popcounts_active_match_scalar_and_naive() {
+    // Word counts cover empty, sub-block (POP_BLOCK = 4), block±1 and
+    // larger; all-zero words, all-ones words and random words mixed.
+    let mut rng = Rng::new(0xa7);
+    for &words in &[0usize, 1, 2, 3, 4, 5, 7, 8, 9, 31, 64, 157] {
+        for case in 0..4 {
+            let gen = |rng: &mut Rng| -> Vec<u64> {
+                (0..words)
+                    .map(|i| match (i + case) % 4 {
+                        0 => 0,                // all-zero word
+                        1 => u64::MAX,         // all-ones word
+                        _ => rng.next_u64(),
+                    })
+                    .collect()
+            };
+            let a = gen(&mut rng);
+            let b = gen(&mut rng);
+            let want_x: u64 =
+                a.iter().zip(&b).map(|(&x, &y)| (x ^ y).count_ones() as u64).sum();
+            let want_a: u64 =
+                a.iter().zip(&b).map(|(&x, &y)| (x & y).count_ones() as u64).sum();
+            assert_eq!(scalar::hamming_packed(&a, &b), want_x, "scalar ^ words={words}");
+            assert_eq!(kernels::hamming_packed(&a, &b), want_x, "active ^ words={words}");
+            assert_eq!(scalar::and_popcount(&a, &b), want_a, "scalar & words={words}");
+            assert_eq!(kernels::and_popcount(&a, &b), want_a, "active & words={words}");
+            // Self-distance is zero / self-overlap is the popcount.
+            assert_eq!(kernels::hamming_packed(&a, &a), 0);
+            let pop: u64 = a.iter().map(|w| w.count_ones() as u64).sum();
+            assert_eq!(kernels::and_popcount(&a, &a), pop);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Encoder-level wiring: the rewired encoders must still compute exactly
 // the map the naive (pre-kernel-layer) loops computed.

@@ -321,3 +321,111 @@ fn prop_auc_invariant_to_monotone_transform() {
         assert!((a1 + a3 - 1.0).abs() < 1e-9, "case {case}");
     });
 }
+
+#[test]
+fn prop_sign_binarize_round_trip() {
+    // The AM store's sign binarization must agree with sign_quantize's
+    // convention on every coordinate, and with the mathematical sign on
+    // every non-zero coordinate — so binarized prototypes preserve
+    // exactly the information the theory says they must.
+    use shdc::am::{pack_signs, words_for};
+    forall(60, |case, rng| {
+        let d = 1 + rng.below_usize(600);
+        let v: Vec<f32> = (0..d)
+            .map(|i| {
+                if rng.bernoulli(0.15) {
+                    [0.0f32, -0.0, f32::MIN_POSITIVE, -f32::MIN_POSITIVE][i % 4]
+                } else {
+                    rng.normal_f32()
+                }
+            })
+            .collect();
+        let mut bits = Vec::new();
+        pack_signs(&v, &mut bits);
+        assert_eq!(bits.len(), words_for(d), "case {case}");
+        // Unpack and compare against the sign_quantize reference.
+        let mut sq = v.clone();
+        kernels::sign_quantize(&mut sq);
+        for (i, (&orig, &s)) in v.iter().zip(&sq).enumerate() {
+            let bit = (bits[i >> 6] >> (i & 63)) & 1;
+            let unpacked = if bit == 1 { -1.0f32 } else { 1.0 };
+            assert_eq!(unpacked, s, "case {case}: coord {i} of {orig:?}");
+            if orig != 0.0 {
+                // Non-zero coords: binarized sign == mathematical sign.
+                assert_eq!(unpacked > 0.0, orig > 0.0, "case {case}: coord {i}");
+            }
+        }
+        // Pad bits of the last word stay clear.
+        if d % 64 != 0 {
+            let pad = bits[d >> 6] >> (d & 63);
+            assert_eq!(pad, 0, "case {case}: dirty pad bits");
+        }
+    });
+}
+
+#[test]
+fn prop_int8_quantize_round_trip() {
+    // Symmetric int8 quantization: reconstruction within scale/2 on
+    // every coordinate, and sign(q) agrees with sign(v) whenever the
+    // coordinate doesn't round to zero.
+    use shdc::am::quantize_i8;
+    forall(60, |case, rng| {
+        let d = 1 + rng.below_usize(400);
+        let amp = (rng.normal() * 2.0).exp() as f32; // sweep dynamic range
+        let v: Vec<f32> = (0..d)
+            .map(|_| if rng.bernoulli(0.1) { 0.0 } else { rng.normal_f32() * amp })
+            .collect();
+        let mut q = Vec::new();
+        let scale = quantize_i8(&v, &mut q);
+        assert!(scale > 0.0, "case {case}");
+        assert_eq!(q.len(), d);
+        for (i, (&x, &qi)) in v.iter().zip(&q).enumerate() {
+            let rec = qi as f32 * scale;
+            assert!(
+                (x - rec).abs() <= scale * 0.5 + scale * 1e-4,
+                "case {case}: coord {i}: {x} -> {qi} ({rec}), scale {scale}"
+            );
+            if qi != 0 {
+                assert_eq!((qi > 0), (x > 0.0), "case {case}: coord {i} sign flip");
+            }
+        }
+        // The extreme coordinate saturates the int8 range (symmetric
+        // quantization uses the full ±127 span).
+        if v.iter().any(|&x| x != 0.0) {
+            assert!(q.iter().any(|&qi| qi.abs() == 127), "case {case}: range unused");
+        }
+    });
+}
+
+#[test]
+fn prop_am_precisions_rank_consistently_on_separated_classes() {
+    // End-to-end AM property: when class prototypes are well separated,
+    // every precision (f32, int8, binary) must put a query drawn near a
+    // prototype into that prototype's class.
+    use shdc::am::{AmScratch, AmStore, Precision};
+    forall(20, |case, rng| {
+        let d = 128 + rng.below_usize(256);
+        let n_classes = 2 + rng.below_usize(4);
+        let rows: Vec<Vec<f32>> = (0..n_classes)
+            .map(|_| (0..d).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect())
+            .collect();
+        let store = AmStore::from_prototypes(d, &rows, None);
+        let mut scratch = AmScratch::new();
+        for (c, row) in rows.iter().enumerate() {
+            // Query = prototype + small noise (flip ~5% of signs).
+            let q: Vec<f32> = row
+                .iter()
+                .map(|&x| if rng.bernoulli(0.05) { -x } else { x })
+                .collect();
+            let enc = Encoding::Dense(q);
+            for prec in [Precision::F32, Precision::Int8, Precision::Binary] {
+                let (top, _) = store.top1(&enc, prec, &mut scratch);
+                assert_eq!(
+                    top as usize, c,
+                    "case {case}: {prec:?} misclassified a near-prototype query \
+                     (d={d}, classes={n_classes})"
+                );
+            }
+        }
+    });
+}

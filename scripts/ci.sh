@@ -35,8 +35,18 @@ cargo fmt --check
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== cargo build --release --bin serve_bench =="
+cargo build --release --bin serve_bench
+
 echo "== cargo test -q =="
 cargo test -q
+
+# The serving subsystem's end-to-end smoke (submit → micro-batch →
+# encode → AM score → respond vs offline references). Also part of the
+# full suite above; the dedicated invocation keeps the serve contract
+# visible in CI logs and runnable in isolation.
+echo "== cargo test -q --test serve_smoke =="
+cargo test -q --test serve_smoke
 
 if [[ "$run_simd" == 1 ]]; then
     # The kernel differential suite (tests/kernel_equivalence.rs) must
