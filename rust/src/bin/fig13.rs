@@ -49,6 +49,9 @@ fn cpu_train_throughput(bundle: BundleMethod, no_count: bool, records: u64) -> f
             ..Default::default()
         },
         |batch| {
+            if batch.failed {
+                return true; // worker panicked (recovered); nothing to train on
+            }
             // Borrow the batch; its buffers recycle back to the workers.
             model.sgd_step_parts(&batch.encodings, &batch.labels, 0.3, &mut errs);
             true

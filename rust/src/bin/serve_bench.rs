@@ -1,19 +1,22 @@
-//! Closed-loop load generator for the online serving subsystem: stands
-//! up the full stack (submission queue → size-or-deadline micro-batcher
-//! → work-stealing encode workers → associative-memory scoring) and
-//! drives it from closed-loop synthetic clients, sweeping store
-//! precision and client concurrency.
+//! Load generator for the online serving subsystem: stands up the full
+//! stack (submission queue → size-or-deadline micro-batcher →
+//! work-stealing encode workers → associative-memory scoring) and
+//! drives it two ways:
+//!
+//! 1. a **closed-loop** sweep over store precision × client concurrency
+//!    (offered load self-regulates to capacity → honest in-capacity
+//!    latency, no coordinated omission), then
+//! 2. an **open-loop** pair at ~0.5× and ~2.5× the measured closed-loop
+//!    capacity with `Shed` admission and a deadline — the only way to
+//!    observe overload behavior: shed rate, expired requests, and
+//!    tail-latency blowup instead of a hang.
 //!
 //! ```text
 //! cargo run --release --bin serve_bench
 //! SHDC_SERVE_REQUESTS=200000 SHDC_SERVE_CLIENTS=16 \
 //!     cargo run --release --bin serve_bench
+//! SHDC_SERVE_OPEN_REQUESTS=2000 cargo run --release --bin serve_bench
 //! ```
-//!
-//! Closed-loop means each client submits, blocks for the response, and
-//! immediately submits again — offered load self-regulates to server
-//! capacity, so the reported latency distribution is honest (no
-//! coordinated omission from an open-loop script outrunning the server).
 
 use std::time::Duration;
 
@@ -21,12 +24,31 @@ use shdc::am::{AmBuilder, Precision};
 use shdc::coordinator::{CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use shdc::data::synthetic::SyntheticConfig;
 use shdc::encoding::BundleMethod;
-use shdc::serve::{run_closed_loop, LoadCfg, ServeCfg};
+use shdc::serve::{
+    run_closed_loop, run_open_loop, AdmissionPolicy, LoadCfg, OpenLoadCfg, RequestOpts, ServeCfg,
+};
 use shdc::util::env_u64;
+
+fn serve_cfg(enc: &EncoderCfg, clients: usize, precision: Precision) -> ServeCfg {
+    ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 64,
+            n_workers: 2,
+            queue_depth: 4,
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(500),
+        queue_cap: 256,
+        slots: (2 * clients).max(16),
+        precision,
+        ..ServeCfg::new(enc.clone())
+    }
+}
 
 fn main() {
     let total_requests = env_u64("SHDC_SERVE_REQUESTS", 50_000);
     let max_clients = env_u64("SHDC_SERVE_CLIENTS", 8) as usize;
+    let open_requests = env_u64("SHDC_SERVE_OPEN_REQUESTS", 10_000);
 
     let enc = EncoderCfg {
         cat: CatCfg::Bloom { d: 10_000, k: 4 },
@@ -49,6 +71,7 @@ fn main() {
         }
         b.finish(true)
     };
+    let data = SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(33) };
 
     println!("== serve_bench: closed-loop synthetic load ==");
     println!(
@@ -62,31 +85,45 @@ fn main() {
         store.memory_bytes(Precision::Binary),
     );
 
+    // Capacity estimate for the open-loop phase: the concurrent
+    // closed-loop f32 scenario's throughput.
+    let mut capacity_rps = 0.0f64;
     for precision in [Precision::F32, Precision::Int8, Precision::Binary] {
         for clients in [1usize, max_clients.max(1)] {
-            let cfg = ServeCfg {
-                coordinator: CoordinatorCfg {
-                    batch_size: 64,
-                    n_workers: 2,
-                    queue_depth: 4,
-                    ..Default::default()
-                },
-                max_batch_delay: Duration::from_micros(500),
-                queue_cap: 256,
-                slots: (2 * clients).max(16),
-                precision,
-                ..ServeCfg::new(enc.clone())
-            };
+            let cfg = serve_cfg(&enc, clients, precision);
             let load = LoadCfg {
                 clients,
                 requests_per_client: (total_requests / clients as u64).max(1),
-                data: SyntheticConfig {
-                    alphabet_size: 1_000_000,
-                    ..SyntheticConfig::sampled(33)
-                },
+                data: data.clone(),
             };
             let report = run_closed_loop(cfg, store.clone(), &load);
             println!("  {:<7} {clients:>3} client(s): {}", precision.name(), report.row());
+            if precision == Precision::F32 && clients > 1 {
+                capacity_rps = report.throughput_rps;
+            }
         }
+    }
+
+    println!("== serve_bench: open-loop fixed-rate load (f32) ==");
+    println!(
+        "   admission: shed on saturation; deadline 50 ms; \
+         capacity estimate {capacity_rps:.0} req/s; {open_requests} arrivals per scenario"
+    );
+    let opts = RequestOpts {
+        admission: Some(AdmissionPolicy::Shed),
+        deadline: Some(Duration::from_millis(50)),
+    };
+    for factor in [0.5f64, 2.5] {
+        let rate = (capacity_rps * factor).max(1_000.0);
+        let cfg = serve_cfg(&enc, max_clients.max(1), Precision::F32);
+        let load = OpenLoadCfg {
+            rate_rps: rate,
+            total_requests: open_requests,
+            senders: (2 * max_clients).max(8),
+            opts,
+            data: data.clone(),
+        };
+        let report = run_open_loop(cfg, store.clone(), &load);
+        println!("  {factor:>4.1}x capacity: {}", report.row());
     }
 }

@@ -65,6 +65,34 @@
 //! reader → encode → consume loop runs with **zero steady-state
 //! allocations** (pinned by `tests/alloc_regression.rs`); a consumer
 //! that takes ownership (`drain(..)`) simply opts those buffers out.
+//!
+//! **Fault tolerance (§Robustness).** A panic inside the encode body is
+//! caught at the worker loop boundary (`catch_unwind`), so one bad batch
+//! cannot strand the pipeline:
+//!
+//! ```text
+//!  worker wid: pop batch seq=s ──► catch_unwind { encode }   ──ok──► EncodedBatch{s}
+//!                                      │ panic                          (normal path)
+//!                                      ▼
+//!                    EncodedBatch { seq: s, failed: true, encodings: [],
+//!                                   labels: one per record }
+//!                                      │  (the reorderer still sees seq s,
+//!                                      ▼   so stream order never stalls)
+//!                    consumer observes `failed` and fails that batch's
+//!                    requests explicitly (serve: ServeError::Internal)
+//!
+//!  after the failed send: worker_panics += 1, the worker rebuilds its
+//!  encoder from the seed (hash-defined state — "respawn" is free) and
+//!  keeps serving; past `max_worker_panics` it *retires* instead
+//!  (workers_retired += 1). When the last live worker retires the
+//!  scheduler stops the pipeline (stop flag + condvar broadcast) so the
+//!  reader and consumer unwind instead of parking forever.
+//! ```
+//!
+//! Every lock in the pool follows the uniform poisoned-lock recovery
+//! policy of [`crate::util::sync`] (recover the guard, never cascade a
+//! `PoisonError`); deterministic fault injection for all of the above is
+//! driven by [`FaultPlan`] and exercised by `tests/fault_injection.rs`.
 
 pub mod encoder;
 pub mod stats;
@@ -73,6 +101,7 @@ pub use encoder::{CatCfg, EncoderCfg, NumCfg, RecordEncoder};
 pub use stats::{PipelineStats, ScopeTimer, StatsSnapshot};
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
@@ -81,6 +110,7 @@ use std::time::Duration;
 
 use crate::data::{Record, RecordStream};
 use crate::encoding::Encoding;
+use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
 
 /// A batch of encoded records plus labels, tagged with its stream order.
 #[derive(Debug)]
@@ -96,6 +126,41 @@ pub struct EncodedBatch {
     /// receives returns in proportion to what that worker actually
     /// encoded — round-robin returns would starve fast workers' pools.
     pub(crate) origin: usize,
+    /// The encode body panicked: `encodings` is empty, `labels` still
+    /// holds one entry per record of the batch (so consumers know how
+    /// many requests to fail), and the batch still occupies its sequence
+    /// slot so the reorderer never stalls. Consumers that score or train
+    /// must skip failed batches; the serve consumer completes each of
+    /// their requests with an explicit `ServeError::Internal`.
+    pub failed: bool,
+}
+
+/// Deterministic fault-injection plan — the test hook behind
+/// `tests/fault_injection.rs` and the CI fault leg. All fields default
+/// to "inject nothing"; production configs never set them. Faults key on
+/// *stream state* (sequence numbers), not thread timing, so every
+/// injected run is reproducible under any steal interleaving.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Panic inside the encode body of these stream sequence numbers
+    /// (whichever worker picks the batch up). Each listed seq panics
+    /// exactly once: the batch is failed downstream, never re-encoded.
+    pub panic_on_seq: Vec<u64>,
+    /// Worker `wid` sleeps for the duration once, before its first
+    /// encode — a transient hard stall (distinct from
+    /// [`CoordinatorCfg::slow_worker`], the per-batch drag used by the
+    /// stealing tests): queued work must be stolen or must wait, and
+    /// serve-side deadlines must expire instead of hanging.
+    pub stall_once: Option<(usize, Duration)>,
+    /// Discard every consumed batch shell instead of recycling it
+    /// (simulates a lost/full recycle channel): the pipeline must fall
+    /// back to the allocator and stay correct, counting
+    /// `recycle_misses`.
+    pub drop_recycle: bool,
+    /// (Serve-side) the request micro-batcher sleeps once, before its
+    /// first cut, so the bounded submission queue saturates: admission
+    /// control must shed/timeout instead of wedging the clients.
+    pub stall_batcher: Option<Duration>,
 }
 
 #[derive(Clone, Debug)]
@@ -120,6 +185,15 @@ pub struct CoordinatorCfg {
     /// thread forever. Streams that never block (all the data-layer
     /// streams) can ignore it; leave `None` when unused.
     pub stop_flag: Option<Arc<std::sync::atomic::AtomicBool>>,
+    /// Encode-body panics a single worker absorbs (fail the batch,
+    /// rebuild the encoder from the seed, keep serving) before it
+    /// *retires* from the pool. When the last live worker retires the
+    /// scheduler stops the pipeline. Panics are per-worker, so the pool
+    /// survives up to `n_workers * (max_worker_panics + 1)` of them.
+    pub max_worker_panics: u32,
+    /// Deterministic fault injection (tests/CI only); default injects
+    /// nothing.
+    pub fault: FaultPlan,
 }
 
 impl Default for CoordinatorCfg {
@@ -132,6 +206,8 @@ impl Default for CoordinatorCfg {
             max_records: None,
             slow_worker: None,
             stop_flag: None,
+            max_worker_panics: 3,
+            fault: FaultPlan::default(),
         }
     }
 }
@@ -176,6 +252,12 @@ struct Ctl {
     eof: bool,
     /// The consumer stopped early; every stage unwinds.
     stopped: bool,
+    /// Workers still pulling from the deques. Decremented only by
+    /// retirement ([`StealScheduler::retire`]); when it reaches zero the
+    /// scheduler stops the pipeline, because batches left in the deques
+    /// can never be encoded and the reader/consumer must not park
+    /// behind them forever.
+    live_workers: usize,
 }
 
 /// What `try_take` popped: the batch, whether it came from a sibling's
@@ -198,7 +280,7 @@ impl StealScheduler {
             injector: Mutex::new(VecDeque::with_capacity(injector_cap)),
             queue_depth,
             injector_cap,
-            ctl: Mutex::new(Ctl::default()),
+            ctl: Mutex::new(Ctl { live_workers: n_workers, ..Ctl::default() }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
             stop_flag,
@@ -214,13 +296,13 @@ impl StealScheduler {
         stats: &PipelineStats,
     ) -> Result<(), RawBatch> {
         {
-            let mut q = self.queues[target].lock().unwrap();
+            let mut q = lock_unpoisoned(&self.queues[target]);
             if q.len() < self.queue_depth {
                 q.push_back(batch);
                 return Ok(());
             }
         }
-        let mut inj = self.injector.lock().unwrap();
+        let mut inj = lock_unpoisoned(&self.injector);
         if inj.len() < self.injector_cap {
             inj.push_back(batch);
             drop(inj);
@@ -242,7 +324,7 @@ impl StealScheduler {
             Err(b) => b,
         };
         stats.backpressure_events.fetch_add(1, Ordering::Relaxed);
-        let mut ctl = self.ctl.lock().unwrap();
+        let mut ctl = lock_unpoisoned(&self.ctl);
         loop {
             if ctl.stopped {
                 return Err(());
@@ -256,17 +338,17 @@ impl StealScheduler {
                 }
                 Err(b) => batch = b,
             }
-            ctl = self.space_cv.wait(ctl).unwrap();
+            ctl = wait_unpoisoned(&self.space_cv, ctl);
         }
     }
 
     fn notify_work(&self) {
-        let _ctl = self.ctl.lock().unwrap();
+        let _ctl = lock_unpoisoned(&self.ctl);
         self.work_cv.notify_one();
     }
 
     fn notify_space(&self) {
-        let _ctl = self.ctl.lock().unwrap();
+        let _ctl = lock_unpoisoned(&self.ctl);
         self.space_cv.notify_all();
     }
 
@@ -274,14 +356,14 @@ impl StealScheduler {
     /// else the back of the longest sibling deque (a steal).
     fn try_take(&self, wid: usize) -> Option<Taken> {
         {
-            let mut q = self.queues[wid].lock().unwrap();
+            let mut q = lock_unpoisoned(&self.queues[wid]);
             let was_full = q.len() == self.queue_depth;
             if let Some(b) = q.pop_front() {
                 return Some((b, false, was_full));
             }
         }
         {
-            let mut inj = self.injector.lock().unwrap();
+            let mut inj = lock_unpoisoned(&self.injector);
             let was_full = inj.len() == self.injector_cap;
             if let Some(b) = inj.pop_front() {
                 return Some((b, false, was_full));
@@ -296,14 +378,14 @@ impl StealScheduler {
             if i == wid {
                 continue;
             }
-            let len = q.lock().unwrap().len();
+            let len = lock_unpoisoned(q).len();
             if len > best {
                 best = len;
                 victim = Some(i);
             }
         }
         if let Some(v) = victim {
-            let mut q = self.queues[v].lock().unwrap();
+            let mut q = lock_unpoisoned(&self.queues[v]);
             let was_full = q.len() == self.queue_depth;
             if let Some(b) = q.pop_back() {
                 return Some((b, true, was_full));
@@ -316,7 +398,7 @@ impl StealScheduler {
     /// drained after EOF, or immediately on early stop.
     fn pop(&self, wid: usize, stats: &PipelineStats) -> Option<RawBatch> {
         let taken = self.try_take(wid).or_else(|| {
-            let mut ctl = self.ctl.lock().unwrap();
+            let mut ctl = lock_unpoisoned(&self.ctl);
             loop {
                 if ctl.stopped {
                     return None;
@@ -327,7 +409,7 @@ impl StealScheduler {
                 if ctl.eof {
                     return None;
                 }
-                ctl = self.work_cv.wait(ctl).unwrap();
+                ctl = wait_unpoisoned(&self.work_cv, ctl);
             }
         });
         let (batch, stolen, was_full) = taken?;
@@ -343,13 +425,17 @@ impl StealScheduler {
     }
 
     fn set_eof(&self) {
-        let mut ctl = self.ctl.lock().unwrap();
+        let mut ctl = lock_unpoisoned(&self.ctl);
         ctl.eof = true;
         self.work_cv.notify_all();
     }
 
     fn stop(&self) {
-        let mut ctl = self.ctl.lock().unwrap();
+        let ctl = lock_unpoisoned(&self.ctl);
+        self.stop_locked(ctl);
+    }
+
+    fn stop_locked(&self, mut ctl: std::sync::MutexGuard<'_, Ctl>) {
         ctl.stopped = true;
         if let Some(flag) = &self.stop_flag {
             // Visible to blocking streams (which poll it with a bounded
@@ -359,6 +445,18 @@ impl StealScheduler {
         }
         self.work_cv.notify_all();
         self.space_cv.notify_all();
+    }
+
+    /// A worker leaves the pool after exhausting its panic budget. The
+    /// last live worker to retire stops the pipeline: batches still in
+    /// the deques can never be encoded, so the reader and the consumer
+    /// must unwind instead of parking behind them.
+    fn retire(&self) {
+        let mut ctl = lock_unpoisoned(&self.ctl);
+        ctl.live_workers = ctl.live_workers.saturating_sub(1);
+        if ctl.live_workers == 0 && !ctl.stopped {
+            self.stop_locked(ctl);
+        }
     }
 }
 
@@ -497,11 +595,16 @@ where
         let ecfg = encoder_cfg.clone();
         let keep = cfg.keep_records;
         let slow = cfg.slow_worker;
+        let max_panics = cfg.max_worker_panics;
+        let fault = cfg.fault.clone();
         let wsched = Arc::clone(&sched);
         let wspine_tx = spine_tx.clone();
         workers.push(thread::spawn(move || {
             let panic_guard = StopOnPanic(Arc::clone(&wsched));
             let mut enc = ecfg.build();
+            let mut panics_seen = 0u32;
+            let mut stall_once =
+                fault.stall_once.filter(|&(w, _)| w == wid).map(|(_, d)| d);
             // Pooled batch spines, refilled from the recycle channel.
             let mut enc_spines: Vec<Vec<Encoding>> = Vec::new();
             let mut label_spines: Vec<Vec<bool>> = Vec::new();
@@ -526,16 +629,46 @@ where
                         thread::sleep(delay);
                     }
                 }
+                if let Some(delay) = stall_once.take() {
+                    thread::sleep(delay);
+                }
                 let n = raw.records.len() as u64;
+                // Labels are captured BEFORE the fallible encode, so a
+                // failed batch still tells its consumer how many
+                // records/requests it covered (`labels.len()`).
                 let mut labels = label_spines.pop().unwrap_or_default();
                 labels.clear();
                 labels.extend(raw.records.iter().map(|r| r.label));
                 let mut encodings = enc_spines.pop().unwrap_or_default();
-                {
+                // The whole encode body runs under catch_unwind: a panic
+                // (injected via FaultPlan, or a genuine encoder bug on a
+                // hostile record) must cost exactly this batch, not the
+                // pipeline. No lock is held here, so no Mutex is ever
+                // poisoned by an encode panic.
+                let encode_ok = catch_unwind(AssertUnwindSafe(|| {
+                    if fault.panic_on_seq.contains(&raw.seq) {
+                        panic!("shdc injected fault: encode panic at seq {}", raw.seq);
+                    }
                     let _t = ScopeTimer::new(&wstats.encode_ns);
                     enc.encode_batch_into(&raw.records, &mut encodings);
+                }))
+                .is_ok();
+                if encode_ok {
+                    wstats.records_encoded.fetch_add(n, Ordering::Relaxed);
+                } else {
+                    wstats.worker_panics.fetch_add(1, Ordering::Relaxed);
+                    wstats.batches_failed.fetch_add(1, Ordering::Relaxed);
+                    panics_seen += 1;
+                    // The panic may have unwound mid-encode: partial
+                    // output and encoder scratch state are suspect.
+                    // Drop the partial encodings and "respawn" the
+                    // worker in place — rebuild the encoder from the
+                    // seed (hash-defined state makes this exact and
+                    // cheap: no codebook to restore, the paper's
+                    // synchronization-free property).
+                    encodings.clear();
+                    enc = ecfg.build();
                 }
-                wstats.records_encoded.fetch_add(n, Ordering::Relaxed);
                 let records = if keep {
                     Some(raw.records)
                 } else {
@@ -543,11 +676,29 @@ where
                     let _ = wspine_tx.try_send(raw.records);
                     None
                 };
-                let out = EncodedBatch { seq: raw.seq, encodings, labels, records, origin: wid };
+                let out = EncodedBatch {
+                    seq: raw.seq,
+                    encodings,
+                    labels,
+                    records,
+                    origin: wid,
+                    failed: !encode_ok,
+                };
+                // The failed batch still ships downstream — it owns a
+                // sequence slot, and the consumer must observe the
+                // failure to fail the batch's requests explicitly.
                 if send_counted(&tx, out, &wstats).is_err() {
                     // Consumer dropped the channel: stop the pipeline so
                     // the reader and parked siblings unwind too.
                     wsched.stop();
+                    break;
+                }
+                if !encode_ok && panics_seen > max_panics {
+                    // Panic budget exhausted: retire rather than risk an
+                    // unbounded crash loop. The scheduler stops the
+                    // pipeline once no live worker remains.
+                    wstats.workers_retired.fetch_add(1, Ordering::Relaxed);
+                    wsched.retire();
                     break;
                 }
             }
@@ -563,7 +714,7 @@ where
     // worker + the encoded channel); pathological stalls can exceed it
     // (the ring then grows), but steady state never reallocates.
     let ring_hint = 2 * n_workers * queue_depth + n_workers + queue_depth + 8;
-    consume_in_order(enc_rx, &ret_txs, ring_hint, &stats, &mut consume);
+    consume_in_order(enc_rx, &ret_txs, ring_hint, &stats, cfg.fault.drop_recycle, &mut consume);
 
     reader.join().expect("reader panicked");
     for w in workers {
@@ -585,6 +736,7 @@ fn consume_in_order<F: FnMut(&mut EncodedBatch) -> bool>(
     ret_txs: &[SyncSender<EncodedBatch>],
     ring_hint: usize,
     stats: &PipelineStats,
+    drop_recycle: bool,
     consume: &mut F,
 ) {
     let mut next = 0u64;
@@ -599,7 +751,10 @@ fn consume_in_order<F: FnMut(&mut EncodedBatch) -> bool>(
             // each pool receives returns in proportion to its actual
             // encode rate (stealing makes that uneven across workers).
             let origin = b.origin;
-            if ret_txs[origin].try_send(b).is_err() {
+            if drop_recycle || ret_txs[origin].try_send(b).is_err() {
+                // `drop_recycle` (FaultPlan) simulates a lossy recycle
+                // path: the pool must fall back to fresh allocations, not
+                // starve. The batch drops here either way.
                 stats.recycle_misses.fetch_add(1, Ordering::Relaxed);
             }
             if !keep {
@@ -790,7 +945,12 @@ mod tests {
         run_pipeline(
             stream,
             &small_cfg(),
-            &CoordinatorCfg { batch_size: 8, n_workers: 3, max_records: Some(10_000), ..Default::default() },
+            &CoordinatorCfg {
+                batch_size: 8,
+                n_workers: 3,
+                max_records: Some(10_000),
+                ..Default::default()
+            },
             |_| {
                 batches += 1;
                 batches < 5

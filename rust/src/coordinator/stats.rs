@@ -27,6 +27,16 @@ pub struct PipelineStats {
     /// Consumed batches whose buffers were dropped instead of recycled
     /// (recycle channel full or already closed).
     pub recycle_misses: AtomicU64,
+    /// Encode-body panics caught at the worker loop boundary (each one
+    /// fails exactly its batch; the worker rebuilds its encoder from the
+    /// seed and keeps serving).
+    pub worker_panics: AtomicU64,
+    /// Workers that exceeded [`super::CoordinatorCfg::max_worker_panics`]
+    /// and retired from the pool.
+    pub workers_retired: AtomicU64,
+    /// Batches delivered with [`super::EncodedBatch::failed`] set (their
+    /// requests/records were not encoded).
+    pub batches_failed: AtomicU64,
 }
 
 impl PipelineStats {
@@ -52,6 +62,9 @@ impl PipelineStats {
             injector_batches: self.injector_batches.load(Ordering::Relaxed),
             buffers_recycled: self.buffers_recycled.load(Ordering::Relaxed),
             recycle_misses: self.recycle_misses.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            workers_retired: self.workers_retired.load(Ordering::Relaxed),
+            batches_failed: self.batches_failed.load(Ordering::Relaxed),
         }
     }
 }
@@ -69,6 +82,9 @@ pub struct StatsSnapshot {
     pub injector_batches: u64,
     pub buffers_recycled: u64,
     pub recycle_misses: u64,
+    pub worker_panics: u64,
+    pub workers_retired: u64,
+    pub batches_failed: u64,
 }
 
 impl StatsSnapshot {
@@ -120,6 +136,9 @@ mod tests {
         s.add(&s.buffers_recycled, 9);
         s.add(&s.injector_batches, 1);
         s.add(&s.recycle_misses, 3);
+        s.add(&s.worker_panics, 4);
+        s.add(&s.workers_retired, 1);
+        s.add(&s.batches_failed, 4);
         let snap = s.snapshot();
         assert_eq!(snap.records_read, 15);
         assert_eq!(snap.records_encoded, 7);
@@ -127,6 +146,9 @@ mod tests {
         assert_eq!(snap.buffers_recycled, 9);
         assert_eq!(snap.injector_batches, 1);
         assert_eq!(snap.recycle_misses, 3);
+        assert_eq!(snap.worker_panics, 4);
+        assert_eq!(snap.workers_retired, 1);
+        assert_eq!(snap.batches_failed, 4);
     }
 
     #[test]
@@ -153,6 +175,9 @@ mod tests {
             injector_batches: 0,
             buffers_recycled: 0,
             recycle_misses: 0,
+            worker_panics: 0,
+            workers_retired: 0,
+            batches_failed: 0,
         };
         assert!((snap.encode_throughput() - 1000.0).abs() < 1e-9);
         assert!((snap.train_throughput() - 1000.0).abs() < 1e-9);

@@ -23,10 +23,14 @@
 //! The snapshot's **serve** section runs the closed-loop load generator
 //! ([`crate::serve::bench::run_closed_loop`]) against the full serving
 //! stack — submission queue → micro-batcher → work-stealing encode →
-//! AM scoring — once per store precision (f32 and binary), recording
-//! end-to-end request latency p50/p99, queue-depth distribution and
-//! batch-cut mix, so the serving hot path's tail behaviour tracks PR
-//! over PR next to the encode medians.
+//! AM scoring — once per store precision (f32, int8 and binary),
+//! recording end-to-end request latency p50/p99, queue-depth
+//! distribution, batch-cut mix and the overload counters
+//! (shed/expired/failed), then one **open-loop** overload scenario
+//! ([`crate::serve::bench::run_open_loop`]) at ~2× the measured f32
+//! closed-loop capacity with `Shed` admission and a 50 ms deadline, so
+//! the snapshot pins saturation behavior (shed rate, expired count)
+//! next to the in-capacity latency medians.
 //!
 //! Knobs: `BENCH_MS` (per-measurement budget, default 300),
 //! `SHDC_BENCH_RECORDS` (pipeline-scaling record budget, default 60000),
@@ -133,35 +137,30 @@ fn pipeline_records_per_sec(
     (records as f64 / dt, snap)
 }
 
-/// One closed-loop serve scenario at paper-shaped encode dims; returns
-/// the JSON record for the snapshot's `serve` array.
-fn serve_scenario(precision: Precision, requests: u64) -> Json {
-    use crate::serve::{run_closed_loop, LoadCfg, ServeCfg};
-    let enc = EncoderCfg {
+fn serve_encoder() -> EncoderCfg {
+    EncoderCfg {
         cat: CatCfg::Bloom { d: 10_000, k: 4 },
         num: NumCfg::Sjlt { d: 10_000, k: 4 },
         bundle: BundleMethod::Concat,
         n_numeric: 13,
         seed: 17,
-    };
-    // Bundle a 2-class store from a few hundred encoded records — the
-    // classic AM rule. Store *content* is irrelevant to the timing;
-    // shape (d, class count, precision) is what's measured.
-    let store: AmStore = {
-        let mut builder = AmBuilder::new(enc.out_dim(), 2);
-        let mut renc = enc.build();
-        for rec in sample_records(256) {
-            builder.add(rec.label as usize, &renc.encode(&rec));
-        }
-        builder.finish(true)
-    };
-    let clients = 8usize;
-    let load = LoadCfg {
-        clients,
-        requests_per_client: (requests / clients as u64).max(1),
-        data: SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(18) },
-    };
-    let cfg = ServeCfg {
+    }
+}
+
+/// Bundle a 2-class store from a few hundred encoded records — the
+/// classic AM rule. Store *content* is irrelevant to the timing; shape
+/// (d, class count, precision) is what's measured.
+fn serve_store(enc: &EncoderCfg) -> AmStore {
+    let mut builder = AmBuilder::new(enc.out_dim(), 2);
+    let mut renc = enc.build();
+    for rec in sample_records(256) {
+        builder.add(rec.label as usize, &renc.encode(&rec));
+    }
+    builder.finish(true)
+}
+
+fn serve_cfg(enc: EncoderCfg, precision: Precision) -> crate::serve::ServeCfg {
+    crate::serve::ServeCfg {
         coordinator: CoordinatorCfg {
             batch_size: 64,
             n_workers: 2,
@@ -172,25 +171,71 @@ fn serve_scenario(precision: Precision, requests: u64) -> Json {
         queue_cap: 256,
         slots: 64,
         precision,
-        ..ServeCfg::new(enc)
+        ..crate::serve::ServeCfg::new(enc)
+    }
+}
+
+/// One closed-loop serve scenario at paper-shaped encode dims; returns
+/// the JSON record for the snapshot's `serve` array plus the measured
+/// throughput (feeds the open-loop scenario's rate derivation).
+fn serve_scenario(precision: Precision, requests: u64) -> (Json, f64) {
+    use crate::serve::{run_closed_loop, LoadCfg};
+    let enc = serve_encoder();
+    let store = serve_store(&enc);
+    let clients = 8usize;
+    let load = LoadCfg {
+        clients,
+        requests_per_client: (requests / clients as u64).max(1),
+        data: SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(18) },
     };
-    let report = run_closed_loop(cfg, store, &load);
+    let report = run_closed_loop(serve_cfg(enc, precision), store, &load);
     println!("  serve {:<7} {}", precision.name(), report.row());
-    Json::obj(vec![
+    let json = Json::obj(vec![
         ("precision", Json::str(precision.name())),
         ("clients", Json::num(clients as f64)),
         ("report", report.to_json()),
-    ])
+    ]);
+    (json, report.throughput_rps)
 }
 
 /// The serve section of the snapshot: every store precision — f32
 /// (reference), int8 (4× smaller) and binary (the 32×-smaller popcount
-/// store) — under identical closed-loop load.
+/// store) — under identical closed-loop load, then one open-loop
+/// overload scenario at ~2× the f32 closed-loop capacity (shed
+/// admission + 50 ms deadline) so the snapshot records saturation
+/// behavior, not just in-capacity latency.
 fn serve_scenarios(requests: u64) -> Vec<Json> {
-    [Precision::F32, Precision::Int8, Precision::Binary]
-        .into_iter()
-        .map(|p| serve_scenario(p, requests))
-        .collect()
+    use crate::serve::{run_open_loop, AdmissionPolicy, OpenLoadCfg, RequestOpts};
+    let mut f32_rps = 0.0f64;
+    let mut out: Vec<Json> = Vec::new();
+    for p in [Precision::F32, Precision::Int8, Precision::Binary] {
+        let (json, rps) = serve_scenario(p, requests);
+        if p == Precision::F32 {
+            f32_rps = rps;
+        }
+        out.push(json);
+    }
+    let enc = serve_encoder();
+    let store = serve_store(&enc);
+    let rate = (2.0 * f32_rps).max(1_000.0);
+    let load = OpenLoadCfg {
+        rate_rps: rate,
+        total_requests: requests.clamp(1, 10_000),
+        senders: 16,
+        opts: RequestOpts {
+            admission: Some(AdmissionPolicy::Shed),
+            deadline: Some(Duration::from_millis(50)),
+        },
+        data: SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(19) },
+    };
+    let report = run_open_loop(serve_cfg(enc, Precision::F32), store, &load);
+    println!("  serve open    {}", report.row());
+    out.push(Json::obj(vec![
+        ("precision", Json::str(Precision::F32.name())),
+        ("senders", Json::num(load.senders as f64)),
+        ("report", report.to_json()),
+    ]));
+    out
 }
 
 /// Run the full encode snapshot; returns the machine-readable document

@@ -177,6 +177,11 @@ fn train_rust(cfg: &TrainCfg, data_cfg: &SyntheticConfig) -> Result<TrainReport>
     // worker pools after every step (zero steady-state allocations).
     let mut errs: Vec<f32> = Vec::new();
     let stats: Arc<PipelineStats> = run_pipeline(stream, &cfg.encoder, &coord, |batch| {
+        if batch.failed {
+            // Worker panicked on this batch (recovered); no encodings to
+            // train on. Skipping keeps label/encoding pairing exact.
+            return true;
+        }
         let t_step = Instant::now();
         let loss = model.sgd_step_parts(&batch.encodings, &batch.labels, cfg.lr, &mut errs);
         train_ns_local += t_step.elapsed().as_nanos() as u64;

@@ -1,13 +1,24 @@
-//! Closed-loop synthetic load generation for the serving subsystem —
-//! shared by the `serve_bench` binary and `perf::encode_snapshot` so
+//! Synthetic load generation for the serving subsystem — shared by the
+//! `serve_bench` binary and `perf::encode_snapshot` so
 //! `BENCH_encode.json` carries serve-path latency distributions.
 //!
-//! Closed loop: each client thread submits one request, blocks for its
-//! response, rotates the returned record buffer and submits again —
-//! offered load self-regulates to the server's capacity (no coordinated
-//! omission from a fixed-rate script outrunning the server), and
-//! `clients` is the concurrency knob.
+//! Two generators:
+//!
+//! * **Closed loop** ([`run_closed_loop`]): each client thread submits
+//!   one request, blocks for its response, rotates the returned record
+//!   buffer and submits again — offered load self-regulates to the
+//!   server's capacity (no coordinated omission from a fixed-rate script
+//!   outrunning the server), and `clients` is the concurrency knob.
+//!   Measures capacity and in-capacity latency; *cannot* observe
+//!   overload.
+//! * **Open loop** ([`run_open_loop`]): requests become due on a fixed
+//!   global arrival schedule regardless of completions, so offered load
+//!   is independent of the server — the only generator that can push
+//!   past saturation. Run it with [`crate::serve::AdmissionPolicy::Shed`]
+//!   (default here) or a deadline, and the report exposes the overload
+//!   behavior: shed rate, expired count, tail-latency blowup.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -16,7 +27,7 @@ use crate::am::AmStore;
 use crate::coordinator::StatsSnapshot;
 use crate::data::synthetic::SyntheticConfig;
 use crate::data::{RecordStream, SyntheticStream};
-use crate::serve::{ServeCfg, ServeSnapshot, Server};
+use crate::serve::{RequestOpts, ServeCfg, ServeError, ServeSnapshot, Server};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -63,6 +74,7 @@ impl ServeBenchReport {
             ])
         };
         Json::obj(vec![
+            ("mode", Json::str("closed")),
             ("total_requests", Json::num(self.total_requests as f64)),
             ("wall_s", Json::num(self.wall.as_secs_f64())),
             ("throughput_rps", Json::num(self.throughput_rps)),
@@ -72,8 +84,13 @@ impl ServeBenchReport {
             ("size_cuts", Json::num(self.serve.size_cuts as f64)),
             ("deadline_cuts", Json::num(self.serve.deadline_cuts as f64)),
             ("idle_cuts", Json::num(self.serve.idle_cuts as f64)),
+            ("shed", Json::num(self.serve.shed as f64)),
+            ("expired", Json::num(self.serve.expired as f64)),
+            ("failed", Json::num(self.serve.failed as f64)),
+            ("shed_rate", Json::num(self.serve.shed_rate())),
             ("buffers_recycled", Json::num(self.pipeline.buffers_recycled as f64)),
             ("batches_stolen", Json::num(self.pipeline.batches_stolen as f64)),
+            ("worker_panics", Json::num(self.pipeline.worker_panics as f64)),
         ])
     }
 
@@ -136,6 +153,183 @@ pub fn run_closed_loop(cfg: ServeCfg, store: AmStore, load: &LoadCfg) -> ServeBe
     }
 }
 
+/// Open-loop (fixed arrival rate) load configuration.
+#[derive(Clone, Debug)]
+pub struct OpenLoadCfg {
+    /// Offered arrival rate, requests per second — independent of the
+    /// server's completion rate (that independence is the whole point).
+    pub rate_rps: f64,
+    /// Total requests offered across all sender threads.
+    pub total_requests: u64,
+    /// Sender threads draining the shared arrival schedule. Each sender
+    /// is synchronous (blocks per its admission policy), so this also
+    /// bounds in-flight requests; size it generously above
+    /// `rate / per-request service rate`.
+    pub senders: usize,
+    /// Per-request options (admission policy / deadline). With `Block`
+    /// admission an over-capacity run would make senders lag the
+    /// schedule instead of exposing overload — use `Shed`, backoff, or a
+    /// deadline for saturation studies.
+    pub opts: RequestOpts,
+    /// The synthetic record distribution senders draw from.
+    pub data: SyntheticConfig,
+}
+
+/// What came back from one open-loop run: outcome tallies as the
+/// *clients* observed them (cross-checkable against [`ServeSnapshot`]).
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    pub offered: u64,
+    pub offered_rps: f64,
+    /// Completion rate of successful responses over the wall time.
+    pub achieved_rps: f64,
+    pub ok: u64,
+    pub shed: u64,
+    pub timed_out: u64,
+    pub expired: u64,
+    pub failed: u64,
+    pub aborted: u64,
+    pub rejected: u64,
+    pub wall: Duration,
+    pub serve: ServeSnapshot,
+    pub pipeline: StatsSnapshot,
+}
+
+impl OpenLoopReport {
+    /// Machine-readable form for `BENCH_encode.json`.
+    pub fn to_json(&self) -> Json {
+        let hist = |h: &crate::serve::HistSnapshot| {
+            Json::obj(vec![
+                ("count", Json::num(h.count as f64)),
+                ("mean", Json::num(h.mean)),
+                ("p50", Json::num(h.p50 as f64)),
+                ("p90", Json::num(h.p90 as f64)),
+                ("p99", Json::num(h.p99 as f64)),
+                ("max", Json::num(h.max as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("mode", Json::str("open")),
+            ("offered", Json::num(self.offered as f64)),
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("achieved_rps", Json::num(self.achieved_rps)),
+            ("ok", Json::num(self.ok as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("timed_out", Json::num(self.timed_out as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("shed_rate", Json::num(self.serve.shed_rate())),
+            ("latency_ns", hist(&self.serve.latency_ns)),
+            ("queue_depth", hist(&self.serve.queue_depth)),
+            ("worker_panics", Json::num(self.pipeline.worker_panics as f64)),
+        ])
+    }
+
+    /// The one-line human summary the bench binary prints per scenario.
+    pub fn row(&self) -> String {
+        format!(
+            "offered {:>9.0} req/s  achieved {:>9.0} req/s  shed {:>5.1}%  \
+             ok {:>7}  expired {:>6}  p99 {:>10} ns",
+            self.offered_rps,
+            self.achieved_rps,
+            self.serve.shed_rate() * 100.0,
+            self.ok,
+            self.expired,
+            self.serve.latency_ns.p99,
+        )
+    }
+}
+
+/// Run an open-loop load test: `total_requests` arrivals spaced
+/// `1/rate_rps` apart on one shared schedule, drained by `senders`
+/// threads. Always terminates — over capacity, the admission policy
+/// (shed / backoff timeout / deadline) refuses the excess instead of
+/// queueing it unboundedly, and that refusal rate is the measurement.
+pub fn run_open_loop(cfg: ServeCfg, store: AmStore, load: &OpenLoadCfg) -> OpenLoopReport {
+    assert!(load.rate_rps > 0.0, "open loop needs a positive arrival rate");
+    let (server, handle) = Server::new(cfg, store);
+    let server_thread = thread::spawn(move || server.run());
+    let interval = Duration::from_secs_f64(1.0 / load.rate_rps);
+    let next_arrival = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let senders: Vec<_> = (0..load.senders.max(1))
+        .map(|c| {
+            let h = handle.clone();
+            let mut data = load.data.clone();
+            data.stream_salt ^= 0x09e7 ^ ((c as u64) << 32);
+            let next = Arc::clone(&next_arrival);
+            let total = load.total_requests;
+            let opts = load.opts;
+            thread::spawn(move || {
+                let mut stream = SyntheticStream::new(data);
+                let mut rec = stream.next_record().expect("unbounded stream");
+                // Tally: [ok, shed, timed_out, expired, failed, aborted, rejected]
+                let mut tally = [0u64; 7];
+                loop {
+                    // Claim the next arrival on the shared schedule.
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    let due = t0 + interval.mul_f64(i as f64);
+                    let now = Instant::now();
+                    if due > now {
+                        thread::sleep(due - now);
+                    }
+                    match h.classify_with(rec, opts) {
+                        Ok(resp) => {
+                            tally[0] += 1;
+                            rec = resp.record;
+                        }
+                        Err(e) => {
+                            match e {
+                                ServeError::QueueFull => tally[1] += 1,
+                                ServeError::AdmissionTimeout => tally[2] += 1,
+                                ServeError::DeadlineExceeded => tally[3] += 1,
+                                ServeError::Internal => tally[4] += 1,
+                                ServeError::Aborted => tally[5] += 1,
+                                _ => tally[6] += 1,
+                            }
+                            // The record moved into the server; draw a
+                            // fresh buffer for the next arrival.
+                            rec = stream.next_record().expect("unbounded stream");
+                            continue;
+                        }
+                    }
+                    stream.refill_record(&mut rec);
+                }
+                tally
+            })
+        })
+        .collect();
+    let mut tally = [0u64; 7];
+    for s in senders {
+        let t = s.join().expect("sender thread");
+        for (acc, v) in tally.iter_mut().zip(t) {
+            *acc += v;
+        }
+    }
+    let wall = t0.elapsed();
+    handle.shutdown();
+    let pipeline: Arc<_> = server_thread.join().expect("server thread");
+    let serve = handle.stats();
+    OpenLoopReport {
+        offered: load.total_requests,
+        offered_rps: load.rate_rps,
+        achieved_rps: tally[0] as f64 / wall.as_secs_f64(),
+        ok: tally[0],
+        shed: tally[1],
+        timed_out: tally[2],
+        expired: tally[3],
+        failed: tally[4],
+        aborted: tally[5],
+        rejected: tally[6],
+        wall,
+        serve,
+        pipeline: pipeline.snapshot(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +369,46 @@ mod tests {
         assert!(report.throughput_rps > 0.0);
         assert!(report.serve.latency_ns.count == 180);
         // JSON form parses back.
+        let s = report.to_json().pretty();
+        assert!(crate::util::json::Json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn open_loop_under_capacity_completes_everything() {
+        let enc = EncoderCfg {
+            cat: CatCfg::Bloom { d: 256, k: 2 },
+            num: NumCfg::None,
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed: 31,
+        };
+        let mut rng = Rng::new(32);
+        let rows: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..256).map(|_| rng.normal_f32()).collect()).collect();
+        let store = crate::am::AmStore::from_prototypes(256, &rows, None);
+        let cfg = ServeCfg {
+            coordinator: CoordinatorCfg { batch_size: 8, n_workers: 2, ..Default::default() },
+            ..ServeCfg::new(enc)
+        };
+        let load = OpenLoadCfg {
+            rate_rps: 2_000.0, // far below encode capacity for d=256
+            total_requests: 100,
+            senders: 4,
+            opts: RequestOpts {
+                admission: Some(crate::serve::AdmissionPolicy::Shed),
+                deadline: None,
+            },
+            data: SyntheticConfig::sampled(33),
+        };
+        let report = run_open_loop(cfg, store, &load);
+        assert_eq!(report.offered, 100);
+        assert_eq!(report.ok + report.shed + report.timed_out + report.expired
+            + report.failed + report.aborted + report.rejected, 100);
+        // Comfortably under capacity: nearly everything should succeed.
+        assert!(report.ok > 0, "{report:?}");
+        // Client-side tallies must agree with the server's counters.
+        assert_eq!(report.shed + report.timed_out,
+            report.serve.shed + report.serve.admission_timeouts);
         let s = report.to_json().pretty();
         assert!(crate::util::json::Json::parse(&s).is_ok());
     }

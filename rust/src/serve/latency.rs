@@ -78,7 +78,12 @@ impl Histogram {
     pub fn record(&self, v: u64) {
         self.buckets[index_of(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum.fetch_add(v, Ordering::Relaxed);
+        // Saturate rather than wrap: latencies near u64::MAX (absurd but
+        // representable — e.g. a poisoned clock) must pin the running sum
+        // at the ceiling, not wrap it to a small, plausible-looking mean.
+        let _ = self
+            .sum
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| Some(s.saturating_add(v)));
         self.max.fetch_max(v, Ordering::Relaxed);
         self.min.fetch_min(v, Ordering::Relaxed);
     }
@@ -182,6 +187,80 @@ mod tests {
         assert_eq!(s.max, 0);
         assert_eq!(s.min, 0);
         assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn single_bucket_degenerate_distribution() {
+        // All samples identical: every quantile must name that bucket's
+        // representative, and the exact stats must be exact.
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(7_777);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.min, 7_777);
+        assert_eq!(s.max, 7_777);
+        assert_eq!(s.p50, s.p90);
+        assert_eq!(s.p90, s.p99);
+        assert_eq!(s.p50, representative_of(index_of(7_777)));
+        assert!((s.mean - 7_777.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overflow_values_saturate_sum_not_wrap() {
+        // Two u64::MAX samples would wrap a naive sum to ~u64::MAX−1 and
+        // report a plausible-looking tiny mean; the saturating sum must
+        // pin at the ceiling instead, and indexing must stay in bounds.
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX);
+        h.record(0);
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.max, u64::MAX);
+        assert_eq!(s.min, 0);
+        // Saturated sum / 3: enormous, not ~half of one sample.
+        assert!(s.mean > u64::MAX as f64 / 4.0, "mean wrapped: {}", s.mean);
+        assert!(index_of(u64::MAX) < BUCKETS);
+        assert!(s.p99 <= u64::MAX);
+    }
+
+    #[test]
+    fn concurrent_record_and_snapshot_are_consistent() {
+        // Snapshots taken *while* writers run must stay internally sane
+        // (count never exceeds what's been written, quantiles in range);
+        // the final snapshot must be exact.
+        let h = std::sync::Arc::new(Histogram::new());
+        let writers: Vec<_> = (0..2)
+            .map(|t| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..2_000u64 {
+                        h.record(t * 2_000 + i + 1);
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let h = std::sync::Arc::clone(&h);
+            std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let s = h.snapshot();
+                    assert!(s.count <= 4_000);
+                    if s.count > 0 {
+                        assert!(s.min >= 1 && s.max <= 4_000);
+                        assert!(s.p50 <= s.p99.max(representative_of(index_of(4_000))));
+                    }
+                    std::thread::yield_now();
+                }
+            })
+        };
+        for t in writers {
+            t.join().unwrap();
+        }
+        reader.join().unwrap();
+        assert_eq!(h.snapshot().count, 4_000);
     }
 
     #[test]

@@ -52,11 +52,56 @@
 //! coordinator's seq reorderer, so the pairing is exact under any steal
 //! interleaving (covered by `tests/serve_smoke.rs` with per-client
 //! response checking under concurrency).
+//!
+//! # Overload and failure semantics
+//!
+//! Every submission terminates with a [`Response`] or an explicit
+//! [`ServeError`] — never a hang, never a silently dropped request.
+//!
+//! **Admission control.** [`AdmissionPolicy`] decides what happens when
+//! the server is saturated (no free completion slot, or the bounded
+//! submission queue is full):
+//! * `Block` — classic backpressure: park until space (the PR-5
+//!   behavior). Parks are bounded slices that re-check `shutdown`, so a
+//!   blocked client observes shutdown promptly instead of sleeping on a
+//!   full queue forever.
+//! * `Shed` — fail fast with [`ServeError::QueueFull`]; counted in
+//!   `ServeStats::shed` and exposed as [`ServeSnapshot::shed_rate`].
+//!   This is the open-loop overload answer: bounded latency for admitted
+//!   work, explicit refusals for the rest.
+//! * `TimedBackoff` — retry with jittered exponential backoff up to
+//!   `max_wait`, then [`ServeError::AdmissionTimeout`]. Jitter
+//!   decorrelates retry herds across clients (deterministic splitmix
+//!   stream, no extra dependency).
+//!
+//! **Deadlines.** A request can carry a deadline (per call via
+//! [`RequestOpts`], or [`ServeCfg::default_deadline`]). It is enforced
+//! at *two* points: while waiting for admission (an expired request
+//! stops waiting and returns [`ServeError::DeadlineExceeded`]) and at
+//! batch-cut time (the batcher discards expired queue entries *before*
+//! they reach an encode worker — an overloaded server stops paying
+//! encode cost for answers nobody is waiting for). Expired requests
+//! count in `ServeStats::expired` and still increment `completed` (the
+//! idle-cut in-flight arithmetic counts terminal outcomes, not just
+//! successes).
+//!
+//! **Worker failure.** An encode-worker panic is caught by the
+//! coordinator ([`crate::coordinator::FaultPlan`] injects them in
+//! tests); the batch arrives at the consumer with
+//! `EncodedBatch::failed` set and its requests are failed with
+//! [`ServeError::Internal`] (counted in `ServeStats::failed`) while the
+//! worker rebuilds its encoder from the seed and keeps serving —
+//! hash-defined encoder state makes respawn exact and cheap. All serve
+//! locks use the uniform poisoned-lock recovery policy
+//! ([`crate::util::sync`]), so a panic can never cascade into
+//! `PoisonError` unwinds across client threads.
 
 pub mod bench;
 pub mod latency;
 
-pub use bench::{run_closed_loop, LoadCfg, ServeBenchReport};
+pub use bench::{
+    run_closed_loop, run_open_loop, LoadCfg, OpenLoadCfg, OpenLoopReport, ServeBenchReport,
+};
 pub use latency::{HistSnapshot, Histogram};
 
 use std::collections::VecDeque;
@@ -68,6 +113,35 @@ use std::time::{Duration, Instant};
 use crate::am::{AmScratch, AmStore, Precision};
 use crate::coordinator::{run_pipeline, CoordinatorCfg, EncoderCfg, PipelineStats};
 use crate::data::{Record, RecordStream};
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
+
+/// What `classify` does when the server is saturated (no free completion
+/// slot, or the bounded submission queue is full). See the module docs
+/// for the overload model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Park until space frees up (backpressure). Bounded wait slices keep
+    /// shutdown observation prompt.
+    #[default]
+    Block,
+    /// Refuse immediately with [`ServeError::QueueFull`] (load shedding).
+    Shed,
+    /// Retry with jittered exponential backoff for at most `max_wait`,
+    /// then refuse with [`ServeError::AdmissionTimeout`].
+    TimedBackoff { max_wait: Duration },
+}
+
+/// Per-request options for [`ServeHandle::classify_with`]. `None` fields
+/// fall back to the server-wide [`ServeCfg`] defaults.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestOpts {
+    /// Total submit→response budget. Enforced while waiting for
+    /// admission *and* at batch-cut time; an expired request returns
+    /// [`ServeError::DeadlineExceeded`] without paying encode cost.
+    pub deadline: Option<Duration>,
+    /// Admission policy override for this request.
+    pub admission: Option<AdmissionPolicy>,
+}
 
 /// Serving configuration. `coordinator.batch_size` doubles as the
 /// micro-batch size cut; `max_records` and `keep_records` are
@@ -89,6 +163,12 @@ pub struct ServeCfg {
     pub slots: usize,
     /// Which prototype representation scoring reads.
     pub precision: Precision,
+    /// Server-wide admission policy; overridable per request via
+    /// [`RequestOpts::admission`].
+    pub admission: AdmissionPolicy,
+    /// Deadline applied to every request that doesn't carry its own
+    /// ([`RequestOpts::deadline`]). `None` = no deadline.
+    pub default_deadline: Option<Duration>,
 }
 
 impl ServeCfg {
@@ -105,6 +185,8 @@ impl ServeCfg {
             queue_cap: 256,
             slots: 128,
             precision: Precision::F32,
+            admission: AdmissionPolicy::Block,
+            default_deadline: None,
         }
     }
 }
@@ -133,6 +215,19 @@ pub enum ServeError {
     /// record is dropped; micro-batches mix requests from many clients,
     /// so one ragged width would panic an encode worker for everyone).
     InvalidNumericWidth { got: usize, want: usize },
+    /// Shed at admission: the server is saturated and the request's
+    /// [`AdmissionPolicy::Shed`] chose fail-fast over waiting.
+    QueueFull,
+    /// [`AdmissionPolicy::TimedBackoff`] retried for `max_wait` without
+    /// the server ever having room.
+    AdmissionTimeout,
+    /// The request's deadline passed before a response was produced —
+    /// while waiting for admission, or in the queue before its batch was
+    /// cut (the batcher discards it without paying encode cost).
+    DeadlineExceeded,
+    /// The request was admitted but its encode batch failed (worker
+    /// panic, recovered). The server stays up; retrying is reasonable.
+    Internal,
 }
 
 impl std::fmt::Display for ServeError {
@@ -143,6 +238,10 @@ impl std::fmt::Display for ServeError {
             ServeError::InvalidNumericWidth { got, want } => {
                 write!(f, "record has {got} numeric features, encoder expects {want}")
             }
+            ServeError::QueueFull => write!(f, "server saturated, request shed"),
+            ServeError::AdmissionTimeout => write!(f, "admission retries timed out"),
+            ServeError::DeadlineExceeded => write!(f, "request deadline exceeded"),
+            ServeError::Internal => write!(f, "encode batch failed (worker panic, recovered)"),
         }
     }
 }
@@ -153,11 +252,31 @@ impl std::error::Error for ServeError {}
 #[derive(Debug, Default)]
 pub struct ServeStats {
     pub submitted: AtomicU64,
+    /// Admitted requests that reached a terminal outcome of *any* kind:
+    /// a [`Response`], a batch-cut deadline expiry, or an encode-batch
+    /// failure. The idle-cut arithmetic (`submitted − completed` = in
+    /// flight) relies on every admitted request incrementing this
+    /// exactly once.
     pub completed: AtomicU64,
     /// Submissions refused without entering the pipeline: the server was
     /// shutting down, or the record failed validation
     /// ([`ServeError::InvalidNumericWidth`]).
     pub rejected: AtomicU64,
+    /// Submissions refused by [`AdmissionPolicy::Shed`]
+    /// ([`ServeError::QueueFull`]).
+    pub shed: AtomicU64,
+    /// Submissions refused after [`AdmissionPolicy::TimedBackoff`]
+    /// exhausted `max_wait` ([`ServeError::AdmissionTimeout`]).
+    pub admission_timeouts: AtomicU64,
+    /// Requests whose deadline passed before encode — failed with
+    /// [`ServeError::DeadlineExceeded`] either while waiting for
+    /// admission (never admitted) or at batch-cut time (admitted, so
+    /// also counted in `completed`).
+    pub expired: AtomicU64,
+    /// Admitted requests failed with [`ServeError::Internal`] because
+    /// their encode batch failed (worker panic). Counted in `completed`
+    /// too.
+    pub failed: AtomicU64,
     pub batches: AtomicU64,
     /// Batches closed because they reached `batch_size`.
     pub size_cuts: AtomicU64,
@@ -178,6 +297,10 @@ pub struct ServeSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    pub shed: u64,
+    pub admission_timeouts: u64,
+    pub expired: u64,
+    pub failed: u64,
     pub batches: u64,
     pub size_cuts: u64,
     pub deadline_cuts: u64,
@@ -186,12 +309,31 @@ pub struct ServeSnapshot {
     pub queue_depth: HistSnapshot,
 }
 
+impl ServeSnapshot {
+    /// Fraction of admission attempts refused for load reasons
+    /// (`shed + admission_timeouts` over all attempts that reached
+    /// admission). The saturation gauge for open-loop traffic: ~0 below
+    /// capacity, climbing toward `1 − capacity/offered` above it.
+    pub fn shed_rate(&self) -> f64 {
+        let refused = self.shed + self.admission_timeouts;
+        let attempts = self.submitted + refused;
+        if attempts == 0 {
+            return 0.0;
+        }
+        refused as f64 / attempts as f64
+    }
+}
+
 impl ServeStats {
     pub fn snapshot(&self) -> ServeSnapshot {
         ServeSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            admission_timeouts: self.admission_timeouts.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             size_cuts: self.size_cuts.load(Ordering::Relaxed),
             deadline_cuts: self.deadline_cuts.load(Ordering::Relaxed),
@@ -208,6 +350,9 @@ struct Submission {
     slot: usize,
     record: Record,
     t_submit: Instant,
+    /// Absolute deadline; the batcher discards the request unencoded
+    /// once this passes.
+    deadline: Option<Instant>,
 }
 
 /// Completion-order companion to one in-flight request; paired with its
@@ -222,7 +367,10 @@ struct Pending {
 enum SlotState {
     Empty,
     Done(Response),
-    Aborted,
+    /// Terminal failure delivered to the parked client: `Aborted`
+    /// (pipeline died), `DeadlineExceeded` (expired at batch cut) or
+    /// `Internal` (encode batch failed).
+    Failed(ServeError),
 }
 
 /// A preallocated completion slot; clients park on `cv` until the
@@ -255,6 +403,31 @@ struct Shared {
     expect_numeric: Option<usize>,
     stats: ServeStats,
     queue_cap: usize,
+    /// Server-wide admission policy ([`ServeCfg::admission`]).
+    admission: AdmissionPolicy,
+    /// Server-wide deadline default ([`ServeCfg::default_deadline`]).
+    default_deadline: Option<Duration>,
+    /// Splitmix counter feeding backoff jitter (deterministic, shared by
+    /// all clients; see [`crate::util::rng::mix64`]).
+    jitter: AtomicU64,
+}
+
+/// Deliver a terminal failure to the client parked on `slot`.
+fn fail_slot(sh: &Shared, slot: usize, err: ServeError) {
+    let s = &sh.slots[slot];
+    let mut st = lock_unpoisoned(&s.state);
+    *st = SlotState::Failed(err);
+    s.cv.notify_one();
+}
+
+/// Jittered backoff wait for [`AdmissionPolicy::TimedBackoff`]: base
+/// `50µs · 2^attempt`, capped at 2 ms, scaled by a deterministic factor
+/// in [0.5, 1.5) so concurrent clients don't retry in lockstep.
+fn backoff_step(sh: &Shared, attempt: u32) -> Duration {
+    let base_us = 50u64.saturating_mul(1 << attempt.min(5)); // 50µs..1.6ms
+    let x = sh.jitter.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed);
+    let frac = (crate::util::rng::mix64(x) >> 11) as f64 / (1u64 << 53) as f64;
+    Duration::from_micros(base_us).mul_f64(0.5 + frac).min(Duration::from_millis(2))
 }
 
 fn empty_record() -> Record {
@@ -267,11 +440,66 @@ pub struct ServeHandle {
     shared: Arc<Shared>,
 }
 
+/// Saturation wait shared by the slot-acquire and enqueue loops: apply
+/// the admission policy (and deadline) once, returning the re-acquired
+/// guard to retry, or the counted refusal error to bail. Every wait is a
+/// *bounded* slice, so a party parked here observes `shutdown` promptly
+/// on its next iteration no matter what wakes (or fails to wake) the
+/// condvar — this is what fixes the classify/shutdown race on a full
+/// queue.
+fn admission_wait<'a, T>(
+    sh: &Shared,
+    cv: &Condvar,
+    g: std::sync::MutexGuard<'a, T>,
+    admission: AdmissionPolicy,
+    deadline: Option<Instant>,
+    t_submit: Instant,
+    attempt: &mut u32,
+) -> Result<std::sync::MutexGuard<'a, T>, ServeError> {
+    if let Some(dl) = deadline {
+        if Instant::now() >= dl {
+            sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::DeadlineExceeded);
+        }
+    }
+    match admission {
+        AdmissionPolicy::Block => {
+            let (g, _) = wait_timeout_unpoisoned(cv, g, Duration::from_millis(5));
+            Ok(g)
+        }
+        AdmissionPolicy::Shed => {
+            sh.stats.shed.fetch_add(1, Ordering::Relaxed);
+            Err(ServeError::QueueFull)
+        }
+        AdmissionPolicy::TimedBackoff { max_wait } => {
+            if t_submit.elapsed() >= max_wait {
+                sh.stats.admission_timeouts.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::AdmissionTimeout);
+            }
+            let step = backoff_step(sh, *attempt);
+            *attempt = attempt.saturating_add(1);
+            let (g, _) = wait_timeout_unpoisoned(cv, g, step);
+            Ok(g)
+        }
+    }
+}
+
 impl ServeHandle {
-    /// Classify one record, blocking until the response (closed-loop
-    /// call). Backpressure: blocks while all completion slots are in
-    /// flight or the submission queue is full.
+    /// Classify one record with the server-default [`RequestOpts`]
+    /// (closed-loop call: blocks per the server's admission policy until
+    /// the response).
     pub fn classify(&self, record: Record) -> Result<Response, ServeError> {
+        self.classify_with(record, RequestOpts::default())
+    }
+
+    /// Classify one record under explicit admission/deadline options.
+    /// Always terminates with a [`Response`] or an explicit
+    /// [`ServeError`]; see the module docs for the overload model.
+    pub fn classify_with(
+        &self,
+        record: Record,
+        opts: RequestOpts,
+    ) -> Result<Response, ServeError> {
         let sh = &*self.shared;
         // Reject malformed records before they can reach a shared
         // micro-batch (the encode workers assert uniform numeric widths).
@@ -285,9 +513,13 @@ impl ServeHandle {
             }
         }
         let t_submit = Instant::now();
-        // Acquire a completion slot.
+        let admission = opts.admission.unwrap_or(sh.admission);
+        let deadline = opts.deadline.or(sh.default_deadline).map(|d| t_submit + d);
+        let mut attempt = 0u32;
+        // Acquire a completion slot (saturation point #1: more
+        // concurrent callers than slots).
         let slot = {
-            let mut free = sh.free_slots.lock().unwrap();
+            let mut free = lock_unpoisoned(&sh.free_slots);
             loop {
                 if sh.shutdown.load(Ordering::Acquire) {
                     sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
@@ -296,12 +528,14 @@ impl ServeHandle {
                 if let Some(i) = free.pop() {
                     break i;
                 }
-                free = sh.slot_cv.wait(free).unwrap();
+                free = admission_wait(
+                    sh, &sh.slot_cv, free, admission, deadline, t_submit, &mut attempt,
+                )?;
             }
         };
-        // Enqueue under the bounded-queue backpressure policy.
+        // Enqueue (saturation point #2: the bounded submission queue).
         {
-            let mut q = sh.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&sh.queue);
             loop {
                 if sh.shutdown.load(Ordering::Acquire) {
                     drop(q);
@@ -315,16 +549,26 @@ impl ServeHandle {
                     // under this lock — can never miss a request that
                     // is about to be pushed.
                     sh.stats.submitted.fetch_add(1, Ordering::Relaxed);
-                    q.push_back(Submission { slot, record, t_submit });
+                    q.push_back(Submission { slot, record, t_submit, deadline });
                     sh.nonempty_cv.notify_one();
                     break;
                 }
-                q = sh.space_cv.wait(q).unwrap();
+                match admission_wait(
+                    sh, &sh.space_cv, q, admission, deadline, t_submit, &mut attempt,
+                ) {
+                    Ok(g) => q = g,
+                    Err(e) => {
+                        self.release_slot(slot);
+                        return Err(e);
+                    }
+                }
             }
         }
-        // Park until the consumer completes the slot.
+        // Park until the consumer (or the batcher's deadline expiry, or
+        // the abort guard) resolves the slot. An admitted request is
+        // guaranteed a terminal outcome, so this wait needs no timeout.
         let s = &sh.slots[slot];
-        let mut st = s.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&s.state);
         loop {
             match std::mem::replace(&mut *st, SlotState::Empty) {
                 SlotState::Done(resp) => {
@@ -332,19 +576,19 @@ impl ServeHandle {
                     self.release_slot(slot);
                     return Ok(resp);
                 }
-                SlotState::Aborted => {
+                SlotState::Failed(err) => {
                     drop(st);
                     self.release_slot(slot);
-                    return Err(ServeError::Aborted);
+                    return Err(err);
                 }
-                SlotState::Empty => st = s.cv.wait(st).unwrap(),
+                SlotState::Empty => st = wait_unpoisoned(&s.cv, st),
             }
         }
     }
 
     fn release_slot(&self, slot: usize) {
         let sh = &*self.shared;
-        sh.free_slots.lock().unwrap().push(slot);
+        lock_unpoisoned(&sh.free_slots).push(slot);
         sh.slot_cv.notify_one();
     }
 
@@ -354,11 +598,11 @@ impl ServeHandle {
         let sh = &*self.shared;
         sh.shutdown.store(true, Ordering::Release);
         // Wake every parked party so it re-checks the flag.
-        let _q = sh.queue.lock().unwrap();
+        let _q = lock_unpoisoned(&sh.queue);
         sh.nonempty_cv.notify_all();
         sh.space_cv.notify_all();
         drop(_q);
-        let _f = sh.free_slots.lock().unwrap();
+        let _f = lock_unpoisoned(&sh.free_slots);
         sh.slot_cv.notify_all();
     }
 
@@ -377,6 +621,10 @@ struct RequestStream {
     /// variable batch sizes never drop (deallocate) a record. Bounded by
     /// the records in circulation (slots + in-flight spines).
     spare: Vec<Record>,
+    /// Fault injection ([`crate::coordinator::FaultPlan::stall_batcher`]):
+    /// sleep this long before cutting the first batch, so tests can
+    /// saturate the submission queue deterministically.
+    stall_batcher: Option<Duration>,
 }
 
 impl RequestStream {
@@ -385,7 +633,7 @@ impl RequestStream {
     /// pool is still cold) and forward the displaced buffer through the
     /// pending channel for hand-back at completion.
     fn place(&mut self, out: &mut Vec<Record>, filled: &mut usize, sub: Submission) {
-        let Submission { slot, record, t_submit } = sub;
+        let Submission { slot, record, t_submit, deadline: _ } = sub;
         let handback = if *filled < out.len() {
             std::mem::replace(&mut out[*filled], record)
         } else {
@@ -397,6 +645,24 @@ impl RequestStream {
         // means the consumer died — run() aborts the slot on drain.
         let _ = self.pending_tx.send(Pending { slot, t_submit, record: handback });
     }
+
+    /// Resolve an expired submission at batch-cut time: the client gets
+    /// [`ServeError::DeadlineExceeded`] now instead of a late answer,
+    /// and the pipeline never pays its encode cost. Terminal outcome ⇒
+    /// `completed` moves (idle-cut arithmetic); the record buffer joins
+    /// the spare pool for future hand-backs.
+    fn expire(&mut self, sub: Submission) {
+        let sh = &*self.shared;
+        sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+        sh.stats.completed.fetch_add(1, Ordering::Relaxed);
+        fail_slot(sh, sub.slot, ServeError::DeadlineExceeded);
+        self.spare.push(sub.record);
+    }
+}
+
+/// Is this submission past its deadline?
+fn is_expired(sub: &Submission, now: Instant) -> bool {
+    matches!(sub.deadline, Some(dl) if now >= dl)
 }
 
 impl RecordStream for RequestStream {
@@ -412,19 +678,40 @@ impl RecordStream for RequestStream {
     }
 
     fn next_batch_into(&mut self, out: &mut Vec<Record>, n: usize) -> usize {
+        // Fault injection: a one-shot batcher stall lets tests fill the
+        // bounded submission queue to exact capacity deterministically.
+        if let Some(stall) = self.stall_batcher.take() {
+            std::thread::sleep(stall);
+        }
         let sh = &*self.shared;
         let mut filled = 0usize;
+        let mut depth_sampled = false;
         // Block for the batch's first request — or EOF at shutdown, or
         // on the coordinator's stop flag. The park is *bounded* (not an
         // untimed wait) because the stop flag is raised by scheduler
         // paths that cannot reach our condvar (worker panic unwind): the
         // reader must never be strandable by a dead pipeline.
         {
-            let mut q = sh.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&sh.queue);
             loop {
+                if !q.is_empty() && !depth_sampled {
+                    // Sample depth *before* the batch drains the queue:
+                    // under saturation this observes the full
+                    // `queue_cap`, which the post-gather sample never
+                    // could.
+                    sh.stats.queue_depth.record(q.len() as u64);
+                    depth_sampled = true;
+                }
                 if let Some(sub) = q.pop_front() {
                     sh.space_cv.notify_one();
                     drop(q);
+                    // Deadline point #2: expired queue entries resolve
+                    // here, before any encode cost.
+                    if is_expired(&sub, Instant::now()) {
+                        self.expire(sub);
+                        q = lock_unpoisoned(&sh.queue);
+                        continue;
+                    }
                     self.place(out, &mut filled, sub);
                     break;
                 }
@@ -434,20 +721,17 @@ impl RecordStream for RequestStream {
                     out.clear();
                     return 0;
                 }
-                let (guard, _timeout) = sh
-                    .nonempty_cv
-                    .wait_timeout(q, Duration::from_millis(5))
-                    .unwrap();
+                let (guard, _timeout) =
+                    wait_timeout_unpoisoned(&sh.nonempty_cv, q, Duration::from_millis(5));
                 q = guard;
             }
         }
         // Adaptive gather: size, idle or deadline cut, measured from the
         // first take.
         let deadline = Instant::now() + self.max_delay;
-        let depth;
         let mut idle_cut = false;
         {
-            let mut q = sh.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&sh.queue);
             loop {
                 if filled >= n {
                     break;
@@ -455,8 +739,12 @@ impl RecordStream for RequestStream {
                 if let Some(sub) = q.pop_front() {
                     sh.space_cv.notify_one();
                     drop(q);
-                    self.place(out, &mut filled, sub);
-                    q = sh.queue.lock().unwrap();
+                    if is_expired(&sub, Instant::now()) {
+                        self.expire(sub);
+                    } else {
+                        self.place(out, &mut filled, sub);
+                    }
+                    q = lock_unpoisoned(&sh.queue);
                     continue;
                 }
                 if sh.shutdown.load(Ordering::Acquire)
@@ -482,12 +770,11 @@ impl RecordStream for RequestStream {
                 if now >= deadline {
                     break;
                 }
-                let (guard, _timeout) = sh.nonempty_cv.wait_timeout(q, deadline - now).unwrap();
+                let (guard, _timeout) =
+                    wait_timeout_unpoisoned(&sh.nonempty_cv, q, deadline - now);
                 q = guard;
             }
-            depth = q.len();
         }
-        sh.stats.queue_depth.record(depth as u64);
         sh.stats.batches.fetch_add(1, Ordering::Relaxed);
         if filled >= n {
             sh.stats.size_cuts.fetch_add(1, Ordering::Relaxed);
@@ -541,6 +828,9 @@ impl Server {
             expect_numeric,
             stats: ServeStats::default(),
             queue_cap: cfg.queue_cap.max(1),
+            admission: cfg.admission,
+            default_deadline: cfg.default_deadline,
+            jitter: AtomicU64::new(cfg.encoder.seed),
         });
         // One pending per in-flight request; each holds a slot, so
         // `slots` bounds the channel and sends never block.
@@ -560,6 +850,7 @@ impl Server {
             pending_tx,
             max_delay: cfg.max_batch_delay,
             spare: Vec::new(),
+            stall_batcher: cfg.coordinator.fault.stall_batcher,
         };
         // Whatever way this function exits — clean drain, or a panic
         // propagating out of `run_pipeline` after a worker died — every
@@ -579,6 +870,22 @@ impl Server {
         let mut scratch = AmScratch::new();
         let precision = cfg.precision;
         let stats = run_pipeline(stream, &cfg.encoder, &coord, |batch| {
+            if batch.failed {
+                // The encode worker panicked on this batch (and was
+                // respawned in place). `labels` still holds one entry
+                // per request, so exactly that many pendings pair with
+                // it: fail each explicitly — the positional pairing for
+                // every later batch stays exact.
+                for _ in 0..batch.labels.len() {
+                    let Ok(pending) = pending_rx.recv() else {
+                        return false;
+                    };
+                    shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.completed.fetch_add(1, Ordering::Relaxed);
+                    fail_slot(&shared, pending.slot, ServeError::Internal);
+                }
+                return true;
+            }
             for enc in batch.encodings.iter() {
                 let Ok(pending) = pending_rx.recv() else {
                     // Stream half dropped mid-batch: nothing left to pair.
@@ -589,7 +896,7 @@ impl Server {
                 shared.stats.latency_ns.record(latency.as_nanos() as u64);
                 shared.stats.completed.fetch_add(1, Ordering::Relaxed);
                 let slot = &shared.slots[pending.slot];
-                let mut st = slot.state.lock().unwrap();
+                let mut st = lock_unpoisoned(&slot.state);
                 *st = SlotState::Done(Response {
                     top_class,
                     score,
@@ -621,7 +928,7 @@ impl Drop for AbortOnDrop {
         let sh = &*self.0;
         sh.shutdown.store(true, Ordering::Release);
         {
-            let mut q = sh.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&sh.queue);
             q.clear();
             sh.nonempty_cv.notify_all();
             sh.space_cv.notify_all();
@@ -630,15 +937,18 @@ impl Drop for AbortOnDrop {
         // mark: shutdown already gates acquisition) or awaited by a
         // parked client that will now observe the abort.
         for slot in &sh.slots {
-            let mut st = slot.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&slot.state);
             if matches!(*st, SlotState::Empty) {
-                *st = SlotState::Aborted;
+                *st = SlotState::Failed(ServeError::Aborted);
             }
             drop(st);
             slot.cv.notify_one();
         }
-        sh.free_slots.lock().unwrap();
+        // Notify under the free-slots lock so a client between its
+        // shutdown check and its park cannot miss the wakeup.
+        let guard = lock_unpoisoned(&sh.free_slots);
         sh.slot_cv.notify_all();
+        drop(guard);
     }
 }
 

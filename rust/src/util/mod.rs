@@ -5,6 +5,7 @@ pub mod bench;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// Parse a `u64` scale knob from the environment, falling back to
 /// `default` when unset or malformed — shared by the bench entry points

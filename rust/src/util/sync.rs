@@ -1,0 +1,91 @@
+//! Poisoned-lock recovery policy (shared by the coordinator and the
+//! serving subsystem).
+//!
+//! `std::sync::Mutex` poisons itself when a thread panics while holding
+//! the guard. The default `.lock().unwrap()` idiom turns that single
+//! panic into a *cascade*: every other thread touching the same lock
+//! unwinds with a `PoisonError`, which in a worker pool means one
+//! injected (or real) panic takes down the reader, every sibling worker
+//! and the consumer — exactly the failure amplification a fault-tolerant
+//! serve path must not have.
+//!
+//! The uniform policy here is **recover and continue**: every lock and
+//! condvar wait in the pipeline goes through these helpers, which strip
+//! the poison flag (`PoisonError::into_inner`) and hand back the guard.
+//! That is sound for this codebase because every critical section
+//! maintains its invariants *before* any code that can panic runs —
+//! the guarded state is plain queue/pool/slot data mutated by
+//! single-call push/pop/replace operations, and the encode bodies
+//! (the only panic-prone regions, and the ones `FaultPlan` injects
+//! into) run outside all locks and behind their own `catch_unwind`.
+//! A poisoned guard therefore protects data that is still consistent,
+//! and recovering is strictly better than unwinding the whole pool.
+//!
+//! Keep this module dependency-free and tiny: it is on the serve hot
+//! path (one branch over the raw lock).
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+#[inline]
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Wait on `cv`, recovering the re-acquired guard from poison.
+#[inline]
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Bounded wait on `cv`; returns the re-acquired guard and whether the
+/// wait timed out (poison recovered on both paths).
+#[inline]
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(g, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(e) => {
+            let (g, t) = e.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        // Poison the mutex: panic while holding the guard.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        // The policy: recover the guard and keep using the data.
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_recovers_and_reports_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_unpoisoned(&m);
+        let (_g, timed_out) = wait_timeout_unpoisoned(&cv, g, Duration::from_millis(1));
+        assert!(timed_out, "nothing notifies: the bounded wait must time out");
+    }
+}

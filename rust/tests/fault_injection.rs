@@ -1,0 +1,511 @@
+//! Fault-injection matrix for the overload-control / fault-tolerance
+//! layer (ISSUE 6 tentpole): drive the coordinator and the serving stack
+//! through [`FaultPlan`]-injected worker panics, worker stalls, a
+//! stalled batcher (queue saturation) and a lossy recycle path, and
+//! assert the bounded-degradation contract:
+//!
+//! * the server/pipeline never deadlocks — every run terminates;
+//! * every submitted request reaches a terminal outcome: a [`Response`]
+//!   or an explicit [`ServeError`] — never a stranded client;
+//! * surviving results are bit-identical to a no-fault run (panics cost
+//!   exactly their batch, nothing leaks across);
+//! * the shed/expired/failed/panic counters in [`ServeSnapshot`] /
+//!   [`StatsSnapshot`] match the injected plan and the client-observed
+//!   outcome tallies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Once};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use shdc::am::{AmScratch, AmStore, Precision};
+use shdc::coordinator::{
+    run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, FaultPlan, NumCfg,
+};
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::data::{RecordStream, SyntheticStream};
+use shdc::encoding::{BundleMethod, Encoding};
+use shdc::serve::{
+    run_open_loop, AdmissionPolicy, OpenLoadCfg, RequestOpts, ServeCfg, ServeError, Server,
+};
+use shdc::util::rng::Rng;
+
+/// Injected panics are part of the plan, not noise: suppress their
+/// backtrace spew (and only theirs) so a green run has a readable log.
+fn quiet_injected_panics() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains("shdc injected fault"))
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn encoder_cfg(seed: u64) -> EncoderCfg {
+    EncoderCfg {
+        cat: CatCfg::Bloom { d: 256, k: 2 },
+        num: NumCfg::None,
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed,
+    }
+}
+
+fn small_store(d: usize) -> AmStore {
+    let mut rng = Rng::new(99);
+    let rows: Vec<Vec<f32>> =
+        (0..2).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+    AmStore::from_prototypes(d, &rows, None)
+}
+
+/// Each delivered batch's `(seq, failed, encodings)`.
+type BatchLog = Vec<(u64, bool, Vec<Encoding>)>;
+
+/// Run the encode pipeline over a fixed synthetic prefix, collecting
+/// every delivered batch.
+fn collect_batches(
+    fault: FaultPlan,
+    max_panics: u32,
+) -> (BatchLog, shdc::coordinator::StatsSnapshot) {
+    let data = SyntheticConfig::sampled(7);
+    let stream = SyntheticStream::new(data);
+    let coord = CoordinatorCfg {
+        batch_size: 16,
+        n_workers: 3,
+        queue_depth: 2,
+        max_records: Some(640),
+        max_worker_panics: max_panics,
+        fault,
+        ..Default::default()
+    };
+    let mut out: BatchLog = Vec::new();
+    let stats = run_pipeline(stream, &encoder_cfg(7), &coord, |batch| {
+        out.push((batch.seq, batch.failed, batch.encodings.drain(..).collect()));
+        true
+    });
+    (out, stats.snapshot())
+}
+
+#[test]
+fn injected_panic_fails_exactly_one_batch_others_bit_identical() {
+    quiet_injected_panics();
+    let (clean, clean_stats) = collect_batches(FaultPlan::default(), 3);
+    let fault = FaultPlan { panic_on_seq: vec![3], ..FaultPlan::default() };
+    let (faulted, stats) = collect_batches(fault, 3);
+
+    assert_eq!(clean.len(), 40, "640 records / batch 16");
+    assert_eq!(faulted.len(), clean.len(), "failed batch must still occupy its seq slot");
+    for ((cs, cf, ce), (fs, ff, fe)) in clean.iter().zip(faulted.iter()) {
+        assert_eq!(cs, fs, "stream order preserved");
+        assert!(!cf, "no-fault run must not fail batches");
+        if *fs == 3 {
+            assert!(*ff, "injected seq must arrive failed");
+            assert!(fe.is_empty(), "failed batch carries no encodings");
+        } else {
+            assert!(!ff, "panic must cost exactly its batch");
+            assert_eq!(ce, fe, "surviving batch {fs} must be bit-identical");
+        }
+    }
+    assert_eq!(stats.worker_panics, 1);
+    assert_eq!(stats.batches_failed, 1);
+    assert_eq!(stats.workers_retired, 0, "budget 3 absorbs one panic");
+    assert_eq!(stats.records_encoded, clean_stats.records_encoded - 16);
+}
+
+#[test]
+fn panic_budget_exhaustion_retires_workers_and_stops_cleanly() {
+    quiet_injected_panics();
+    // One worker, zero panic budget: the first injected panic retires it,
+    // which (last live worker) must stop the whole pipeline instead of
+    // leaving the reader parked behind a deque nobody will drain.
+    let data = SyntheticConfig::sampled(8);
+    let stream = SyntheticStream::new(data);
+    let coord = CoordinatorCfg {
+        batch_size: 16,
+        n_workers: 1,
+        queue_depth: 2,
+        max_records: Some(320),
+        max_worker_panics: 0,
+        fault: FaultPlan { panic_on_seq: vec![0], ..FaultPlan::default() },
+        ..Default::default()
+    };
+    let mut seen: Vec<(u64, bool)> = Vec::new();
+    let stats = run_pipeline(stream, &encoder_cfg(8), &coord, |batch| {
+        seen.push((batch.seq, batch.failed));
+        true
+    });
+    let snap = stats.snapshot();
+    assert_eq!(snap.worker_panics, 1);
+    assert_eq!(snap.workers_retired, 1);
+    assert!(!seen.is_empty() && seen[0] == (0, true), "failed batch still delivered: {seen:?}");
+    // Everything delivered was in-order from seq 0; the run simply ends
+    // early instead of hanging (reaching this line is the real assert).
+    for (i, (seq, _)) in seen.iter().enumerate() {
+        assert_eq!(*seq, i as u64);
+    }
+}
+
+#[test]
+fn drop_recycle_falls_back_to_allocator_with_identical_output() {
+    let (clean, _) = collect_batches(FaultPlan::default(), 3);
+    let fault = FaultPlan { drop_recycle: true, ..FaultPlan::default() };
+    let (dropped, stats) = collect_batches(fault, 3);
+    assert_eq!(clean.len(), dropped.len());
+    for ((cs, _, ce), (ds, df, de)) in clean.iter().zip(dropped.iter()) {
+        assert_eq!(cs, ds);
+        assert!(!df);
+        assert_eq!(ce, de, "lossy recycle path must not change results");
+    }
+    assert_eq!(stats.recycle_misses, clean.len() as u64, "every shell dropped");
+    assert_eq!(stats.buffers_recycled, 0, "nothing flows back through the recycle channel");
+}
+
+fn serve_cfg_with(fault: FaultPlan, seed: u64) -> ServeCfg {
+    ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 8,
+            n_workers: 2,
+            queue_depth: 2,
+            fault,
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(200),
+        queue_cap: 64,
+        slots: 32,
+        ..ServeCfg::new(encoder_cfg(seed))
+    }
+}
+
+#[test]
+fn serve_survives_worker_panic_failing_requests_explicitly() {
+    quiet_injected_panics();
+    let enc_cfg = encoder_cfg(50);
+    let store = small_store(256);
+    let offline_store = store.clone();
+    let fault = FaultPlan { panic_on_seq: vec![1, 4], ..FaultPlan::default() };
+    let (server, handle) = Server::new(serve_cfg_with(fault, 50), store);
+    let server_thread = thread::spawn(move || server.run());
+
+    let ok = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let h = handle.clone();
+            let ok = Arc::clone(&ok);
+            let failed = Arc::clone(&failed);
+            let offline_store = offline_store.clone();
+            let enc_cfg = enc_cfg.clone();
+            thread::spawn(move || {
+                let mut offline_enc = enc_cfg.build();
+                let mut scratch = AmScratch::new();
+                let mut stream =
+                    SyntheticStream::new(SyntheticConfig::sampled(600 + c as u64));
+                for _ in 0..50 {
+                    let rec = stream.next_record().unwrap();
+                    let code = offline_enc.encode(&rec);
+                    let (want_class, want_score) =
+                        offline_store.top1(&code, Precision::F32, &mut scratch);
+                    match h.classify(rec) {
+                        Ok(resp) => {
+                            // Surviving responses stay bit-identical to
+                            // the offline reference — the panic didn't
+                            // corrupt its worker's rebuilt encoder.
+                            assert_eq!(resp.top_class, want_class);
+                            assert_eq!(resp.score, want_score);
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ServeError::Internal) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected terminal outcome: {e:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for cthread in clients {
+        cthread.join().expect("client must terminate");
+    }
+    handle.shutdown();
+    let pipeline = server_thread.join().expect("server").snapshot();
+    let snap = handle.stats();
+
+    let (ok, failed) = (ok.load(Ordering::Relaxed), failed.load(Ordering::Relaxed));
+    assert_eq!(ok + failed, 200, "every request reached a terminal outcome");
+    assert!(failed > 0, "two injected panics must fail at least one request");
+    assert_eq!(snap.failed, failed, "server-side failed counter matches clients");
+    assert_eq!(snap.completed, snap.submitted, "no admitted request was stranded");
+    assert_eq!(pipeline.worker_panics, 2, "both injected seqs panicked");
+    assert_eq!(pipeline.batches_failed, 2);
+    assert_eq!(pipeline.workers_retired, 0);
+}
+
+#[test]
+fn stalled_worker_expires_deadlined_requests_instead_of_hanging() {
+    quiet_injected_panics();
+    // One worker that hard-stalls before its first encode; per-request
+    // deadlines far shorter than the stall. Requests dispatched before
+    // the stall resolve late but OK; requests still queued must expire
+    // at batch cut — nobody waits out the full stall × queue length.
+    let fault = FaultPlan {
+        stall_once: Some((0, Duration::from_millis(300))),
+        ..FaultPlan::default()
+    };
+    let cfg = ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 1,
+            n_workers: 1,
+            queue_depth: 1,
+            fault,
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(200),
+        queue_cap: 64,
+        slots: 32,
+        default_deadline: Some(Duration::from_millis(50)),
+        ..ServeCfg::new(encoder_cfg(51))
+    };
+    let (server, handle) = Server::new(cfg, small_store(256));
+    let server_thread = thread::spawn(move || server.run());
+
+    let ok = Arc::new(AtomicU64::new(0));
+    let expired = Arc::new(AtomicU64::new(0));
+    let clients: Vec<_> = (0..8)
+        .map(|c| {
+            let h = handle.clone();
+            let ok = Arc::clone(&ok);
+            let expired = Arc::clone(&expired);
+            thread::spawn(move || {
+                let mut stream =
+                    SyntheticStream::new(SyntheticConfig::sampled(700 + c as u64));
+                let rec = stream.next_record().unwrap();
+                match h.classify(rec) {
+                    Ok(_) => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(ServeError::DeadlineExceeded) => {
+                        expired.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => panic!("unexpected terminal outcome: {e:?}"),
+                }
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    for cthread in clients {
+        cthread.join().expect("client must terminate");
+    }
+    let wall = t0.elapsed();
+    handle.shutdown();
+    server_thread.join().expect("server");
+    let snap = handle.stats();
+
+    let (ok, expired) = (ok.load(Ordering::Relaxed), expired.load(Ordering::Relaxed));
+    assert_eq!(ok + expired, 8, "every request reached a terminal outcome");
+    assert!(expired >= 1, "50ms deadlines must expire behind a 300ms stall");
+    assert_eq!(snap.expired, expired, "server-side expired counter matches clients");
+    assert_eq!(snap.completed, snap.submitted);
+    // The whole run is bounded by ~one stall, not stall × requests.
+    assert!(wall < Duration::from_secs(3), "requests serialized behind the stall: {wall:?}");
+}
+
+#[test]
+fn saturated_queue_sheds_and_queue_depth_observes_capacity() {
+    quiet_injected_panics();
+    // Stall the batcher so nothing drains, fill the bounded queue to
+    // exact capacity, and check: (a) the next Shed submission fails fast
+    // with QueueFull, (b) once the batcher wakes, everything queued
+    // completes, (c) the pre-pop depth sample saw the *full* queue.
+    let queue_cap = 8usize;
+    let fault = FaultPlan {
+        stall_batcher: Some(Duration::from_millis(400)),
+        ..FaultPlan::default()
+    };
+    let cfg = ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 8,
+            n_workers: 2,
+            queue_depth: 2,
+            fault,
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(200),
+        queue_cap,
+        slots: 32,
+        admission: AdmissionPolicy::Shed,
+        ..ServeCfg::new(encoder_cfg(52))
+    };
+    let (server, handle) = Server::new(cfg, small_store(256));
+    let server_thread = thread::spawn(move || server.run());
+
+    let fillers: Vec<_> = (0..queue_cap)
+        .map(|c| {
+            let h = handle.clone();
+            thread::spawn(move || {
+                let mut stream =
+                    SyntheticStream::new(SyntheticConfig::sampled(800 + c as u64));
+                let rec = stream.next_record().unwrap();
+                h.classify(rec).expect("queued within capacity must complete")
+            })
+        })
+        .collect();
+    // Wait until all fillers are actually enqueued (the batcher is
+    // asleep, so they can only be in the queue).
+    let t0 = Instant::now();
+    while handle.stats().submitted < queue_cap as u64 {
+        assert!(t0.elapsed() < Duration::from_millis(300), "fillers failed to enqueue");
+        thread::yield_now();
+    }
+    // Capacity reached: one more Shed submission must fail fast.
+    let mut stream = SyntheticStream::new(SyntheticConfig::sampled(900));
+    let rec = stream.next_record().unwrap();
+    let t_shed = Instant::now();
+    assert_eq!(handle.classify(rec).unwrap_err(), ServeError::QueueFull);
+    assert!(t_shed.elapsed() < Duration::from_millis(100), "shed must not wait for the stall");
+    for f in fillers {
+        let resp = f.join().expect("filler");
+        assert!(resp.top_class < 2);
+    }
+    handle.shutdown();
+    server_thread.join().expect("server");
+    let snap = handle.stats();
+    assert_eq!(snap.shed, 1);
+    assert_eq!(snap.completed, queue_cap as u64);
+    assert!(snap.shed_rate() > 0.0);
+    assert_eq!(
+        snap.queue_depth.max, queue_cap as u64,
+        "pre-pop depth sampling must observe exact-capacity saturation"
+    );
+}
+
+#[test]
+fn shutdown_unblocks_classify_parked_on_full_queue() {
+    quiet_injected_panics();
+    // Regression for the classify/shutdown race: a client parked in the
+    // Block admission path on a *full* queue must observe shutdown
+    // promptly — not sleep until the batcher frees space (it never will:
+    // it's stalled), and not hang forever.
+    let queue_cap = 2usize;
+    let fault = FaultPlan {
+        stall_batcher: Some(Duration::from_millis(500)),
+        ..FaultPlan::default()
+    };
+    let cfg = ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 4,
+            n_workers: 1,
+            queue_depth: 2,
+            fault,
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(200),
+        queue_cap,
+        slots: 8,
+        ..ServeCfg::new(encoder_cfg(53))
+    };
+    let (server, handle) = Server::new(cfg, small_store(256));
+    let server_thread = thread::spawn(move || server.run());
+
+    // Fill the queue (batcher asleep, so these park awaiting responses).
+    let fillers: Vec<_> = (0..queue_cap)
+        .map(|c| {
+            let h = handle.clone();
+            thread::spawn(move || {
+                let mut stream =
+                    SyntheticStream::new(SyntheticConfig::sampled(1000 + c as u64));
+                let rec = stream.next_record().unwrap();
+                h.classify(rec)
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    while handle.stats().submitted < queue_cap as u64 {
+        assert!(t0.elapsed() < Duration::from_millis(300), "fillers failed to enqueue");
+        thread::yield_now();
+    }
+    // This one blocks in the enqueue loop (queue full, Block admission).
+    let blocked = {
+        let h = handle.clone();
+        thread::spawn(move || {
+            let mut stream = SyntheticStream::new(SyntheticConfig::sampled(1100));
+            let rec = stream.next_record().unwrap();
+            let t = Instant::now();
+            (h.classify(rec), t.elapsed())
+        })
+    };
+    thread::sleep(Duration::from_millis(50));
+    handle.shutdown();
+    let (result, blocked_for) = blocked.join().expect("blocked client must return");
+    assert_eq!(result.unwrap_err(), ServeError::Shutdown);
+    assert!(
+        blocked_for < Duration::from_millis(300),
+        "shutdown must interrupt the bounded park promptly, took {blocked_for:?}"
+    );
+    // The queued fillers resolve once the batcher wakes into the
+    // shutdown drain: aborted (queue cleared) — terminal either way.
+    for f in fillers {
+        let r = f.join().expect("filler must terminate");
+        assert!(
+            matches!(r, Ok(_) | Err(ServeError::Aborted)),
+            "filler must get a terminal outcome, got {r:?}"
+        );
+    }
+    server_thread.join().expect("server");
+}
+
+#[test]
+fn open_loop_over_capacity_sheds_instead_of_hanging() {
+    quiet_injected_panics();
+    // Throttle capacity hard (single worker, 2ms per batch) and offer
+    // ~10x more than it can serve with Shed admission: the run must
+    // terminate with a nonzero shed rate — the overload answer is an
+    // explicit refusal, not an unbounded queue or a hang.
+    let cfg = ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 16,
+            n_workers: 1,
+            queue_depth: 1,
+            slow_worker: Some((0, Duration::from_millis(2))),
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(200),
+        queue_cap: 16,
+        slots: 64,
+        ..ServeCfg::new(encoder_cfg(54))
+    };
+    // Sustainable: ~16 records / 2ms = 8k rps. Offered: 80k rps.
+    let load = OpenLoadCfg {
+        rate_rps: 80_000.0,
+        total_requests: 2_000,
+        senders: 8,
+        opts: RequestOpts {
+            admission: Some(AdmissionPolicy::Shed),
+            deadline: Some(Duration::from_millis(100)),
+        },
+        data: SyntheticConfig::sampled(55),
+    };
+    let report = run_open_loop(cfg, small_store(256), &load);
+    assert_eq!(
+        report.ok + report.shed + report.timed_out + report.expired
+            + report.failed + report.aborted + report.rejected,
+        2_000,
+        "every offered arrival reached a terminal outcome: {report:?}"
+    );
+    assert!(report.ok > 0, "an overloaded server still serves at capacity");
+    assert!(
+        report.shed + report.expired > 0,
+        "10x overload must shed or expire: {report:?}"
+    );
+    assert!(report.serve.shed_rate() > 0.0 || report.expired > 0);
+    // Client tallies and server counters agree.
+    assert_eq!(report.shed, report.serve.shed);
+    assert_eq!(report.expired, report.serve.expired);
+}

@@ -32,6 +32,9 @@ done
 echo "== cargo fmt --check =="
 cargo fmt --check
 
+echo "== cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
 echo "== cargo build --release =="
 cargo build --release
 
@@ -47,6 +50,22 @@ cargo test -q
 # visible in CI logs and runnable in isolation.
 echo "== cargo test -q --test serve_smoke =="
 cargo test -q --test serve_smoke
+
+# The fault-injection matrix (worker panics, stalls, stalled batcher,
+# lossy recycle): every request must reach a terminal outcome, surviving
+# output must be bit-identical to a no-fault run, and the failure
+# counters must match the injected plan. Also in the full suite; the
+# dedicated leg keeps the robustness contract visible in CI logs.
+echo "== cargo test -q --test fault_injection =="
+cargo test -q --test fault_injection
+
+# Overload smoke: a tiny closed-loop sweep plus the open-loop phase at
+# 2.5x capacity must TERMINATE with a nonzero shed rate rather than
+# hang — the cheapest end-to-end check that admission control actually
+# sheds under saturation.
+echo "== serve_bench overload smoke =="
+SHDC_SERVE_REQUESTS=2000 SHDC_SERVE_CLIENTS=4 SHDC_SERVE_OPEN_REQUESTS=2000 \
+    cargo run --release --bin serve_bench
 
 if [[ "$run_simd" == 1 ]]; then
     # The kernel differential suite (tests/kernel_equivalence.rs) must
