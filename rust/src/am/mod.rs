@@ -47,6 +47,11 @@ pub enum Precision {
 }
 
 impl Precision {
+    /// Every scoring precision, in report order — sweeps (benches, the
+    /// perf snapshot, the multi-model registry tests) iterate this
+    /// instead of hand-listing variants.
+    pub const ALL: [Precision; 3] = [Precision::F32, Precision::Int8, Precision::Binary];
+
     pub fn name(self) -> &'static str {
         match self {
             Precision::F32 => "f32",

@@ -9,7 +9,11 @@
 //! 2. an **open-loop** pair at ~0.5× and ~2.5× the measured closed-loop
 //!    capacity with `Shed` admission and a deadline — the only way to
 //!    observe overload behavior: shed rate, expired requests, and
-//!    tail-latency blowup instead of a hang.
+//!    tail-latency blowup instead of a hang, then
+//! 3. a **multi-tenant** closed-loop leg: two registry models with
+//!    different dimensionality, seeds and store precisions, clients
+//!    alternating between them through the one shared worker pool
+//!    (model-homogeneous batch cuts; per-model counters printed).
 //!
 //! ```text
 //! cargo run --release --bin serve_bench
@@ -20,14 +24,30 @@
 
 use std::time::Duration;
 
-use shdc::am::{AmBuilder, Precision};
+use shdc::am::{AmBuilder, AmStore, Precision};
 use shdc::coordinator::{CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use shdc::data::synthetic::SyntheticConfig;
+use shdc::data::RecordStream;
 use shdc::encoding::BundleMethod;
 use shdc::serve::{
-    run_closed_loop, run_open_loop, AdmissionPolicy, LoadCfg, OpenLoadCfg, RequestOpts, ServeCfg,
+    run_closed_loop, run_closed_loop_registry, run_open_loop, AdmissionPolicy, LoadCfg,
+    ModelRegistry, OpenLoadCfg, RequestOpts, ServeCfg, TenantQuota,
 };
 use shdc::util::env_u64;
+
+/// A 2-class bundled store for `enc` (content is irrelevant to
+/// throughput; shape — dim, class count, precision — is what's
+/// measured).
+fn bundle_store(enc: &EncoderCfg, data_seed: u64) -> AmStore {
+    let mut b = AmBuilder::new(enc.out_dim(), 2);
+    let mut renc = enc.build();
+    let mut stream = shdc::data::SyntheticStream::new(SyntheticConfig::sampled(data_seed));
+    for _ in 0..512 {
+        let rec = stream.next_record().unwrap();
+        b.add(rec.label as usize, &renc.encode(&rec));
+    }
+    b.finish(true)
+}
 
 fn serve_cfg(enc: &EncoderCfg, clients: usize, precision: Precision) -> ServeCfg {
     ServeCfg {
@@ -57,20 +77,8 @@ fn main() {
         n_numeric: 13,
         seed: 31,
     };
-    // A 2-class bundled store (content is irrelevant to throughput;
-    // shape is the paper's d=20k concat).
-    let store = {
-        let mut b = AmBuilder::new(enc.out_dim(), 2);
-        let mut renc = enc.build();
-        let mut stream =
-            shdc::data::SyntheticStream::new(SyntheticConfig::sampled(32));
-        use shdc::data::RecordStream;
-        for _ in 0..512 {
-            let rec = stream.next_record().unwrap();
-            b.add(rec.label as usize, &renc.encode(&rec));
-        }
-        b.finish(true)
-    };
+    // The paper's d=20k concat shape.
+    let store = bundle_store(&enc, 32);
     let data = SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(33) };
 
     println!("== serve_bench: closed-loop synthetic load ==");
@@ -88,12 +96,13 @@ fn main() {
     // Capacity estimate for the open-loop phase: the concurrent
     // closed-loop f32 scenario's throughput.
     let mut capacity_rps = 0.0f64;
-    for precision in [Precision::F32, Precision::Int8, Precision::Binary] {
+    for precision in Precision::ALL {
         for clients in [1usize, max_clients.max(1)] {
             let cfg = serve_cfg(&enc, clients, precision);
             let load = LoadCfg {
                 clients,
                 requests_per_client: (total_requests / clients as u64).max(1),
+                model_cycle: Vec::new(),
                 data: data.clone(),
             };
             let report = run_closed_loop(cfg, store.clone(), &load);
@@ -112,6 +121,7 @@ fn main() {
     let opts = RequestOpts {
         admission: Some(AdmissionPolicy::Shed),
         deadline: Some(Duration::from_millis(50)),
+        ..RequestOpts::default()
     };
     for factor in [0.5f64, 2.5] {
         let rate = (capacity_rps * factor).max(1_000.0);
@@ -125,5 +135,54 @@ fn main() {
         };
         let report = run_open_loop(cfg, store.clone(), &load);
         println!("  {factor:>4.1}x capacity: {}", report.row());
+    }
+
+    // Two tenants with different encode dims and store precisions behind
+    // one registry, served by the same worker pool: clients alternate
+    // models, so the micro-batcher's model-homogeneous cuts and the
+    // per-worker encoder caches are both on the hot path.
+    println!("== serve_bench: multi-tenant closed-loop (f32 d=20k + int8 d=8k) ==");
+    let enc_b = EncoderCfg {
+        cat: CatCfg::Bloom { d: 4_096, k: 4 },
+        num: NumCfg::Sjlt { d: 4_096, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 37,
+    };
+    let store_b = bundle_store(&enc_b, 38);
+    let mut registry = ModelRegistry::new();
+    let a = registry.register(
+        "f32-d20k",
+        enc.clone(),
+        store,
+        Precision::F32,
+        TenantQuota::default(),
+    );
+    let b = registry.register(
+        "int8-d8k",
+        enc_b,
+        store_b,
+        Precision::Int8,
+        TenantQuota::default(),
+    );
+    let clients = max_clients.max(2);
+    let load = LoadCfg {
+        clients,
+        requests_per_client: (total_requests / clients as u64).max(1),
+        model_cycle: vec![a, b],
+        data: data.clone(),
+    };
+    let report =
+        run_closed_loop_registry(serve_cfg(&enc, clients, Precision::F32), registry, &load);
+    println!("  multi   {clients:>3} client(s): {}", report.row());
+    println!(
+        "          {} model cuts, {} encoder builds across the shared pool",
+        report.serve.model_cuts, report.pipeline.encoder_builds,
+    );
+    for m in &report.serve.models {
+        println!(
+            "    model {:<9} submitted {:>7}  completed {:>7}  p50 {:>9} ns  p99 {:>9} ns",
+            m.name, m.submitted, m.completed, m.latency_ns.p50, m.latency_ns.p99,
+        );
     }
 }

@@ -116,6 +116,11 @@ use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
 #[derive(Debug)]
 pub struct EncodedBatch {
     pub seq: u64,
+    /// Which encoder config (index into the set passed to
+    /// [`run_pipeline_multi`]) encoded this batch — the routing key the
+    /// multi-tenant serve consumer uses to pick the matching class
+    /// store. Always `0` for [`run_pipeline`] (single-model) runs.
+    pub model: u32,
     pub encodings: Vec<Encoding>,
     pub labels: Vec<bool>,
     /// Raw records retained when the consumer needs them (PJRT fused path
@@ -214,6 +219,9 @@ impl Default for CoordinatorCfg {
 
 struct RawBatch {
     seq: u64,
+    /// Encoder-config index the stream routed this batch to
+    /// ([`RecordStream::batch_model`]); batches are model-homogeneous.
+    model: u32,
     records: Vec<Record>,
 }
 
@@ -515,8 +523,34 @@ fn send_counted<T>(tx: &SyncSender<T>, mut v: T, stats: &PipelineStats) -> Resul
 /// for hash-based encoders — only the codebook baseline pays per-worker
 /// duplication, which is itself part of the scalability story).
 pub fn run_pipeline<S, F>(
-    mut stream: S,
+    stream: S,
     encoder_cfg: &EncoderCfg,
+    cfg: &CoordinatorCfg,
+    consume: F,
+) -> Arc<PipelineStats>
+where
+    S: RecordStream + 'static,
+    F: FnMut(&mut EncodedBatch) -> bool,
+{
+    run_pipeline_multi(stream, std::slice::from_ref(encoder_cfg), cfg, consume)
+}
+
+/// Multi-model variant of [`run_pipeline`]: one worker pool serves any
+/// number of encoder configurations. The stream routes each batch via
+/// [`RecordStream::batch_model`] (an index into `encoder_cfgs`; batches
+/// must be model-homogeneous — the serve micro-batcher cuts them that
+/// way), and every worker holds a **lazy per-model encoder cache**: an
+/// encoder is built from its seed the first time that worker encodes a
+/// batch for that model (counted in `StatsSnapshot::encoder_builds`).
+/// This is the paper's scalability claim made operational — hash-defined
+/// encoder state is just seeds, so serving N tenants from one pool costs
+/// N small encoder rebuilds per worker, not N synchronized codebooks.
+/// Panic recovery is per model: a worker that panics mid-encode respawns
+/// only the routed model's encoder and keeps serving every other tenant
+/// untouched.
+pub fn run_pipeline_multi<S, F>(
+    mut stream: S,
+    encoder_cfgs: &[EncoderCfg],
     cfg: &CoordinatorCfg,
     mut consume: F,
 ) -> Arc<PipelineStats>
@@ -524,6 +558,8 @@ where
     S: RecordStream + 'static,
     F: FnMut(&mut EncodedBatch) -> bool,
 {
+    assert!(!encoder_cfgs.is_empty(), "run_pipeline_multi needs at least one encoder config");
+    let n_models = encoder_cfgs.len() as u32;
     let stats = Arc::new(PipelineStats::new());
     let n_workers = cfg.n_workers.max(1);
     let queue_depth = cfg.queue_depth.max(1);
@@ -569,6 +605,14 @@ where
             if stream.next_batch_into(&mut batch, budget) == 0 {
                 break;
             }
+            // The stream reports which model the batch it just cut routes
+            // to (always 0 for plain data streams); the worker picks its
+            // encoder by this index, so it must be in range.
+            let model = stream.batch_model();
+            assert!(
+                model < n_models,
+                "stream routed batch seq {seq} to model {model}, but only {n_models} encoder config(s) were registered"
+            );
             emitted += batch.len() as u64;
             reader_stats
                 .records_read
@@ -578,7 +622,7 @@ where
             // tail. (Output is order-independent either way — the seq
             // reorderer and pure encoders guarantee it.)
             let target = (seq % n_workers as u64) as usize;
-            let raw = RawBatch { seq, records: batch };
+            let raw = RawBatch { seq, model, records: batch };
             if reader_sched.push(target, raw, &reader_stats).is_err() {
                 break; // early stop
             }
@@ -592,7 +636,7 @@ where
     for (wid, ret_rx) in ret_rxs.into_iter().enumerate() {
         let tx = enc_tx.clone();
         let wstats = Arc::clone(&stats);
-        let ecfg = encoder_cfg.clone();
+        let ecfgs: Vec<EncoderCfg> = encoder_cfgs.to_vec();
         let keep = cfg.keep_records;
         let slow = cfg.slow_worker;
         let max_panics = cfg.max_worker_panics;
@@ -601,7 +645,12 @@ where
         let wspine_tx = spine_tx.clone();
         workers.push(thread::spawn(move || {
             let panic_guard = StopOnPanic(Arc::clone(&wsched));
-            let mut enc = ecfg.build();
+            // Lazy per-model encoder cache: slot `m` is built from
+            // `ecfgs[m].seed` the first time this worker encodes a batch
+            // routed to model `m`. Tenants a worker never serves cost it
+            // nothing; every build is counted in `encoder_builds`.
+            let mut encs: Vec<Option<RecordEncoder>> =
+                (0..ecfgs.len()).map(|_| None).collect();
             let mut panics_seen = 0u32;
             let mut stall_once =
                 fault.stall_once.filter(|&(w, _)| w == wid).map(|(_, d)| d);
@@ -610,12 +659,21 @@ where
             let mut label_spines: Vec<Vec<bool>> = Vec::new();
             loop {
                 // Drain returned batches: encoding buffers go back into
-                // the scratch pool, spines into the local pools, record
-                // vectors onward to the reader.
+                // the *routed model's* scratch pool (buffer width is
+                // per-model — recycling across models would hand the
+                // encoder wrong-dimension buffers), spines into the local
+                // pools, record vectors onward to the reader.
                 while let Ok(mut ret) = ret_rx.try_recv() {
-                    let n = ret.encodings.len() as u64;
-                    enc.recycle_all(ret.encodings.drain(..));
-                    wstats.buffers_recycled.fetch_add(n, Ordering::Relaxed);
+                    if let Some(Some(enc)) = encs.get_mut(ret.model as usize) {
+                        let n = ret.encodings.len() as u64;
+                        enc.recycle_all(ret.encodings.drain(..));
+                        wstats.buffers_recycled.fetch_add(n, Ordering::Relaxed);
+                    } else {
+                        // Batches are recycled to their origin worker, so
+                        // the encoder is normally built; if not (defensive),
+                        // the buffers just fall back to the allocator.
+                        ret.encodings.clear();
+                    }
                     enc_spines.push(ret.encodings);
                     ret.labels.clear();
                     label_spines.push(ret.labels);
@@ -640,6 +698,13 @@ where
                 labels.clear();
                 labels.extend(raw.records.iter().map(|r| r.label));
                 let mut encodings = enc_spines.pop().unwrap_or_default();
+                // Resolve (lazily building) the routed model's encoder.
+                let mid = raw.model as usize;
+                if encs[mid].is_none() {
+                    encs[mid] = Some(ecfgs[mid].build());
+                    wstats.encoder_builds.fetch_add(1, Ordering::Relaxed);
+                }
+                let enc = encs[mid].as_mut().expect("encoder built above");
                 // The whole encode body runs under catch_unwind: a panic
                 // (injected via FaultPlan, or a genuine encoder bug on a
                 // hostile record) must cost exactly this batch, not the
@@ -662,12 +727,14 @@ where
                     // The panic may have unwound mid-encode: partial
                     // output and encoder scratch state are suspect.
                     // Drop the partial encodings and "respawn" the
-                    // worker in place — rebuild the encoder from the
-                    // seed (hash-defined state makes this exact and
-                    // cheap: no codebook to restore, the paper's
-                    // synchronization-free property).
+                    // worker in place — rebuild the routed model's
+                    // encoder from its seed (hash-defined state makes
+                    // this exact and cheap: no codebook to restore, the
+                    // paper's synchronization-free property); the other
+                    // tenants' cached encoders are untouched.
                     encodings.clear();
-                    enc = ecfg.build();
+                    encs[mid] = Some(ecfgs[mid].build());
+                    wstats.encoder_builds.fetch_add(1, Ordering::Relaxed);
                 }
                 let records = if keep {
                     Some(raw.records)
@@ -678,6 +745,7 @@ where
                 };
                 let out = EncodedBatch {
                     seq: raw.seq,
+                    model: raw.model,
                     encodings,
                     labels,
                     records,

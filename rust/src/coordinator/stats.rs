@@ -37,6 +37,12 @@ pub struct PipelineStats {
     /// Batches delivered with [`super::EncodedBatch::failed`] set (their
     /// requests/records were not encoded).
     pub batches_failed: AtomicU64,
+    /// Encoder instances constructed across the worker pool: lazy
+    /// per-(worker × model) cache fills plus post-panic respawns. With
+    /// hash-defined encoders a build is cheap (seeds, not codebooks) —
+    /// this counter is how the multi-tenant registry proves per-model
+    /// encoder state stays nearly free.
+    pub encoder_builds: AtomicU64,
 }
 
 impl PipelineStats {
@@ -65,6 +71,7 @@ impl PipelineStats {
             worker_panics: self.worker_panics.load(Ordering::Relaxed),
             workers_retired: self.workers_retired.load(Ordering::Relaxed),
             batches_failed: self.batches_failed.load(Ordering::Relaxed),
+            encoder_builds: self.encoder_builds.load(Ordering::Relaxed),
         }
     }
 }
@@ -85,6 +92,7 @@ pub struct StatsSnapshot {
     pub worker_panics: u64,
     pub workers_retired: u64,
     pub batches_failed: u64,
+    pub encoder_builds: u64,
 }
 
 impl StatsSnapshot {
@@ -178,6 +186,7 @@ mod tests {
             worker_panics: 0,
             workers_retired: 0,
             batches_failed: 0,
+            encoder_builds: 0,
         };
         assert!((snap.encode_throughput() - 1000.0).abs() < 1e-9);
         assert!((snap.train_throughput() - 1000.0).abs() < 1e-9);

@@ -59,6 +59,18 @@ pub trait RecordStream: Send {
         }
     }
 
+    /// Which model the batch most recently produced by
+    /// [`RecordStream::next_batch_into`] routes to (an index into the
+    /// encoder set passed to
+    /// [`crate::coordinator::run_pipeline_multi`]). Single-model streams
+    /// — every data-layer stream — keep the default `0`; the serve
+    /// subsystem's request micro-batcher overrides it, because it cuts
+    /// model-homogeneous batches from a multi-tenant submission queue
+    /// and the pipeline must know which encoder each batch needs.
+    fn batch_model(&mut self) -> u32 {
+        0
+    }
+
     /// Fill a batch reusing the records already in `out` (recycled
     /// spines from the coordinator's return path): the first
     /// `min(out.len(), n)` records are refilled in place, the rest

@@ -30,7 +30,10 @@
 //! ([`crate::serve::bench::run_open_loop`]) at ~2× the measured f32
 //! closed-loop capacity with `Shed` admission and a 50 ms deadline, so
 //! the snapshot pins saturation behavior (shed rate, expired count)
-//! next to the in-capacity latency medians.
+//! next to the in-capacity latency medians, and one **multi-tenant**
+//! closed-loop run ([`crate::serve::bench::run_closed_loop_registry`])
+//! interleaving two registry models of different dimensionality and
+//! precision through the shared pool (per-model counters, `model_cuts`).
 //!
 //! Knobs: `BENCH_MS` (per-measurement budget, default 300),
 //! `SHDC_BENCH_RECORDS` (pipeline-scaling record budget, default 60000),
@@ -186,6 +189,7 @@ fn serve_scenario(precision: Precision, requests: u64) -> (Json, f64) {
     let load = LoadCfg {
         clients,
         requests_per_client: (requests / clients as u64).max(1),
+        model_cycle: Vec::new(),
         data: SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(18) },
     };
     let report = run_closed_loop(serve_cfg(enc, precision), store, &load);
@@ -203,12 +207,19 @@ fn serve_scenario(precision: Precision, requests: u64) -> (Json, f64) {
 /// store) — under identical closed-loop load, then one open-loop
 /// overload scenario at ~2× the f32 closed-loop capacity (shed
 /// admission + 50 ms deadline) so the snapshot records saturation
-/// behavior, not just in-capacity latency.
+/// behavior, and finally one **multi-tenant** closed-loop run: two
+/// registry models with different dimensionality, seeds and store
+/// precisions interleaved through the one shared worker pool, pinning
+/// the cost of model-homogeneous batch cuts (`model_cuts`) and the
+/// per-model counter section next to the single-tenant rows.
 fn serve_scenarios(requests: u64) -> Vec<Json> {
-    use crate::serve::{run_open_loop, AdmissionPolicy, OpenLoadCfg, RequestOpts};
+    use crate::serve::{
+        run_closed_loop_registry, run_open_loop, AdmissionPolicy, LoadCfg, ModelRegistry,
+        OpenLoadCfg, RequestOpts, TenantQuota,
+    };
     let mut f32_rps = 0.0f64;
     let mut out: Vec<Json> = Vec::new();
-    for p in [Precision::F32, Precision::Int8, Precision::Binary] {
+    for p in Precision::ALL {
         let (json, rps) = serve_scenario(p, requests);
         if p == Precision::F32 {
             f32_rps = rps;
@@ -225,6 +236,7 @@ fn serve_scenarios(requests: u64) -> Vec<Json> {
         opts: RequestOpts {
             admission: Some(AdmissionPolicy::Shed),
             deadline: Some(Duration::from_millis(50)),
+            ..RequestOpts::default()
         },
         data: SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(19) },
     };
@@ -233,6 +245,48 @@ fn serve_scenarios(requests: u64) -> Vec<Json> {
     out.push(Json::obj(vec![
         ("precision", Json::str(Precision::F32.name())),
         ("senders", Json::num(load.senders as f64)),
+        ("report", report.to_json()),
+    ]));
+
+    // Multi-tenant: one f32 d=20k model and one int8 d=8k model behind
+    // the same registry, clients alternating between them.
+    let enc_a = serve_encoder();
+    let enc_b = EncoderCfg {
+        cat: CatCfg::Bloom { d: 4_096, k: 4 },
+        num: NumCfg::Sjlt { d: 4_096, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed: 29,
+    };
+    let store_a = serve_store(&enc_a);
+    let store_b = serve_store(&enc_b);
+    let mut registry = ModelRegistry::new();
+    let a = registry.register(
+        "f32-d20k",
+        enc_a.clone(),
+        store_a,
+        Precision::F32,
+        TenantQuota::default(),
+    );
+    let b = registry.register(
+        "int8-d8k",
+        enc_b,
+        store_b,
+        Precision::Int8,
+        TenantQuota::default(),
+    );
+    let clients = 8usize;
+    let load = LoadCfg {
+        clients,
+        requests_per_client: (requests / clients as u64).max(1),
+        model_cycle: vec![a, b],
+        data: SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(20) },
+    };
+    let report = run_closed_loop_registry(serve_cfg(enc_a, Precision::F32), registry, &load);
+    println!("  serve multi×2 {}", report.row());
+    out.push(Json::obj(vec![
+        ("precision", Json::str("multi")),
+        ("clients", Json::num(clients as f64)),
         ("report", report.to_json()),
     ]));
     out

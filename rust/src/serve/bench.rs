@@ -27,7 +27,10 @@ use crate::am::AmStore;
 use crate::coordinator::StatsSnapshot;
 use crate::data::synthetic::SyntheticConfig;
 use crate::data::{RecordStream, SyntheticStream};
-use crate::serve::{RequestOpts, ServeCfg, ServeError, ServeSnapshot, Server};
+use crate::serve::{
+    HistSnapshot, ModelId, ModelRegistry, RequestOpts, ServeCfg, ServeError, ServeHandle,
+    ServeSnapshot, Server,
+};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -36,6 +39,10 @@ pub struct LoadCfg {
     pub clients: usize,
     /// Requests each client issues.
     pub requests_per_client: u64,
+    /// Which model each client routes to: client `c` uses
+    /// `model_cycle[c % len]`. Empty = every client hits model 0 (the
+    /// single-tenant case, and the default).
+    pub model_cycle: Vec<ModelId>,
     /// The synthetic record distribution clients draw from (each client
     /// salts its own stream so requests differ across clients).
     pub data: SyntheticConfig,
@@ -46,9 +53,46 @@ impl LoadCfg {
         LoadCfg {
             clients: 4,
             requests_per_client: 1_000,
+            model_cycle: Vec::new(),
             data: SyntheticConfig::sampled(seed),
         }
     }
+}
+
+/// Shared JSON form of a latency/depth histogram (one serializer for
+/// the closed-loop, open-loop and per-model report sections).
+fn hist_json(h: &HistSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count as f64)),
+        ("mean", Json::num(h.mean)),
+        ("p50", Json::num(h.p50 as f64)),
+        ("p90", Json::num(h.p90 as f64)),
+        ("p99", Json::num(h.p99 as f64)),
+        ("max", Json::num(h.max as f64)),
+    ])
+}
+
+/// JSON form of the per-model section of a [`ServeSnapshot`].
+fn models_json(serve: &ServeSnapshot) -> Json {
+    Json::Arr(
+        serve
+            .models
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::str(m.name.clone())),
+                    ("submitted", Json::num(m.submitted as f64)),
+                    ("completed", Json::num(m.completed as f64)),
+                    ("rejected", Json::num(m.rejected as f64)),
+                    ("shed", Json::num(m.shed as f64)),
+                    ("quota_shed", Json::num(m.quota_shed as f64)),
+                    ("expired", Json::num(m.expired as f64)),
+                    ("failed", Json::num(m.failed as f64)),
+                    ("latency_ns", hist_json(&m.latency_ns)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 #[derive(Clone, Debug)]
@@ -63,34 +107,28 @@ pub struct ServeBenchReport {
 impl ServeBenchReport {
     /// Machine-readable form for `BENCH_encode.json`.
     pub fn to_json(&self) -> Json {
-        let hist = |h: &crate::serve::HistSnapshot| {
-            Json::obj(vec![
-                ("count", Json::num(h.count as f64)),
-                ("mean", Json::num(h.mean)),
-                ("p50", Json::num(h.p50 as f64)),
-                ("p90", Json::num(h.p90 as f64)),
-                ("p99", Json::num(h.p99 as f64)),
-                ("max", Json::num(h.max as f64)),
-            ])
-        };
         Json::obj(vec![
             ("mode", Json::str("closed")),
             ("total_requests", Json::num(self.total_requests as f64)),
             ("wall_s", Json::num(self.wall.as_secs_f64())),
             ("throughput_rps", Json::num(self.throughput_rps)),
-            ("latency_ns", hist(&self.serve.latency_ns)),
-            ("queue_depth", hist(&self.serve.queue_depth)),
+            ("latency_ns", hist_json(&self.serve.latency_ns)),
+            ("queue_depth", hist_json(&self.serve.queue_depth)),
             ("batches", Json::num(self.serve.batches as f64)),
             ("size_cuts", Json::num(self.serve.size_cuts as f64)),
             ("deadline_cuts", Json::num(self.serve.deadline_cuts as f64)),
             ("idle_cuts", Json::num(self.serve.idle_cuts as f64)),
+            ("model_cuts", Json::num(self.serve.model_cuts as f64)),
             ("shed", Json::num(self.serve.shed as f64)),
+            ("quota_shed", Json::num(self.serve.quota_shed as f64)),
             ("expired", Json::num(self.serve.expired as f64)),
             ("failed", Json::num(self.serve.failed as f64)),
             ("shed_rate", Json::num(self.serve.shed_rate())),
+            ("models", models_json(&self.serve)),
             ("buffers_recycled", Json::num(self.pipeline.buffers_recycled as f64)),
             ("batches_stolen", Json::num(self.pipeline.batches_stolen as f64)),
             ("worker_panics", Json::num(self.pipeline.worker_panics as f64)),
+            ("encoder_builds", Json::num(self.pipeline.encoder_builds as f64)),
         ])
     }
 
@@ -112,10 +150,27 @@ impl ServeBenchReport {
     }
 }
 
-/// Run a closed-loop load test against a freshly started server; returns
-/// after every client finishes and the server drains.
+/// Run a closed-loop load test against a freshly started single-tenant
+/// server; returns after every client finishes and the server drains.
 pub fn run_closed_loop(cfg: ServeCfg, store: AmStore, load: &LoadCfg) -> ServeBenchReport {
     let (server, handle) = Server::new(cfg, store);
+    drive_closed_loop(server, handle, load)
+}
+
+/// Closed-loop load against a multi-tenant registry server: client `c`
+/// routes every request to `load.model_cycle[c % len]`
+/// ([`ServeHandle::classify_for`]), so a 2-model cycle interleaves
+/// tenants through the one shared worker pool.
+pub fn run_closed_loop_registry(
+    cfg: ServeCfg,
+    registry: ModelRegistry,
+    load: &LoadCfg,
+) -> ServeBenchReport {
+    let (server, handle) = Server::with_registry(cfg, registry);
+    drive_closed_loop(server, handle, load)
+}
+
+fn drive_closed_loop(server: Server, handle: ServeHandle, load: &LoadCfg) -> ServeBenchReport {
     let server_thread = thread::spawn(move || server.run());
     let total = load.clients as u64 * load.requests_per_client;
     let t0 = Instant::now();
@@ -125,11 +180,16 @@ pub fn run_closed_loop(cfg: ServeCfg, store: AmStore, load: &LoadCfg) -> ServeBe
             let mut data = load.data.clone();
             data.stream_salt ^= 0x5e7e ^ ((c as u64) << 32);
             let per = load.requests_per_client;
+            let model = if load.model_cycle.is_empty() {
+                ModelId(0)
+            } else {
+                load.model_cycle[c % load.model_cycle.len()]
+            };
             thread::spawn(move || {
                 let mut stream = SyntheticStream::new(data);
                 let mut rec = stream.next_record().expect("unbounded stream");
                 for _ in 0..per {
-                    let resp = h.classify(rec).expect("serve rejected mid-load");
+                    let resp = h.classify_for(model, rec).expect("serve rejected mid-load");
                     rec = resp.record;
                     stream.refill_record(&mut rec);
                 }
@@ -198,16 +258,6 @@ pub struct OpenLoopReport {
 impl OpenLoopReport {
     /// Machine-readable form for `BENCH_encode.json`.
     pub fn to_json(&self) -> Json {
-        let hist = |h: &crate::serve::HistSnapshot| {
-            Json::obj(vec![
-                ("count", Json::num(h.count as f64)),
-                ("mean", Json::num(h.mean)),
-                ("p50", Json::num(h.p50 as f64)),
-                ("p90", Json::num(h.p90 as f64)),
-                ("p99", Json::num(h.p99 as f64)),
-                ("max", Json::num(h.max as f64)),
-            ])
-        };
         Json::obj(vec![
             ("mode", Json::str("open")),
             ("offered", Json::num(self.offered as f64)),
@@ -215,12 +265,14 @@ impl OpenLoopReport {
             ("achieved_rps", Json::num(self.achieved_rps)),
             ("ok", Json::num(self.ok as f64)),
             ("shed", Json::num(self.shed as f64)),
+            ("quota_shed", Json::num(self.serve.quota_shed as f64)),
             ("timed_out", Json::num(self.timed_out as f64)),
             ("expired", Json::num(self.expired as f64)),
             ("failed", Json::num(self.failed as f64)),
             ("shed_rate", Json::num(self.serve.shed_rate())),
-            ("latency_ns", hist(&self.serve.latency_ns)),
-            ("queue_depth", hist(&self.serve.queue_depth)),
+            ("latency_ns", hist_json(&self.serve.latency_ns)),
+            ("queue_depth", hist_json(&self.serve.queue_depth)),
+            ("models", models_json(&self.serve)),
             ("worker_panics", Json::num(self.pipeline.worker_panics as f64)),
         ])
     }
@@ -362,6 +414,7 @@ mod tests {
             clients: 3,
             requests_per_client: 60,
             data: SyntheticConfig::sampled(23),
+            ..LoadCfg::quick(23)
         };
         let report = run_closed_loop(cfg, store, &load);
         assert_eq!(report.total_requests, 180);
@@ -369,6 +422,51 @@ mod tests {
         assert!(report.throughput_rps > 0.0);
         assert!(report.serve.latency_ns.count == 180);
         // JSON form parses back.
+        let s = report.to_json().pretty();
+        assert!(crate::util::json::Json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn closed_loop_registry_interleaves_models() {
+        use crate::am::Precision;
+        use crate::serve::TenantQuota;
+        let enc = |d: usize, seed: u64| EncoderCfg {
+            cat: CatCfg::Bloom { d, k: 2 },
+            num: NumCfg::None,
+            bundle: BundleMethod::Concat,
+            n_numeric: 13,
+            seed,
+        };
+        let store = |d: usize, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let rows: Vec<Vec<f32>> =
+                (0..2).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+            crate::am::AmStore::from_prototypes(d, &rows, None)
+        };
+        let mut reg = ModelRegistry::new();
+        let a = reg.register("a", enc(256, 41), store(256, 42), Precision::F32,
+            TenantQuota::default());
+        let b = reg.register("b", enc(512, 43), store(512, 44), Precision::Int8,
+            TenantQuota::default());
+        let cfg = ServeCfg {
+            coordinator: CoordinatorCfg { batch_size: 8, n_workers: 2, ..Default::default() },
+            ..ServeCfg::new(enc(256, 41))
+        };
+        let load = LoadCfg {
+            clients: 4,
+            requests_per_client: 50,
+            model_cycle: vec![a, b],
+            data: SyntheticConfig::sampled(45),
+        };
+        let report = run_closed_loop_registry(cfg, reg, &load);
+        assert_eq!(report.serve.completed, 200);
+        // 2 of 4 clients per model.
+        assert_eq!(report.serve.models.len(), 2);
+        assert_eq!(report.serve.models[0].completed, 100);
+        assert_eq!(report.serve.models[1].completed, 100);
+        assert_eq!(report.serve.models[0].name, "a");
+        // Both tenants' encoders were built somewhere in the pool.
+        assert!(report.pipeline.encoder_builds >= 2);
         let s = report.to_json().pretty();
         assert!(crate::util::json::Json::parse(&s).is_ok());
     }
@@ -396,7 +494,7 @@ mod tests {
             senders: 4,
             opts: RequestOpts {
                 admission: Some(crate::serve::AdmissionPolicy::Shed),
-                deadline: None,
+                ..RequestOpts::default()
             },
             data: SyntheticConfig::sampled(33),
         };

@@ -95,12 +95,46 @@
 //! locks use the uniform poisoned-lock recovery policy
 //! ([`crate::util::sync`]), so a panic can never cascade into
 //! `PoisonError` unwinds across client threads.
+//!
+//! # Multi-tenant routing and quotas
+//!
+//! One server hosts many models ([`ModelRegistry`]): each registered
+//! tenant pairs an [`EncoderCfg`] with its [`AmStore`] and scoring
+//! [`Precision`], and requests route by [`ModelId`]
+//! ([`RequestOpts::model`], or the [`ServeHandle::classify_for`]
+//! shorthand). The paper's hash-defined encoders are what make this
+//! nearly free: per-model encoder state is just seeds, so **one**
+//! work-stealing pool serves every tenant — workers cache encoder
+//! instances per (worker × model), built lazily from the seed and
+//! respawned from the seed after a panic without touching any other
+//! tenant ([`crate::coordinator::run_pipeline_multi`]).
+//!
+//! The micro-batcher cuts **model-homogeneous** batches: a model switch
+//! at the queue front closes the current batch (counted in
+//! `ServeStats::model_cuts`), because encode workers hard-assert
+//! uniform record widths and each batch is scored against exactly one
+//! store. Response pairing is unchanged — pendings are emitted in batch
+//! order, and `EncodedBatch::model` routes the consumer to the right
+//! tenant's store, so interleaved multi-tenant traffic pairs exactly.
+//!
+//! **Per-tenant quotas** ([`TenantQuota`], fixed at registration) bound
+//! what one tenant can take from the shared pool *before* it touches
+//! the shared queue: an in-flight cap (concurrent outstanding
+//! requests) and/or a token-bucket rate ([`RateLimit`]). Quota
+//! refusals are always fail-fast [`ServeError::QuotaExceeded`] — they
+//! are deliberately not subject to the [`AdmissionPolicy`], which
+//! governs *server-wide* saturation — and are counted per model
+//! (`quota_shed`), so a hostile tenant sheds visibly while quiet
+//! tenants keep their latency (the fairness test in
+//! `tests/serve_smoke.rs` pins this). Per-model counters and latency
+//! histograms surface in [`ServeSnapshot::models`].
 
 pub mod bench;
 pub mod latency;
 
 pub use bench::{
-    run_closed_loop, run_open_loop, LoadCfg, OpenLoadCfg, OpenLoopReport, ServeBenchReport,
+    run_closed_loop, run_closed_loop_registry, run_open_loop, LoadCfg, OpenLoadCfg, OpenLoopReport,
+    ServeBenchReport,
 };
 pub use latency::{HistSnapshot, Histogram};
 
@@ -111,7 +145,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::am::{AmScratch, AmStore, Precision};
-use crate::coordinator::{run_pipeline, CoordinatorCfg, EncoderCfg, PipelineStats};
+use crate::coordinator::{run_pipeline_multi, CoordinatorCfg, EncoderCfg, PipelineStats};
 use crate::data::{Record, RecordStream};
 use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 
@@ -131,10 +165,110 @@ pub enum AdmissionPolicy {
     TimedBackoff { max_wait: Duration },
 }
 
+/// Identifies one registered model (tenant): the index handed back by
+/// [`ModelRegistry::register`], carried on every request as its routing
+/// key. `Default` is model 0 — the only model a [`Server::new`]
+/// single-tenant server has, so existing single-model callers never
+/// mention it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct ModelId(pub u32);
+
+/// Token-bucket rate bound for one tenant: sustained `rps` with bursts
+/// up to `burst` requests (the bucket starts full).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RateLimit {
+    /// Sustained admissions per second (tokens refill at this rate).
+    pub rps: f64,
+    /// Bucket capacity: how many requests may be admitted back-to-back
+    /// after an idle period.
+    pub burst: f64,
+}
+
+/// Per-tenant admission quota, fixed at [`ModelRegistry::register`]
+/// time. The default is unlimited (no cap, no rate). Quota refusals are
+/// fail-fast [`ServeError::QuotaExceeded`] regardless of the
+/// [`AdmissionPolicy`]: the policy answers "the *server* is full", a
+/// quota answers "this *tenant* asked for more than its share" — a
+/// hostile tenant must never convert its excess into queue occupancy
+/// that other tenants wait behind.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TenantQuota {
+    /// Concurrent outstanding requests this model may hold (slots +
+    /// queue occupancy combined); `None` = unbounded.
+    pub max_in_flight: Option<u64>,
+    /// Token-bucket rate bound; `None` = unbounded.
+    pub rate: Option<RateLimit>,
+}
+
+/// One registered tenant: its encoder seeds, its class store, the
+/// precision scoring reads, and its admission quota.
+#[derive(Clone, Debug)]
+struct ModelEntry {
+    name: String,
+    encoder: EncoderCfg,
+    store: AmStore,
+    precision: Precision,
+    quota: TenantQuota,
+}
+
+/// The set of models one server hosts. Registration order defines the
+/// [`ModelId`] space (id = index); the registry is sealed once handed
+/// to [`Server::with_registry`] — per-model encoder state is just seeds
+/// (the paper's scalability property), so re-registering to change a
+/// tenant is cheap enough that live mutation isn't worth its locking.
+#[derive(Clone, Debug, Default)]
+pub struct ModelRegistry {
+    models: Vec<ModelEntry>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register a model; returns the [`ModelId`] requests will route
+    /// with. Panics if the encoder's output dimensionality doesn't
+    /// match the store (same invariant [`Server::new`] asserts).
+    pub fn register(
+        &mut self,
+        name: &str,
+        encoder: EncoderCfg,
+        store: AmStore,
+        precision: Precision,
+        quota: TenantQuota,
+    ) -> ModelId {
+        assert_eq!(
+            encoder.out_dim(),
+            store.dim(),
+            "encoder output dim must match the AM store (model {name:?})"
+        );
+        let id = ModelId(self.models.len() as u32);
+        self.models.push(ModelEntry {
+            name: name.to_string(),
+            encoder,
+            store,
+            precision,
+            quota,
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
 /// Per-request options for [`ServeHandle::classify_with`]. `None` fields
 /// fall back to the server-wide [`ServeCfg`] defaults.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RequestOpts {
+    /// Which registered model serves this request (default: model 0,
+    /// the [`Server::new`] single-tenant model).
+    pub model: ModelId,
     /// Total submit→response budget. Enforced while waiting for
     /// admission *and* at batch-cut time; an expired request returns
     /// [`ServeError::DeadlineExceeded`] without paying encode cost.
@@ -228,6 +362,12 @@ pub enum ServeError {
     /// The request was admitted but its encode batch failed (worker
     /// panic, recovered). The server stays up; retrying is reasonable.
     Internal,
+    /// The request routed to a [`ModelId`] the server never registered.
+    UnknownModel { model: ModelId },
+    /// The tenant's own [`TenantQuota`] refused the request (in-flight
+    /// cap hit, or the token bucket ran dry). Always fail-fast; the
+    /// server itself may be far from saturated.
+    QuotaExceeded,
 }
 
 impl std::fmt::Display for ServeError {
@@ -242,6 +382,10 @@ impl std::fmt::Display for ServeError {
             ServeError::AdmissionTimeout => write!(f, "admission retries timed out"),
             ServeError::DeadlineExceeded => write!(f, "request deadline exceeded"),
             ServeError::Internal => write!(f, "encode batch failed (worker panic, recovered)"),
+            ServeError::UnknownModel { model } => {
+                write!(f, "no model registered with id {}", model.0)
+            }
+            ServeError::QuotaExceeded => write!(f, "tenant quota exceeded, request shed"),
         }
     }
 }
@@ -277,6 +421,9 @@ pub struct ServeStats {
     /// their encode batch failed (worker panic). Counted in `completed`
     /// too.
     pub failed: AtomicU64,
+    /// Submissions refused by the tenant's own [`TenantQuota`]
+    /// ([`ServeError::QuotaExceeded`]) — never admitted, never queued.
+    pub quota_shed: AtomicU64,
     pub batches: AtomicU64,
     /// Batches closed because they reached `batch_size`.
     pub size_cuts: AtomicU64,
@@ -285,14 +432,56 @@ pub struct ServeStats {
     /// Batches closed by the idle cut (queue empty, nothing else in
     /// flight anywhere — waiting could not add work).
     pub idle_cuts: AtomicU64,
+    /// Batches closed because the next queued request routes to a
+    /// different model (encode batches are model-homogeneous).
+    pub model_cuts: AtomicU64,
     /// Per-request submit→complete latency, nanoseconds.
     pub latency_ns: Histogram,
     /// Submission-queue depth sampled at every batch cut.
     pub queue_depth: Histogram,
 }
 
-/// Point-in-time serve statistics.
-#[derive(Clone, Copy, Debug)]
+/// Per-model (tenant) counters; the same outcome taxonomy as the global
+/// [`ServeStats`], tallied at the identical code sites so
+/// `sum(models.*) == global.*` for every shared counter.
+#[derive(Debug, Default)]
+struct ModelStats {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    /// Load refusals at admission for this tenant: `Shed` plus
+    /// `TimedBackoff` exhaustion (the global stats split these two).
+    shed: AtomicU64,
+    quota_shed: AtomicU64,
+    expired: AtomicU64,
+    failed: AtomicU64,
+    latency_ns: Histogram,
+}
+
+/// Point-in-time per-model statistics ([`ServeSnapshot::models`], in
+/// [`ModelId`] order).
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    /// Registration name of the tenant.
+    pub name: String,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Server-load refusals (shed + admission timeouts) for this tenant.
+    pub shed: u64,
+    /// Refusals by this tenant's own quota.
+    pub quota_shed: u64,
+    pub expired: u64,
+    pub failed: u64,
+    /// Requests currently outstanding (the gauge the in-flight quota
+    /// caps).
+    pub in_flight: u64,
+    pub latency_ns: HistSnapshot,
+}
+
+/// Point-in-time serve statistics. (No longer `Copy`: it carries the
+/// per-model snapshot vector.)
+#[derive(Clone, Debug)]
 pub struct ServeSnapshot {
     pub submitted: u64,
     pub completed: u64,
@@ -301,21 +490,28 @@ pub struct ServeSnapshot {
     pub admission_timeouts: u64,
     pub expired: u64,
     pub failed: u64,
+    pub quota_shed: u64,
     pub batches: u64,
     pub size_cuts: u64,
     pub deadline_cuts: u64,
     pub idle_cuts: u64,
+    pub model_cuts: u64,
     pub latency_ns: HistSnapshot,
     pub queue_depth: HistSnapshot,
+    /// Per-model breakdown in [`ModelId`] order. Populated by
+    /// [`ServeHandle::stats`]; empty from a bare
+    /// [`ServeStats::snapshot`].
+    pub models: Vec<ModelSnapshot>,
 }
 
 impl ServeSnapshot {
     /// Fraction of admission attempts refused for load reasons
-    /// (`shed + admission_timeouts` over all attempts that reached
-    /// admission). The saturation gauge for open-loop traffic: ~0 below
-    /// capacity, climbing toward `1 − capacity/offered` above it.
+    /// (`shed + admission_timeouts + quota_shed` over all attempts that
+    /// reached admission). The saturation gauge for open-loop traffic:
+    /// ~0 below capacity, climbing toward `1 − capacity/offered` above
+    /// it.
     pub fn shed_rate(&self) -> f64 {
-        let refused = self.shed + self.admission_timeouts;
+        let refused = self.shed + self.admission_timeouts + self.quota_shed;
         let attempts = self.submitted + refused;
         if attempts == 0 {
             return 0.0;
@@ -334,12 +530,15 @@ impl ServeStats {
             admission_timeouts: self.admission_timeouts.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            quota_shed: self.quota_shed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             size_cuts: self.size_cuts.load(Ordering::Relaxed),
             deadline_cuts: self.deadline_cuts.load(Ordering::Relaxed),
             idle_cuts: self.idle_cuts.load(Ordering::Relaxed),
+            model_cuts: self.model_cuts.load(Ordering::Relaxed),
             latency_ns: self.latency_ns.snapshot(),
             queue_depth: self.queue_depth.snapshot(),
+            models: Vec::new(),
         }
     }
 }
@@ -350,6 +549,10 @@ struct Submission {
     slot: usize,
     record: Record,
     t_submit: Instant,
+    /// Registered model this request routes to (validated at classify,
+    /// so always in range); the batcher cuts model-homogeneous batches
+    /// on this field.
+    model: u32,
     /// Absolute deadline; the batcher discards the request unencoded
     /// once this passes.
     deadline: Option<Instant>,
@@ -380,6 +583,75 @@ struct Slot {
     cv: Condvar,
 }
 
+/// Token-bucket state for one tenant's [`RateLimit`]; one small mutex
+/// per *model* (not per server), touched only by that tenant's own
+/// submissions.
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+    rps: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    fn new(rate: RateLimit) -> TokenBucket {
+        TokenBucket {
+            tokens: rate.burst,
+            last: Instant::now(),
+            rps: rate.rps,
+            burst: rate.burst,
+        }
+    }
+
+    /// Refill by elapsed time, then take one token; `false` = dry.
+    fn try_take(&mut self, now: Instant) -> bool {
+        let elapsed = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + elapsed * self.rps).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Runtime state of one registered model: validation width, quota
+/// enforcement state, and the per-tenant counters.
+struct ModelRuntime {
+    name: String,
+    /// Numeric width this model's submissions must carry (None when the
+    /// encoder has no numeric branch): the encode workers hard-assert
+    /// uniform widths, so one malformed request in a mixed batch would
+    /// panic a worker — reject it at `classify` instead.
+    expect_numeric: Option<usize>,
+    /// In-flight cap from [`TenantQuota::max_in_flight`].
+    max_in_flight: Option<u64>,
+    /// Outstanding requests (admission attempt → terminal outcome).
+    in_flight: AtomicU64,
+    /// Token bucket from [`TenantQuota::rate`].
+    bucket: Option<Mutex<TokenBucket>>,
+    stats: ModelStats,
+}
+
+impl ModelRuntime {
+    fn snapshot(&self) -> ModelSnapshot {
+        ModelSnapshot {
+            name: self.name.clone(),
+            submitted: self.stats.submitted.load(Ordering::Relaxed),
+            completed: self.stats.completed.load(Ordering::Relaxed),
+            rejected: self.stats.rejected.load(Ordering::Relaxed),
+            shed: self.stats.shed.load(Ordering::Relaxed),
+            quota_shed: self.stats.quota_shed.load(Ordering::Relaxed),
+            expired: self.stats.expired.load(Ordering::Relaxed),
+            failed: self.stats.failed.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            latency_ns: self.stats.latency_ns.snapshot(),
+        }
+    }
+}
+
 struct Shared {
     queue: Mutex<VecDeque<Submission>>,
     /// Batcher parks here for the next submission.
@@ -396,11 +668,9 @@ struct Shared {
     /// batcher polls it with a bounded park so a dead pipeline can never
     /// strand the reader — and with it every client — forever.
     pipeline_stop: Arc<AtomicBool>,
-    /// Numeric width every submission must carry (None when the encoder
-    /// has no numeric branch): the encode workers hard-assert uniform
-    /// widths, so one malformed request in a mixed batch would panic a
-    /// worker — reject it at `classify` instead.
-    expect_numeric: Option<usize>,
+    /// Runtime state per registered model, in [`ModelId`] order —
+    /// validation width, quota state, per-tenant counters.
+    models: Vec<ModelRuntime>,
     stats: ServeStats,
     queue_cap: usize,
     /// Server-wide admission policy ([`ServeCfg::admission`]).
@@ -440,6 +710,18 @@ pub struct ServeHandle {
     shared: Arc<Shared>,
 }
 
+/// One request's admission context, threaded through the slot-acquire
+/// and enqueue retry loops: the resolved policy and deadline, the
+/// backoff attempt counter, and the routed tenant's counters (every
+/// refusal tallies globally *and* per model).
+struct AdmitCtx<'a> {
+    admission: AdmissionPolicy,
+    deadline: Option<Instant>,
+    t_submit: Instant,
+    attempt: u32,
+    model: &'a ModelStats,
+}
+
 /// Saturation wait shared by the slot-acquire and enqueue loops: apply
 /// the admission policy (and deadline) once, returning the re-acquired
 /// guard to retry, or the counted refusal error to bail. Every wait is a
@@ -451,36 +733,48 @@ fn admission_wait<'a, T>(
     sh: &Shared,
     cv: &Condvar,
     g: std::sync::MutexGuard<'a, T>,
-    admission: AdmissionPolicy,
-    deadline: Option<Instant>,
-    t_submit: Instant,
-    attempt: &mut u32,
+    ctx: &mut AdmitCtx<'_>,
 ) -> Result<std::sync::MutexGuard<'a, T>, ServeError> {
-    if let Some(dl) = deadline {
+    if let Some(dl) = ctx.deadline {
         if Instant::now() >= dl {
             sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+            ctx.model.expired.fetch_add(1, Ordering::Relaxed);
             return Err(ServeError::DeadlineExceeded);
         }
     }
-    match admission {
+    match ctx.admission {
         AdmissionPolicy::Block => {
             let (g, _) = wait_timeout_unpoisoned(cv, g, Duration::from_millis(5));
             Ok(g)
         }
         AdmissionPolicy::Shed => {
             sh.stats.shed.fetch_add(1, Ordering::Relaxed);
+            ctx.model.shed.fetch_add(1, Ordering::Relaxed);
             Err(ServeError::QueueFull)
         }
         AdmissionPolicy::TimedBackoff { max_wait } => {
-            if t_submit.elapsed() >= max_wait {
+            if ctx.t_submit.elapsed() >= max_wait {
                 sh.stats.admission_timeouts.fetch_add(1, Ordering::Relaxed);
+                ctx.model.shed.fetch_add(1, Ordering::Relaxed);
                 return Err(ServeError::AdmissionTimeout);
             }
-            let step = backoff_step(sh, *attempt);
-            *attempt = attempt.saturating_add(1);
+            let step = backoff_step(sh, ctx.attempt);
+            ctx.attempt = ctx.attempt.saturating_add(1);
             let (g, _) = wait_timeout_unpoisoned(cv, g, step);
             Ok(g)
         }
+    }
+}
+
+/// RAII decrement of a tenant's in-flight gauge: created the moment the
+/// quota admits the request, dropped when `classify_with` returns by
+/// *any* path — success, refusal, expiry or abort — so no outcome can
+/// leak a quota slot.
+struct InFlightGuard<'a>(&'a AtomicU64);
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -492,8 +786,14 @@ impl ServeHandle {
         self.classify_with(record, RequestOpts::default())
     }
 
-    /// Classify one record under explicit admission/deadline options.
-    /// Always terminates with a [`Response`] or an explicit
+    /// Classify one record against a specific registered model, with the
+    /// server-default admission and deadline.
+    pub fn classify_for(&self, model: ModelId, record: Record) -> Result<Response, ServeError> {
+        self.classify_with(record, RequestOpts { model, ..RequestOpts::default() })
+    }
+
+    /// Classify one record under explicit model/admission/deadline
+    /// options. Always terminates with a [`Response`] or an explicit
     /// [`ServeError`]; see the module docs for the overload model.
     pub fn classify_with(
         &self,
@@ -501,21 +801,68 @@ impl ServeHandle {
         opts: RequestOpts,
     ) -> Result<Response, ServeError> {
         let sh = &*self.shared;
+        // Resolve the routed model; an unknown id is rejected before it
+        // can touch any shared state.
+        let Some(rt) = sh.models.get(opts.model.0 as usize) else {
+            sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::UnknownModel { model: opts.model });
+        };
         // Reject malformed records before they can reach a shared
         // micro-batch (the encode workers assert uniform numeric widths).
-        if let Some(want) = sh.expect_numeric {
+        if let Some(want) = rt.expect_numeric {
             if record.numeric.len() != want {
                 sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                rt.stats.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(ServeError::InvalidNumericWidth {
                     got: record.numeric.len(),
                     want,
                 });
             }
         }
+        // Tenant quota, enforced before the request can occupy any
+        // shared resource (slot or queue space). Fail-fast by design:
+        // see the module docs. The in-flight gauge is incremented
+        // check-and-set atomically and decremented by the RAII guard on
+        // every return path below.
+        let quota_refused = |err: ServeError| {
+            sh.stats.quota_shed.fetch_add(1, Ordering::Relaxed);
+            rt.stats.quota_shed.fetch_add(1, Ordering::Relaxed);
+            Err(err)
+        };
+        let _in_flight = match rt.max_in_flight {
+            Some(cap) => {
+                let admitted = rt
+                    .in_flight
+                    .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+                        if v < cap {
+                            Some(v + 1)
+                        } else {
+                            None
+                        }
+                    })
+                    .is_ok();
+                if !admitted {
+                    return quota_refused(ServeError::QuotaExceeded);
+                }
+                Some(InFlightGuard(&rt.in_flight))
+            }
+            None => None,
+        };
+        if let Some(bucket) = &rt.bucket {
+            let dry = !lock_unpoisoned(bucket).try_take(Instant::now());
+            if dry {
+                // `_in_flight` refunds the gauge on this return.
+                return quota_refused(ServeError::QuotaExceeded);
+            }
+        }
         let t_submit = Instant::now();
-        let admission = opts.admission.unwrap_or(sh.admission);
-        let deadline = opts.deadline.or(sh.default_deadline).map(|d| t_submit + d);
-        let mut attempt = 0u32;
+        let mut ctx = AdmitCtx {
+            admission: opts.admission.unwrap_or(sh.admission),
+            deadline: opts.deadline.or(sh.default_deadline).map(|d| t_submit + d),
+            t_submit,
+            attempt: 0,
+            model: &rt.stats,
+        };
         // Acquire a completion slot (saturation point #1: more
         // concurrent callers than slots).
         let slot = {
@@ -523,14 +870,13 @@ impl ServeHandle {
             loop {
                 if sh.shutdown.load(Ordering::Acquire) {
                     sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    rt.stats.rejected.fetch_add(1, Ordering::Relaxed);
                     return Err(ServeError::Shutdown);
                 }
                 if let Some(i) = free.pop() {
                     break i;
                 }
-                free = admission_wait(
-                    sh, &sh.slot_cv, free, admission, deadline, t_submit, &mut attempt,
-                )?;
+                free = admission_wait(sh, &sh.slot_cv, free, &mut ctx)?;
             }
         };
         // Enqueue (saturation point #2: the bounded submission queue).
@@ -541,6 +887,7 @@ impl ServeHandle {
                     drop(q);
                     self.release_slot(slot);
                     sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    rt.stats.rejected.fetch_add(1, Ordering::Relaxed);
                     return Err(ServeError::Shutdown);
                 }
                 if q.len() < sh.queue_cap {
@@ -549,13 +896,18 @@ impl ServeHandle {
                     // under this lock — can never miss a request that
                     // is about to be pushed.
                     sh.stats.submitted.fetch_add(1, Ordering::Relaxed);
-                    q.push_back(Submission { slot, record, t_submit, deadline });
+                    rt.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                    q.push_back(Submission {
+                        slot,
+                        record,
+                        t_submit,
+                        model: opts.model.0,
+                        deadline: ctx.deadline,
+                    });
                     sh.nonempty_cv.notify_one();
                     break;
                 }
-                match admission_wait(
-                    sh, &sh.space_cv, q, admission, deadline, t_submit, &mut attempt,
-                ) {
+                match admission_wait(sh, &sh.space_cv, q, &mut ctx) {
                     Ok(g) => q = g,
                     Err(e) => {
                         self.release_slot(slot);
@@ -607,7 +959,9 @@ impl ServeHandle {
     }
 
     pub fn stats(&self) -> ServeSnapshot {
-        self.shared.stats.snapshot()
+        let mut snap = self.shared.stats.snapshot();
+        snap.models = self.shared.models.iter().map(ModelRuntime::snapshot).collect();
+        snap
     }
 }
 
@@ -621,6 +975,12 @@ struct RequestStream {
     /// variable batch sizes never drop (deallocate) a record. Bounded by
     /// the records in circulation (slots + in-flight spines).
     spare: Vec<Record>,
+    /// Model of the batch currently being gathered (set by the batch's
+    /// first placed request) — reported to the coordinator through
+    /// [`RecordStream::batch_model`]; the gather loop cuts the batch
+    /// when the queue front routes elsewhere, keeping every encode batch
+    /// model-homogeneous.
+    current_model: u32,
     /// Fault injection ([`crate::coordinator::FaultPlan::stall_batcher`]):
     /// sleep this long before cutting the first batch, so tests can
     /// saturate the submission queue deterministically.
@@ -633,7 +993,7 @@ impl RequestStream {
     /// pool is still cold) and forward the displaced buffer through the
     /// pending channel for hand-back at completion.
     fn place(&mut self, out: &mut Vec<Record>, filled: &mut usize, sub: Submission) {
-        let Submission { slot, record, t_submit, deadline: _ } = sub;
+        let Submission { slot, record, t_submit, model: _, deadline: _ } = sub;
         let handback = if *filled < out.len() {
             std::mem::replace(&mut out[*filled], record)
         } else {
@@ -655,6 +1015,10 @@ impl RequestStream {
         let sh = &*self.shared;
         sh.stats.expired.fetch_add(1, Ordering::Relaxed);
         sh.stats.completed.fetch_add(1, Ordering::Relaxed);
+        if let Some(rt) = sh.models.get(sub.model as usize) {
+            rt.stats.expired.fetch_add(1, Ordering::Relaxed);
+            rt.stats.completed.fetch_add(1, Ordering::Relaxed);
+        }
         fail_slot(sh, sub.slot, ServeError::DeadlineExceeded);
         self.spare.push(sub.record);
     }
@@ -675,6 +1039,12 @@ impl RecordStream for RequestStream {
         } else {
             out.pop()
         }
+    }
+
+    /// Route the batch just cut to its tenant's encoder
+    /// ([`run_pipeline_multi`]); set by the batch's first placed request.
+    fn batch_model(&mut self) -> u32 {
+        self.current_model
     }
 
     fn next_batch_into(&mut self, out: &mut Vec<Record>, n: usize) -> usize {
@@ -712,6 +1082,10 @@ impl RecordStream for RequestStream {
                         q = lock_unpoisoned(&sh.queue);
                         continue;
                     }
+                    // The first placed request fixes the batch's model;
+                    // the gather loop below only admits queue entries
+                    // routed to the same model.
+                    self.current_model = sub.model;
                     self.place(out, &mut filled, sub);
                     break;
                 }
@@ -726,14 +1100,24 @@ impl RecordStream for RequestStream {
                 q = guard;
             }
         }
-        // Adaptive gather: size, idle or deadline cut, measured from the
-        // first take.
+        // Adaptive gather: size, model, idle or deadline cut, measured
+        // from the first take.
         let deadline = Instant::now() + self.max_delay;
         let mut idle_cut = false;
+        let mut model_cut = false;
         {
             let mut q = lock_unpoisoned(&sh.queue);
             loop {
                 if filled >= n {
+                    break;
+                }
+                // Model cut: the queue front routes to a different
+                // tenant, and encode batches must stay model-homogeneous
+                // (worker asserts uniform widths; one store per batch).
+                // Ship what we have — the front (expired or not) opens
+                // the next batch.
+                if matches!(q.front(), Some(s) if s.model != self.current_model) {
+                    model_cut = true;
                     break;
                 }
                 if let Some(sub) = q.pop_front() {
@@ -778,6 +1162,8 @@ impl RecordStream for RequestStream {
         sh.stats.batches.fetch_add(1, Ordering::Relaxed);
         if filled >= n {
             sh.stats.size_cuts.fetch_add(1, Ordering::Relaxed);
+        } else if model_cut {
+            sh.stats.model_cuts.fetch_add(1, Ordering::Relaxed);
         } else if idle_cut {
             sh.stats.idle_cuts.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -792,28 +1178,58 @@ impl RecordStream for RequestStream {
     }
 }
 
-/// The serving engine: owns the class store and drives the encode
+/// The serving engine: owns the model registry and drives the encode
 /// pipeline until shutdown.
 pub struct Server {
     cfg: ServeCfg,
-    store: AmStore,
+    registry: ModelRegistry,
     shared: Arc<Shared>,
     pending_tx: SyncSender<Pending>,
     pending_rx: Receiver<Pending>,
 }
 
 impl Server {
+    /// Single-tenant server: wraps `cfg.encoder` + `store` +
+    /// `cfg.precision` into a one-model registry (model 0, name
+    /// `"default"`, no quota) — the PR-5/6 API, unchanged for existing
+    /// callers.
     pub fn new(cfg: ServeCfg, store: AmStore) -> (Server, ServeHandle) {
-        assert_eq!(
-            cfg.encoder.out_dim(),
-            store.dim(),
-            "encoder output dim must match the AM store"
+        let mut registry = ModelRegistry::new();
+        registry.register(
+            "default",
+            cfg.encoder.clone(),
+            store,
+            cfg.precision,
+            TenantQuota::default(),
         );
+        Server::with_registry(cfg, registry)
+    }
+
+    /// Multi-tenant server over a sealed [`ModelRegistry`]. The
+    /// registry's per-model `EncoderCfg`/`AmStore`/`Precision` are
+    /// authoritative; `cfg.encoder` and `cfg.precision` are ignored
+    /// (they only matter to the [`Server::new`] single-tenant
+    /// constructor). Everything else in `cfg` — batching, queue and
+    /// slot capacities, admission policy, deadlines — applies
+    /// server-wide.
+    pub fn with_registry(cfg: ServeCfg, registry: ModelRegistry) -> (Server, ServeHandle) {
+        assert!(!registry.is_empty(), "a server needs at least one registered model");
         let slots = cfg.slots.max(1);
-        let expect_numeric = match cfg.encoder.num {
-            crate::coordinator::NumCfg::None => None,
-            _ => Some(cfg.encoder.n_numeric),
-        };
+        let models = registry
+            .models
+            .iter()
+            .map(|m| ModelRuntime {
+                name: m.name.clone(),
+                expect_numeric: match m.encoder.num {
+                    crate::coordinator::NumCfg::None => None,
+                    _ => Some(m.encoder.n_numeric),
+                },
+                max_in_flight: m.quota.max_in_flight,
+                in_flight: AtomicU64::new(0),
+                bucket: m.quota.rate.map(|r| Mutex::new(TokenBucket::new(r))),
+                stats: ModelStats::default(),
+            })
+            .collect();
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::with_capacity(cfg.queue_cap.max(1))),
             nonempty_cv: Condvar::new(),
@@ -825,18 +1241,18 @@ impl Server {
                 .collect(),
             shutdown: AtomicBool::new(false),
             pipeline_stop: Arc::new(AtomicBool::new(false)),
-            expect_numeric,
+            models,
             stats: ServeStats::default(),
             queue_cap: cfg.queue_cap.max(1),
             admission: cfg.admission,
             default_deadline: cfg.default_deadline,
-            jitter: AtomicU64::new(cfg.encoder.seed),
+            jitter: AtomicU64::new(registry.models[0].encoder.seed),
         });
         // One pending per in-flight request; each holds a slot, so
         // `slots` bounds the channel and sends never block.
         let (pending_tx, pending_rx) = sync_channel::<Pending>(slots + 1);
         let handle = ServeHandle { shared: Arc::clone(&shared) };
-        (Server { cfg, store, shared, pending_tx, pending_rx }, handle)
+        (Server { cfg, registry, shared, pending_tx, pending_rx }, handle)
     }
 
     /// Run the serve loop on the current thread until
@@ -844,12 +1260,13 @@ impl Server {
     /// the pipeline stats (spawn this on a dedicated thread and keep the
     /// [`ServeHandle`] for clients).
     pub fn run(self) -> Arc<PipelineStats> {
-        let Server { cfg, store, shared, pending_tx, pending_rx } = self;
+        let Server { cfg, registry, shared, pending_tx, pending_rx } = self;
         let stream = RequestStream {
             shared: Arc::clone(&shared),
             pending_tx,
             max_delay: cfg.max_batch_delay,
             spare: Vec::new(),
+            current_model: 0,
             stall_batcher: cfg.coordinator.fault.stall_batcher,
         };
         // Whatever way this function exits — clean drain, or a panic
@@ -867,9 +1284,16 @@ impl Server {
             stop_flag: Some(Arc::clone(&shared.pipeline_stop)),
             ..cfg.coordinator.clone()
         };
+        // One worker pool, every tenant: the registry's encoder configs
+        // go to the coordinator (workers build/cache encoders lazily
+        // per model), and the consumer routes each model-homogeneous
+        // batch to its tenant's store by `EncodedBatch::model`.
+        let encoder_cfgs: Vec<EncoderCfg> =
+            registry.models.iter().map(|m| m.encoder.clone()).collect();
         let mut scratch = AmScratch::new();
-        let precision = cfg.precision;
-        let stats = run_pipeline(stream, &cfg.encoder, &coord, |batch| {
+        let stats = run_pipeline_multi(stream, &encoder_cfgs, &coord, |batch| {
+            let entry = &registry.models[batch.model as usize];
+            let mstats = &shared.models[batch.model as usize].stats;
             if batch.failed {
                 // The encode worker panicked on this batch (and was
                 // respawned in place). `labels` still holds one entry
@@ -882,6 +1306,8 @@ impl Server {
                     };
                     shared.stats.failed.fetch_add(1, Ordering::Relaxed);
                     shared.stats.completed.fetch_add(1, Ordering::Relaxed);
+                    mstats.failed.fetch_add(1, Ordering::Relaxed);
+                    mstats.completed.fetch_add(1, Ordering::Relaxed);
                     fail_slot(&shared, pending.slot, ServeError::Internal);
                 }
                 return true;
@@ -891,10 +1317,12 @@ impl Server {
                     // Stream half dropped mid-batch: nothing left to pair.
                     return false;
                 };
-                let (top_class, score) = store.top1(enc, precision, &mut scratch);
+                let (top_class, score) = entry.store.top1(enc, entry.precision, &mut scratch);
                 let latency = pending.t_submit.elapsed();
                 shared.stats.latency_ns.record(latency.as_nanos() as u64);
                 shared.stats.completed.fetch_add(1, Ordering::Relaxed);
+                mstats.latency_ns.record(latency.as_nanos() as u64);
+                mstats.completed.fetch_add(1, Ordering::Relaxed);
                 let slot = &shared.slots[pending.slot];
                 let mut st = lock_unpoisoned(&slot.state);
                 *st = SlotState::Done(Response {
@@ -1072,7 +1500,10 @@ mod tests {
         let snap = handle.stats();
         assert_eq!(snap.completed, 10);
         assert!(snap.idle_cuts >= 1, "{snap:?}");
-        assert_eq!(snap.batches, snap.size_cuts + snap.deadline_cuts + snap.idle_cuts);
+        assert_eq!(
+            snap.batches,
+            snap.size_cuts + snap.deadline_cuts + snap.idle_cuts + snap.model_cuts
+        );
         // 10 sequential requests must come nowhere near 10 deadlines.
         assert!(elapsed < Duration::from_millis(1000), "deadline paid per request: {elapsed:?}");
     }
@@ -1107,6 +1538,107 @@ mod tests {
         let snap = handle.stats();
         assert_eq!(snap.rejected, 1);
         assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn registry_assigns_sequential_ids() {
+        let mut reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        let a = reg.register(
+            "a",
+            small_encoder(1),
+            small_store(256),
+            Precision::F32,
+            TenantQuota::default(),
+        );
+        let b = reg.register(
+            "b",
+            small_encoder(2),
+            small_store(256),
+            Precision::Binary,
+            TenantQuota { max_in_flight: Some(4), rate: None },
+        );
+        assert_eq!(a, ModelId(0));
+        assert_eq!(b, ModelId(1));
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "encoder output dim must match")]
+    fn registry_rejects_dim_mismatch() {
+        let mut reg = ModelRegistry::new();
+        reg.register(
+            "bad",
+            small_encoder(1), // out_dim 256
+            small_store(128),
+            Precision::F32,
+            TenantQuota::default(),
+        );
+    }
+
+    #[test]
+    fn unknown_model_rejected_without_touching_queue() {
+        let (server, handle) = Server::new(ServeCfg::new(small_encoder(14)), small_store(256));
+        let t = thread::spawn(move || server.run());
+        let mut s = SyntheticStream::new(SyntheticConfig::sampled(15));
+        let rec = s.next_record().unwrap();
+        let err = handle
+            .classify_with(rec, RequestOpts { model: ModelId(7), ..RequestOpts::default() })
+            .unwrap_err();
+        assert_eq!(err, ServeError::UnknownModel { model: ModelId(7) });
+        handle.shutdown();
+        t.join().unwrap();
+        let snap = handle.stats();
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.submitted, 0);
+        // The registered model's own counters never moved.
+        assert_eq!(snap.models.len(), 1);
+        assert_eq!(snap.models[0].rejected, 0);
+    }
+
+    #[test]
+    fn token_bucket_refills_at_rate() {
+        let mut b = TokenBucket::new(RateLimit { rps: 1000.0, burst: 2.0 });
+        let t0 = Instant::now();
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0), "burst of 2 exhausted");
+        // 5ms at 1000 rps refills 5 tokens, capped at burst (2).
+        let t1 = t0 + Duration::from_millis(5);
+        assert!(b.try_take(t1));
+        assert!(b.try_take(t1));
+        assert!(!b.try_take(t1), "refill is capped at burst");
+    }
+
+    #[test]
+    fn in_flight_quota_sheds_excess_fail_fast() {
+        // One model capped at 0 in-flight: every submission is
+        // QuotaExceeded before touching slots or the queue, even under
+        // the Block admission policy.
+        let mut reg = ModelRegistry::new();
+        reg.register(
+            "capped",
+            small_encoder(16),
+            small_store(256),
+            Precision::F32,
+            TenantQuota { max_in_flight: Some(0), rate: None },
+        );
+        let (server, handle) =
+            Server::with_registry(ServeCfg::new(small_encoder(16)), reg);
+        let t = thread::spawn(move || server.run());
+        let mut s = SyntheticStream::new(SyntheticConfig::sampled(17));
+        for _ in 0..5 {
+            let rec = s.next_record().unwrap();
+            assert_eq!(handle.classify(rec).unwrap_err(), ServeError::QuotaExceeded);
+        }
+        handle.shutdown();
+        t.join().unwrap();
+        let snap = handle.stats();
+        assert_eq!(snap.quota_shed, 5);
+        assert_eq!(snap.submitted, 0);
+        assert_eq!(snap.models[0].quota_shed, 5);
+        assert_eq!(snap.models[0].in_flight, 0, "guard must refund the gauge");
+        assert!(snap.shed_rate() > 0.99);
     }
 
     #[test]

@@ -489,6 +489,7 @@ fn open_loop_over_capacity_sheds_instead_of_hanging() {
         opts: RequestOpts {
             admission: Some(AdmissionPolicy::Shed),
             deadline: Some(Duration::from_millis(100)),
+            ..RequestOpts::default()
         },
         data: SyntheticConfig::sampled(55),
     };

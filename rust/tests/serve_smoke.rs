@@ -11,6 +11,16 @@
 //! * the steady-state serve loop recycles its buffers (asserted via the
 //!   pipeline recycle counters here; the allocation-counter harness in
 //!   `tests/alloc_regression.rs` pins the stronger zero-alloc claim).
+//!
+//! Multi-tenant contract (ISSUE 7), pinned by the `multi_model_` tests:
+//! * two registry models with different dimensionality, seeds and store
+//!   precisions served through one shared pool return answers
+//!   bit-identical to *their* model's offline encode + top-1;
+//! * encode batches are model-homogeneous (a mixed queue produces
+//!   `model_cuts`);
+//! * a tenant that exceeds its quota sheds fail-fast, with per-model
+//!   counters proving it, while a quiet tenant sees zero errors and a
+//!   bounded tail.
 
 use std::sync::Arc;
 use std::thread;
@@ -22,7 +32,7 @@ use shdc::data::synthetic::SyntheticConfig;
 use shdc::data::{Record, RecordStream, SyntheticStream};
 use shdc::encoding::{BundleMethod, Encoding};
 use shdc::model::LogisticModel;
-use shdc::serve::{ServeCfg, Server};
+use shdc::serve::{ModelRegistry, RateLimit, ServeCfg, ServeError, Server, TenantQuota};
 
 fn encoder_cfg(seed: u64) -> EncoderCfg {
     EncoderCfg {
@@ -234,4 +244,259 @@ fn concurrent_clients_get_their_own_answers() {
     let stats = server_thread.join().expect("server").snapshot();
     assert_eq!(handle.stats().completed, 4 * 80);
     assert!(stats.records_encoded == 4 * 80);
+}
+
+/// A second tenant shape: half the categorical width, half the numeric
+/// projection (out_dim 640 vs [`encoder_cfg`]'s 1280) — routing bugs
+/// that mix models surface as hard dimension mismatches, not subtle
+/// score drift.
+fn encoder_cfg_narrow(seed: u64) -> EncoderCfg {
+    EncoderCfg {
+        cat: CatCfg::Bloom { d: 512, k: 3 },
+        num: NumCfg::Sjlt { d: 128, k: 4 },
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed,
+    }
+}
+
+#[test]
+fn multi_model_routing_matches_per_model_offline() {
+    // Two tenants — different dimensionality, seeds and store
+    // precisions — behind one registry and one shared worker pool.
+    // Interleaved clients must each get answers bit-identical to *their*
+    // model's offline encode + top-1.
+    let enc_a = encoder_cfg(141);
+    let enc_b = encoder_cfg_narrow(151);
+    let data = data_cfg(142);
+    let store_a = AmStore::from_logistic(&train_quick(&enc_a, &data));
+    let store_b = AmStore::from_logistic(&train_quick(&enc_b, &data));
+    let offline_a = Arc::new(store_a.clone());
+    let offline_b = Arc::new(store_b.clone());
+
+    let mut reg = ModelRegistry::new();
+    let a = reg.register(
+        "wide-f32",
+        enc_a.clone(),
+        store_a,
+        Precision::F32,
+        TenantQuota::default(),
+    );
+    let b = reg.register(
+        "narrow-int8",
+        enc_b.clone(),
+        store_b,
+        Precision::Int8,
+        TenantQuota::default(),
+    );
+    let (server, handle) = Server::with_registry(serve_cfg(enc_a.clone(), Precision::F32), reg);
+    let server_thread = thread::spawn(move || server.run());
+
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let h = handle.clone();
+            let (model, enc_cfg, store, precision) = if c % 2 == 0 {
+                (a, enc_a.clone(), Arc::clone(&offline_a), Precision::F32)
+            } else {
+                (b, enc_b.clone(), Arc::clone(&offline_b), Precision::Int8)
+            };
+            thread::spawn(move || {
+                let mut enc = enc_cfg.build();
+                let mut scratch = AmScratch::new();
+                let mut stream = SyntheticStream::new(data_cfg(160 + c as u64));
+                for _ in 0..60 {
+                    let rec = stream.next_record().unwrap();
+                    let code = enc.encode(&rec);
+                    let (want_class, want_score) = store.top1(&code, precision, &mut scratch);
+                    enc.recycle(code);
+                    let resp = h.classify_for(model, rec).expect("serve");
+                    assert_eq!(resp.top_class, want_class, "routed to the wrong model?");
+                    assert_eq!(resp.score, want_score, "routed to the wrong model?");
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client");
+    }
+    handle.shutdown();
+    let pstats = server_thread.join().expect("server").snapshot();
+    let snap = handle.stats();
+    assert_eq!(snap.completed, 240);
+    assert_eq!(snap.models[0].name, "wide-f32");
+    assert_eq!(snap.models[1].name, "narrow-int8");
+    assert_eq!(snap.models[0].completed, 120);
+    assert_eq!(snap.models[1].completed, 120);
+    // Per-model tallies reconcile with the globals.
+    assert_eq!(snap.models.iter().map(|m| m.submitted).sum::<u64>(), snap.submitted);
+    assert_eq!(
+        snap.batches,
+        snap.size_cuts + snap.deadline_cuts + snap.idle_cuts + snap.model_cuts
+    );
+    // Lazy per-worker×model encoder caches: both models were built at
+    // least once, at most once per (worker, model) pair (3 workers × 2).
+    assert!(pstats.encoder_builds >= 2, "encoder cache never populated: {pstats:?}");
+    assert!(pstats.encoder_builds <= 6, "encoder cache thrashing: {pstats:?}");
+}
+
+#[test]
+fn multi_model_batches_cut_at_model_boundaries() {
+    let enc_a = encoder_cfg(171);
+    let enc_b = encoder_cfg_narrow(181);
+    let data = data_cfg(172);
+    let store_a = AmStore::from_logistic(&train_quick(&enc_a, &data));
+    let store_b = AmStore::from_logistic(&train_quick(&enc_b, &data));
+    let mut reg = ModelRegistry::new();
+    let a = reg.register("a", enc_a.clone(), store_a, Precision::F32, TenantQuota::default());
+    let b = reg.register("b", enc_b, store_b, Precision::F32, TenantQuota::default());
+    let (server, handle) = Server::with_registry(serve_cfg(enc_a, Precision::F32), reg);
+
+    // Queue a mixed-model backlog BEFORE the server starts consuming
+    // (submissions land in the bounded queue without a running batcher),
+    // so the first gather deterministically sees both models and must
+    // stop at the first model boundary: encode batches are
+    // model-homogeneous.
+    let clients: Vec<_> = (0..6)
+        .map(|c| {
+            let h = handle.clone();
+            let model = if c % 2 == 0 { a } else { b };
+            thread::spawn(move || {
+                let mut stream = SyntheticStream::new(data_cfg(190 + c as u64));
+                let rec = stream.next_record().unwrap();
+                h.classify_for(model, rec).expect("serve")
+            })
+        })
+        .collect();
+    // `submitted` ticks under the queue lock at enqueue time.
+    let t0 = std::time::Instant::now();
+    while handle.stats().submitted < 6 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "submissions never queued");
+        thread::sleep(Duration::from_millis(1));
+    }
+    let server_thread = thread::spawn(move || server.run());
+    for c in clients {
+        c.join().expect("client");
+    }
+    handle.shutdown();
+    server_thread.join().expect("server");
+    let snap = handle.stats();
+    assert_eq!(snap.completed, 6);
+    assert!(snap.model_cuts >= 1, "mixed queue produced no model cuts: {snap:?}");
+    assert_eq!(
+        snap.batches,
+        snap.size_cuts + snap.deadline_cuts + snap.idle_cuts + snap.model_cuts
+    );
+}
+
+#[test]
+fn multi_model_quota_sheds_hostile_tenant_not_quiet_one() {
+    let enc_a = encoder_cfg(201);
+    let enc_b = encoder_cfg_narrow(211);
+    let data = data_cfg(202);
+    let store_a = AmStore::from_logistic(&train_quick(&enc_a, &data));
+    let store_b = AmStore::from_logistic(&train_quick(&enc_b, &data));
+
+    // Solo baseline: the quiet tenant's workload alone on an identical
+    // single-model server (the fairness yardstick).
+    let solo_p99 = {
+        let (server, handle) =
+            Server::new(serve_cfg(enc_a.clone(), Precision::F32), store_a.clone());
+        let t = thread::spawn(move || server.run());
+        let mut stream = SyntheticStream::new(data_cfg(203));
+        for _ in 0..100 {
+            handle.classify(stream.next_record().unwrap()).expect("solo serve");
+        }
+        handle.shutdown();
+        t.join().expect("server");
+        handle.stats().latency_ns.p99
+    };
+
+    // The hostile tenant's bucket holds 3 tokens and refills at 1e-3
+    // rps — effectively never over a test run — so exactly `burst`
+    // requests are admitted and everything after sheds fail-fast.
+    let mut reg = ModelRegistry::new();
+    let quiet = reg.register(
+        "quiet",
+        enc_a.clone(),
+        store_a.clone(),
+        Precision::F32,
+        TenantQuota::default(),
+    );
+    let hostile = reg.register(
+        "hostile",
+        enc_b,
+        store_b,
+        Precision::Int8,
+        TenantQuota { max_in_flight: None, rate: Some(RateLimit { rps: 1e-3, burst: 3.0 }) },
+    );
+    let (server, handle) = Server::with_registry(serve_cfg(enc_a.clone(), Precision::F32), reg);
+    let server_thread = thread::spawn(move || server.run());
+
+    let hostile_thread = {
+        let h = handle.clone();
+        thread::spawn(move || {
+            let mut stream = SyntheticStream::new(data_cfg(204));
+            let (mut ok, mut shed) = (0u64, 0u64);
+            for _ in 0..40 {
+                match h.classify_for(hostile, stream.next_record().unwrap()) {
+                    Ok(_) => ok += 1,
+                    Err(ServeError::QuotaExceeded) => shed += 1,
+                    Err(e) => panic!("hostile tenant saw unexpected error: {e}"),
+                }
+            }
+            (ok, shed)
+        })
+    };
+    // The quiet tenant runs its full offline cross-check concurrently;
+    // the hostile flood must not cost it a single error.
+    let offline = Arc::new(store_a);
+    let quiet_thread = {
+        let h = handle.clone();
+        let enc_cfg = enc_a.clone();
+        let offline = Arc::clone(&offline);
+        thread::spawn(move || {
+            let mut enc = enc_cfg.build();
+            let mut scratch = AmScratch::new();
+            let mut stream = SyntheticStream::new(data_cfg(203)); // same load as solo
+            for _ in 0..100 {
+                let rec = stream.next_record().unwrap();
+                let code = enc.encode(&rec);
+                let (want_class, want_score) = offline.top1(&code, Precision::F32, &mut scratch);
+                enc.recycle(code);
+                let resp = h.classify_for(quiet, rec).expect("quiet tenant must never shed");
+                assert_eq!(resp.top_class, want_class);
+                assert_eq!(resp.score, want_score);
+            }
+        })
+    };
+    let (hostile_ok, hostile_shed) = hostile_thread.join().expect("hostile client");
+    quiet_thread.join().expect("quiet client");
+    handle.shutdown();
+    server_thread.join().expect("server");
+
+    let snap = handle.stats();
+    // Exactly the burst admitted; the rest refused by the quota alone.
+    assert_eq!(hostile_ok, 3);
+    assert_eq!(hostile_shed, 37);
+    let hm = &snap.models[hostile.0 as usize];
+    assert_eq!(hm.quota_shed, 37);
+    assert_eq!(hm.submitted, 3);
+    assert_eq!(hm.completed, 3);
+    let qm = &snap.models[quiet.0 as usize];
+    assert_eq!(qm.completed, 100);
+    assert_eq!(qm.quota_shed + qm.rejected + qm.shed + qm.expired + qm.failed, 0);
+    assert_eq!(snap.quota_shed, 37);
+    assert!(snap.shed_rate() > 0.0);
+    // Fairness: quota refusals never touch the queue and only 3 hostile
+    // requests were ever admitted, so the quiet tenant's tail must stay
+    // within a generous multiple of its solo baseline (floor 5 ms
+    // absorbs scheduler noise on loaded CI hosts).
+    let bound = solo_p99.max(5_000_000) * 40;
+    assert!(
+        qm.latency_ns.p99 <= bound,
+        "quiet p99 {} vs solo {} (bound {})",
+        qm.latency_ns.p99,
+        solo_p99,
+        bound
+    );
 }

@@ -51,6 +51,14 @@ cargo test -q
 echo "== cargo test -q --test serve_smoke =="
 cargo test -q --test serve_smoke
 
+# Multi-tenant serve contract in isolation: two registry models with
+# different dims/seeds/precisions through the one shared pool
+# (bit-identical to per-model offline references), model-homogeneous
+# batch cuts, and per-tenant quota shedding that leaves the quiet
+# tenant's error rate and tail untouched.
+echo "== cargo test -q --test serve_smoke multi_model_ =="
+cargo test -q --test serve_smoke multi_model_
+
 # The fault-injection matrix (worker panics, stalls, stalled batcher,
 # lossy recycle): every request must reach a terminal outcome, surviving
 # output must be bit-identical to a no-fault run, and the failure
