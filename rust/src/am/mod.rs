@@ -29,10 +29,40 @@
 //! rule). Scoring is borrow-based: all staging lives in an
 //! [`AmScratch`], so the serving loop scores with zero steady-state
 //! allocations.
+//!
+//! # Sharded scan and distributed build
+//!
+//! Many-class workloads (the HDC classification literature is dominated
+//! by them) turn the linear class scan into the serving bottleneck.
+//! Two invariants make the store scale out without changing a single
+//! result bit:
+//!
+//! * **Scan sharding partitions classes, never arithmetic.** Each
+//!   per-class score is one self-contained kernel call, so scoring
+//!   classes `lo..hi` on one thread ([`AmStore::score_range_into`]) and
+//!   `hi..` on another produces the same multiset of (class, score)
+//!   pairs as the single scan. [`ShardedAmStore`] partitions the class
+//!   space into contiguous ranges, scans them on a scoped scorer pool,
+//!   and merges with the same deterministic tie-break the single scan
+//!   uses — **score descending, lowest class id wins on equal score** —
+//!   so `top1`/`topk_into` are exactly equal to [`AmStore`]'s.
+//! * **Class sums are commutative bundles.** [`AmBuilder`] prototypes
+//!   are element-wise f32 sums of encoded examples, and IEEE-754
+//!   addition commutes exactly (`a + b == b + a`, bit for bit), so
+//!   [`AmBuilder::merge`] is the contract for distributed building:
+//!   shard-local builders over any partition of an example stream merge
+//!   to the same sums as one builder seeing the stream in order, as
+//!   long as each class's examples keep their relative order across the
+//!   merge sequence (partitioning *examples* arbitrarily is exact for
+//!   integer-valued sums — e.g. sparse 0/1 encodings — while float
+//!   bundles rely on the per-class order, since IEEE addition does not
+//!   associate). `tests/prop_invariants.rs` pins both laws.
 
 pub mod quantize;
+pub mod shard;
 
 pub use quantize::{pack_indices, pack_signs, quantize_i8, words_for};
+pub use shard::{ShardScratch, ShardedAmStore};
 
 use crate::encoding::kernels;
 use crate::encoding::Encoding;
@@ -171,6 +201,18 @@ impl AmStore {
         }
     }
 
+    /// Class `c`'s f32 prototype row (the reference representation the
+    /// int8/binary mirrors are derived from). Exposed so distributed
+    /// builds can assert bit-identity of finished stores.
+    pub fn prototype(&self, c: usize) -> &[f32] {
+        self.row_f32(c)
+    }
+
+    /// Class `c`'s additive bias.
+    pub fn bias(&self, c: usize) -> f32 {
+        self.biases[c]
+    }
+
     #[inline]
     fn row_f32(&self, c: usize) -> &[f32] {
         &self.protos[c * self.d..(c + 1) * self.d]
@@ -201,16 +243,34 @@ impl AmStore {
     ///   a Hamming count and an f32 bias live on different scales, and
     ///   binarized scoring is only meaningful as a ranking.
     pub fn score_into(&self, enc: &Encoding, prec: Precision, scratch: &mut AmScratch) {
+        self.score_range_into(enc, prec, 0, self.n_classes, scratch);
+    }
+
+    /// [`AmStore::score_into`] restricted to classes `lo..hi`:
+    /// `scratch.scores[i]` holds class `lo + i`'s score. The per-class
+    /// arithmetic is identical to the full scan (one self-contained
+    /// kernel call per class; query staging does not depend on the
+    /// range), so a partitioned scan — the [`ShardedAmStore`] shard
+    /// loop — reproduces the full scan's scores bit for bit.
+    pub fn score_range_into(
+        &self,
+        enc: &Encoding,
+        prec: Precision,
+        lo: usize,
+        hi: usize,
+        scratch: &mut AmScratch,
+    ) {
         assert_eq!(enc.dim(), self.d, "query dim != store dim");
+        assert!(lo <= hi && hi <= self.n_classes, "class range out of bounds");
         scratch.scores.clear();
         match (prec, enc) {
             (Precision::F32, Encoding::Dense(q)) => {
-                for c in 0..self.n_classes {
+                for c in lo..hi {
                     scratch.scores.push(kernels::dot_f32(q, self.row_f32(c)) + self.biases[c]);
                 }
             }
             (Precision::F32, Encoding::SparseBinary { indices, .. }) => {
-                for c in 0..self.n_classes {
+                for c in lo..hi {
                     let row = self.row_f32(c);
                     let mut acc = 0.0f32;
                     for &i in indices.iter() {
@@ -221,13 +281,13 @@ impl AmStore {
             }
             (Precision::Int8, Encoding::Dense(q)) => {
                 let qscale = quantize_i8(q, &mut scratch.q_i8);
-                for c in 0..self.n_classes {
+                for c in lo..hi {
                     let dot = kernels::dot_i8(&scratch.q_i8, self.row_i8(c));
                     scratch.scores.push(dot as f32 * (qscale * self.scales[c]) + self.biases[c]);
                 }
             }
             (Precision::Int8, Encoding::SparseBinary { indices, .. }) => {
-                for c in 0..self.n_classes {
+                for c in lo..hi {
                     let row = self.row_i8(c);
                     let mut acc = 0i64;
                     for &i in indices.iter() {
@@ -238,14 +298,14 @@ impl AmStore {
             }
             (Precision::Binary, Encoding::Dense(q)) => {
                 pack_signs(q, &mut scratch.qbits);
-                for c in 0..self.n_classes {
+                for c in lo..hi {
                     let h = kernels::hamming_packed(&scratch.qbits, self.row_bits(c));
                     scratch.scores.push(self.d as f32 - 2.0 * h as f32);
                 }
             }
             (Precision::Binary, Encoding::SparseBinary { indices, d }) => {
                 pack_indices(indices, *d, &mut scratch.qbits);
-                for c in 0..self.n_classes {
+                for c in lo..hi {
                     let overlap = kernels::and_popcount(&scratch.qbits, self.row_bits(c));
                     scratch.scores.push(indices.len() as f32 - 2.0 * overlap as f32);
                 }
@@ -253,7 +313,11 @@ impl AmStore {
         }
     }
 
-    /// Best class and its score (ties break to the lowest class index).
+    /// Best class and its score. **Tie-break contract:** the strict `>`
+    /// over the ascending class scan means the *lowest* class id wins on
+    /// equal scores — the same rule [`ShardedAmStore`]'s merge enforces,
+    /// which is what makes sharded results exactly equal. Pinned in
+    /// `tests/am_sharding.rs`.
     pub fn top1(&self, enc: &Encoding, prec: Precision, scratch: &mut AmScratch) -> (u32, f32) {
         self.score_into(enc, prec, scratch);
         let mut best = 0usize;
@@ -267,9 +331,12 @@ impl AmStore {
         (best as u32, best_score)
     }
 
-    /// Top-k classes by score, descending (stable within ties by class
-    /// index), into a caller-reused `out`. O(C·k) insertion — class and
-    /// k counts are small on the serving path.
+    /// Top-k classes by score into a caller-reused `out`. **Tie-break
+    /// contract:** score descending, and among equal scores the lowest
+    /// class id comes first (the `>=` insertion rule over the ascending
+    /// class scan) — the explicit ordering [`ShardedAmStore::topk_into`]'s
+    /// shard merge reproduces, pinned in `tests/am_sharding.rs`. O(C·k)
+    /// insertion — class and k counts are small on the serving path.
     pub fn topk_into(
         &self,
         enc: &Encoding,
@@ -282,15 +349,24 @@ impl AmStore {
         out.clear();
         let k = k.min(self.n_classes).max(1);
         for (c, &s) in scratch.scores.iter().enumerate() {
-            // `>=` keeps earlier classes ahead of later equal scores.
-            let pos = out.partition_point(|&(_, os)| os >= s);
-            if pos < k {
-                if out.len() == k {
-                    out.pop();
-                }
-                out.insert(pos, (c as u32, s));
-            }
+            topk_insert(out, k, c as u32, s);
         }
+    }
+}
+
+/// Insert `(class, s)` into the sorted top-k list `out` (score
+/// descending, class ascending within equal scores — the order falls
+/// out of the `>=` partition point **only when classes are inserted in
+/// ascending class order**, which both the single scan and each shard's
+/// local scan do).
+pub(crate) fn topk_insert(out: &mut Vec<(u32, f32)>, k: usize, class: u32, s: f32) {
+    // `>=` keeps earlier (lower-id) classes ahead of later equal scores.
+    let pos = out.partition_point(|&(_, os)| os >= s);
+    if pos < k {
+        if out.len() == k {
+            out.pop();
+        }
+        out.insert(pos, (class, s));
     }
 }
 
@@ -315,6 +391,22 @@ impl AmBuilder {
         self.counts.len()
     }
 
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Row-major (n_classes × d) running sums — exposed so the
+    /// distributed-build property tests can assert merge bit-identity
+    /// without finishing a store.
+    pub fn sums(&self) -> &[f32] {
+        &self.sums
+    }
+
+    /// Per-class example counts accumulated so far.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
     /// Accumulate one encoded example into its class sum.
     pub fn add(&mut self, class: usize, enc: &Encoding) {
         assert_eq!(enc.dim(), self.d, "encoding dim != builder dim");
@@ -330,7 +422,14 @@ impl AmBuilder {
         self.counts[class] += 1;
     }
 
-    /// Merge another builder's sums (shard-parallel training).
+    /// Merge another builder's sums — **the distributed-build
+    /// contract**: class sums are commutative bundles, so shard-local
+    /// builders over any split of an example stream merge to the same
+    /// prototypes as one builder. Exactly commutative for all floats
+    /// (IEEE addition commutes bit for bit); exactly associative — and
+    /// hence order-free across any N-way merge tree — when the sums are
+    /// integer-valued (e.g. sparse 0/1 encodings) and small enough to be
+    /// exact in f32. Both laws are pinned in `tests/prop_invariants.rs`.
     pub fn merge(&mut self, other: &AmBuilder) {
         assert_eq!(self.d, other.d);
         assert_eq!(self.counts.len(), other.counts.len());

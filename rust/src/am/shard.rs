@@ -1,0 +1,425 @@
+//! Sharded associative-memory scan: partition a read-only [`AmStore`]'s
+//! prototype rows into contiguous class-id ranges and score the ranges
+//! in parallel, merging per-shard candidates into results **exactly
+//! equal** to the single-thread scan.
+//!
+//! # Why sharding cannot change a single result bit
+//!
+//! Every per-class score is one self-contained kernel call over that
+//! class's prototype row plus the (per-scratch, deterministically
+//! staged) query: `dot_f32`'s association order is fixed by the kernel
+//! contract, and the int8/binary kernels are exact integer reductions.
+//! Sharding therefore only partitions *which scratch scores which
+//! class* — never any per-class arithmetic — so the full multiset of
+//! (class, score) pairs is identical to the single scan's. What remains
+//! is ordering, and the merge enforces exactly the single-scan contract:
+//! **score descending, lowest class id first among equal scores.**
+//!
+//! * [`ShardedAmStore::top1`] merges shard winners with a strict `>` in
+//!   ascending shard order. Shard ranges are contiguous and ascending,
+//!   so "first shard attaining the maximum" ≡ "lowest class id attaining
+//!   the maximum" — the same element [`AmStore::top1`]'s strict-`>` scan
+//!   selects.
+//! * [`ShardedAmStore::topk_into`] takes each shard's local top-k (built
+//!   with the same insertion rule as [`AmStore::topk_into`], so each
+//!   list is already (score desc, class asc)-sorted) and k-way merges by
+//!   strict `>` over the shard heads in ascending shard order. Among
+//!   equal scores the lowest shard — hence the lowest class id — wins,
+//!   reproducing the global insertion order element for element.
+//!
+//! `tests/am_sharding.rs` pins this differentially across every
+//! precision × shard count × class count, including ragged last shards,
+//! `k` larger than a shard, and constructed score ties.
+//!
+//! # The scoped scorer pool
+//!
+//! Scoring fans out over at most [`ShardedAmStore::scorers`] scoped
+//! threads (`std::thread::scope`), each scanning a contiguous run of
+//! shards with its own [`AmScratch`] — no shared mutable state, no
+//! locks, join at scope exit. The scorer count never affects results
+//! (it only partitions the shard list). A single-shard store — the
+//! serving default — skips the scope entirely and scores inline, which
+//! keeps the zero-allocation serve window of `tests/alloc_regression.rs`
+//! intact; multi-shard scans pay one scoped spawn per *batch* (the serve
+//! consumer amortizes it via [`ShardedAmStore::top1_batch_into`]), the
+//! right trade once the class scan, not encode, is the bottleneck.
+
+use std::ops::Range;
+use std::thread;
+
+use super::{topk_insert, AmScratch, AmStore, Precision};
+use crate::encoding::Encoding;
+
+/// Default cap on scoped scorer threads (see [`ShardedAmStore::scorers`]).
+const DEFAULT_SCORERS: usize = 8;
+
+/// Reusable sharded-scan scratch: one [`AmScratch`] plus one candidate
+/// staging buffer per shard, and the merge cursors. One per scoring
+/// thread; recycling it keeps the sharded serve loop free of
+/// steady-state allocations (single-shard stores allocate nothing at
+/// all once warm; multi-shard stores allocate only the scoped spawns).
+#[derive(Debug, Default)]
+pub struct ShardScratch {
+    /// Per-shard scoring scratch (disjoint across scorer threads).
+    shards: Vec<AmScratch>,
+    /// Per-shard candidates, global class ids: query-major winners for
+    /// the batch top-1 path, a sorted top-k list for the top-k path.
+    candidates: Vec<Vec<(u32, f32)>>,
+    /// Per-shard read cursors for the k-way top-k merge.
+    cursors: Vec<usize>,
+}
+
+impl ShardScratch {
+    pub fn new() -> ShardScratch {
+        ShardScratch::default()
+    }
+
+    fn ensure(&mut self, n_shards: usize) {
+        while self.shards.len() < n_shards {
+            self.shards.push(AmScratch::new());
+            self.candidates.push(Vec::new());
+        }
+    }
+}
+
+/// A read-only [`AmStore`] partitioned into contiguous class-id ranges
+/// for parallel scanning. Owns the store (no row is copied — shards are
+/// index ranges over the store's row-major arrays) and exposes the same
+/// scoring surface with results exactly equal to the single scan.
+#[derive(Clone, Debug)]
+pub struct ShardedAmStore {
+    store: AmStore,
+    /// Shard boundaries over the class-id space: shard `s` scans classes
+    /// `bounds[s]..bounds[s + 1]`. `bounds[0] == 0`, last == n_classes,
+    /// strictly increasing (every shard is non-empty).
+    bounds: Vec<u32>,
+    /// Scorer-thread cap: scoring fans out over `min(scorers, n_shards)`
+    /// scoped threads, each scanning a contiguous run of shards. Purely
+    /// a parallelism knob — results are independent of it.
+    scorers: usize,
+}
+
+impl ShardedAmStore {
+    /// Partition `store` into `n_shards` contiguous class ranges (as
+    /// even as possible; the first `n_classes % n_shards` shards hold
+    /// one extra class). `n_shards` is clamped to `[1, n_classes]`.
+    pub fn new(store: AmStore, n_shards: usize) -> ShardedAmStore {
+        ShardedAmStore::with_scorers(store, n_shards, DEFAULT_SCORERS)
+    }
+
+    /// [`ShardedAmStore::new`] with an explicit scorer-thread cap
+    /// (clamped to `[1, n_shards]`). The cap partitions shards among
+    /// scoped threads and never affects results.
+    pub fn with_scorers(store: AmStore, n_shards: usize, scorers: usize) -> ShardedAmStore {
+        let n = store.n_classes();
+        let shards = n_shards.clamp(1, n);
+        let base = n / shards;
+        let extra = n % shards;
+        let mut bounds = Vec::with_capacity(shards + 1);
+        bounds.push(0u32);
+        let mut at = 0usize;
+        for s in 0..shards {
+            at += base + usize::from(s < extra);
+            bounds.push(at as u32);
+        }
+        debug_assert_eq!(at, n);
+        ShardedAmStore { store, bounds, scorers: scorers.clamp(1, shards) }
+    }
+
+    /// The underlying single-scan store.
+    pub fn store(&self) -> &AmStore {
+        &self.store
+    }
+
+    /// Unwrap back into the single-scan store.
+    pub fn into_store(self) -> AmStore {
+        self.store
+    }
+
+    pub fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.store.n_classes()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Global class-id range shard `s` owns.
+    pub fn shard_range(&self, s: usize) -> Range<u32> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// Run `scan(lo, hi, scratch, out)` for every shard, fanning the
+    /// shard list out over at most `self.scorers` scoped threads (the
+    /// last chunk runs on the caller). Single-scorer runs stay inline —
+    /// no spawn, no allocation.
+    fn for_each_shard<F>(&self, scratch: &mut ShardScratch, scan: F)
+    where
+        F: Fn(u32, u32, &mut AmScratch, &mut Vec<(u32, f32)>) + Sync,
+    {
+        let shards = self.n_shards();
+        scratch.ensure(shards);
+        let scorers = self.scorers.min(shards);
+        if scorers <= 1 {
+            for s in 0..shards {
+                scan(
+                    self.bounds[s],
+                    self.bounds[s + 1],
+                    &mut scratch.shards[s],
+                    &mut scratch.candidates[s],
+                );
+            }
+            return;
+        }
+        let base = shards / scorers;
+        let extra = shards % scorers;
+        let bounds = &self.bounds;
+        let scan = &scan;
+        thread::scope(|sc| {
+            let mut rest_s = &mut scratch.shards[..shards];
+            let mut rest_c = &mut scratch.candidates[..shards];
+            let mut first = 0usize;
+            for j in 0..scorers {
+                let count = base + usize::from(j < extra);
+                let (chunk_s, tail_s) = rest_s.split_at_mut(count);
+                let (chunk_c, tail_c) = rest_c.split_at_mut(count);
+                rest_s = tail_s;
+                rest_c = tail_c;
+                let lo_shard = first;
+                first += count;
+                let run = move || {
+                    for (i, (sh_scratch, sh_out)) in
+                        chunk_s.iter_mut().zip(chunk_c.iter_mut()).enumerate()
+                    {
+                        let s = lo_shard + i;
+                        scan(bounds[s], bounds[s + 1], sh_scratch, sh_out);
+                    }
+                };
+                if j + 1 == scorers {
+                    run(); // the caller is the last scorer
+                } else {
+                    sc.spawn(run);
+                }
+            }
+        });
+    }
+
+    /// Best class and score for each query in `encs`, written query-major
+    /// into the caller-reused `out` — exactly equal, pair for pair, to
+    /// [`AmStore::top1`] on each query. The serve consumer's hot path:
+    /// one scorer fan-out amortized over the whole micro-batch.
+    pub fn top1_batch_into(
+        &self,
+        encs: &[Encoding],
+        prec: Precision,
+        scratch: &mut ShardScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        out.clear();
+        if encs.is_empty() {
+            return;
+        }
+        let store = &self.store;
+        self.for_each_shard(scratch, |lo, hi, sh, cand| {
+            scan_top1(store, lo, hi, encs, prec, sh, cand)
+        });
+        let shards = self.n_shards();
+        for q in 0..encs.len() {
+            // Strict `>` in ascending shard order: contiguous ascending
+            // ranges make "first shard attaining the max" the lowest
+            // class id attaining it — the single-scan tie-break.
+            let mut best = scratch.candidates[0][q];
+            for s in 1..shards {
+                let c = scratch.candidates[s][q];
+                if c.1 > best.1 {
+                    best = c;
+                }
+            }
+            out.push(best);
+        }
+    }
+
+    /// Best class and its score — exactly equal to [`AmStore::top1`]
+    /// (ties break to the lowest class id).
+    pub fn top1(&self, enc: &Encoding, prec: Precision, scratch: &mut ShardScratch) -> (u32, f32) {
+        let store = &self.store;
+        let encs = std::slice::from_ref(enc);
+        self.for_each_shard(scratch, |lo, hi, sh, cand| {
+            scan_top1(store, lo, hi, encs, prec, sh, cand)
+        });
+        let mut best = scratch.candidates[0][0];
+        for s in 1..self.n_shards() {
+            let c = scratch.candidates[s][0];
+            if c.1 > best.1 {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Top-k classes by score into the caller-reused `out` — exactly
+    /// equal, element for element, to [`AmStore::topk_into`]: score
+    /// descending, lowest class id first among equal scores, `k` clamped
+    /// to `[1, n_classes]`.
+    pub fn topk_into(
+        &self,
+        enc: &Encoding,
+        prec: Precision,
+        k: usize,
+        scratch: &mut ShardScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        let store = &self.store;
+        self.for_each_shard(scratch, |lo, hi, sh, cand| {
+            scan_topk(store, lo, hi, enc, prec, k, sh, cand)
+        });
+        out.clear();
+        let shards = self.n_shards();
+        let k = k.min(self.n_classes()).max(1);
+        let cursors = &mut scratch.cursors;
+        cursors.clear();
+        cursors.resize(shards, 0);
+        // K-way merge over the per-shard sorted lists. Each list is
+        // (score desc, class asc); picking the strictly-greatest head in
+        // ascending shard order keeps equal scores in ascending class
+        // order globally, because shard s's class ids all precede shard
+        // s+1's.
+        while out.len() < k {
+            let mut best_shard = usize::MAX;
+            let mut best_score = 0.0f32;
+            for s in 0..shards {
+                let cand = &scratch.candidates[s];
+                let cur = cursors[s];
+                if cur < cand.len() && (best_shard == usize::MAX || cand[cur].1 > best_score) {
+                    best_shard = s;
+                    best_score = cand[cur].1;
+                }
+            }
+            if best_shard == usize::MAX {
+                break; // fewer than k candidates exist (k was clamped, so only on empty shards)
+            }
+            out.push(scratch.candidates[best_shard][cursors[best_shard]]);
+            cursors[best_shard] += 1;
+        }
+    }
+}
+
+/// Shard-local top-1 for every query, appended query-major with global
+/// class ids: the same strict-`>` ascending scan as [`AmStore::top1`],
+/// restricted to classes `lo..hi`.
+fn scan_top1(
+    store: &AmStore,
+    lo: u32,
+    hi: u32,
+    encs: &[Encoding],
+    prec: Precision,
+    scratch: &mut AmScratch,
+    out: &mut Vec<(u32, f32)>,
+) {
+    out.clear();
+    for enc in encs {
+        store.score_range_into(enc, prec, lo as usize, hi as usize, scratch);
+        let mut best = 0usize;
+        let mut best_score = scratch.scores[0];
+        for (i, &s) in scratch.scores.iter().enumerate().skip(1) {
+            if s > best_score {
+                best = i;
+                best_score = s;
+            }
+        }
+        out.push((lo + best as u32, best_score));
+    }
+}
+
+/// Shard-local top-k with global class ids: the same insertion rule as
+/// [`AmStore::topk_into`] ([`topk_insert`]), restricted to `lo..hi`, so
+/// the list comes out (score desc, class asc)-sorted.
+#[allow(clippy::too_many_arguments)]
+fn scan_topk(
+    store: &AmStore,
+    lo: u32,
+    hi: u32,
+    enc: &Encoding,
+    prec: Precision,
+    k: usize,
+    scratch: &mut AmScratch,
+    out: &mut Vec<(u32, f32)>,
+) {
+    store.score_range_into(enc, prec, lo as usize, hi as usize, scratch);
+    out.clear();
+    let k = k.min((hi - lo) as usize).max(1);
+    for (i, &s) in scratch.scores.iter().enumerate() {
+        topk_insert(out, k, lo + i as u32, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_store(n_classes: usize, d: usize, seed: u64) -> AmStore {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n_classes)
+            .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+            .collect();
+        AmStore::from_prototypes(d, &rows, None)
+    }
+
+    #[test]
+    fn shard_ranges_partition_the_class_space() {
+        let sharded = ShardedAmStore::new(random_store(10, 8, 1), 3);
+        assert_eq!(sharded.n_shards(), 3);
+        // 10 classes over 3 shards: 4 + 3 + 3.
+        assert_eq!(sharded.shard_range(0), 0..4);
+        assert_eq!(sharded.shard_range(1), 4..7);
+        assert_eq!(sharded.shard_range(2), 7..10);
+    }
+
+    #[test]
+    fn shard_count_clamps_to_classes() {
+        let sharded = ShardedAmStore::new(random_store(2, 8, 2), 64);
+        assert_eq!(sharded.n_shards(), 2);
+        let sharded = ShardedAmStore::new(random_store(5, 8, 3), 0);
+        assert_eq!(sharded.n_shards(), 1);
+    }
+
+    #[test]
+    fn sharded_top1_matches_single_scan() {
+        let store = random_store(13, 32, 4);
+        let sharded = ShardedAmStore::new(store.clone(), 4);
+        let mut rng = Rng::new(5);
+        let mut single = AmScratch::new();
+        let mut scratch = ShardScratch::new();
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+            let enc = Encoding::Dense(q);
+            for prec in Precision::ALL {
+                let want = store.top1(&enc, prec, &mut single);
+                let got = sharded.top1(&enc, prec, &mut scratch);
+                assert_eq!(got, want, "{prec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_top1_matches_per_query_top1() {
+        let store = random_store(9, 16, 6);
+        let sharded = ShardedAmStore::with_scorers(store, 5, 2);
+        let mut rng = Rng::new(7);
+        let encs: Vec<Encoding> = (0..6)
+            .map(|_| Encoding::Dense((0..16).map(|_| rng.normal_f32()).collect()))
+            .collect();
+        let mut scratch = ShardScratch::new();
+        let mut out = Vec::new();
+        sharded.top1_batch_into(&encs, Precision::F32, &mut scratch, &mut out);
+        assert_eq!(out.len(), encs.len());
+        for (enc, &got) in encs.iter().zip(&out) {
+            assert_eq!(got, sharded.top1(enc, Precision::F32, &mut scratch));
+        }
+    }
+}

@@ -13,13 +13,19 @@
 //! 3. a **multi-tenant** closed-loop leg: two registry models with
 //!    different dimensionality, seeds and store precisions, clients
 //!    alternating between them through the one shared worker pool
-//!    (model-homogeneous batch cuts; per-model counters printed).
+//!    (model-homogeneous batch cuts; per-model counters printed), then
+//! 4. a **many-class** closed-loop leg: `SHDC_SERVE_CLASSES` (default
+//!    1000) Zipf-skewed classes through a pure-categorical encoder —
+//!    the regime where the AM class scan dominates — scored
+//!    single-shard and through the sharded scan (`am_shards` > 1),
+//!    with per-shard scan counters printed and reconciled.
 //!
 //! ```text
 //! cargo run --release --bin serve_bench
 //! SHDC_SERVE_REQUESTS=200000 SHDC_SERVE_CLIENTS=16 \
 //!     cargo run --release --bin serve_bench
 //! SHDC_SERVE_OPEN_REQUESTS=2000 cargo run --release --bin serve_bench
+//! SHDC_SERVE_CLASSES=100000 cargo run --release --bin serve_bench
 //! ```
 
 use std::time::Duration;
@@ -27,10 +33,11 @@ use std::time::Duration;
 use shdc::am::{AmBuilder, AmStore, Precision};
 use shdc::coordinator::{CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use shdc::data::synthetic::SyntheticConfig;
-use shdc::data::RecordStream;
+use shdc::data::{ManyClassConfig, RecordStream};
 use shdc::encoding::BundleMethod;
 use shdc::serve::{
-    run_closed_loop, run_closed_loop_registry, run_open_loop, AdmissionPolicy, LoadCfg,
+    build_many_class_store, run_closed_loop, run_closed_loop_many_class,
+    run_closed_loop_registry, run_open_loop, AdmissionPolicy, LoadCfg, ManyClassLoadCfg,
     ModelRegistry, OpenLoadCfg, RequestOpts, ServeCfg, TenantQuota,
 };
 use shdc::util::env_u64;
@@ -69,6 +76,7 @@ fn main() {
     let total_requests = env_u64("SHDC_SERVE_REQUESTS", 50_000);
     let max_clients = env_u64("SHDC_SERVE_CLIENTS", 8) as usize;
     let open_requests = env_u64("SHDC_SERVE_OPEN_REQUESTS", 10_000);
+    let n_classes = env_u64("SHDC_SERVE_CLASSES", 1_000) as usize;
 
     let enc = EncoderCfg {
         cat: CatCfg::Bloom { d: 10_000, k: 4 },
@@ -184,5 +192,46 @@ fn main() {
             "    model {:<9} submitted {:>7}  completed {:>7}  p50 {:>9} ns  p99 {:>9} ns",
             m.name, m.submitted, m.completed, m.latency_ns.p50, m.latency_ns.p99,
         );
+    }
+
+    // Many-class: the AM scan dominates once the class count is large,
+    // so this leg uses a small pure-categorical encoder and sweeps the
+    // shard count — shards=1 is the single-thread baseline, shards=4
+    // the sharded scan whose results are bit-identical to it.
+    println!("== serve_bench: many-class closed-loop ({n_classes} classes, Zipf skew, f32) ==");
+    let enc_mc = EncoderCfg {
+        cat: CatCfg::Bloom { d: 2_048, k: 4 },
+        num: NumCfg::None,
+        bundle: BundleMethod::Concat,
+        n_numeric: 0,
+        seed: 41,
+    };
+    let mc_data = ManyClassConfig::classes(n_classes, 42);
+    let mc_clients = max_clients.max(2);
+    let mc_load = ManyClassLoadCfg {
+        clients: mc_clients,
+        requests_per_client: (total_requests / mc_clients as u64).max(1),
+        data: mc_data.clone(),
+    };
+    for shards in [1usize, 4] {
+        let store = build_many_class_store(&enc_mc, &mc_data);
+        let cfg = ServeCfg {
+            am_shards: shards,
+            ..serve_cfg(&enc_mc, mc_clients, Precision::F32)
+        };
+        let report = run_closed_loop_many_class(cfg, store, &mc_load);
+        println!("  shards={shards} {mc_clients:>3} client(s): {}", report.row());
+        for m in &report.serve.models {
+            let scans: u64 = m.shards.iter().map(|s| s.scans).sum();
+            let classes: u64 = m.shards.iter().map(|s| u64::from(s.classes)).sum();
+            assert_eq!(classes as usize, n_classes, "shard partition must cover every class");
+            println!(
+                "    {} shard(s): {} classes, {} scans total ({} per shard-column)",
+                m.shards.len(),
+                classes,
+                scans,
+                m.completed,
+            );
+        }
     }
 }

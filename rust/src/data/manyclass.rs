@@ -1,0 +1,272 @@
+//! Many-class synthetic workload with Zipf class skew.
+//!
+//! The HDC classification literature (Ge & Parhi review) is dominated
+//! by many-class setups — the regime where the AM class scan, not
+//! encode, is the serving bottleneck. This generator plants `C` classes
+//! (1k–100k is the intended range) and emits records whose class is
+//! Zipf-distributed (a few head classes dominate, a long tail is rare —
+//! the shape real traffic has):
+//!
+//! * every class owns a small set of **deterministic class-keyed
+//!   symbols** (disjoint across classes, disjoint from the noise
+//!   alphabet), so a record's class is recoverable from its symbols;
+//! * each record additionally draws random **noise symbols** from a
+//!   shared alphabet, so classification is non-trivial;
+//! * [`ManyClassConfig::class_record`] returns the canonical noise-free
+//!   record of a class — bundling these through an encoder +
+//!   [`crate::am::AmBuilder`] builds a store covering all `C` classes.
+//!
+//! [`Record::label`] is a `bool`, so it cannot carry a class id; the
+//! stream exposes the drawn class out-of-band via
+//! [`ManyClassStream::next_with_class`] (tests and benches that need
+//! ground truth use it), and the label carries `class % 2 == 1` so
+//! label-only consumers still see a deterministic signal.
+
+use super::{Record, RecordStream};
+use crate::util::rng::{mix64, Rng, Zipf};
+
+#[derive(Clone, Debug)]
+pub struct ManyClassConfig {
+    /// Number of planted classes `C` (1k–100k intended).
+    pub n_classes: usize,
+    /// Zipf exponent of the class-popularity skew (rank 0 hottest).
+    pub zipf_alpha: f64,
+    /// Class-keyed symbols per record (the class signal).
+    pub class_symbols: usize,
+    /// Random shared-alphabet symbols per record (the noise).
+    pub noise_symbols: usize,
+    /// Shared noise-alphabet size; class-keyed symbol ids live *above*
+    /// this range, so noise can never alias a class signal.
+    pub alphabet: u64,
+    /// Numeric features per record (0 for the pure-categorical
+    /// workload; positive values draw standard gaussians).
+    pub n_numeric: usize,
+    /// Seed of the planted classes and the Zipf skew.
+    pub seed: u64,
+    /// Salt for the record-sampling RNG only: same `seed`, different
+    /// salts = independent draws from the SAME planted classes (how
+    /// per-client bench streams and train/test splits are made).
+    pub stream_salt: u64,
+}
+
+impl Default for ManyClassConfig {
+    fn default() -> Self {
+        ManyClassConfig {
+            n_classes: 1000,
+            zipf_alpha: 1.1,
+            class_symbols: 8,
+            noise_symbols: 4,
+            alphabet: 1_000_000,
+            n_numeric: 0,
+            seed: 0,
+            stream_salt: 0,
+        }
+    }
+}
+
+impl ManyClassConfig {
+    /// A `C`-class workload with the default shape.
+    pub fn classes(n_classes: usize, seed: u64) -> Self {
+        assert!(n_classes > 0);
+        ManyClassConfig { n_classes, seed, ..Default::default() }
+    }
+
+    /// Deterministic symbol `j` of class `class` — the ids are offset
+    /// above the noise alphabet and keyed by (seed, class, j), identical
+    /// across every stream over this config.
+    #[inline]
+    pub fn class_symbol(&self, class: u32, j: usize) -> u64 {
+        debug_assert!((class as usize) < self.n_classes && j < self.class_symbols);
+        // Disjoint per-class blocks above the noise range; the mix only
+        // decorrelates ids for hash-based encoders, injectively per
+        // block (it perturbs ids within a 2^16 window smaller than the
+        // 2^20 block stride).
+        let base = self.alphabet + (class as u64) * CLASS_BLOCK + j as u64;
+        base + (mix64(self.seed ^ CLASS_SYM_KEY ^ (class as u64 * 131 + j as u64)) & 0xffff)
+    }
+
+    /// The canonical noise-free record of `class`: its class-keyed
+    /// symbols, zeroed numerics, the parity label. Encoding these per
+    /// class is how many-class stores are built (perf snapshot,
+    /// serve_bench, the serve determinism test).
+    pub fn class_record(&self, class: u32) -> Record {
+        let symbols = (0..self.class_symbols).map(|j| self.class_symbol(class, j)).collect();
+        Record { numeric: vec![0.0; self.n_numeric], symbols, label: class % 2 == 1 }
+    }
+}
+
+/// Per-class id stride for class-keyed symbols (must exceed
+/// `class_symbols + 2^16`, the mix window).
+const CLASS_BLOCK: u64 = 1 << 20;
+/// Namespacing key for class-symbol hashing.
+const CLASS_SYM_KEY: u64 = 0x9c1a_55e5_11a6_00e5;
+
+#[derive(Clone)]
+pub struct ManyClassStream {
+    cfg: ManyClassConfig,
+    rng: Rng,
+    zipf: Zipf,
+    records_emitted: u64,
+}
+
+impl ManyClassStream {
+    pub fn new(cfg: ManyClassConfig) -> Self {
+        assert!(cfg.n_classes > 0);
+        let zipf = Zipf::new(cfg.n_classes as u64, cfg.zipf_alpha);
+        let rng = Rng::new(cfg.seed ^ mix64(cfg.stream_salt ^ 0x3c1a_55e5));
+        ManyClassStream { cfg, rng, zipf, records_emitted: 0 }
+    }
+
+    /// Overwrite `rec` with the next record and return its class. RNG
+    /// consumption order is fixed (class draw, numerics, noise symbols),
+    /// so every entry point — [`ManyClassStream::next_with_class`],
+    /// [`RecordStream::next_record`], the in-place refill — produces the
+    /// identical stream. Allocation-free once the record's buffers have
+    /// grown to the schema width.
+    fn fill_record_in_place(&mut self, rec: &mut Record) -> u32 {
+        let class = self.zipf.sample(&mut self.rng) as u32;
+        rec.numeric.clear();
+        for _ in 0..self.cfg.n_numeric {
+            let v = self.rng.normal_f32();
+            rec.numeric.push(v);
+        }
+        rec.symbols.clear();
+        for j in 0..self.cfg.class_symbols {
+            rec.symbols.push(self.cfg.class_symbol(class, j));
+        }
+        for _ in 0..self.cfg.noise_symbols {
+            let s = self.rng.below(self.cfg.alphabet);
+            rec.symbols.push(s);
+        }
+        rec.label = class % 2 == 1;
+        self.records_emitted += 1;
+        class
+    }
+
+    /// The next record plus its ground-truth class (the label can only
+    /// carry parity).
+    pub fn next_with_class(&mut self) -> (Record, u32) {
+        let mut rec = Record { numeric: Vec::new(), symbols: Vec::new(), label: false };
+        let class = self.fill_record_in_place(&mut rec);
+        (rec, class)
+    }
+
+    /// In-place variant of [`ManyClassStream::next_with_class`].
+    pub fn refill_with_class(&mut self, rec: &mut Record) -> u32 {
+        self.fill_record_in_place(rec)
+    }
+
+    /// Number of records generated so far.
+    pub fn emitted(&self) -> u64 {
+        self.records_emitted
+    }
+
+    pub fn config(&self) -> &ManyClassConfig {
+        &self.cfg
+    }
+}
+
+impl RecordStream for ManyClassStream {
+    fn next_record(&mut self) -> Option<Record> {
+        let mut rec = Record { numeric: Vec::new(), symbols: Vec::new(), label: false };
+        self.fill_record_in_place(&mut rec);
+        Some(rec)
+    }
+
+    /// In-place refill: the stream is unbounded, so this always
+    /// succeeds and never allocates once the buffers are warm.
+    fn refill_record(&mut self, rec: &mut Record) -> bool {
+        self.fill_record_in_place(rec);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = ManyClassStream::new(ManyClassConfig::classes(500, 7));
+        let mut b = ManyClassStream::new(ManyClassConfig::classes(500, 7));
+        for i in 0..50 {
+            let (ra, ca) = a.next_with_class();
+            let (rb, cb) = b.next_with_class();
+            assert_eq!((ra, ca), (rb, cb), "record {i}");
+        }
+    }
+
+    #[test]
+    fn refill_matches_next_record() {
+        let mut a = ManyClassStream::new(ManyClassConfig::classes(100, 9));
+        let mut b = ManyClassStream::new(ManyClassConfig::classes(100, 9));
+        let mut rec = Record { numeric: vec![0.5; 2], symbols: vec![1, 2, 3], label: true };
+        for i in 0..50 {
+            let want = a.next_record().unwrap();
+            assert!(b.refill_record(&mut rec));
+            assert_eq!(rec, want, "record {i}");
+        }
+        assert_eq!(a.emitted(), b.emitted());
+    }
+
+    #[test]
+    fn class_symbols_disjoint_from_noise_and_each_other() {
+        let cfg = ManyClassConfig::classes(200, 3);
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..200u32 {
+            for j in 0..cfg.class_symbols {
+                let s = cfg.class_symbol(c, j);
+                assert!(s >= cfg.alphabet, "class symbol {s} inside noise alphabet");
+                assert!(seen.insert(s), "class symbol {s} collides (class {c} j {j})");
+            }
+        }
+    }
+
+    #[test]
+    fn record_symbols_start_with_class_signal() {
+        let cfg = ManyClassConfig::classes(50, 4);
+        let mut s = ManyClassStream::new(cfg.clone());
+        for _ in 0..100 {
+            let (rec, class) = s.next_with_class();
+            assert_eq!(rec.symbols.len(), cfg.class_symbols + cfg.noise_symbols);
+            assert_eq!(rec.label, class % 2 == 1);
+            let canon = cfg.class_record(class);
+            assert_eq!(&rec.symbols[..cfg.class_symbols], &canon.symbols[..]);
+            for &n in &rec.symbols[cfg.class_symbols..] {
+                assert!(n < cfg.alphabet, "noise symbol {n} outside noise alphabet");
+            }
+        }
+    }
+
+    #[test]
+    fn class_skew_is_head_heavy() {
+        let mut s = ManyClassStream::new(ManyClassConfig::classes(1000, 5));
+        let mut head = 0usize;
+        const N: usize = 5000;
+        for _ in 0..N {
+            let (_, class) = s.next_with_class();
+            if class < 10 {
+                head += 1;
+            }
+        }
+        // Zipf(1.1) puts far more than uniform's 1% on the 10 head ranks.
+        assert!(head as f64 / N as f64 > 0.2, "head frac {}", head as f64 / N as f64);
+    }
+
+    #[test]
+    fn salted_streams_share_planted_classes() {
+        let cfg = ManyClassConfig::classes(100, 6);
+        let salted = ManyClassConfig { stream_salt: 1, ..cfg.clone() };
+        let mut a = ManyClassStream::new(cfg.clone());
+        let mut b = ManyClassStream::new(salted);
+        let (ra, ca) = a.next_with_class();
+        let (rb, cb) = b.next_with_class();
+        // Different sample paths...
+        assert!(ra != rb || ca != cb);
+        // ...same planted class symbols.
+        for c in [0u32, 17, 99] {
+            assert_eq!(a.config().class_record(c), b.config().class_record(c));
+            assert_eq!(cfg.class_record(c).symbols.len(), cfg.class_symbols);
+        }
+    }
+}

@@ -1,10 +1,14 @@
 //! Data layer: the record model, the synthetic Criteo-like planted-model
 //! stream (our substitution for the proprietary Criteo datasets — see
-//! DESIGN.md §3), and a TSV reader for real Criteo-format data.
+//! DESIGN.md §3), the many-class Zipf-skewed classification workload
+//! (the sharded-AM serving regime), and a TSV reader for real
+//! Criteo-format data.
 
+pub mod manyclass;
 pub mod synthetic;
 pub mod tsv;
 
+pub use manyclass::{ManyClassConfig, ManyClassStream};
 pub use synthetic::{SyntheticConfig, SyntheticStream};
 pub use tsv::TsvReader;
 

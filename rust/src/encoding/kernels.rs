@@ -467,19 +467,32 @@ pub mod simd {
         super::fold_lanes(acc.to_array()) + tail
     }
 
-    /// See [`super::scalar::dot_i8`]. Products are computed widened to
-    /// i32 lanes (127·127 cannot overflow), accumulated in i64 lanes and
-    /// reduced at the end — integer arithmetic, so any association order
-    /// gives the exact scalar result.
+    /// See [`super::scalar::dot_i8`]. i16-multiply widening dot: a
+    /// 16-element block is two 8-lane i8 chunks widened to i16, where
+    /// every lane product is exact (`|x·y| ≤ 128² = 16384 < 2^15`); the
+    /// pair of products then widens to i32 *before* summing — the pair
+    /// sum can reach `2·(−128)² = 32768`, one past `i16::MAX`, so it
+    /// must not be taken in i16 — and accumulates into i64. Keeping the
+    /// multiplies in i16 halves the widening work per block, which is
+    /// what makes the int8 scan pull ahead of f32 at many-class scale.
+    /// Integer arithmetic throughout, so any association order gives
+    /// the exact scalar result (pinned in `tests/kernel_equivalence.rs`
+    /// across the full i8 range, including ±127 and `i8::MIN`
+    /// worst-case magnitudes).
     #[inline]
     pub fn dot_i8(a: &[i8], b: &[i8]) -> i64 {
         debug_assert_eq!(a.len(), b.len());
-        let mut acc = Simd::<i64, LANES>::splat(0);
-        let mut ac = a.chunks_exact(LANES);
-        let mut bc = b.chunks_exact(LANES);
+        const BLOCK: usize = 16;
+        let mut acc = Simd::<i64, 8>::splat(0);
+        let mut ac = a.chunks_exact(BLOCK);
+        let mut bc = b.chunks_exact(BLOCK);
         for (av, bv) in ac.by_ref().zip(bc.by_ref()) {
-            let prod = I8s::from_slice(av).cast::<i32>() * I8s::from_slice(bv).cast::<i32>();
-            acc += prod.cast::<i64>();
+            let a0 = Simd::<i8, 8>::from_slice(&av[..8]).cast::<i16>();
+            let a1 = Simd::<i8, 8>::from_slice(&av[8..]).cast::<i16>();
+            let b0 = Simd::<i8, 8>::from_slice(&bv[..8]).cast::<i16>();
+            let b1 = Simd::<i8, 8>::from_slice(&bv[8..]).cast::<i16>();
+            let pair = (a0 * b0).cast::<i32>() + (a1 * b1).cast::<i32>();
+            acc += pair.cast::<i64>();
         }
         let mut tail = 0i64;
         for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {

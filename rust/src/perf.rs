@@ -30,10 +30,14 @@
 //! ([`crate::serve::bench::run_open_loop`]) at ~2× the measured f32
 //! closed-loop capacity with `Shed` admission and a 50 ms deadline, so
 //! the snapshot pins saturation behavior (shed rate, expired count)
-//! next to the in-capacity latency medians, and one **multi-tenant**
+//! next to the in-capacity latency medians, one **multi-tenant**
 //! closed-loop run ([`crate::serve::bench::run_closed_loop_registry`])
 //! interleaving two registry models of different dimensionality and
-//! precision through the shared pool (per-model counters, `model_cuts`).
+//! precision through the shared pool (per-model counters, `model_cuts`),
+//! and the **many-class** rows
+//! ([`crate::serve::bench::run_closed_loop_many_class`]): a 1k-class
+//! Zipf-skewed tenant scored single-shard and through the sharded AM
+//! scan, with per-shard scan stats in each report's `models[].shards`.
 //!
 //! Knobs: `BENCH_MS` (per-measurement budget, default 300),
 //! `SHDC_BENCH_RECORDS` (pipeline-scaling record budget, default 60000),
@@ -47,7 +51,7 @@ use std::time::{Duration, Instant};
 use crate::am::{AmBuilder, AmStore, Precision};
 use crate::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use crate::data::synthetic::SyntheticConfig;
-use crate::data::{Record, RecordStream, SyntheticStream};
+use crate::data::{ManyClassConfig, Record, RecordStream, SyntheticStream};
 use crate::encoding::kernels;
 use crate::encoding::{
     BloomEncoder, BundleMethod, CategoricalEncoder, CodebookEncoder, DenseHashEncoder,
@@ -207,15 +211,20 @@ fn serve_scenario(precision: Precision, requests: u64) -> (Json, f64) {
 /// store) — under identical closed-loop load, then one open-loop
 /// overload scenario at ~2× the f32 closed-loop capacity (shed
 /// admission + 50 ms deadline) so the snapshot records saturation
-/// behavior, and finally one **multi-tenant** closed-loop run: two
-/// registry models with different dimensionality, seeds and store
-/// precisions interleaved through the one shared worker pool, pinning
-/// the cost of model-homogeneous batch cuts (`model_cuts`) and the
-/// per-model counter section next to the single-tenant rows.
+/// behavior, one **multi-tenant** closed-loop run: two registry models
+/// with different dimensionality, seeds and store precisions
+/// interleaved through the one shared worker pool, pinning the cost of
+/// model-homogeneous batch cuts (`model_cuts`) and the per-model
+/// counter section next to the single-tenant rows — and finally the
+/// **many-class** rows: a 1k-class Zipf-skewed tenant (the regime where
+/// the AM class scan, not encode, dominates) scored single-shard, then
+/// through the sharded scan (`am_shards` > 1, f32 and the
+/// i16-accumulation int8 dot), with per-shard scan stats in the JSON.
 fn serve_scenarios(requests: u64) -> Vec<Json> {
     use crate::serve::{
-        run_closed_loop_registry, run_open_loop, AdmissionPolicy, LoadCfg, ModelRegistry,
-        OpenLoadCfg, RequestOpts, TenantQuota,
+        build_many_class_store, run_closed_loop_many_class, run_closed_loop_registry,
+        run_open_loop, AdmissionPolicy, LoadCfg, ManyClassLoadCfg, ModelRegistry, OpenLoadCfg,
+        RequestOpts, TenantQuota,
     };
     let mut f32_rps = 0.0f64;
     let mut out: Vec<Json> = Vec::new();
@@ -289,6 +298,46 @@ fn serve_scenarios(requests: u64) -> Vec<Json> {
         ("clients", Json::num(clients as f64)),
         ("report", report.to_json()),
     ]));
+
+    // Many-class: 1k Zipf-skewed classes through a pure-categorical
+    // Bloom encoder — the regime where the AM scan dominates encode.
+    // One single-shard baseline row, then the sharded scan at f32 and
+    // int8 (the i16-accumulation widening dot is what makes the int8
+    // row competitive at this class count). Each report carries the
+    // per-shard scan stats via `models[].shards`.
+    let enc_mc = EncoderCfg {
+        cat: CatCfg::Bloom { d: 2_048, k: 4 },
+        num: NumCfg::None,
+        bundle: BundleMethod::Concat,
+        n_numeric: 0,
+        seed: 37,
+    };
+    let data = ManyClassConfig::classes(1_000, 38);
+    let clients = 8usize;
+    let mc_requests = (requests / 2).max(clients as u64);
+    let load = ManyClassLoadCfg {
+        clients,
+        requests_per_client: (mc_requests / clients as u64).max(1),
+        data: data.clone(),
+    };
+    for (shards, precision) in [(1usize, Precision::F32), (8, Precision::F32), (8, Precision::Int8)]
+    {
+        let store = build_many_class_store(&enc_mc, &data);
+        let cfg = crate::serve::ServeCfg {
+            am_shards: shards,
+            ..serve_cfg(enc_mc.clone(), precision)
+        };
+        let report = run_closed_loop_many_class(cfg, store, &load);
+        println!("  serve 1k-class {:<5} shards={shards} {}", precision.name(), report.row());
+        out.push(Json::obj(vec![
+            ("precision", Json::str(precision.name())),
+            ("scenario", Json::str("manyclass")),
+            ("classes", Json::num(data.n_classes as f64)),
+            ("am_shards", Json::num(shards as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("report", report.to_json()),
+        ]));
+    }
     out
 }
 

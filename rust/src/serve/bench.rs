@@ -23,10 +23,11 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::am::AmStore;
-use crate::coordinator::StatsSnapshot;
+use crate::am::{AmBuilder, AmStore};
+use crate::coordinator::{EncoderCfg, StatsSnapshot};
+use crate::data::manyclass::ManyClassConfig;
 use crate::data::synthetic::SyntheticConfig;
-use crate::data::{RecordStream, SyntheticStream};
+use crate::data::{ManyClassStream, RecordStream, SyntheticStream};
 use crate::serve::{
     HistSnapshot, ModelId, ModelRegistry, RequestOpts, ServeCfg, ServeError, ServeHandle,
     ServeSnapshot, Server,
@@ -89,6 +90,20 @@ fn models_json(serve: &ServeSnapshot) -> Json {
                     ("expired", Json::num(m.expired as f64)),
                     ("failed", Json::num(m.failed as f64)),
                     ("latency_ns", hist_json(&m.latency_ns)),
+                    (
+                        "shards",
+                        Json::Arr(
+                            m.shards
+                                .iter()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("classes", Json::num(s.classes as f64)),
+                                        ("scans", Json::num(s.scans as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ])
             })
             .collect(),
@@ -199,6 +214,16 @@ fn drive_closed_loop(server: Server, handle: ServeHandle, load: &LoadCfg) -> Ser
     for c in clients {
         c.join().expect("client thread");
     }
+    finish_closed_loop(server_thread, handle, total, t0)
+}
+
+/// Shared closed-loop epilogue: drain, join, reconcile, report.
+fn finish_closed_loop(
+    server_thread: thread::JoinHandle<Arc<crate::coordinator::PipelineStats>>,
+    handle: ServeHandle,
+    total: u64,
+    t0: Instant,
+) -> ServeBenchReport {
     let wall = t0.elapsed();
     handle.shutdown();
     let pipeline: Arc<_> = server_thread.join().expect("server thread");
@@ -211,6 +236,73 @@ fn drive_closed_loop(server: Server, handle: ServeHandle, load: &LoadCfg) -> Ser
         serve,
         pipeline: pipeline.snapshot(),
     }
+}
+
+/// Closed-loop load over the many-class Zipf workload
+/// ([`crate::data::manyclass`]) — the sharded-AM-scan regime, where the
+/// class scan rather than encode dominates per-request cost.
+#[derive(Clone, Debug)]
+pub struct ManyClassLoadCfg {
+    /// Concurrent closed-loop client threads.
+    pub clients: usize,
+    /// Requests each client issues.
+    pub requests_per_client: u64,
+    /// The many-class record distribution (each client salts its own
+    /// stream; all clients share the planted classes).
+    pub data: ManyClassConfig,
+}
+
+/// Build the C-class AM store for a many-class workload: encode each
+/// class's canonical noise-free record
+/// ([`ManyClassConfig::class_record`]) and bundle it — one example per
+/// class, the degenerate (and exactly reproducible) case of the HDC
+/// bundling rule. Shared by `serve_bench`, the perf snapshot, and the
+/// serve determinism test, so every consumer scores against the
+/// identical prototypes.
+pub fn build_many_class_store(enc: &EncoderCfg, data: &ManyClassConfig) -> AmStore {
+    let mut encoder = enc.build();
+    let mut builder = AmBuilder::new(enc.out_dim(), data.n_classes);
+    for c in 0..data.n_classes {
+        let code = encoder.encode(&data.class_record(c as u32));
+        builder.add(c, &code);
+    }
+    builder.finish(false)
+}
+
+/// Run a closed-loop load test over the many-class workload against a
+/// freshly started single-tenant server (score the store built by
+/// [`build_many_class_store`]; set [`ServeCfg::am_shards`] to exercise
+/// the sharded scan). Returns after every client finishes.
+pub fn run_closed_loop_many_class(
+    cfg: ServeCfg,
+    store: AmStore,
+    load: &ManyClassLoadCfg,
+) -> ServeBenchReport {
+    let (server, handle) = Server::new(cfg, store);
+    let server_thread = thread::spawn(move || server.run());
+    let total = load.clients as u64 * load.requests_per_client;
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..load.clients)
+        .map(|c| {
+            let h = handle.clone();
+            let mut data = load.data.clone();
+            data.stream_salt ^= 0xc1a5 ^ ((c as u64) << 32);
+            let per = load.requests_per_client;
+            thread::spawn(move || {
+                let mut stream = ManyClassStream::new(data);
+                let mut rec = stream.next_record().expect("unbounded stream");
+                for _ in 0..per {
+                    let resp = h.classify(rec).expect("serve rejected mid-load");
+                    rec = resp.record;
+                    stream.refill_record(&mut rec);
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    finish_closed_loop(server_thread, handle, total, t0)
 }
 
 /// Open-loop (fixed arrival rate) load configuration.
@@ -507,6 +599,36 @@ mod tests {
         // Client-side tallies must agree with the server's counters.
         assert_eq!(report.shed + report.timed_out,
             report.serve.shed + report.serve.admission_timeouts);
+        let s = report.to_json().pretty();
+        assert!(crate::util::json::Json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn many_class_closed_loop_reconciles_shard_scans() {
+        let enc = EncoderCfg {
+            cat: CatCfg::Bloom { d: 512, k: 2 },
+            num: NumCfg::None,
+            bundle: BundleMethod::Concat,
+            n_numeric: 0,
+            seed: 51,
+        };
+        let data = ManyClassConfig::classes(200, 52);
+        let store = build_many_class_store(&enc, &data);
+        assert_eq!(store.n_classes(), 200);
+        let cfg = ServeCfg {
+            coordinator: CoordinatorCfg { batch_size: 8, n_workers: 2, ..Default::default() },
+            am_shards: 4,
+            ..ServeCfg::new(enc)
+        };
+        let load = ManyClassLoadCfg { clients: 3, requests_per_client: 40, data };
+        let report = run_closed_loop_many_class(cfg, store, &load);
+        assert_eq!(report.serve.completed, 120);
+        let shards = &report.serve.models[0].shards;
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards.iter().map(|s| s.classes as usize).sum::<usize>(), 200);
+        for sh in shards {
+            assert_eq!(sh.scans, 120, "every scored request scans every shard");
+        }
         let s = report.to_json().pretty();
         assert!(crate::util::json::Json::parse(&s).is_ok());
     }

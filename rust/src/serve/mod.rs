@@ -17,7 +17,8 @@
 //!     │                               (the zero-alloc encode path)
 //!     │                                          │ EncodedBatch, in order
 //!     │        completion slots                  ▼
-//!     └──── (preallocated, recycled) ◄── consumer: AmStore::top1
+//!     └──── (preallocated, recycled) ◄── consumer: sharded AM scan
+//!                                        (ShardedAmStore::top1_batch_into)
 //!                                        latency/queue-depth stats
 //! ```
 //!
@@ -128,13 +129,30 @@
 //! tenants keep their latency (the fairness test in
 //! `tests/serve_smoke.rs` pins this). Per-model counters and latency
 //! histograms surface in [`ServeSnapshot::models`].
+//!
+//! # Many-class scoring: the sharded AM scan
+//!
+//! Each tenant's store is held as a [`ShardedAmStore`]
+//! ([`ServeCfg::am_shards`], default 1 — a plain inline scan). For
+//! many-class tenants (the Zipf-skewed workload in
+//! [`crate::data::manyclass`]) the consumer's linear class scan, not
+//! encode, is the serving bottleneck; with `am_shards > 1` the consumer
+//! scores each model-homogeneous batch with one scoped scorer fan-out
+//! over the shard ranges ([`ShardedAmStore::top1_batch_into`] — results
+//! exactly equal to the single scan, see [`crate::am::shard`]) and
+//! tallies one scan per request per shard into
+//! [`ModelSnapshot::shards`], so per-shard scan counts reconcile with
+//! the model's completed-minus-failed arithmetic. The single-shard
+//! default keeps the consumer's zero steady-state allocations
+//! (`tests/alloc_regression.rs`); sharded scoring pays scoped spawns
+//! per batch by design.
 
 pub mod bench;
 pub mod latency;
 
 pub use bench::{
-    run_closed_loop, run_closed_loop_registry, run_open_loop, LoadCfg, OpenLoadCfg, OpenLoopReport,
-    ServeBenchReport,
+    build_many_class_store, run_closed_loop, run_closed_loop_many_class, run_closed_loop_registry,
+    run_open_loop, LoadCfg, ManyClassLoadCfg, OpenLoadCfg, OpenLoopReport, ServeBenchReport,
 };
 pub use latency::{HistSnapshot, Histogram};
 
@@ -144,7 +162,7 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::am::{AmScratch, AmStore, Precision};
+use crate::am::{AmScratch, AmStore, Precision, ShardScratch, ShardedAmStore};
 use crate::coordinator::{run_pipeline_multi, CoordinatorCfg, EncoderCfg, PipelineStats};
 use crate::data::{Record, RecordStream};
 use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
@@ -200,13 +218,15 @@ pub struct TenantQuota {
     pub rate: Option<RateLimit>,
 }
 
-/// One registered tenant: its encoder seeds, its class store, the
-/// precision scoring reads, and its admission quota.
+/// One registered tenant: its encoder seeds, its class store (held
+/// sharded; a fresh registration starts at one shard and
+/// [`Server::with_registry`] re-partitions to [`ServeCfg::am_shards`]),
+/// the precision scoring reads, and its admission quota.
 #[derive(Clone, Debug)]
 struct ModelEntry {
     name: String,
     encoder: EncoderCfg,
-    store: AmStore,
+    store: ShardedAmStore,
     precision: Precision,
     quota: TenantQuota,
 }
@@ -246,7 +266,7 @@ impl ModelRegistry {
         self.models.push(ModelEntry {
             name: name.to_string(),
             encoder,
-            store,
+            store: ShardedAmStore::new(store, 1),
             precision,
             quota,
         });
@@ -297,6 +317,13 @@ pub struct ServeCfg {
     pub slots: usize,
     /// Which prototype representation scoring reads.
     pub precision: Precision,
+    /// How many contiguous class-range shards each tenant's store is
+    /// partitioned into for consumer scoring (clamped per model to its
+    /// class count). 1 — the default — scans inline with zero
+    /// steady-state allocations; raise it for many-class tenants, where
+    /// the scan fans out over a scoped scorer pool with results exactly
+    /// equal to the single scan (see [`crate::am::shard`]).
+    pub am_shards: usize,
     /// Server-wide admission policy; overridable per request via
     /// [`RequestOpts::admission`].
     pub admission: AdmissionPolicy,
@@ -319,6 +346,7 @@ impl ServeCfg {
             queue_cap: 256,
             slots: 128,
             precision: Precision::F32,
+            am_shards: 1,
             admission: AdmissionPolicy::Block,
             default_deadline: None,
         }
@@ -458,6 +486,19 @@ struct ModelStats {
     latency_ns: Histogram,
 }
 
+/// Per-shard scan statistics of one model's [`ShardedAmStore`]
+/// ([`ModelSnapshot::shards`], in shard order). Every successfully
+/// scored request scans *every* shard (the scan partitions classes, not
+/// queries), so each shard's `scans` equals the model's scored-request
+/// count — the reconciliation `tests/serve_smoke.rs` pins.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardScanSnapshot {
+    /// How many classes this shard's contiguous range holds.
+    pub classes: u32,
+    /// Requests scored against this shard.
+    pub scans: u64,
+}
+
 /// Point-in-time per-model statistics ([`ServeSnapshot::models`], in
 /// [`ModelId`] order).
 #[derive(Clone, Debug)]
@@ -477,6 +518,9 @@ pub struct ModelSnapshot {
     /// caps).
     pub in_flight: u64,
     pub latency_ns: HistSnapshot,
+    /// Per-shard scan stats of this model's sharded AM store, in shard
+    /// order (one entry even at the single-shard default).
+    pub shards: Vec<ShardScanSnapshot>,
 }
 
 /// Point-in-time serve statistics. (No longer `Copy`: it carries the
@@ -633,6 +677,12 @@ struct ModelRuntime {
     /// Token bucket from [`TenantQuota::rate`].
     bucket: Option<Mutex<TokenBucket>>,
     stats: ModelStats,
+    /// Class count per shard of this model's [`ShardedAmStore`], fixed
+    /// at server construction (shard order).
+    shard_classes: Vec<u32>,
+    /// Requests scored against each shard (shard order); bumped by the
+    /// consumer once per request per shard.
+    shard_scans: Vec<AtomicU64>,
 }
 
 impl ModelRuntime {
@@ -648,6 +698,15 @@ impl ModelRuntime {
             failed: self.stats.failed.load(Ordering::Relaxed),
             in_flight: self.in_flight.load(Ordering::Relaxed),
             latency_ns: self.stats.latency_ns.snapshot(),
+            shards: self
+                .shard_classes
+                .iter()
+                .zip(&self.shard_scans)
+                .map(|(&classes, scans)| ShardScanSnapshot {
+                    classes,
+                    scans: scans.load(Ordering::Relaxed),
+                })
+                .collect(),
         }
     }
 }
@@ -1212,9 +1271,23 @@ impl Server {
     /// constructor). Everything else in `cfg` — batching, queue and
     /// slot capacities, admission policy, deadlines — applies
     /// server-wide.
-    pub fn with_registry(cfg: ServeCfg, registry: ModelRegistry) -> (Server, ServeHandle) {
+    pub fn with_registry(cfg: ServeCfg, mut registry: ModelRegistry) -> (Server, ServeHandle) {
         assert!(!registry.is_empty(), "a server needs at least one registered model");
         let slots = cfg.slots.max(1);
+        // Re-partition every tenant's store to the configured shard
+        // count (registration starts at 1; the per-model clamp to the
+        // class count lives in ShardedAmStore::new).
+        let shards = cfg.am_shards.max(1);
+        if shards > 1 {
+            registry.models = registry
+                .models
+                .into_iter()
+                .map(|mut m| {
+                    m.store = ShardedAmStore::new(m.store.into_store(), shards);
+                    m
+                })
+                .collect();
+        }
         let models = registry
             .models
             .iter()
@@ -1228,6 +1301,13 @@ impl Server {
                 in_flight: AtomicU64::new(0),
                 bucket: m.quota.rate.map(|r| Mutex::new(TokenBucket::new(r))),
                 stats: ModelStats::default(),
+                shard_classes: (0..m.store.n_shards())
+                    .map(|s| {
+                        let r = m.store.shard_range(s);
+                        r.end - r.start
+                    })
+                    .collect(),
+                shard_scans: (0..m.store.n_shards()).map(|_| AtomicU64::new(0)).collect(),
             })
             .collect();
         let shared = Arc::new(Shared {
@@ -1290,10 +1370,12 @@ impl Server {
         // batch to its tenant's store by `EncodedBatch::model`.
         let encoder_cfgs: Vec<EncoderCfg> =
             registry.models.iter().map(|m| m.encoder.clone()).collect();
-        let mut scratch = AmScratch::new();
+        let mut scratch = ShardScratch::new();
+        let mut top1s: Vec<(u32, f32)> = Vec::new();
         let stats = run_pipeline_multi(stream, &encoder_cfgs, &coord, |batch| {
             let entry = &registry.models[batch.model as usize];
-            let mstats = &shared.models[batch.model as usize].stats;
+            let runtime = &shared.models[batch.model as usize];
+            let mstats = &runtime.stats;
             if batch.failed {
                 // The encode worker panicked on this batch (and was
                 // respawned in place). `labels` still holds one entry
@@ -1312,12 +1394,24 @@ impl Server {
                 }
                 return true;
             }
-            for enc in batch.encodings.iter() {
+            // One sharded scan for the whole model-homogeneous batch
+            // (the scorer fan-out amortizes over every request in it);
+            // results are exactly equal to per-query single-scan top1.
+            entry.store.top1_batch_into(
+                &batch.encodings,
+                entry.precision,
+                &mut scratch,
+                &mut top1s,
+            );
+            // Every scored request scanned every shard of this model.
+            for scans in runtime.shard_scans.iter() {
+                scans.fetch_add(batch.encodings.len() as u64, Ordering::Relaxed);
+            }
+            for &(top_class, score) in top1s.iter() {
                 let Ok(pending) = pending_rx.recv() else {
                     // Stream half dropped mid-batch: nothing left to pair.
                     return false;
                 };
-                let (top_class, score) = entry.store.top1(enc, entry.precision, &mut scratch);
                 let latency = pending.t_submit.elapsed();
                 shared.stats.latency_ns.record(latency.as_nanos() as u64);
                 shared.stats.completed.fetch_add(1, Ordering::Relaxed);
@@ -1674,5 +1768,55 @@ mod tests {
         }
         handle.shutdown();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn sharded_consumer_matches_single_scan() {
+        // With am_shards > 1 the consumer scores through the scoped
+        // scorer pool; every response must still equal the offline
+        // single-thread scan, and the per-shard scan counters must each
+        // equal the scored-request count.
+        let enc_cfg = small_encoder(21);
+        let mut rng = crate::util::rng::Rng::new(77);
+        let rows: Vec<Vec<f32>> =
+            (0..10).map(|_| (0..256).map(|_| rng.normal_f32()).collect()).collect();
+        let store = AmStore::from_prototypes(256, &rows, None);
+        let offline_store = store.clone();
+        let cfg = ServeCfg {
+            coordinator: CoordinatorCfg {
+                batch_size: 8,
+                n_workers: 2,
+                queue_depth: 2,
+                ..Default::default()
+            },
+            am_shards: 3,
+            ..ServeCfg::new(enc_cfg.clone())
+        };
+        let (server, handle) = Server::new(cfg, store);
+        let t = thread::spawn(move || server.run());
+        let mut offline_enc = enc_cfg.build();
+        let mut scratch = AmScratch::new();
+        let mut s = SyntheticStream::new(SyntheticConfig::sampled(22));
+        const N: u64 = 100;
+        for _ in 0..N {
+            let rec = s.next_record().unwrap();
+            let code = offline_enc.encode(&rec);
+            let (want_class, want_score) =
+                offline_store.top1(&code, Precision::F32, &mut scratch);
+            let resp = handle.classify(rec).unwrap();
+            assert_eq!(resp.top_class, want_class);
+            assert_eq!(resp.score, want_score);
+        }
+        handle.shutdown();
+        t.join().unwrap();
+        let snap = handle.stats();
+        let shards = &snap.models[0].shards;
+        assert_eq!(shards.len(), 3);
+        // 10 classes over 3 shards: 4 + 3 + 3, every shard scanned once
+        // per scored request.
+        assert_eq!(shards.iter().map(|s| s.classes).collect::<Vec<_>>(), vec![4, 3, 3]);
+        for sh in shards {
+            assert_eq!(sh.scans, N);
+        }
     }
 }

@@ -168,6 +168,12 @@ fn measure_serve(warmup: u64, window: u64, total: u64) -> (u64, u64) {
         queue_cap: 16,
         slots: 8,
         precision: Precision::Binary, // exercises query packing too
+        // The zero-alloc window is pinned to the single-shard scan: with
+        // one shard the sharded store scores inline on the consumer (no
+        // scoped scorer spawns), so the whole serve loop stays heap-free.
+        // Multi-shard scans trade one spawn per micro-batch for scan
+        // parallelism and are exercised in tests/serve_smoke.rs instead.
+        am_shards: 1,
         ..ServeCfg::new(enc_cfg(43))
     };
     let (server, handle) = Server::new(cfg, store);

@@ -1,0 +1,281 @@
+//! Differential suite for the sharded associative-memory scan: every
+//! result of [`ShardedAmStore`] must be **exactly equal** — same class
+//! ids, same score bits, same order — to the single-thread
+//! [`AmStore`] scan, across precision × shard count × class count,
+//! including ragged last shards, `k` larger than a shard, and
+//! constructed score ties straddling shard boundaries. The merge's
+//! tie-break contract (score descending, lowest class id first among
+//! equal scores) is pinned here, as is scorer-count invariance — the
+//! thread cap partitions work, never results.
+
+use shdc::am::{AmScratch, AmStore, Precision, ShardScratch, ShardedAmStore};
+use shdc::encoding::{sparse_from_indices, Encoding};
+use shdc::util::rng::Rng;
+
+fn random_store(n_classes: usize, d: usize, seed: u64, biases: bool) -> AmStore {
+    let mut rng = Rng::new(seed);
+    let rows: Vec<Vec<f32>> = (0..n_classes)
+        .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let b: Vec<f32>;
+    let biases = if biases {
+        b = (0..n_classes).map(|_| rng.normal_f32() * 0.1).collect();
+        Some(&b[..])
+    } else {
+        None
+    };
+    AmStore::from_prototypes(d, &rows, biases)
+}
+
+fn dense_query(d: usize, rng: &mut Rng) -> Encoding {
+    Encoding::Dense((0..d).map(|_| rng.normal_f32()).collect())
+}
+
+fn sparse_query(d: usize, rng: &mut Rng) -> Encoding {
+    let idx: Vec<u32> = (0..1 + rng.below_usize(d / 2))
+        .map(|_| rng.below(d as u64) as u32)
+        .collect();
+    sparse_from_indices(idx, d)
+}
+
+/// Element-for-element equality with bitwise score comparison — the
+/// acceptance criterion is *exact* equality, not approximate.
+fn assert_results_identical(got: &[(u32, f32)], want: &[(u32, f32)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.0, w.0, "{ctx}: class at rank {i}");
+        assert_eq!(g.1.to_bits(), w.1.to_bits(), "{ctx}: score bits at rank {i}");
+    }
+}
+
+/// The core matrix: precisions {f32, int8, binarized} × shard counts
+/// {1, 2, 7, n_classes} × class counts {2, 100}, dense and sparse
+/// queries, top-1 and top-k (k below, at, and above n_classes).
+#[test]
+fn sharded_scan_equals_single_scan_across_matrix() {
+    let mut rng = Rng::new(0xa51);
+    for &n_classes in &[2usize, 100] {
+        let d = 48;
+        let store = random_store(n_classes, d, 11 + n_classes as u64, true);
+        let queries: Vec<Encoding> = (0..3)
+            .map(|_| dense_query(d, &mut rng))
+            .chain((0..3).map(|_| sparse_query(d, &mut rng)))
+            .collect();
+        for &n_shards in &[1usize, 2, 7, n_classes] {
+            let sharded = ShardedAmStore::new(store.clone(), n_shards);
+            assert_eq!(sharded.n_shards(), n_shards.clamp(1, n_classes));
+            let mut single = AmScratch::new();
+            let mut scratch = ShardScratch::new();
+            let (mut got, mut want) = (Vec::new(), Vec::new());
+            for (qi, q) in queries.iter().enumerate() {
+                for prec in Precision::ALL {
+                    let ctx = format!("classes={n_classes} shards={n_shards} q={qi} {prec:?}");
+                    assert_eq!(
+                        sharded.top1(q, prec, &mut scratch),
+                        store.top1(q, prec, &mut single),
+                        "{ctx}: top1"
+                    );
+                    for k in [1usize, 3, n_classes, n_classes + 5] {
+                        store.topk_into(q, prec, k, &mut single, &mut want);
+                        sharded.topk_into(q, prec, k, &mut scratch, &mut got);
+                        assert_eq!(want.len(), k.clamp(1, n_classes), "{ctx}: k={k} clamp");
+                        assert_results_identical(&got, &want, &format!("{ctx} k={k}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Many-class scale point of the matrix: 5k classes, enough shards that
+/// every scorer thread owns several, plus per-class shards.
+#[test]
+fn five_thousand_classes_match_single_scan() {
+    let n_classes = 5_000;
+    let d = 64;
+    let store = random_store(n_classes, d, 77, false);
+    let mut rng = Rng::new(0xbeef);
+    let queries = [dense_query(d, &mut rng), sparse_query(d, &mut rng)];
+    let mut single = AmScratch::new();
+    let (mut got, mut want) = (Vec::new(), Vec::new());
+    for &n_shards in &[7usize, 64, n_classes] {
+        let sharded = ShardedAmStore::new(store.clone(), n_shards);
+        let mut scratch = ShardScratch::new();
+        for q in &queries {
+            for prec in Precision::ALL {
+                let ctx = format!("shards={n_shards} {prec:?}");
+                assert_eq!(
+                    sharded.top1(q, prec, &mut scratch),
+                    store.top1(q, prec, &mut single),
+                    "{ctx}: top1"
+                );
+                store.topk_into(q, prec, 17, &mut single, &mut want);
+                sharded.topk_into(q, prec, 17, &mut scratch, &mut got);
+                assert_results_identical(&got, &want, &ctx);
+            }
+        }
+    }
+}
+
+/// Ragged partitions (10 classes over 3 shards → 4 + 3 + 3) with `k`
+/// larger than any one shard, and `k` larger than the class count
+/// (clamped to n_classes, same as the single scan).
+#[test]
+fn ragged_shards_and_k_exceeding_shard_size() {
+    let n_classes = 10;
+    let d = 24;
+    let store = random_store(n_classes, d, 13, true);
+    let sharded = ShardedAmStore::new(store.clone(), 3);
+    assert_eq!(sharded.shard_range(0), 0..4);
+    assert_eq!(sharded.shard_range(1), 4..7);
+    assert_eq!(sharded.shard_range(2), 7..10);
+    let mut rng = Rng::new(14);
+    let q = dense_query(d, &mut rng);
+    let mut single = AmScratch::new();
+    let mut scratch = ShardScratch::new();
+    let (mut got, mut want) = (Vec::new(), Vec::new());
+    for prec in Precision::ALL {
+        // k = 7 exceeds every shard (max shard is 4 classes); the merge
+        // must interleave all three shard lists.
+        store.topk_into(&q, prec, 7, &mut single, &mut want);
+        sharded.topk_into(&q, prec, 7, &mut scratch, &mut got);
+        assert_results_identical(&got, &want, &format!("{prec:?} k=7"));
+        // k = 23 > n_classes clamps to the full ranking.
+        store.topk_into(&q, prec, 23, &mut single, &mut want);
+        sharded.topk_into(&q, prec, 23, &mut scratch, &mut got);
+        assert_eq!(got.len(), n_classes, "{prec:?}: k>n clamp");
+        assert_results_identical(&got, &want, &format!("{prec:?} k=23"));
+        // k = 0 clamps up to 1 on both paths.
+        store.topk_into(&q, prec, 0, &mut single, &mut want);
+        sharded.topk_into(&q, prec, 0, &mut scratch, &mut got);
+        assert_eq!(got.len(), 1, "{prec:?}: k=0 clamp");
+        assert_results_identical(&got, &want, &format!("{prec:?} k=0"));
+    }
+}
+
+/// Constructed ties: identical prototype rows make every class score
+/// exactly equal in every precision, so the ordering is *pure*
+/// tie-break. The lowest class id must win top-1 and the top-k list
+/// must come out in ascending class order — for every shard count, with
+/// ties straddling every shard boundary.
+#[test]
+fn tie_break_is_lowest_class_id_across_shard_boundaries() {
+    let d = 32;
+    let n_classes = 6;
+    let mut rng = Rng::new(15);
+    let row: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    let rows: Vec<Vec<f32>> = (0..n_classes).map(|_| row.clone()).collect();
+    let store = AmStore::from_prototypes(d, &rows, None);
+    let queries = [dense_query(d, &mut rng), sparse_query(d, &mut rng)];
+    let mut single = AmScratch::new();
+    let (mut got, mut want) = (Vec::new(), Vec::new());
+    for &n_shards in &[1usize, 2, 3, 6] {
+        let sharded = ShardedAmStore::new(store.clone(), n_shards);
+        let mut scratch = ShardScratch::new();
+        for q in &queries {
+            for prec in Precision::ALL {
+                let ctx = format!("shards={n_shards} {prec:?}");
+                let (class, score) = sharded.top1(q, prec, &mut scratch);
+                assert_eq!(class, 0, "{ctx}: tie must break to class 0");
+                sharded.topk_into(q, prec, n_classes, &mut scratch, &mut got);
+                let classes: Vec<u32> = got.iter().map(|&(c, _)| c).collect();
+                assert_eq!(classes, vec![0, 1, 2, 3, 4, 5], "{ctx}: tie order");
+                assert!(
+                    got.iter().all(|&(_, s)| s.to_bits() == score.to_bits()),
+                    "{ctx}: tied scores must be identical"
+                );
+                store.topk_into(q, prec, n_classes, &mut single, &mut want);
+                assert_results_identical(&got, &want, &ctx);
+            }
+        }
+    }
+}
+
+/// Two-group ties: interleaved duplicate rows (even classes share row A,
+/// odd classes row B) force the merge to alternate between shards while
+/// preserving ascending class order within each equal-score group.
+#[test]
+fn grouped_ties_interleave_in_class_order() {
+    let d = 16;
+    let row_a = vec![1.0f32; d];
+    let row_b = vec![-1.0f32; d];
+    let rows: Vec<Vec<f32>> = (0..6).map(|c| if c % 2 == 0 { row_a.clone() } else { row_b.clone() }).collect();
+    let store = AmStore::from_prototypes(d, &rows, None);
+    let q = Encoding::Dense(vec![1.0f32; d]);
+    let mut single = AmScratch::new();
+    let (mut got, mut want) = (Vec::new(), Vec::new());
+    for &n_shards in &[1usize, 2, 3, 6] {
+        let sharded = ShardedAmStore::new(store.clone(), n_shards);
+        let mut scratch = ShardScratch::new();
+        for prec in Precision::ALL {
+            let ctx = format!("shards={n_shards} {prec:?}");
+            sharded.topk_into(&q, prec, 6, &mut scratch, &mut got);
+            let classes: Vec<u32> = got.iter().map(|&(c, _)| c).collect();
+            // Row A scores strictly above row B on the all-ones query in
+            // every precision; within each group, ascending class ids.
+            assert_eq!(classes, vec![0, 2, 4, 1, 3, 5], "{ctx}: group interleave");
+            store.topk_into(&q, prec, 6, &mut single, &mut want);
+            assert_results_identical(&got, &want, &ctx);
+        }
+    }
+}
+
+/// The scorer-thread cap is a parallelism knob only: any cap (fewer,
+/// equal, or more than the shard count) yields identical results.
+#[test]
+fn scorer_count_never_changes_results() {
+    let n_classes = 100;
+    let d = 32;
+    let store = random_store(n_classes, d, 21, true);
+    let mut rng = Rng::new(22);
+    let q = dense_query(d, &mut rng);
+    let mut single = AmScratch::new();
+    let mut want = Vec::new();
+    store.topk_into(&q, Precision::F32, 12, &mut single, &mut want);
+    let want_top1 = store.top1(&q, Precision::F32, &mut single);
+    for &scorers in &[1usize, 2, 5, 64] {
+        let sharded = ShardedAmStore::with_scorers(store.clone(), 7, scorers);
+        let mut scratch = ShardScratch::new();
+        let mut got = Vec::new();
+        sharded.topk_into(&q, Precision::F32, 12, &mut scratch, &mut got);
+        assert_results_identical(&got, &want, &format!("scorers={scorers}"));
+        assert_eq!(sharded.top1(&q, Precision::F32, &mut scratch), want_top1);
+    }
+}
+
+/// The serve consumer's batch path: query-major results equal to the
+/// single-scan top-1 of each query, for mixed dense/sparse batches in
+/// every precision.
+#[test]
+fn batch_top1_equals_single_scan_per_query() {
+    let n_classes = 100;
+    let d = 32;
+    let store = random_store(n_classes, d, 31, true);
+    let mut rng = Rng::new(32);
+    let encs: Vec<Encoding> = (0..5)
+        .map(|_| dense_query(d, &mut rng))
+        .chain((0..4).map(|_| sparse_query(d, &mut rng)))
+        .collect();
+    let mut single = AmScratch::new();
+    for &n_shards in &[1usize, 4] {
+        let sharded = ShardedAmStore::new(store.clone(), n_shards);
+        let mut scratch = ShardScratch::new();
+        let mut out = Vec::new();
+        for prec in Precision::ALL {
+            sharded.top1_batch_into(&encs, prec, &mut scratch, &mut out);
+            assert_eq!(out.len(), encs.len());
+            for (qi, (q, &(class, score))) in encs.iter().zip(&out).enumerate() {
+                let (wc, ws) = store.top1(q, prec, &mut single);
+                assert_eq!(class, wc, "shards={n_shards} {prec:?} q={qi}");
+                assert_eq!(
+                    score.to_bits(),
+                    ws.to_bits(),
+                    "shards={n_shards} {prec:?} q={qi}: score bits"
+                );
+            }
+        }
+        // An empty batch is a no-op, not a panic.
+        sharded.top1_batch_into(&[], Precision::F32, &mut scratch, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -250,6 +250,43 @@ fn dot_i8_active_matches_scalar_and_naive_exactly() {
     }
 }
 
+/// Extreme-magnitude stress for the widening int8 dot, at lengths
+/// straddling the 16-element SIMD block (0, 1, 15, 16, 17, 64, 130):
+/// constant worst-case patterns make every block hit the largest
+/// possible intermediate values *deterministically*, where random draws
+/// would almost never align them. In particular, adjacent
+/// `(−128)·(−128)` pairs sum to 32768 — one past `i16::MAX` — so a
+/// kernel that summed product pairs in i16 lanes would wrap here.
+#[test]
+fn dot_i8_extreme_magnitudes_exact_at_block_boundaries() {
+    const LENS: &[usize] = &[0, 1, 15, 16, 17, 64, 130];
+    // (a-fill, b-fill) worst cases: saturated quantizer output (±127)
+    // and the full-range i8 extremes (−128).
+    const PATTERNS: &[(i8, i8)] = &[
+        (127, 127),
+        (127, -127),
+        (-127, -127),
+        (i8::MIN, i8::MIN),
+        (i8::MIN, 127),
+        (127, i8::MIN),
+    ];
+    for &len in LENS {
+        for &(fa, fb) in PATTERNS {
+            let a = vec![fa; len];
+            let b = vec![fb; len];
+            let want = fa as i64 * fb as i64 * len as i64;
+            assert_eq!(scalar::dot_i8(&a, &b), want, "scalar {fa}·{fb} len={len}");
+            assert_eq!(kernels::dot_i8(&a, &b), want, "active {fa}·{fb} len={len}");
+        }
+        // Alternating-sign extremes: lane cancellation inside a block.
+        let a: Vec<i8> = (0..len).map(|i| if i % 2 == 0 { 127 } else { -128 }).collect();
+        let b: Vec<i8> = (0..len).map(|i| if i % 3 == 0 { -128 } else { 127 }).collect();
+        let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+        assert_eq!(scalar::dot_i8(&a, &b), want, "scalar alternating len={len}");
+        assert_eq!(kernels::dot_i8(&a, &b), want, "active alternating len={len}");
+    }
+}
+
 #[test]
 fn packed_popcounts_active_match_scalar_and_naive() {
     // Word counts cover empty, sub-block (POP_BLOCK = 4), block±1 and

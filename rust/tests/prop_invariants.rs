@@ -397,6 +397,126 @@ fn prop_int8_quantize_round_trip() {
     });
 }
 
+/// [`shdc::am::AmBuilder::merge`] is **commutative bit for bit on any
+/// floats**: merged sums are coordinate-wise `a + b`, and IEEE-754
+/// addition commutes exactly (`a + b == b + a` for every pair, including
+/// signed zeros produced by summing normals). This is the half of the
+/// distributed-build contract that holds unconditionally.
+#[test]
+fn prop_am_builder_merge_commutative_on_any_floats() {
+    use shdc::am::AmBuilder;
+    forall(30, |case, rng| {
+        let d = 4 + rng.below_usize(120);
+        let n_classes = 1 + rng.below_usize(6);
+        let mut a = AmBuilder::new(d, n_classes);
+        let mut b = AmBuilder::new(d, n_classes);
+        for builder in [&mut a, &mut b] {
+            for _ in 0..rng.below_usize(20) {
+                let class = rng.below_usize(n_classes);
+                let v: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 3.0).collect();
+                builder.add(class, &Encoding::Dense(v));
+            }
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.counts(), ba.counts(), "case {case}: counts not commutative");
+        assert!(
+            ab.sums().iter().zip(ba.sums()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "case {case}: merge not bitwise commutative (d={d}, classes={n_classes})"
+        );
+    });
+}
+
+/// The full distributed-build contract: with **integer-valued sums**
+/// (sparse 0/1 encodings, counts far below 2^24 so every partial sum is
+/// exact in f32), an N-way shard-split build — examples scattered across
+/// N shard-local builders, merged in *any* association — is bit-identical
+/// to the single-builder build, through to the finished store's
+/// prototypes and biases. Left-fold and pairwise-tree merge orders are
+/// both checked against the sequential reference.
+#[test]
+fn prop_am_builder_shard_split_build_bit_identical() {
+    use shdc::am::AmBuilder;
+    forall(25, |case, rng| {
+        let d = 8 + rng.below_usize(200);
+        let n_classes = 1 + rng.below_usize(5);
+        let n_shards = 1 + rng.below_usize(6);
+        let n_examples = rng.below_usize(60);
+        let examples: Vec<(usize, Encoding)> = (0..n_examples)
+            .map(|_| {
+                let class = rng.below_usize(n_classes);
+                let idx: Vec<u32> =
+                    (0..rng.below_usize(16)).map(|_| rng.below(d as u64) as u32).collect();
+                (class, sparse_from_indices(idx, d))
+            })
+            .collect();
+
+        // Sequential reference build.
+        let mut single = AmBuilder::new(d, n_classes);
+        for (class, enc) in &examples {
+            single.add(*class, enc);
+        }
+
+        // Shard-local builders, examples scattered round-robin.
+        let mut shards: Vec<AmBuilder> =
+            (0..n_shards).map(|_| AmBuilder::new(d, n_classes)).collect();
+        for (i, (class, enc)) in examples.iter().enumerate() {
+            shards[i % n_shards].add(*class, enc);
+        }
+
+        // Left fold: (((s0 + s1) + s2) + ...).
+        let mut folded = shards[0].clone();
+        for shard in &shards[1..] {
+            folded.merge(shard);
+        }
+        // Pairwise tree: merge adjacent pairs until one remains — a
+        // different association of the same sums.
+        let mut level = shards.clone();
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            for pair in level.chunks(2) {
+                let mut m = pair[0].clone();
+                if let Some(rhs) = pair.get(1) {
+                    m.merge(rhs);
+                }
+                next.push(m);
+            }
+            level = next;
+        }
+        let tree = level.pop().unwrap();
+
+        for (name, merged) in [("left-fold", &folded), ("pairwise-tree", &tree)] {
+            assert_eq!(merged.counts(), single.counts(), "case {case}: {name} counts");
+            assert!(
+                merged.sums().iter().zip(single.sums()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "case {case}: {name} sums diverged (d={d}, shards={n_shards})"
+            );
+        }
+
+        // Bit-identity survives finish() into the served store.
+        let normalize = rng.bernoulli(0.5);
+        let ref_store = single.finish(normalize);
+        let merged_store = folded.finish(normalize);
+        for c in 0..n_classes {
+            assert!(
+                ref_store
+                    .prototype(c)
+                    .iter()
+                    .zip(merged_store.prototype(c))
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "case {case}: finished prototype {c} diverged"
+            );
+            assert_eq!(
+                ref_store.bias(c).to_bits(),
+                merged_store.bias(c).to_bits(),
+                "case {case}: finished bias {c} diverged"
+            );
+        }
+    });
+}
+
 #[test]
 fn prop_am_precisions_rank_consistently_on_separated_classes() {
     // End-to-end AM property: when class prototypes are well separated,

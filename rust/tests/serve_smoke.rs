@@ -21,6 +21,15 @@
 //! * a tenant that exceeds its quota sheds fail-fast, with per-model
 //!   counters proving it, while a quiet tenant sees zero errors and a
 //!   bounded tail.
+//!
+//! Sharded-scan contract (ISSUE 8), pinned by
+//! `many_class_sharded_serve_matches_offline_single_scan`:
+//! * a 1k-class Zipf-skewed workload served through the **sharded** AM
+//!   scan (`am_shards` > 1) returns answers bit-identical to the
+//!   offline single-scan top-1 of the same store;
+//! * the per-shard scan counters reconcile — every shard covers its
+//!   slice of the class space, the slices partition all classes, and
+//!   each shard is scanned exactly once per scored request.
 
 use std::sync::Arc;
 use std::thread;
@@ -244,6 +253,68 @@ fn concurrent_clients_get_their_own_answers() {
     let stats = server_thread.join().expect("server").snapshot();
     assert_eq!(handle.stats().completed, 4 * 80);
     assert!(stats.records_encoded == 4 * 80);
+}
+
+#[test]
+fn many_class_sharded_serve_matches_offline_single_scan() {
+    use shdc::data::{ManyClassConfig, ManyClassStream};
+    use shdc::serve::build_many_class_store;
+
+    // Pure-categorical encoder: the many-class regime is symbol-driven,
+    // and the AM scan over 1000 classes dominates per-request cost.
+    let enc_cfg = EncoderCfg {
+        cat: CatCfg::Bloom { d: 1024, k: 4 },
+        num: NumCfg::None,
+        bundle: BundleMethod::Concat,
+        n_numeric: 0,
+        seed: 91,
+    };
+    let data = ManyClassConfig::classes(1000, 92);
+    let store = build_many_class_store(&enc_cfg, &data);
+    let offline_store = store.clone();
+    let mut cfg = serve_cfg(enc_cfg.clone(), Precision::F32);
+    cfg.am_shards = 7; // ragged partition: 1000 = 6·143 + 142
+    let (server, handle) = Server::new(cfg, store);
+    let server_thread = thread::spawn(move || server.run());
+
+    let mut offline_enc = enc_cfg.build();
+    let mut scratch = AmScratch::new();
+    // Salted stream: fresh Zipf draws over the same planted classes the
+    // store was built from.
+    let mut stream = ManyClassStream::new(ManyClassConfig { stream_salt: 1, ..data.clone() });
+    const N: usize = 300;
+    let mut recovered = 0usize;
+    for _ in 0..N {
+        let (rec, class) = stream.next_with_class();
+        let code = offline_enc.encode(&rec);
+        let (want_class, want_score) = offline_store.top1(&code, Precision::F32, &mut scratch);
+        offline_enc.recycle(code);
+        let resp = handle.classify(rec).expect("serve");
+        // The contract: sharded serve ≡ offline single scan, bit for bit.
+        assert_eq!(resp.top_class, want_class, "sharded serve diverged from single scan");
+        assert_eq!(resp.score, want_score, "sharded serve score diverged from single scan");
+        if resp.top_class == class {
+            recovered += 1;
+        }
+    }
+    // Sanity (not the contract): class-keyed symbols dominate the noise,
+    // so the planted class is usually recovered.
+    assert!(recovered > N / 2, "planted classes mostly lost: {recovered}/{N}");
+    handle.shutdown();
+    server_thread.join().expect("server");
+
+    let snap = handle.stats();
+    assert_eq!(snap.completed, N as u64);
+    // Per-shard counters reconcile with the global scan counts: the
+    // shard slices partition all 1000 classes, and every shard is
+    // scanned exactly once per scored request.
+    let shards = &snap.models[0].shards;
+    assert_eq!(shards.len(), 7);
+    assert_eq!(shards.iter().map(|s| u64::from(s.classes)).sum::<u64>(), 1000);
+    assert!(shards.iter().all(|s| s.classes == 142 || s.classes == 143));
+    for (i, sh) in shards.iter().enumerate() {
+        assert_eq!(sh.scans, N as u64, "shard {i} scan count");
+    }
 }
 
 /// A second tenant shape: half the categorical width, half the numeric

@@ -59,6 +59,14 @@ cargo test -q --test serve_smoke
 echo "== cargo test -q --test serve_smoke multi_model_ =="
 cargo test -q --test serve_smoke multi_model_
 
+# Sharded-AM differential suite in isolation: sharded top-k/top-1
+# exactly equal to the single-thread scan across precision × shard
+# count × class count (ragged shards, k > shard, constructed ties), and
+# scorer-count invariance. Also in the full suite; the dedicated leg
+# keeps the exact-equality contract visible in CI logs.
+echo "== cargo test -q --test am_sharding =="
+cargo test -q --test am_sharding
+
 # The fault-injection matrix (worker panics, stalls, stalled batcher,
 # lossy recycle): every request must reach a terminal outcome, surviving
 # output must be bit-identical to a no-fault run, and the failure
@@ -70,9 +78,12 @@ cargo test -q --test fault_injection
 # Overload smoke: a tiny closed-loop sweep plus the open-loop phase at
 # 2.5x capacity must TERMINATE with a nonzero shed rate rather than
 # hang — the cheapest end-to-end check that admission control actually
-# sheds under saturation.
-echo "== serve_bench overload smoke =="
+# sheds under saturation. SHDC_SERVE_CLASSES keeps the final many-class
+# leg (Zipf workload through the sharded scan, per-shard counters
+# asserted in-binary) small enough for CI while still multi-shard.
+echo "== serve_bench overload + many-class smoke =="
 SHDC_SERVE_REQUESTS=2000 SHDC_SERVE_CLIENTS=4 SHDC_SERVE_OPEN_REQUESTS=2000 \
+    SHDC_SERVE_CLASSES=200 \
     cargo run --release --bin serve_bench
 
 if [[ "$run_simd" == 1 ]]; then
