@@ -153,6 +153,12 @@ impl ShardedAmStore {
         self.bounds[s]..self.bounds[s + 1]
     }
 
+    /// Class count of every shard, in shard order (the per-shard gauge
+    /// dimension used by serve's scan counters and obs snapshots).
+    pub fn shard_sizes(&self) -> Vec<u32> {
+        self.bounds.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
     /// Run `scan(lo, hi, scratch, out)` for every shard, fanning the
     /// shard list out over at most `self.scorers` scoped threads (the
     /// last chunk runs on the caller). Single-scorer runs stay inline —
@@ -378,6 +384,7 @@ mod tests {
         assert_eq!(sharded.shard_range(0), 0..4);
         assert_eq!(sharded.shard_range(1), 4..7);
         assert_eq!(sharded.shard_range(2), 7..10);
+        assert_eq!(sharded.shard_sizes(), vec![4, 3, 3]);
     }
 
     #[test]

@@ -20,12 +20,19 @@
 //!    single-shard and through the sharded scan (`am_shards` > 1),
 //!    with per-shard scan counters printed and reconciled.
 //!
+//! With `--trace-out PATH` a fifth leg runs a traced closed-loop plus a
+//! traced over-capacity open-loop (stage-span sampling 1-in-4), dumps
+//! every sampled trace as one JSON object per line (JSONL) to `PATH`,
+//! then re-reads the file and checks each line parses and its stage
+//! spans telescope to its end-to-end time.
+//!
 //! ```text
 //! cargo run --release --bin serve_bench
 //! SHDC_SERVE_REQUESTS=200000 SHDC_SERVE_CLIENTS=16 \
 //!     cargo run --release --bin serve_bench
 //! SHDC_SERVE_OPEN_REQUESTS=2000 cargo run --release --bin serve_bench
 //! SHDC_SERVE_CLASSES=100000 cargo run --release --bin serve_bench
+//! cargo run --release --bin serve_bench -- --trace-out traces.jsonl
 //! ```
 
 use std::time::Duration;
@@ -35,12 +42,14 @@ use shdc::coordinator::{CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use shdc::data::synthetic::SyntheticConfig;
 use shdc::data::{ManyClassConfig, RecordStream};
 use shdc::encoding::BundleMethod;
+use shdc::obs::ObsCfg;
 use shdc::serve::{
     build_many_class_store, run_closed_loop, run_closed_loop_many_class,
     run_closed_loop_registry, run_open_loop, AdmissionPolicy, LoadCfg, ManyClassLoadCfg,
     ModelRegistry, OpenLoadCfg, RequestOpts, ServeCfg, TenantQuota,
 };
 use shdc::util::env_u64;
+use shdc::util::json::Json;
 
 /// A 2-class bundled store for `enc` (content is irrelevant to
 /// throughput; shape — dim, class count, precision — is what's
@@ -77,6 +86,23 @@ fn main() {
     let max_clients = env_u64("SHDC_SERVE_CLIENTS", 8) as usize;
     let open_requests = env_u64("SHDC_SERVE_OPEN_REQUESTS", 10_000);
     let n_classes = env_u64("SHDC_SERVE_CLASSES", 1_000) as usize;
+    let mut trace_out: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--trace-out" => match args.next() {
+                Some(p) => trace_out = Some(p),
+                None => {
+                    eprintln!("--trace-out needs a path");
+                    std::process::exit(2);
+                }
+            },
+            other => {
+                eprintln!("unknown argument: {other} (supported: --trace-out PATH)");
+                std::process::exit(2);
+            }
+        }
+    }
 
     let enc = EncoderCfg {
         cat: CatCfg::Bloom { d: 10_000, k: 4 },
@@ -234,4 +260,97 @@ fn main() {
             );
         }
     }
+
+    if let Some(path) = trace_out {
+        dump_traces(&path, &enc, &data, total_requests, open_requests, max_clients, capacity_rps);
+    }
+}
+
+/// The `--trace-out` leg: one traced closed-loop run and one traced
+/// over-capacity open-loop run (sampling 1-in-4), dumped as JSONL —
+/// one compact JSON object per sampled trace — then re-read and
+/// verified line by line: every line parses, every trace's stage spans
+/// sum to its end-to-end time, and no trace exceeds its run's recorded
+/// latency maximum.
+fn dump_traces(
+    path: &str,
+    enc: &EncoderCfg,
+    data: &SyntheticConfig,
+    total_requests: u64,
+    open_requests: u64,
+    max_clients: usize,
+    capacity_rps: f64,
+) {
+    println!("== serve_bench: traced runs (--trace-out {path}) ==");
+    let obs = ObsCfg { sample_every: 4, ring_cap: 8192 };
+    let clients = max_clients.max(1);
+
+    let closed_cfg = ServeCfg { obs, ..serve_cfg(enc, clients, Precision::F32) };
+    let load = LoadCfg {
+        clients,
+        requests_per_client: (total_requests.min(20_000) / clients as u64).max(1),
+        model_cycle: Vec::new(),
+        data: data.clone(),
+    };
+    let closed = run_closed_loop(closed_cfg, bundle_store(enc, 32), &load);
+    let obs_snap = closed.obs.as_ref().expect("tracing was enabled");
+    println!(
+        "  closed traced: {}  ({} spans sampled, {} dropped)",
+        closed.row(),
+        obs_snap.sampled,
+        obs_snap.dropped,
+    );
+
+    let open_cfg = ServeCfg { obs, ..serve_cfg(enc, clients, Precision::F32) };
+    let open_load = OpenLoadCfg {
+        rate_rps: (2.5 * capacity_rps).max(1_000.0),
+        total_requests: open_requests,
+        senders: (2 * max_clients).max(8),
+        opts: RequestOpts {
+            admission: Some(AdmissionPolicy::Shed),
+            deadline: Some(Duration::from_millis(50)),
+            ..RequestOpts::default()
+        },
+        data: data.clone(),
+    };
+    let open = run_open_loop(open_cfg, bundle_store(enc, 32), &open_load);
+    println!("  open traced (2.5x capacity): {}", open.row());
+
+    // Per-run tail check while the traces are still attached to their
+    // run: completion edges are stamped before the latency read, so no
+    // successful trace can exceed its run's recorded maximum.
+    for (traces, max_ns, label) in [
+        (&closed.traces, closed.serve.latency_ns.max, "closed"),
+        (&open.traces, open.serve.latency_ns.max, "open"),
+    ] {
+        let worst = traces.iter().filter(|t| !t.failed).map(|t| t.end_to_end_ns()).max();
+        if let Some(worst) = worst {
+            assert!(
+                worst <= max_ns,
+                "{label}: traced end-to-end {worst} ns exceeds run max {max_ns} ns"
+            );
+        }
+    }
+
+    let mut out = String::new();
+    let mut n_traces = 0u64;
+    for t in closed.traces.iter().chain(open.traces.iter()) {
+        out.push_str(&t.to_json().compact());
+        out.push('\n');
+        n_traces += 1;
+    }
+    std::fs::write(path, &out).expect("write trace file");
+
+    let text = std::fs::read_to_string(path).expect("re-read trace file");
+    let mut n_lines = 0u64;
+    for line in text.lines() {
+        let v = Json::parse(line).expect("every trace line parses as JSON");
+        let e2e = v.get("end_to_end_ns").and_then(Json::as_f64).expect("end_to_end_ns") as u64;
+        let stages = v.get("stages_ns").and_then(|s| s.as_obj()).expect("stages_ns");
+        let sum: u64 = stages.values().map(|s| s.as_f64().unwrap_or(0.0) as u64).sum();
+        assert!(sum <= e2e, "stage spans ({sum} ns) exceed end-to-end ({e2e} ns): {line}");
+        n_lines += 1;
+    }
+    assert_eq!(n_lines, n_traces, "trace file line count");
+    println!("  wrote {n_lines} traces to {path}; all lines parse and telescope");
 }

@@ -30,6 +30,18 @@
 //!     └── completion slots ◄── consumer: `am::AmStore` top-1 over
 //!         (responses + recycled      f32 / int8 / binarized prototypes
 //!          record buffers)           + latency/queue-depth stats
+//!
+//!  Span edges (sampled requests, `crate::obs`): the same seams carry
+//!  the stage-span timestamps —
+//!
+//!    submit ─[admission]─ t_enqueue ─[queue]─ t_cut ─[dispatch incl.
+//!    t_pop/steal]─ t_encode_start ─[encode = the catch_unwind body]─
+//!    t_encode_end ─[reorder]─ t_scan_start ─[scan]─ t_scan_end
+//!    ─[complete]─ t_complete
+//!
+//!  Workers stamp pop/encode edges onto `EncodedBatch::stamps` when
+//!  `CoordinatorCfg::obs` is wired; the serve consumer assembles the
+//!  full trace per sampled request.
 //! ```
 //!
 //! **Dispatch (§Perf).** The reader round-robins batches onto per-worker
@@ -138,6 +150,12 @@ pub struct EncodedBatch {
     /// must skip failed batches; the serve consumer completes each of
     /// their requests with an explicit `ServeError::Internal`.
     pub failed: bool,
+    /// Batch-level observability stamps (pop / encode start / encode
+    /// end, steal provenance), captured by the worker when
+    /// [`CoordinatorCfg::obs`] is wired and tracing is enabled;
+    /// all-zeros otherwise. Failed batches are stamped too (the encode
+    /// span then covers entry→panic).
+    pub stamps: crate::obs::BatchStamps,
 }
 
 /// Deterministic fault-injection plan — the test hook behind
@@ -199,6 +217,13 @@ pub struct CoordinatorCfg {
     /// Deterministic fault injection (tests/CI only); default injects
     /// nothing.
     pub fault: FaultPlan,
+    /// Stage-span tracer shared with the serving layer. When present
+    /// (and enabled) workers stamp each batch's pop/encode-start/
+    /// encode-end edges and steal provenance into
+    /// [`EncodedBatch::stamps`], and worker retirement decrements the
+    /// tracer's live-worker gauge. `None` (the default — training
+    /// pipelines, untraced serving) costs one `Option` check per batch.
+    pub obs: Option<Arc<crate::obs::Tracer>>,
 }
 
 impl Default for CoordinatorCfg {
@@ -213,6 +238,7 @@ impl Default for CoordinatorCfg {
             stop_flag: None,
             max_worker_panics: 3,
             fault: FaultPlan::default(),
+            obs: None,
         }
     }
 }
@@ -403,8 +429,11 @@ impl StealScheduler {
     }
 
     /// Blocking pop for worker `wid`. `None` once the stream is fully
-    /// drained after EOF, or immediately on early stop.
-    fn pop(&self, wid: usize, stats: &PipelineStats) -> Option<RawBatch> {
+    /// drained after EOF, or immediately on early stop. The flag in the
+    /// pair is the steal provenance: `true` when the batch came off a
+    /// sibling's deque (also counted in `batches_stolen`), surfaced so
+    /// the tracer can tag spans with it.
+    fn pop(&self, wid: usize, stats: &PipelineStats) -> Option<(RawBatch, bool)> {
         let taken = self.try_take(wid).or_else(|| {
             let mut ctl = lock_unpoisoned(&self.ctl);
             loop {
@@ -429,7 +458,7 @@ impl StealScheduler {
             // may be parked on exactly that condition.
             self.notify_space();
         }
-        Some(batch)
+        Some((batch, stolen))
     }
 
     fn set_eof(&self) {
@@ -562,6 +591,12 @@ where
     let n_models = encoder_cfgs.len() as u32;
     let stats = Arc::new(PipelineStats::new());
     let n_workers = cfg.n_workers.max(1);
+    // Live-worker gauge: full pool at start, decremented at retirement
+    // (mirrored into the tracer, which serving can read mid-run).
+    stats.live_workers.store(n_workers as u64, Ordering::Relaxed);
+    if let Some(obs) = &cfg.obs {
+        obs.set_live_workers(n_workers as u64);
+    }
     let queue_depth = cfg.queue_depth.max(1);
     let sched = Arc::new(StealScheduler::new(n_workers, queue_depth, cfg.stop_flag.clone()));
     let (enc_tx, enc_rx) = sync_channel::<EncodedBatch>(queue_depth);
@@ -641,6 +676,7 @@ where
         let slow = cfg.slow_worker;
         let max_panics = cfg.max_worker_panics;
         let fault = cfg.fault.clone();
+        let wobs = cfg.obs.clone();
         let wsched = Arc::clone(&sched);
         let wspine_tx = spine_tx.clone();
         workers.push(thread::spawn(move || {
@@ -681,7 +717,16 @@ where
                         let _ = wspine_tx.try_send(recs);
                     }
                 }
-                let Some(raw) = wsched.pop(wid, &wstats) else { break };
+                let Some((raw, stolen)) = wsched.pop(wid, &wstats) else { break };
+                // Span stamps (tracing on): pop time + steal provenance
+                // now, encode start/end around the catch_unwind body
+                // below. Plain u64 fields on the batch — no allocation,
+                // and three clock reads per *batch* when enabled.
+                let mut stamps = crate::obs::BatchStamps::default();
+                if let Some(obs) = wobs.as_deref() {
+                    stamps.t_pop = obs.now_ns();
+                    stamps.stolen = stolen;
+                }
                 if let Some((slow_wid, delay)) = slow {
                     if slow_wid == wid {
                         thread::sleep(delay);
@@ -710,6 +755,9 @@ where
                 // hostile record) must cost exactly this batch, not the
                 // pipeline. No lock is held here, so no Mutex is ever
                 // poisoned by an encode panic.
+                if let Some(obs) = wobs.as_deref() {
+                    stamps.t_encode_start = obs.now_ns();
+                }
                 let encode_ok = catch_unwind(AssertUnwindSafe(|| {
                     if fault.panic_on_seq.contains(&raw.seq) {
                         panic!("shdc injected fault: encode panic at seq {}", raw.seq);
@@ -718,6 +766,11 @@ where
                     enc.encode_batch_into(&raw.records, &mut encodings);
                 }))
                 .is_ok();
+                if let Some(obs) = wobs.as_deref() {
+                    // Captured panic or not: a failed batch's encode span
+                    // covers entry→unwind, which is what its trace shows.
+                    stamps.t_encode_end = obs.now_ns();
+                }
                 if encode_ok {
                     wstats.records_encoded.fetch_add(n, Ordering::Relaxed);
                 } else {
@@ -751,6 +804,7 @@ where
                     records,
                     origin: wid,
                     failed: !encode_ok,
+                    stamps,
                 };
                 // The failed batch still ships downstream — it owns a
                 // sequence slot, and the consumer must observe the
@@ -764,8 +818,14 @@ where
                 if !encode_ok && panics_seen > max_panics {
                     // Panic budget exhausted: retire rather than risk an
                     // unbounded crash loop. The scheduler stops the
-                    // pipeline once no live worker remains.
+                    // pipeline once no live worker remains. (The
+                    // live_workers gauge never underflows: stats are
+                    // per-run and each worker retires at most once.)
                     wstats.workers_retired.fetch_add(1, Ordering::Relaxed);
+                    wstats.live_workers.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(obs) = wobs.as_deref() {
+                        obs.worker_retired();
+                    }
                     wsched.retire();
                     break;
                 }

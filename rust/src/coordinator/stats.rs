@@ -43,6 +43,12 @@ pub struct PipelineStats {
     /// this counter is how the multi-tenant registry proves per-model
     /// encoder state stays nearly free.
     pub encoder_builds: AtomicU64,
+    /// Workers currently in the pool: set to the worker count when the
+    /// pipeline starts, decremented when a worker retires past its
+    /// panic budget. A gauge (not a monotone counter) — meaningful
+    /// while the pipeline runs, mirrored into `obs::Tracer` for
+    /// mid-run observability snapshots.
+    pub live_workers: AtomicU64,
 }
 
 impl PipelineStats {
@@ -72,6 +78,7 @@ impl PipelineStats {
             workers_retired: self.workers_retired.load(Ordering::Relaxed),
             batches_failed: self.batches_failed.load(Ordering::Relaxed),
             encoder_builds: self.encoder_builds.load(Ordering::Relaxed),
+            live_workers: self.live_workers.load(Ordering::Relaxed),
         }
     }
 }
@@ -93,6 +100,7 @@ pub struct StatsSnapshot {
     pub workers_retired: u64,
     pub batches_failed: u64,
     pub encoder_builds: u64,
+    pub live_workers: u64,
 }
 
 impl StatsSnapshot {
@@ -187,6 +195,7 @@ mod tests {
             workers_retired: 0,
             batches_failed: 0,
             encoder_builds: 0,
+            live_workers: 0,
         };
         assert!((snap.encode_throughput() - 1000.0).abs() < 1e-9);
         assert!((snap.train_throughput() - 1000.0).abs() < 1e-9);

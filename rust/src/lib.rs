@@ -43,6 +43,7 @@ pub mod encoding;
 pub mod hash;
 pub mod hw;
 pub mod model;
+pub mod obs;
 pub mod perf;
 pub mod pipeline;
 pub mod runtime;

@@ -1,0 +1,41 @@
+//! Shared JSON emission for latency/depth histograms — the one
+//! serializer behind the closed-loop, open-loop and per-model bench
+//! report sections and every `stage_breakdown` section (bench reports,
+//! the perf snapshot, [`super::ObsSnapshot::to_json`]). Keeping a
+//! single shape here means offline tooling parses one histogram schema
+//! everywhere.
+
+use crate::serve::HistSnapshot;
+use crate::util::json::Json;
+
+/// JSON form of a histogram summary: `count`, `mean`, bucket-quantile
+/// `p50`/`p90`/`p99`, and exact `max`.
+pub fn hist_json(h: &HistSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count as f64)),
+        ("mean", Json::num(h.mean)),
+        ("p50", Json::num(h.p50 as f64)),
+        ("p90", Json::num(h.p90 as f64)),
+        ("p99", Json::num(h.p99 as f64)),
+        ("max", Json::num(h.max as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::Histogram;
+
+    #[test]
+    fn hist_json_has_the_stable_schema() {
+        let h = Histogram::new();
+        h.record(10);
+        h.record(1000);
+        let v = hist_json(&h.snapshot());
+        for key in ["count", "mean", "p50", "p90", "p99", "max"] {
+            assert!(v.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(v.get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("max").unwrap().as_f64(), Some(1000.0));
+    }
+}

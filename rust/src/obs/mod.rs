@@ -1,0 +1,706 @@
+//! Dependency-free observability for the serving stack: per-request
+//! stage-span tracing, per-stage / per-model latency histograms, and
+//! gauge snapshots — the decomposition layer behind the flat end-to-end
+//! counters of [`crate::serve::ServeSnapshot`].
+//!
+//! # Span taxonomy
+//!
+//! A sampled request carries nine monotonic timestamps (nanoseconds
+//! since the [`Tracer`]'s epoch) captured at the existing pipeline
+//! seams; consecutive pairs telescope into seven stage spans that sum
+//! *exactly* to the submit→complete wall time:
+//!
+//! ```text
+//!  t_submit ──► t_enqueue ──► t_cut ──► (t_pop) ──► t_encode_start ──►
+//!  [admission ]  [ queue   ]  [     dispatch     ]
+//!  t_encode_end ──► t_scan_start ──► t_scan_end ──► t_complete
+//!  [  encode  ]     [ reorder ]      [  scan   ]    [complete]
+//! ```
+//!
+//! * **admission** — `classify` entry to queue insertion: quota checks,
+//!   slot acquisition, and any admission-policy wait on a full queue.
+//! * **queue** — queue insertion to the micro-batcher taking the
+//!   request into a batch (the batch-cut wait).
+//! * **dispatch** — batch cut to encode start: the rest of the gather,
+//!   the deque push, and the worker's pop (steal scheduling). `t_pop`
+//!   rides along inside this span as provenance detail.
+//! * **encode** — the worker's encode body (the `catch_unwind` region).
+//! * **reorder** — encode end to the consumer picking the batch up in
+//!   stream order (seq-reorder wait + encoded-channel transit).
+//! * **scan** — the AM class scan of the request's batch.
+//! * **complete** — scan end to the completion slot being filled.
+//!
+//! Every edge is ordered by a happens-before relation (queue lock,
+//! deque mutex, channel send) on the process-wide monotonic clock, so
+//! the chain is monotone under any steal interleaving.
+//!
+//! # Sampling and cost
+//!
+//! [`ObsCfg::sample_every`] = 0 (the default) disables tracing: the
+//! only residual cost is one plain-field branch per request and the
+//! tracer allocates nothing — the zero-allocation serve window of
+//! `tests/alloc_regression.rs` holds unchanged. With sampling enabled,
+//! every `sample_every`-th submission (by global submission count, so
+//! the sampled set is deterministic) carries a [`TraceCtx`] by value
+//! through the pipeline; batch-level stamps ride on the encoded batch.
+//! Completed traces land in preallocated per-worker rings
+//! ([`ObsCfg::ring_cap`] records each, overwrite-oldest) and in
+//! preallocated per-(worker × model) stage histograms — no allocation
+//! per span, so the alloc window also holds with sampling on (pinned at
+//! `sample_every: 16`).
+//!
+//! Aggregation is contention-free by construction: each worker's stage
+//! histograms are written only by the single-threaded serve consumer
+//! (keyed by the batch's origin worker) and merged on snapshot via
+//! [`Histogram::merge`] — no shared atomic hot path across models.
+//!
+//! Failed batches (worker panic) deliver their traces with
+//! [`TraceRecord::failed`] set and a zero-width scan span; they are
+//! kept out of the stage histograms so per-stage quantiles describe
+//! successful requests only. Requests expired at batch cut drop their
+//! trace (they never reach the consumer); the sampled-trace count
+//! therefore reconciles as `completed − failed_expired`-style
+//! arithmetic pinned by `tests/obs_tracing.rs`.
+
+pub mod json;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::serve::latency::{HistSnapshot, Histogram};
+use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
+
+/// The seven telescoping stage spans of one served request, in
+/// pipeline order. `sum(stage_ns) == t_complete − t_submit` exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Admission,
+    Queue,
+    Dispatch,
+    Encode,
+    Reorder,
+    Scan,
+    Complete,
+}
+
+impl Stage {
+    pub const COUNT: usize = 7;
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Admission,
+        Stage::Queue,
+        Stage::Dispatch,
+        Stage::Encode,
+        Stage::Reorder,
+        Stage::Scan,
+        Stage::Complete,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::Dispatch => "dispatch",
+            Stage::Encode => "encode",
+            Stage::Reorder => "reorder",
+            Stage::Scan => "scan",
+            Stage::Complete => "complete",
+        }
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Tracer configuration ([`crate::serve::ServeCfg::obs`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ObsCfg {
+    /// Sample one request in `sample_every` (by global submission
+    /// count; submission `i` is sampled iff `i % sample_every == 0`).
+    /// `0` — the default — disables tracing entirely.
+    pub sample_every: u64,
+    /// Capacity of each per-worker trace ring (records; fixed-size,
+    /// preallocated, overwrite-oldest). Ignored while disabled.
+    pub ring_cap: usize,
+}
+
+impl Default for ObsCfg {
+    fn default() -> ObsCfg {
+        ObsCfg { sample_every: 0, ring_cap: 1024 }
+    }
+}
+
+/// Per-request trace context carried *by value* through the pipeline
+/// (inside the submission and its pending companion — no allocation).
+/// Timestamps are nanoseconds since the tracer's epoch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceCtx {
+    /// Global submission index at sampling time (unique per trace).
+    pub req_id: u64,
+    /// `classify` entry (latency measurement origin).
+    pub t_submit: u64,
+    /// Insertion into the bounded submission queue (admission done).
+    pub t_enqueue: u64,
+    /// The micro-batcher took the request into a batch (batch cut).
+    pub t_cut: u64,
+}
+
+/// Batch-level span stamps captured by the encode worker; ride on the
+/// encoded batch (every sampled request of the batch shares them).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStamps {
+    /// Worker popped the raw batch from the steal scheduler.
+    pub t_pop: u64,
+    /// Encode body entry (just before the `catch_unwind` region).
+    pub t_encode_start: u64,
+    /// Encode body exit (panic or not).
+    pub t_encode_end: u64,
+    /// The batch was stolen from a sibling's deque (provenance).
+    pub stolen: bool,
+}
+
+/// One completed request's full span chain — the trace-dump record
+/// ([`Tracer::drain`], `serve_bench --trace-out`).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceRecord {
+    pub req_id: u64,
+    pub model: u32,
+    /// Worker that encoded the request's batch.
+    pub worker: u32,
+    /// The batch was stolen from a sibling worker's deque.
+    pub stolen: bool,
+    /// The encode batch failed (worker panic); the scan span is
+    /// zero-width and the request resolved with an error.
+    pub failed: bool,
+    pub t_submit: u64,
+    pub t_enqueue: u64,
+    pub t_cut: u64,
+    pub t_pop: u64,
+    pub t_encode_start: u64,
+    pub t_encode_end: u64,
+    pub t_scan_start: u64,
+    pub t_scan_end: u64,
+    pub t_complete: u64,
+}
+
+impl TraceRecord {
+    /// Width of one stage span (saturating, but zero-width only on a
+    /// non-monotone clock — the chain is happens-before ordered).
+    pub fn stage_ns(&self, s: Stage) -> u64 {
+        match s {
+            Stage::Admission => self.t_enqueue.saturating_sub(self.t_submit),
+            Stage::Queue => self.t_cut.saturating_sub(self.t_enqueue),
+            Stage::Dispatch => self.t_encode_start.saturating_sub(self.t_cut),
+            Stage::Encode => self.t_encode_end.saturating_sub(self.t_encode_start),
+            Stage::Reorder => self.t_scan_start.saturating_sub(self.t_encode_end),
+            Stage::Scan => self.t_scan_end.saturating_sub(self.t_scan_start),
+            Stage::Complete => self.t_complete.saturating_sub(self.t_scan_end),
+        }
+    }
+
+    /// Sum of the seven stage spans; equals [`Self::end_to_end_ns`] on
+    /// a monotone chain (the spans telescope).
+    pub fn stages_sum_ns(&self) -> u64 {
+        Stage::ALL.iter().map(|&s| self.stage_ns(s)).sum()
+    }
+
+    /// Submit→complete wall time of this request.
+    pub fn end_to_end_ns(&self) -> u64 {
+        self.t_complete.saturating_sub(self.t_submit)
+    }
+
+    /// One JSONL-ready object per trace (emit with
+    /// [`Json::compact`]).
+    pub fn to_json(&self) -> Json {
+        let stages = Json::obj(
+            Stage::ALL
+                .iter()
+                .map(|&s| (s.name(), Json::num(self.stage_ns(s) as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("req_id", Json::num(self.req_id as f64)),
+            ("model", Json::num(self.model as f64)),
+            ("worker", Json::num(self.worker as f64)),
+            ("stolen", Json::Bool(self.stolen)),
+            ("failed", Json::Bool(self.failed)),
+            ("t_submit_ns", Json::num(self.t_submit as f64)),
+            ("t_complete_ns", Json::num(self.t_complete as f64)),
+            ("stages_ns", stages),
+            ("end_to_end_ns", Json::num(self.end_to_end_ns() as f64)),
+        ])
+    }
+}
+
+/// Fixed-capacity overwrite-oldest ring of trace records. Preallocated
+/// once; `push` never allocates.
+#[derive(Debug)]
+struct TraceRing {
+    cap: usize,
+    buf: Vec<TraceRecord>,
+    /// Index of the oldest record once the ring is full.
+    at: usize,
+    /// Records overwritten (ring was full) or refused (cap 0).
+    dropped: u64,
+}
+
+impl TraceRing {
+    fn new(cap: usize) -> TraceRing {
+        TraceRing { cap, buf: Vec::with_capacity(cap), at: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, rec: TraceRecord) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(rec);
+        } else {
+            self.buf[self.at] = rec;
+            self.at = (self.at + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Retained records, oldest first; resets the ring (not the
+    /// `dropped` counter, which stays cumulative for the snapshot).
+    fn drain(&mut self) -> Vec<TraceRecord> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        if self.buf.len() == self.cap && self.cap > 0 {
+            out.extend_from_slice(&self.buf[self.at..]);
+            out.extend_from_slice(&self.buf[..self.at]);
+        } else {
+            out.extend_from_slice(&self.buf);
+        }
+        self.buf.clear();
+        self.at = 0;
+        out
+    }
+}
+
+/// One histogram per stage ([`Stage::ALL`] order). Recording is one
+/// atomic-add histogram insert per stage on preallocated tables.
+#[derive(Debug)]
+pub struct StageHistograms([Histogram; Stage::COUNT]);
+
+impl StageHistograms {
+    pub fn new() -> StageHistograms {
+        StageHistograms(std::array::from_fn(|_| Histogram::new()))
+    }
+
+    pub fn record(&self, rec: &TraceRecord) {
+        for s in Stage::ALL {
+            self.0[s.index()].record(rec.stage_ns(s));
+        }
+    }
+
+    /// Fold `other`'s counts into `self` (per-worker → per-model
+    /// aggregation; see [`Histogram::merge`]).
+    pub fn merge(&self, other: &StageHistograms) {
+        for (a, b) in self.0.iter().zip(&other.0) {
+            a.merge(b);
+        }
+    }
+
+    pub fn stage(&self, s: Stage) -> &Histogram {
+        &self.0[s.index()]
+    }
+
+    fn snapshot(&self) -> Vec<StageSnapshot> {
+        Stage::ALL
+            .iter()
+            .map(|&s| StageSnapshot { stage: s.name(), hist: self.0[s.index()].snapshot() })
+            .collect()
+    }
+}
+
+impl Default for StageHistograms {
+    fn default() -> StageHistograms {
+        StageHistograms::new()
+    }
+}
+
+/// The stage-span tracer: sampling decision, per-worker trace rings,
+/// and the per-(worker × model) stage-histogram registry. One per
+/// server, shared with the coordinator
+/// ([`crate::coordinator::CoordinatorCfg::obs`]) for batch stamping.
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: ObsCfg,
+    /// Origin of every timestamp (tracer construction).
+    epoch: Instant,
+    /// Global submission counter driving the 1-in-N sampling decision.
+    submissions: AtomicU64,
+    /// Live encode workers (set by the pipeline at start, decremented
+    /// at retirement) — a gauge, meaningful while the pipeline runs.
+    live_workers: AtomicU64,
+    /// Completed traces, one ring per worker (indexed by the encoded
+    /// batch's origin worker; written only by the serve consumer).
+    rings: Vec<Mutex<TraceRing>>,
+    /// Stage histograms per worker × model (outer: worker). Written
+    /// only by the serve consumer; merged per model on snapshot, so
+    /// recording never contends across workers' tables.
+    stages: Vec<Vec<StageHistograms>>,
+    n_models: usize,
+}
+
+impl Tracer {
+    /// Construct for `n_workers` encode workers serving `n_models`
+    /// registered models. Disabled configs allocate nothing.
+    pub fn new(cfg: ObsCfg, n_workers: usize, n_models: usize) -> Tracer {
+        let enabled = cfg.sample_every > 0;
+        let ring_cap = if enabled { cfg.ring_cap.max(1) } else { 0 };
+        let workers = if enabled { n_workers.max(1) } else { 0 };
+        Tracer {
+            cfg,
+            epoch: Instant::now(),
+            submissions: AtomicU64::new(0),
+            live_workers: AtomicU64::new(0),
+            rings: (0..workers).map(|_| Mutex::new(TraceRing::new(ring_cap))).collect(),
+            stages: (0..workers)
+                .map(|_| (0..n_models.max(1)).map(|_| StageHistograms::new()).collect())
+                .collect(),
+            n_models: n_models.max(1),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.cfg.sample_every > 0
+    }
+
+    /// Nanoseconds since the tracer's epoch, on the monotonic clock.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.ns_since_epoch(Instant::now())
+    }
+
+    /// Epoch-relative nanoseconds of an already-captured instant.
+    #[inline]
+    pub fn ns_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Sampling decision for the next submission: `Some(req_id)` when
+    /// this request is traced. Disabled tracers take one plain-field
+    /// branch and touch nothing else.
+    #[inline]
+    pub fn try_sample(&self) -> Option<u64> {
+        if self.cfg.sample_every == 0 {
+            return None;
+        }
+        let id = self.submissions.fetch_add(1, Ordering::Relaxed);
+        (id % self.cfg.sample_every == 0).then_some(id)
+    }
+
+    /// Deliver one completed trace: into the origin worker's ring, and
+    /// (non-failed only) into that worker's per-model stage
+    /// histograms. No allocation — fixed-size record, preallocated
+    /// ring and tables.
+    pub fn record(&self, rec: TraceRecord) {
+        let Some(ring) = self.rings.get(rec.worker as usize) else {
+            return;
+        };
+        if !rec.failed {
+            if let Some(sh) =
+                self.stages.get(rec.worker as usize).and_then(|w| w.get(rec.model as usize))
+            {
+                sh.record(&rec);
+            }
+        }
+        lock_unpoisoned(ring).push(rec);
+    }
+
+    /// Take every retained trace, across all rings, ordered by
+    /// `req_id`. Off the hot path (allocates the result).
+    pub fn drain(&self) -> Vec<TraceRecord> {
+        let mut out: Vec<TraceRecord> = Vec::new();
+        for ring in &self.rings {
+            out.extend(lock_unpoisoned(ring).drain());
+        }
+        out.sort_by_key(|r| r.req_id);
+        out
+    }
+
+    pub fn set_live_workers(&self, n: u64) {
+        self.live_workers.store(n, Ordering::Relaxed);
+    }
+
+    pub fn worker_retired(&self) {
+        let _ = self
+            .live_workers
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
+
+    pub fn live_workers(&self) -> u64 {
+        self.live_workers.load(Ordering::Relaxed)
+    }
+
+    /// Aggregate the per-worker tables into per-model and overall
+    /// stage snapshots. Gauges start empty — the serve layer appends
+    /// its queue/in-flight/shard gauges
+    /// ([`crate::serve::ServeHandle::obs_snapshot`]).
+    pub fn snapshot(&self) -> ObsSnapshot {
+        let overall = StageHistograms::new();
+        let per_model: Vec<StageHistograms> =
+            (0..self.n_models).map(|_| StageHistograms::new()).collect();
+        for worker in &self.stages {
+            for (m, sh) in worker.iter().enumerate() {
+                per_model[m].merge(sh);
+                overall.merge(sh);
+            }
+        }
+        let mut sampled = 0u64;
+        let mut dropped = 0u64;
+        for ring in &self.rings {
+            let r = lock_unpoisoned(ring);
+            sampled += r.buf.len() as u64 + r.dropped;
+            dropped += r.dropped;
+        }
+        ObsSnapshot {
+            sample_every: self.cfg.sample_every,
+            sampled,
+            dropped,
+            live_workers: self.live_workers(),
+            stages: overall.snapshot(),
+            models: per_model
+                .iter()
+                .enumerate()
+                .map(|(m, sh)| ObsModelSnapshot { model: m as u32, stages: sh.snapshot() })
+                .collect(),
+            gauges: Vec::new(),
+        }
+    }
+}
+
+/// One stage's latency distribution at snapshot time.
+#[derive(Clone, Debug)]
+pub struct StageSnapshot {
+    pub stage: &'static str,
+    pub hist: HistSnapshot,
+}
+
+/// Per-model stage breakdown ([`ObsSnapshot::models`], model-id order).
+#[derive(Clone, Debug)]
+pub struct ObsModelSnapshot {
+    pub model: u32,
+    pub stages: Vec<StageSnapshot>,
+}
+
+/// Point-in-time export of the tracer: stage histograms (overall and
+/// per model), sampling accounting, and the gauges the serve layer
+/// appends. `to_json` is the `stage_breakdown` section of the bench
+/// reports and the perf snapshot.
+#[derive(Clone, Debug)]
+pub struct ObsSnapshot {
+    pub sample_every: u64,
+    /// Traces delivered to the rings (retained + overwritten).
+    pub sampled: u64,
+    /// Traces overwritten by ring wraparound.
+    pub dropped: u64,
+    /// Live encode workers at snapshot time.
+    pub live_workers: u64,
+    /// Overall per-stage latency distributions ([`Stage::ALL`] order).
+    pub stages: Vec<StageSnapshot>,
+    /// Per-model per-stage distributions, model-id order.
+    pub models: Vec<ObsModelSnapshot>,
+    /// Point-in-time gauges (queue depth, in-flight, per-shard scans…)
+    /// appended by the owner of the runtime state.
+    pub gauges: Vec<(String, f64)>,
+}
+
+fn stages_json(stages: &[StageSnapshot]) -> Json {
+    Json::obj(stages.iter().map(|s| (s.stage, json::hist_json(&s.hist))).collect())
+}
+
+impl ObsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sample_every", Json::num(self.sample_every as f64)),
+            ("sampled", Json::num(self.sampled as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("live_workers", Json::num(self.live_workers as f64)),
+            ("stages", stages_json(&self.stages)),
+            (
+                "models",
+                Json::Arr(
+                    self.models
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("model", Json::num(m.model as f64)),
+                                ("stages", stages_json(&m.stages)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    self.gauges.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic monotone chain with 1 ns between consecutive edges.
+    fn chain(req_id: u64, base: u64) -> TraceRecord {
+        TraceRecord {
+            req_id,
+            model: 0,
+            worker: 0,
+            stolen: false,
+            failed: false,
+            t_submit: base,
+            t_enqueue: base + 1,
+            t_cut: base + 3,
+            t_pop: base + 4,
+            t_encode_start: base + 6,
+            t_encode_end: base + 10,
+            t_scan_start: base + 11,
+            t_scan_end: base + 15,
+            t_complete: base + 16,
+        }
+    }
+
+    #[test]
+    fn stages_telescope_to_end_to_end() {
+        let r = chain(0, 100);
+        assert_eq!(r.stage_ns(Stage::Admission), 1);
+        assert_eq!(r.stage_ns(Stage::Queue), 2);
+        assert_eq!(r.stage_ns(Stage::Dispatch), 3);
+        assert_eq!(r.stage_ns(Stage::Encode), 4);
+        assert_eq!(r.stage_ns(Stage::Reorder), 1);
+        assert_eq!(r.stage_ns(Stage::Scan), 4);
+        assert_eq!(r.stage_ns(Stage::Complete), 1);
+        assert_eq!(r.stages_sum_ns(), r.end_to_end_ns());
+        assert_eq!(r.end_to_end_ns(), 16);
+    }
+
+    #[test]
+    fn sampling_cadence_is_deterministic() {
+        let t = Tracer::new(ObsCfg { sample_every: 4, ring_cap: 16 }, 1, 1);
+        let ids: Vec<Option<u64>> = (0..12).map(|_| t.try_sample()).collect();
+        for (i, id) in ids.iter().enumerate() {
+            if i % 4 == 0 {
+                assert_eq!(*id, Some(i as u64));
+            } else {
+                assert_eq!(*id, None);
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_allocates_and_records_nothing() {
+        let t = Tracer::new(ObsCfg::default(), 4, 2);
+        assert!(!t.enabled());
+        assert!(t.try_sample().is_none());
+        t.record(chain(0, 0)); // out-of-range worker ring: dropped
+        assert!(t.drain().is_empty());
+        let snap = t.snapshot();
+        assert_eq!(snap.sampled, 0);
+        assert_eq!(snap.stages.len(), Stage::COUNT);
+        assert_eq!(snap.stages[0].hist.count, 0);
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest() {
+        let t = Tracer::new(ObsCfg { sample_every: 1, ring_cap: 4 }, 1, 1);
+        for i in 0..10 {
+            t.record(chain(i, 100 * i));
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.sampled, 10);
+        assert_eq!(snap.dropped, 6);
+        let ids: Vec<u64> = t.drain().iter().map(|r| r.req_id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+        // Histograms saw every record, not just the retained ones.
+        let snap = t.snapshot();
+        assert_eq!(snap.stages[Stage::Encode.index()].hist.count, 10);
+    }
+
+    #[test]
+    fn drain_merges_workers_in_req_id_order() {
+        let t = Tracer::new(ObsCfg { sample_every: 1, ring_cap: 8 }, 2, 1);
+        let mut w1 = chain(1, 10);
+        w1.worker = 1;
+        t.record(chain(2, 20));
+        t.record(w1);
+        t.record(chain(0, 0));
+        let ids: Vec<u64> = t.drain().iter().map(|r| r.req_id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert!(t.drain().is_empty(), "drain must reset the rings");
+    }
+
+    #[test]
+    fn snapshot_merges_per_worker_tables_per_model() {
+        let t = Tracer::new(ObsCfg { sample_every: 1, ring_cap: 8 }, 2, 2);
+        // Worker 0 serves model 0 twice; worker 1 serves model 1 once.
+        t.record(chain(0, 0));
+        t.record(chain(1, 50));
+        let mut r = chain(2, 100);
+        r.worker = 1;
+        r.model = 1;
+        t.record(r);
+        let snap = t.snapshot();
+        assert_eq!(snap.stages[Stage::Encode.index()].hist.count, 3);
+        assert_eq!(snap.models.len(), 2);
+        assert_eq!(snap.models[0].stages[Stage::Encode.index()].hist.count, 2);
+        assert_eq!(snap.models[1].stages[Stage::Encode.index()].hist.count, 1);
+    }
+
+    #[test]
+    fn failed_traces_skip_stage_histograms() {
+        let t = Tracer::new(ObsCfg { sample_every: 1, ring_cap: 8 }, 1, 1);
+        let mut r = chain(0, 0);
+        r.failed = true;
+        t.record(r);
+        t.record(chain(1, 50));
+        let snap = t.snapshot();
+        assert_eq!(snap.sampled, 2, "failed traces still land in the ring");
+        assert_eq!(snap.stages[Stage::Encode.index()].hist.count, 1);
+        let drained = t.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(drained[0].failed && !drained[1].failed);
+    }
+
+    #[test]
+    fn trace_json_round_trips_and_sums() {
+        let r = chain(7, 1000);
+        let line = r.to_json().compact();
+        assert!(!line.contains('\n'), "JSONL records must be single-line");
+        let v = Json::parse(&line).expect("trace json parses");
+        let sum: f64 = Stage::ALL
+            .iter()
+            .map(|&s| v.get("stages_ns").unwrap().get(s.name()).unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(sum, v.get("end_to_end_ns").unwrap().as_f64().unwrap());
+        assert_eq!(v.get("req_id").unwrap().as_usize(), Some(7));
+    }
+
+    #[test]
+    fn obs_snapshot_json_parses() {
+        let t = Tracer::new(ObsCfg { sample_every: 2, ring_cap: 8 }, 1, 1);
+        t.record(chain(0, 0));
+        let mut snap = t.snapshot();
+        snap.gauges.push(("queue_depth".to_string(), 3.0));
+        let text = snap.to_json().pretty();
+        let v = Json::parse(&text).expect("snapshot json parses");
+        assert_eq!(v.get("sample_every").unwrap().as_usize(), Some(2));
+        assert!(v.get("stages").unwrap().get("encode").is_some());
+        assert_eq!(
+            v.get("gauges").unwrap().get("queue_depth").unwrap().as_f64(),
+            Some(3.0)
+        );
+    }
+}

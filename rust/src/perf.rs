@@ -341,6 +341,37 @@ fn serve_scenarios(requests: u64) -> Vec<Json> {
     out
 }
 
+/// One traced closed-loop run (sampling 1-in-4) whose per-stage
+/// breakdown lands in the snapshot's `serve_stage_breakdown` key: the
+/// queue/dispatch/encode/scan split behind the latency histograms the
+/// `serve` rows already carry. Tracing is off in every other scenario,
+/// so those rows stay comparable across snapshot versions.
+fn serve_stage_breakdown(requests: u64) -> Json {
+    use crate::serve::{run_closed_loop, LoadCfg};
+    let enc = serve_encoder();
+    let store = serve_store(&enc);
+    let clients = 8usize;
+    let load = LoadCfg {
+        clients,
+        requests_per_client: (requests / clients as u64).max(1),
+        model_cycle: Vec::new(),
+        data: SyntheticConfig { alphabet_size: 1_000_000, ..SyntheticConfig::sampled(21) },
+    };
+    let cfg = crate::serve::ServeCfg {
+        obs: crate::obs::ObsCfg { sample_every: 4, ..Default::default() },
+        ..serve_cfg(enc, Precision::F32)
+    };
+    let report = run_closed_loop(cfg, store, &load);
+    let obs = report.obs.expect("tracing was enabled");
+    println!(
+        "  serve traced  {}  ({} spans sampled, {} dropped)",
+        report.row(),
+        obs.sampled,
+        obs.dropped,
+    );
+    obs.to_json()
+}
+
 /// Run the full encode snapshot; returns the machine-readable document
 /// written to `BENCH_encode.json`.
 pub fn encode_snapshot() -> Json {
@@ -597,6 +628,7 @@ pub fn encode_snapshot() -> Json {
     // --- serving: closed-loop latency per store precision ------------------
     let serve_requests = env_u64("SHDC_BENCH_SERVE_REQUESTS", 20_000);
     let serve_results = serve_scenarios(serve_requests);
+    let stage_breakdown = serve_stage_breakdown(serve_requests.clamp(1, 10_000));
 
     // --- coordinator worker scaling ---------------------------------------
     let scale_records = env_u64("SHDC_BENCH_RECORDS", 60_000);
@@ -684,6 +716,7 @@ pub fn encode_snapshot() -> Json {
         ("kernel_speedup_active_vs_scalar", kernel_speedups),
         ("pipeline_scaling", Json::Arr(scaling)),
         ("serve", Json::Arr(serve_results)),
+        ("serve_stage_breakdown", stage_breakdown),
     ])
 }
 

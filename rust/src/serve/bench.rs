@@ -25,12 +25,13 @@ use std::time::{Duration, Instant};
 
 use crate::am::{AmBuilder, AmStore};
 use crate::coordinator::{EncoderCfg, StatsSnapshot};
+use crate::obs::json::hist_json;
+use crate::obs::{ObsSnapshot, TraceRecord};
 use crate::data::manyclass::ManyClassConfig;
 use crate::data::synthetic::SyntheticConfig;
 use crate::data::{ManyClassStream, RecordStream, SyntheticStream};
 use crate::serve::{
-    HistSnapshot, ModelId, ModelRegistry, RequestOpts, ServeCfg, ServeError, ServeHandle,
-    ServeSnapshot, Server,
+    ModelId, ModelRegistry, RequestOpts, ServeCfg, ServeError, ServeHandle, ServeSnapshot, Server,
 };
 use crate::util::json::Json;
 
@@ -58,19 +59,6 @@ impl LoadCfg {
             data: SyntheticConfig::sampled(seed),
         }
     }
-}
-
-/// Shared JSON form of a latency/depth histogram (one serializer for
-/// the closed-loop, open-loop and per-model report sections).
-fn hist_json(h: &HistSnapshot) -> Json {
-    Json::obj(vec![
-        ("count", Json::num(h.count as f64)),
-        ("mean", Json::num(h.mean)),
-        ("p50", Json::num(h.p50 as f64)),
-        ("p90", Json::num(h.p90 as f64)),
-        ("p99", Json::num(h.p99 as f64)),
-        ("max", Json::num(h.max as f64)),
-    ])
 }
 
 /// JSON form of the per-model section of a [`ServeSnapshot`].
@@ -117,6 +105,11 @@ pub struct ServeBenchReport {
     pub throughput_rps: f64,
     pub serve: ServeSnapshot,
     pub pipeline: StatsSnapshot,
+    /// Per-stage breakdown ([`ServeHandle::obs_snapshot`]); `None` when
+    /// the run had tracing disabled ([`ServeCfg::obs`] default).
+    pub obs: Option<ObsSnapshot>,
+    /// Sampled traces drained after the run (empty when disabled).
+    pub traces: Vec<TraceRecord>,
 }
 
 impl ServeBenchReport {
@@ -144,6 +137,13 @@ impl ServeBenchReport {
             ("batches_stolen", Json::num(self.pipeline.batches_stolen as f64)),
             ("worker_panics", Json::num(self.pipeline.worker_panics as f64)),
             ("encoder_builds", Json::num(self.pipeline.encoder_builds as f64)),
+            (
+                "stage_breakdown",
+                match &self.obs {
+                    Some(o) => o.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -229,12 +229,25 @@ fn finish_closed_loop(
     let pipeline: Arc<_> = server_thread.join().expect("server thread");
     let serve = handle.stats();
     assert_eq!(serve.completed, total, "closed loop lost responses");
+    let (obs, traces) = drain_obs(&handle);
     ServeBenchReport {
         total_requests: total,
         wall,
         throughput_rps: total as f64 / wall.as_secs_f64(),
         serve,
         pipeline: pipeline.snapshot(),
+        obs,
+        traces,
+    }
+}
+
+/// Pull the stage breakdown and sampled traces off a finished run (the
+/// server has drained, so every sampled request's record has landed).
+fn drain_obs(handle: &ServeHandle) -> (Option<ObsSnapshot>, Vec<TraceRecord>) {
+    if handle.tracing_enabled() {
+        (Some(handle.obs_snapshot()), handle.drain_traces())
+    } else {
+        (None, Vec::new())
     }
 }
 
@@ -345,6 +358,10 @@ pub struct OpenLoopReport {
     pub wall: Duration,
     pub serve: ServeSnapshot,
     pub pipeline: StatsSnapshot,
+    /// Per-stage breakdown; `None` when the run had tracing disabled.
+    pub obs: Option<ObsSnapshot>,
+    /// Sampled traces drained after the run (empty when disabled).
+    pub traces: Vec<TraceRecord>,
 }
 
 impl OpenLoopReport {
@@ -366,6 +383,13 @@ impl OpenLoopReport {
             ("queue_depth", hist_json(&self.serve.queue_depth)),
             ("models", models_json(&self.serve)),
             ("worker_panics", Json::num(self.pipeline.worker_panics as f64)),
+            (
+                "stage_breakdown",
+                match &self.obs {
+                    Some(o) => o.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -457,6 +481,7 @@ pub fn run_open_loop(cfg: ServeCfg, store: AmStore, load: &OpenLoadCfg) -> OpenL
     handle.shutdown();
     let pipeline: Arc<_> = server_thread.join().expect("server thread");
     let serve = handle.stats();
+    let (obs, traces) = drain_obs(&handle);
     OpenLoopReport {
         offered: load.total_requests,
         offered_rps: load.rate_rps,
@@ -471,6 +496,8 @@ pub fn run_open_loop(cfg: ServeCfg, store: AmStore, load: &OpenLoadCfg) -> OpenL
         wall,
         serve,
         pipeline: pipeline.snapshot(),
+        obs,
+        traces,
     }
 }
 

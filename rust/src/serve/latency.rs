@@ -92,6 +92,30 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Fold `other`'s counts into `self`. Lock-free and safe against
+    /// concurrent `record`s on either side (each field merges with the
+    /// same atomics `record` uses), though the intended pattern is
+    /// quiescent aggregation: per-worker histograms written by one
+    /// thread each, merged at snapshot time (see `obs::Tracer`) — which
+    /// keeps the record hot path free of cross-worker contention.
+    pub fn merge(&self, other: &Histogram) {
+        for (b, ob) in self.buckets.iter().zip(&other.buckets) {
+            let v = ob.load(Ordering::Relaxed);
+            if v != 0 {
+                b.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        let os = other.sum.load(Ordering::Relaxed);
+        let _ = self
+            .sum
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| Some(s.saturating_add(os)));
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+        // An empty `other` holds the init sentinel u64::MAX, which
+        // fetch_min ignores by construction.
+        self.min.fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// Point-in-time summary. Quantiles are bucket representatives
     /// (≤ ~6% relative error); count/sum/max/min are exact.
     pub fn snapshot(&self) -> HistSnapshot {
@@ -261,6 +285,52 @@ mod tests {
         }
         reader.join().unwrap();
         assert_eq!(h.snapshot().count, 4_000);
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        // merge(a, b) must be indistinguishable from having recorded
+        // both sample sets into a single histogram.
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for v in [3u64, 17, 900, 12_345] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [1u64, 40, 7_777_777] {
+            b.record(v);
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.snapshot(), all.snapshot());
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_both_ways() {
+        let a = Histogram::new();
+        for v in [5u64, 500] {
+            a.record(v);
+        }
+        let before = a.snapshot();
+        a.merge(&Histogram::new());
+        // Empty-other: the u64::MAX min sentinel must not leak in.
+        assert_eq!(a.snapshot(), before);
+        let empty = Histogram::new();
+        empty.merge(&a);
+        assert_eq!(empty.snapshot(), before);
+    }
+
+    #[test]
+    fn merge_saturates_sum() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(u64::MAX);
+        b.record(u64::MAX);
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!(s.count, 2);
+        assert!(s.mean > u64::MAX as f64 / 4.0, "sum wrapped: {}", s.mean);
     }
 
     #[test]

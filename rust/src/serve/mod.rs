@@ -146,6 +146,47 @@
 //! default keeps the consumer's zero steady-state allocations
 //! (`tests/alloc_regression.rs`); sharded scoring pays scoped spawns
 //! per batch by design.
+//!
+//! # Observability
+//!
+//! The flat counters above say *what* happened; the [`crate::obs`]
+//! layer says *where the time went*. With [`ServeCfg::obs`] enabled
+//! (`sample_every > 0`), every `sample_every`-th submission (by global
+//! submission count — deterministic, not probabilistic) carries a
+//! [`crate::obs::TraceCtx`] by value through the pipeline, and its
+//! nine timestamps telescope into seven stage spans:
+//!
+//! ```text
+//!  submit ─[admission]─► enqueue ─[queue]─► cut ─[dispatch]─► encode
+//!  start ─[encode]─► encode end ─[reorder]─► scan start ─[scan]─►
+//!  scan end ─[complete]─► complete     (Σ spans = end-to-end latency)
+//! ```
+//!
+//! * the sampling decision runs at the enqueue site under the queue
+//!   lock (one counter increment; disabled tracing is a single plain
+//!   branch);
+//! * the batcher stamps the cut edge as it places the request
+//!   ([`RequestStream`]); requests *expired* at the cut drop their
+//!   trace — they never reach the consumer;
+//! * workers stamp pop/encode edges plus steal provenance onto the
+//!   batch ([`crate::coordinator::EncodedBatch::stamps`]);
+//! * the in-order consumer stamps scan and completion edges (the
+//!   completion stamp is taken *before* the latency histogram's, so
+//!   per-request stage sums are ≤ the recorded end-to-end latency) and
+//!   assembles the [`crate::obs::TraceRecord`] into the origin
+//!   worker's preallocated ring; failed batches deliver traces marked
+//!   `failed` with a zero-width scan span, excluded from the stage
+//!   histograms.
+//!
+//! Nothing on the sampled path allocates (Copy contexts, fixed-size
+//! ring records, preallocated histograms), so the zero-alloc serve
+//! window holds with tracing disabled **and** enabled — both pinned by
+//! `tests/alloc_regression.rs`. Read the results via
+//! [`ServeHandle::obs_snapshot`] (per-stage / per-model histograms +
+//! queue/in-flight/live-worker/shard gauges, the `stage_breakdown`
+//! JSON section of the bench reports) and
+//! [`ServeHandle::drain_traces`] (the raw per-request records;
+//! `serve_bench --trace-out` writes them as JSONL).
 
 pub mod bench;
 pub mod latency;
@@ -163,8 +204,11 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::am::{AmScratch, AmStore, Precision, ShardScratch, ShardedAmStore};
-use crate::coordinator::{run_pipeline_multi, CoordinatorCfg, EncoderCfg, PipelineStats};
+use crate::coordinator::{
+    run_pipeline_multi, CoordinatorCfg, EncodedBatch, EncoderCfg, PipelineStats,
+};
 use crate::data::{Record, RecordStream};
+use crate::obs::{ObsCfg, ObsSnapshot, TraceCtx, TraceRecord, Tracer};
 use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 
 /// What `classify` does when the server is saturated (no free completion
@@ -330,6 +374,10 @@ pub struct ServeCfg {
     /// Deadline applied to every request that doesn't carry its own
     /// ([`RequestOpts::deadline`]). `None` = no deadline.
     pub default_deadline: Option<Duration>,
+    /// Stage-span tracing (see the module-level *Observability*
+    /// section). Disabled by default (`sample_every: 0`) — costs one
+    /// branch per submission and allocates nothing.
+    pub obs: ObsCfg,
 }
 
 impl ServeCfg {
@@ -349,6 +397,7 @@ impl ServeCfg {
             am_shards: 1,
             admission: AdmissionPolicy::Block,
             default_deadline: None,
+            obs: ObsCfg::default(),
         }
     }
 }
@@ -600,6 +649,10 @@ struct Submission {
     /// Absolute deadline; the batcher discards the request unencoded
     /// once this passes.
     deadline: Option<Instant>,
+    /// Stage-span context when this submission was sampled for tracing
+    /// (`Copy`, carried by value — no allocation). The batcher stamps
+    /// the cut edge into it; expired submissions drop it unrecorded.
+    trace: Option<TraceCtx>,
 }
 
 /// Completion-order companion to one in-flight request; paired with its
@@ -609,6 +662,9 @@ struct Pending {
     t_submit: Instant,
     /// The buffer handed back to the client in its [`Response`].
     record: Record,
+    /// Sampled trace context (cut edge stamped), completed by the
+    /// consumer with scan/completion edges + the batch's worker stamps.
+    trace: Option<TraceCtx>,
 }
 
 enum SlotState {
@@ -739,6 +795,37 @@ struct Shared {
     /// Splitmix counter feeding backoff jitter (deterministic, shared by
     /// all clients; see [`crate::util::rng::mix64`]).
     jitter: AtomicU64,
+    /// Stage-span tracer ([`ServeCfg::obs`]); always present, inert
+    /// (one plain branch per submission) when sampling is disabled.
+    tracer: Arc<Tracer>,
+}
+
+/// Assemble a sampled request's full span chain: the context it carried
+/// through the queue, the worker-side stamps riding on its batch, and
+/// the consumer-side scan/completion edges captured by the caller.
+fn trace_record(
+    ctx: TraceCtx,
+    batch: &EncodedBatch,
+    scan: (u64, u64),
+    t_complete: u64,
+    failed: bool,
+) -> TraceRecord {
+    TraceRecord {
+        req_id: ctx.req_id,
+        model: batch.model,
+        worker: batch.origin as u32,
+        stolen: batch.stamps.stolen,
+        failed,
+        t_submit: ctx.t_submit,
+        t_enqueue: ctx.t_enqueue,
+        t_cut: ctx.t_cut,
+        t_pop: batch.stamps.t_pop,
+        t_encode_start: batch.stamps.t_encode_start,
+        t_encode_end: batch.stamps.t_encode_end,
+        t_scan_start: scan.0,
+        t_scan_end: scan.1,
+        t_complete,
+    }
 }
 
 /// Deliver a terminal failure to the client parked on `slot`.
@@ -956,12 +1043,23 @@ impl ServeHandle {
                     // is about to be pushed.
                     sh.stats.submitted.fetch_add(1, Ordering::Relaxed);
                     rt.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                    // Sampling decision (1-in-N by submission count;
+                    // a single branch when tracing is disabled). The
+                    // admission span runs submit→enqueue, covering
+                    // quota checks and both saturation waits above.
+                    let trace = sh.tracer.try_sample().map(|req_id| TraceCtx {
+                        req_id,
+                        t_submit: sh.tracer.ns_since_epoch(t_submit),
+                        t_enqueue: sh.tracer.now_ns(),
+                        t_cut: 0,
+                    });
                     q.push_back(Submission {
                         slot,
                         record,
                         t_submit,
                         model: opts.model.0,
                         deadline: ctx.deadline,
+                        trace,
                     });
                     sh.nonempty_cv.notify_one();
                     break;
@@ -1022,6 +1120,47 @@ impl ServeHandle {
         snap.models = self.shared.models.iter().map(ModelRuntime::snapshot).collect();
         snap
     }
+
+    /// Is stage-span tracing on ([`ServeCfg::obs`], `sample_every > 0`)?
+    pub fn tracing_enabled(&self) -> bool {
+        self.shared.tracer.enabled()
+    }
+
+    /// Take every retained per-request trace (ring contents across all
+    /// workers, `req_id` order) and reset the rings. Empty when tracing
+    /// is disabled.
+    pub fn drain_traces(&self) -> Vec<TraceRecord> {
+        self.shared.tracer.drain()
+    }
+
+    /// Point-in-time observability export: per-stage and per-model
+    /// latency histograms from the tracer plus the server's live gauges
+    /// (submission-queue depth, global and per-model in-flight, live
+    /// encode workers, per-shard scan counts). This is the
+    /// `stage_breakdown` section of the bench reports.
+    pub fn obs_snapshot(&self) -> ObsSnapshot {
+        let sh = &*self.shared;
+        let mut snap = sh.tracer.snapshot();
+        let depth = lock_unpoisoned(&sh.queue).len();
+        let submitted = sh.stats.submitted.load(Ordering::Relaxed);
+        let completed = sh.stats.completed.load(Ordering::Relaxed);
+        snap.gauges.push(("queue_depth".to_string(), depth as f64));
+        snap.gauges
+            .push(("in_flight".to_string(), submitted.saturating_sub(completed) as f64));
+        for (m, rt) in sh.models.iter().enumerate() {
+            snap.gauges.push((
+                format!("model{m}_in_flight"),
+                rt.in_flight.load(Ordering::Relaxed) as f64,
+            ));
+            for (s, scans) in rt.shard_scans.iter().enumerate() {
+                snap.gauges.push((
+                    format!("model{m}_shard{s}_scans"),
+                    scans.load(Ordering::Relaxed) as f64,
+                ));
+            }
+        }
+        snap
+    }
 }
 
 /// The batcher side: a [`RecordStream`] over the submission queue.
@@ -1052,7 +1191,12 @@ impl RequestStream {
     /// pool is still cold) and forward the displaced buffer through the
     /// pending channel for hand-back at completion.
     fn place(&mut self, out: &mut Vec<Record>, filled: &mut usize, sub: Submission) {
-        let Submission { slot, record, t_submit, model: _, deadline: _ } = sub;
+        let Submission { slot, record, t_submit, model: _, deadline: _, mut trace } = sub;
+        if let Some(t) = trace.as_mut() {
+            // Cut edge: the request leaves the queue for an encode
+            // batch. Queue span = t_cut − t_enqueue.
+            t.t_cut = self.shared.tracer.now_ns();
+        }
         let handback = if *filled < out.len() {
             std::mem::replace(&mut out[*filled], record)
         } else {
@@ -1062,14 +1206,16 @@ impl RequestStream {
         *filled += 1;
         // Capacity covers every slot, so this never blocks; a send error
         // means the consumer died — run() aborts the slot on drain.
-        let _ = self.pending_tx.send(Pending { slot, t_submit, record: handback });
+        let _ = self.pending_tx.send(Pending { slot, t_submit, record: handback, trace });
     }
 
     /// Resolve an expired submission at batch-cut time: the client gets
     /// [`ServeError::DeadlineExceeded`] now instead of a late answer,
     /// and the pipeline never pays its encode cost. Terminal outcome ⇒
     /// `completed` moves (idle-cut arithmetic); the record buffer joins
-    /// the spare pool for future hand-backs.
+    /// the spare pool for future hand-backs. A sampled trace is dropped
+    /// with the submission — expired requests never reach the consumer,
+    /// so trace counts reconcile against completed − expired.
     fn expire(&mut self, sub: Submission) {
         let sh = &*self.shared;
         sh.stats.expired.fetch_add(1, Ordering::Relaxed);
@@ -1301,15 +1447,18 @@ impl Server {
                 in_flight: AtomicU64::new(0),
                 bucket: m.quota.rate.map(|r| Mutex::new(TokenBucket::new(r))),
                 stats: ModelStats::default(),
-                shard_classes: (0..m.store.n_shards())
-                    .map(|s| {
-                        let r = m.store.shard_range(s);
-                        r.end - r.start
-                    })
-                    .collect(),
+                shard_classes: m.store.shard_sizes(),
                 shard_scans: (0..m.store.n_shards()).map(|_| AtomicU64::new(0)).collect(),
             })
             .collect();
+        // The tracer is sized to the worker pool (rings are indexed by
+        // the encoded batch's origin worker) and the registered model
+        // count; a disabled config allocates nothing.
+        let tracer = Arc::new(Tracer::new(
+            cfg.obs,
+            cfg.coordinator.n_workers.max(1),
+            registry.models.len(),
+        ));
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::with_capacity(cfg.queue_cap.max(1))),
             nonempty_cv: Condvar::new(),
@@ -1327,6 +1476,7 @@ impl Server {
             admission: cfg.admission,
             default_deadline: cfg.default_deadline,
             jitter: AtomicU64::new(registry.models[0].encoder.seed),
+            tracer,
         });
         // One pending per in-flight request; each holds a slot, so
         // `slots` bounds the channel and sends never block.
@@ -1362,6 +1512,7 @@ impl Server {
             keep_records: false,
             max_records: None,
             stop_flag: Some(Arc::clone(&shared.pipeline_stop)),
+            obs: shared.tracer.enabled().then(|| Arc::clone(&shared.tracer)),
             ..cfg.coordinator.clone()
         };
         // One worker pool, every tenant: the registry's encoder configs
@@ -1376,16 +1527,31 @@ impl Server {
             let entry = &registry.models[batch.model as usize];
             let runtime = &shared.models[batch.model as usize];
             let mstats = &runtime.stats;
+            let tracer = &shared.tracer;
             if batch.failed {
                 // The encode worker panicked on this batch (and was
                 // respawned in place). `labels` still holds one entry
                 // per request, so exactly that many pendings pair with
                 // it: fail each explicitly — the positional pairing for
                 // every later batch stays exact.
+                let t_fail = if tracer.enabled() { tracer.now_ns() } else { 0 };
                 for _ in 0..batch.labels.len() {
                     let Ok(pending) = pending_rx.recv() else {
                         return false;
                     };
+                    if let Some(ctx) = pending.trace {
+                        // Failed requests never reach the scanner: record
+                        // a zero-width scan span at consumer pickup so the
+                        // chain still telescopes, marked `failed` (the
+                        // tracer keeps these out of the stage histograms).
+                        tracer.record(trace_record(
+                            ctx,
+                            batch,
+                            (t_fail, t_fail),
+                            tracer.now_ns(),
+                            true,
+                        ));
+                    }
                     shared.stats.failed.fetch_add(1, Ordering::Relaxed);
                     shared.stats.completed.fetch_add(1, Ordering::Relaxed);
                     mstats.failed.fetch_add(1, Ordering::Relaxed);
@@ -1397,12 +1563,14 @@ impl Server {
             // One sharded scan for the whole model-homogeneous batch
             // (the scorer fan-out amortizes over every request in it);
             // results are exactly equal to per-query single-scan top1.
+            let t_scan_start = if tracer.enabled() { tracer.now_ns() } else { 0 };
             entry.store.top1_batch_into(
                 &batch.encodings,
                 entry.precision,
                 &mut scratch,
                 &mut top1s,
             );
+            let t_scan_end = if tracer.enabled() { tracer.now_ns() } else { 0 };
             // Every scored request scanned every shard of this model.
             for scans in runtime.shard_scans.iter() {
                 scans.fetch_add(batch.encodings.len() as u64, Ordering::Relaxed);
@@ -1412,6 +1580,18 @@ impl Server {
                     // Stream half dropped mid-batch: nothing left to pair.
                     return false;
                 };
+                if let Some(ctx) = pending.trace {
+                    // The completion edge is stamped BEFORE the latency
+                    // read below, so a trace's stage sum never exceeds
+                    // the latency the histograms record for it.
+                    tracer.record(trace_record(
+                        ctx,
+                        batch,
+                        (t_scan_start, t_scan_end),
+                        tracer.now_ns(),
+                        false,
+                    ));
+                }
                 let latency = pending.t_submit.elapsed();
                 shared.stats.latency_ns.record(latency.as_nanos() as u64);
                 shared.stats.completed.fetch_add(1, Ordering::Relaxed);

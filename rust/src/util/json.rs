@@ -106,6 +106,46 @@ impl Json {
         out
     }
 
+    /// Single-line form, no trailing newline — one value per line for
+    /// JSONL streams (trace dumps), same escaping and number formatting
+    /// as [`Json::pretty`], so it round-trips through [`Json::parse`].
+    pub fn compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => out.push_str(&fmt_number(*x)),
+            Json::Str(s) => write_string(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_string(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write_pretty(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -447,6 +487,22 @@ mod tests {
         assert_eq!(Json::parse(&text).unwrap(), v);
         // Integral numbers print without a fraction.
         assert!(text.contains("\"iters\": 1000000"), "{text}");
+    }
+
+    #[test]
+    fn compact_is_one_line_and_round_trips() {
+        let v = Json::obj(vec![
+            ("name", Json::str("bloom d=10k")),
+            ("median_ns", Json::num(1234.5)),
+            ("iters", Json::num(1_000_000.0)),
+            ("tags", Json::Arr(vec![Json::str("a\"b"), Json::Null, Json::Bool(true)])),
+            ("empty", Json::Arr(vec![])),
+            ("nested", Json::obj(vec![("x", Json::num(-3.0))])),
+        ]);
+        let text = v.compact();
+        assert!(!text.contains('\n'), "{text}");
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        assert!(text.contains("\"iters\":1000000"), "{text}");
     }
 
     #[test]

@@ -26,6 +26,7 @@ use shdc::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg
 use shdc::data::synthetic::SyntheticConfig;
 use shdc::data::{RecordStream, SyntheticStream};
 use shdc::encoding::BundleMethod;
+use shdc::obs::ObsCfg;
 use shdc::serve::{ServeCfg, Server};
 
 /// System allocator wrapper counting every allocation-ish event
@@ -149,8 +150,11 @@ fn assert_alloc_free(label: &str, workers: usize, queue_depth: usize) {
 /// `classify` while the allocation counters watch every thread — the
 /// submission queue, slot machinery, micro-batcher swap path, encode
 /// workers, AM scoring scratch and response hand-back must all run
-/// without per-request heap traffic once warm.
-fn measure_serve(warmup: u64, window: u64, total: u64) -> (u64, u64) {
+/// without per-request heap traffic once warm. The `obs` config is
+/// threaded through so the same window pins the tracer's claims:
+/// disabled tracing adds nothing, and *enabled* sampling stays
+/// heap-free too (Copy contexts, preallocated rings and histograms).
+fn measure_serve(obs: ObsCfg, warmup: u64, window: u64, total: u64) -> (u64, u64) {
     // 2-class prototype store at the encoder's output dim (2048 + 512).
     let d = 2048 + 512;
     let mut rng = shdc::util::rng::Rng::new(7);
@@ -174,6 +178,7 @@ fn measure_serve(warmup: u64, window: u64, total: u64) -> (u64, u64) {
         // Multi-shard scans trade one spawn per micro-batch for scan
         // parallelism and are exercised in tests/serve_smoke.rs instead.
         am_shards: 1,
+        obs,
         ..ServeCfg::new(enc_cfg(43))
     };
     let (server, handle) = Server::new(cfg, store);
@@ -198,10 +203,10 @@ fn measure_serve(warmup: u64, window: u64, total: u64) -> (u64, u64) {
     (end.0 - start.0, end.1 - start.1)
 }
 
-fn assert_serve_alloc_free(label: &str) {
+fn assert_serve_alloc_free(label: &str, obs: ObsCfg) {
     let mut observed = Vec::new();
     for attempt in 0..3 {
-        let (allocs, deallocs) = measure_serve(400, 300, 720);
+        let (allocs, deallocs) = measure_serve(obs, 400, 300, 720);
         if allocs == 0 && deallocs == 0 {
             return;
         }
@@ -222,5 +227,12 @@ fn steady_state_pipeline_is_allocation_free() {
     assert_alloc_free("3-worker stealing", 3, 4);
     // Phase 3: the serving loop — submit → micro-batch → encode → AM
     // score → respond — is allocation-free per request once warm.
-    assert_serve_alloc_free("closed-loop serve");
+    assert_serve_alloc_free("closed-loop serve", ObsCfg::default());
+    // Phase 4: same loop with stage-span tracing live (1-in-16
+    // sampling). Sampled requests carry Copy contexts and land in
+    // preallocated rings/histograms, so the window must still be clean.
+    assert_serve_alloc_free(
+        "closed-loop serve traced",
+        ObsCfg { sample_every: 16, ring_cap: 512 },
+    );
 }

@@ -1,0 +1,317 @@
+//! End-to-end contract tests for the stage-span tracing pipeline
+//! (`shdc::obs` wired through the serving stack):
+//!
+//! * disabled tracing is the default and records nothing;
+//! * sampled traces carry a monotone nine-edge timestamp chain whose
+//!   seven stage spans telescope exactly to the submit→complete time,
+//!   and never exceed the run's recorded latency maximum;
+//! * 1-in-N sampling is deterministic by global submission index;
+//! * per-worker trace rings wrap around keeping the newest records
+//!   while the sampled/dropped accounting stays exact;
+//! * per-model stage histograms reconcile with the per-model completion
+//!   counters of [`ServeSnapshot`];
+//! * injected worker panics deliver failed-marked traces (zero-width
+//!   scan span) that stay out of the stage histograms, and no sampled
+//!   request's trace is orphaned.
+
+use std::sync::Once;
+use std::time::Duration;
+
+use shdc::am::AmStore;
+use shdc::coordinator::{CatCfg, CoordinatorCfg, EncoderCfg, FaultPlan, NumCfg};
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::data::{RecordStream, SyntheticStream};
+use shdc::encoding::BundleMethod;
+use shdc::obs::ObsCfg;
+use shdc::serve::{ModelRegistry, ServeCfg, ServeError, ServeHandle, Server, TenantQuota};
+use shdc::util::rng::Rng;
+
+/// Injected panics are part of the plan, not noise: suppress their
+/// backtrace spew (and only theirs) so a green run has a readable log.
+fn quiet_injected_panics() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains("shdc injected fault"))
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn encoder_cfg(seed: u64) -> EncoderCfg {
+    EncoderCfg {
+        cat: CatCfg::Bloom { d: 256, k: 2 },
+        num: NumCfg::None,
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed,
+    }
+}
+
+fn small_store(d: usize, seed: u64) -> AmStore {
+    let mut rng = Rng::new(seed);
+    let rows: Vec<Vec<f32>> =
+        (0..2).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+    AmStore::from_prototypes(d, &rows, None)
+}
+
+fn serve_cfg_obs(obs: ObsCfg, seed: u64, n_workers: usize, batch_size: usize) -> ServeCfg {
+    ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size,
+            n_workers,
+            queue_depth: 2,
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(200),
+        queue_cap: 64,
+        slots: 32,
+        obs,
+        ..ServeCfg::new(encoder_cfg(seed))
+    }
+}
+
+/// Drive `n` sequential classify calls from one client thread (fully
+/// deterministic submission order — submission index == request order).
+fn run_sequential(handle: &ServeHandle, data_seed: u64, n: u64) {
+    let mut stream = SyntheticStream::new(SyntheticConfig::sampled(data_seed));
+    let mut rec = stream.next_record().expect("unbounded stream");
+    for _ in 0..n {
+        let resp = handle.classify(rec).expect("in-capacity classify");
+        rec = resp.record;
+        stream.refill_record(&mut rec);
+    }
+}
+
+#[test]
+fn disabled_by_default_records_nothing() {
+    let cfg = serve_cfg_obs(ObsCfg::default(), 60, 2, 8);
+    assert_eq!(cfg.obs.sample_every, 0, "tracing must be opt-in");
+    let (server, handle) = Server::new(cfg, small_store(256, 61));
+    let server_thread = std::thread::spawn(move || server.run());
+    run_sequential(&handle, 62, 50);
+    handle.shutdown();
+    server_thread.join().expect("server");
+    assert!(!handle.tracing_enabled());
+    assert!(handle.drain_traces().is_empty());
+    let snap = handle.obs_snapshot();
+    assert_eq!(snap.sampled, 0);
+    assert_eq!(snap.dropped, 0);
+    for s in &snap.stages {
+        assert_eq!(s.hist.count, 0, "stage {} must be empty", s.stage);
+    }
+}
+
+#[test]
+fn span_chain_is_monotone_and_telescopes() {
+    let obs = ObsCfg { sample_every: 1, ring_cap: 256 };
+    let (server, handle) = Server::new(serve_cfg_obs(obs, 63, 2, 8), small_store(256, 64));
+    let server_thread = std::thread::spawn(move || server.run());
+    run_sequential(&handle, 65, 40);
+    handle.shutdown();
+    server_thread.join().expect("server");
+
+    let serve = handle.stats();
+    let traces = handle.drain_traces();
+    assert_eq!(traces.len(), 40, "every request sampled, none orphaned");
+    for t in &traces {
+        assert!(!t.failed);
+        // The nine edges are ordered by happens-before relations on the
+        // one monotonic clock, under any steal interleaving.
+        let edges = [
+            t.t_submit,
+            t.t_enqueue,
+            t.t_cut,
+            t.t_pop,
+            t.t_encode_start,
+            t.t_encode_end,
+            t.t_scan_start,
+            t.t_scan_end,
+            t.t_complete,
+        ];
+        for w in edges.windows(2) {
+            assert!(w[0] <= w[1], "non-monotone span chain: {t:?}");
+        }
+        // Telescoping: the seven spans partition submit→complete.
+        assert_eq!(t.stages_sum_ns(), t.end_to_end_ns(), "{t:?}");
+        // The completion edge is stamped before the latency histogram's
+        // measurement, so no trace can exceed the recorded maximum.
+        assert!(t.end_to_end_ns() <= serve.latency_ns.max, "{t:?}");
+    }
+}
+
+#[test]
+fn sampling_cadence_is_deterministic() {
+    let obs = ObsCfg { sample_every: 8, ring_cap: 256 };
+    let (server, handle) = Server::new(serve_cfg_obs(obs, 66, 2, 8), small_store(256, 67));
+    let server_thread = std::thread::spawn(move || server.run());
+    run_sequential(&handle, 68, 64);
+    handle.shutdown();
+    server_thread.join().expect("server");
+
+    let snap = handle.obs_snapshot();
+    assert_eq!(snap.sample_every, 8);
+    assert_eq!(snap.sampled, 8, "64 sequential submissions, 1-in-8");
+    assert_eq!(snap.dropped, 0);
+    let traces = handle.drain_traces();
+    let ids: Vec<u64> = traces.iter().map(|t| t.req_id).collect();
+    // One sequential client: submission index == request order, so the
+    // sampled set is exactly every 8th submission starting at 0.
+    assert_eq!(ids, vec![0, 8, 16, 24, 32, 40, 48, 56]);
+}
+
+#[test]
+fn ring_wraparound_keeps_newest_traces() {
+    // One worker so every trace lands in the same 4-slot ring.
+    let obs = ObsCfg { sample_every: 1, ring_cap: 4 };
+    let (server, handle) = Server::new(serve_cfg_obs(obs, 69, 1, 8), small_store(256, 70));
+    let server_thread = std::thread::spawn(move || server.run());
+    run_sequential(&handle, 71, 100);
+    handle.shutdown();
+    server_thread.join().expect("server");
+
+    // Snapshot before draining: `sampled` counts retained + overwritten.
+    let snap = handle.obs_snapshot();
+    assert_eq!(snap.sampled, 100);
+    assert_eq!(snap.dropped, 96);
+    // The histograms saw every trace, not just the retained window.
+    for s in &snap.stages {
+        assert_eq!(s.hist.count, 100, "stage {}", s.stage);
+    }
+    let traces = handle.drain_traces();
+    let ids: Vec<u64> = traces.iter().map(|t| t.req_id).collect();
+    assert_eq!(ids, vec![96, 97, 98, 99], "overwrite-oldest keeps the newest");
+}
+
+#[test]
+fn per_model_stage_histograms_reconcile_with_serve_counters() {
+    use shdc::am::Precision;
+    let obs = ObsCfg { sample_every: 1, ring_cap: 512 };
+    let mut registry = ModelRegistry::new();
+    let a = registry.register(
+        "a",
+        encoder_cfg(72),
+        small_store(256, 73),
+        Precision::F32,
+        TenantQuota::default(),
+    );
+    let b = registry.register(
+        "b",
+        encoder_cfg(74),
+        small_store(256, 75),
+        Precision::Int8,
+        TenantQuota::default(),
+    );
+    let cfg = serve_cfg_obs(obs, 72, 2, 8);
+    let (server, handle) = Server::with_registry(cfg, registry);
+    let server_thread = std::thread::spawn(move || server.run());
+    // One sequential client alternating tenants: 30 requests each.
+    let mut stream = SyntheticStream::new(SyntheticConfig::sampled(76));
+    let mut rec = stream.next_record().expect("unbounded stream");
+    for i in 0..60u32 {
+        let model = if i % 2 == 0 { a } else { b };
+        let resp = handle.classify_for(model, rec).expect("in-capacity classify");
+        rec = resp.record;
+        stream.refill_record(&mut rec);
+    }
+    handle.shutdown();
+    server_thread.join().expect("server");
+
+    let serve = handle.stats();
+    let snap = handle.obs_snapshot();
+    assert_eq!(serve.completed, 60);
+    assert_eq!(snap.sampled, 60);
+    assert_eq!(snap.models.len(), 2);
+    // Every stage histogram of model m counted exactly m's completions
+    // (clean run: nothing failed, expired, or shed).
+    for (m, ms) in snap.models.iter().enumerate() {
+        let completed = serve.models[m].completed;
+        assert_eq!(completed, 30);
+        for s in &ms.stages {
+            assert_eq!(
+                s.hist.count, completed,
+                "model {m} stage {} vs serve counter",
+                s.stage
+            );
+        }
+    }
+    // And the overall table is their aggregate.
+    for s in &snap.stages {
+        assert_eq!(s.hist.count, serve.completed, "overall stage {}", s.stage);
+    }
+}
+
+#[test]
+fn injected_panic_delivers_failed_traces_and_keeps_them_out_of_histograms() {
+    quiet_injected_panics();
+    // batch_size 1 → each request is its own batch; seq 3 panics, so
+    // exactly one request fails. Everything is sampled.
+    let obs = ObsCfg { sample_every: 1, ring_cap: 64 };
+    let cfg = ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 1,
+            n_workers: 1,
+            queue_depth: 2,
+            fault: FaultPlan { panic_on_seq: vec![3], ..FaultPlan::default() },
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(200),
+        queue_cap: 64,
+        slots: 32,
+        obs,
+        ..ServeCfg::new(encoder_cfg(77))
+    };
+    let (server, handle) = Server::new(cfg, small_store(256, 78));
+    let server_thread = std::thread::spawn(move || server.run());
+    let mut stream = SyntheticStream::new(SyntheticConfig::sampled(79));
+    let mut rec = stream.next_record().expect("unbounded stream");
+    let mut client_failed = 0u64;
+    for _ in 0..20 {
+        match handle.classify(rec) {
+            Ok(resp) => {
+                rec = resp.record;
+                stream.refill_record(&mut rec);
+            }
+            Err(ServeError::Internal) => {
+                client_failed += 1;
+                // The record moved into the server; draw a fresh one.
+                rec = stream.next_record().expect("unbounded stream");
+            }
+            Err(e) => panic!("unexpected terminal outcome: {e:?}"),
+        }
+    }
+    handle.shutdown();
+    server_thread.join().expect("server");
+
+    let serve = handle.stats();
+    assert_eq!(client_failed, 1, "seq 3 fails exactly its one-request batch");
+    assert_eq!(serve.failed, 1);
+    assert_eq!(serve.completed, 20, "failed requests still complete explicitly");
+
+    let snap = handle.obs_snapshot();
+    let traces = handle.drain_traces();
+    // No orphans: every sampled request's trace was delivered — the
+    // failed one included — with unique ids.
+    assert_eq!(traces.len(), 20);
+    let mut ids: Vec<u64> = traces.iter().map(|t| t.req_id).collect();
+    ids.dedup();
+    assert_eq!(ids.len(), 20, "req_ids must be unique");
+    let failed: Vec<_> = traces.iter().filter(|t| t.failed).collect();
+    assert_eq!(failed.len(), 1, "failed-marked traces match the injected plan");
+    // Failed requests never reach the scanner: zero-width scan span,
+    // but the chain still telescopes to the end-to-end time.
+    let ft = failed[0];
+    assert_eq!(ft.t_scan_start, ft.t_scan_end);
+    assert_eq!(ft.stages_sum_ns(), ft.end_to_end_ns());
+    // Stage histograms describe successful requests only.
+    for s in &snap.stages {
+        assert_eq!(s.hist.count, 19, "stage {} must exclude the failed trace", s.stage);
+    }
+}

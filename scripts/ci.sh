@@ -75,16 +75,28 @@ cargo test -q --test am_sharding
 echo "== cargo test -q --test fault_injection =="
 cargo test -q --test fault_injection
 
+# Stage-span tracing contract in isolation: monotone telescoping spans,
+# deterministic 1-in-N sampling, ring wraparound accounting, per-model
+# histogram reconciliation, and failed-trace handling under injected
+# panics. Also in the full suite; the dedicated leg keeps the
+# observability contract visible in CI logs.
+echo "== cargo test -q --test obs_tracing =="
+cargo test -q --test obs_tracing
+
 # Overload smoke: a tiny closed-loop sweep plus the open-loop phase at
 # 2.5x capacity must TERMINATE with a nonzero shed rate rather than
 # hang — the cheapest end-to-end check that admission control actually
 # sheds under saturation. SHDC_SERVE_CLASSES keeps the final many-class
 # leg (Zipf workload through the sharded scan, per-shard counters
 # asserted in-binary) small enough for CI while still multi-shard.
-echo "== serve_bench overload + many-class smoke =="
+# --trace-out adds the traced closed+open runs: the binary writes the
+# sampled spans as JSONL, re-reads the file, and asserts every line
+# parses and every trace's stage spans telescope within its end-to-end
+# latency.
+echo "== serve_bench overload + many-class + trace-dump smoke =="
 SHDC_SERVE_REQUESTS=2000 SHDC_SERVE_CLIENTS=4 SHDC_SERVE_OPEN_REQUESTS=2000 \
     SHDC_SERVE_CLASSES=200 \
-    cargo run --release --bin serve_bench
+    cargo run --release --bin serve_bench -- --trace-out target/serve_traces.jsonl
 
 if [[ "$run_simd" == 1 ]]; then
     # The kernel differential suite (tests/kernel_equivalence.rs) must
