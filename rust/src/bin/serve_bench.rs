@@ -26,6 +26,14 @@
 //! then re-reads the file and checks each line parses and its stage
 //! spans telescope to its end-to-end time.
 //!
+//! With `--metrics-addr ADDR` (e.g. `127.0.0.1:0`) a sixth leg stands
+//! up a server with the live metrics exporter + SLO watchdog enabled,
+//! scrapes `GET /metrics` over HTTP while clients are still submitting,
+//! verifies every exposition line parses as `name{labels} value`,
+//! scrapes again after the load drains and checks the counters moved
+//! monotonically to exactly the offered totals, and fetches `/health`
+//! and `/snapshot` as JSON.
+//!
 //! ```text
 //! cargo run --release --bin serve_bench
 //! SHDC_SERVE_REQUESTS=200000 SHDC_SERVE_CLIENTS=16 \
@@ -33,6 +41,7 @@
 //! SHDC_SERVE_OPEN_REQUESTS=2000 cargo run --release --bin serve_bench
 //! SHDC_SERVE_CLASSES=100000 cargo run --release --bin serve_bench
 //! cargo run --release --bin serve_bench -- --trace-out traces.jsonl
+//! cargo run --release --bin serve_bench -- --metrics-addr 127.0.0.1:0
 //! ```
 
 use std::time::Duration;
@@ -42,11 +51,13 @@ use shdc::coordinator::{CatCfg, CoordinatorCfg, EncoderCfg, NumCfg};
 use shdc::data::synthetic::SyntheticConfig;
 use shdc::data::{ManyClassConfig, RecordStream};
 use shdc::encoding::BundleMethod;
+use shdc::obs::export::{http_get, parse_exposition, ParsedSeries};
+use shdc::obs::health::SloCfg;
 use shdc::obs::ObsCfg;
 use shdc::serve::{
     build_many_class_store, run_closed_loop, run_closed_loop_many_class,
     run_closed_loop_registry, run_open_loop, AdmissionPolicy, LoadCfg, ManyClassLoadCfg,
-    ModelRegistry, OpenLoadCfg, RequestOpts, ServeCfg, TenantQuota,
+    ModelRegistry, OpenLoadCfg, RequestOpts, ServeCfg, Server, TenantQuota,
 };
 use shdc::util::env_u64;
 use shdc::util::json::Json;
@@ -87,6 +98,7 @@ fn main() {
     let open_requests = env_u64("SHDC_SERVE_OPEN_REQUESTS", 10_000);
     let n_classes = env_u64("SHDC_SERVE_CLASSES", 1_000) as usize;
     let mut trace_out: Option<String> = None;
+    let mut metrics_addr: Option<String> = None;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -97,8 +109,18 @@ fn main() {
                     std::process::exit(2);
                 }
             },
+            "--metrics-addr" => match args.next() {
+                Some(addr) => metrics_addr = Some(addr),
+                None => {
+                    eprintln!("--metrics-addr needs a bind address (e.g. 127.0.0.1:0)");
+                    std::process::exit(2);
+                }
+            },
             other => {
-                eprintln!("unknown argument: {other} (supported: --trace-out PATH)");
+                eprintln!(
+                    "unknown argument: {other} \
+                     (supported: --trace-out PATH, --metrics-addr ADDR)"
+                );
                 std::process::exit(2);
             }
         }
@@ -264,6 +286,132 @@ fn main() {
     if let Some(path) = trace_out {
         dump_traces(&path, &enc, &data, total_requests, open_requests, max_clients, capacity_rps);
     }
+
+    if let Some(addr) = metrics_addr {
+        metrics_leg(&addr, &enc, &data, max_clients.max(2), total_requests.min(20_000));
+    }
+}
+
+/// Pull an unlabeled series' value out of a parsed exposition.
+fn series_value(series: &[ParsedSeries], name: &str) -> f64 {
+    series
+        .iter()
+        .find(|s| s.name == name && s.labels.is_empty())
+        .unwrap_or_else(|| panic!("exposition is missing series {name}"))
+        .value
+}
+
+/// The `--metrics-addr` leg: a closed-loop run against a server with
+/// the metrics exporter and SLO watchdog live. Scrapes `/metrics` while
+/// the clients are still submitting and validates every line of the
+/// exposition parses as `name{labels} value`; scrapes again after the
+/// load drains and checks the counters moved monotonically to exactly
+/// the offered totals; fetches `/health` and `/snapshot` and checks
+/// both parse as JSON.
+fn metrics_leg(
+    addr: &str,
+    enc: &EncoderCfg,
+    data: &SyntheticConfig,
+    clients: usize,
+    requests: u64,
+) {
+    println!("== serve_bench: live metrics exposition (--metrics-addr {addr}) ==");
+    let cfg = ServeCfg {
+        obs: ObsCfg { sample_every: 4, ring_cap: 4096 },
+        metrics_addr: Some(addr.to_string()),
+        slo: Some(SloCfg::default()),
+        publish_interval: Duration::from_millis(10),
+        ..serve_cfg(enc, clients, Precision::F32)
+    };
+    let (server, handle) = Server::new(cfg, bundle_store(enc, 32));
+    let server = std::thread::spawn(move || server.run());
+    let bound = handle.metrics_addr().expect("exporter bound at construction");
+    let timeout = Duration::from_secs(5);
+    println!("   exporter live on http://{bound}  (/metrics /health /snapshot)");
+
+    let per_client = (requests / clients as u64).max(1);
+    let mut load_threads = Vec::new();
+    for _ in 0..clients {
+        let h = handle.clone();
+        let data = data.clone();
+        load_threads.push(std::thread::spawn(move || {
+            let mut stream = shdc::data::SyntheticStream::new(data);
+            let mut ok = 0u64;
+            for _ in 0..per_client {
+                let rec = stream.next_record().expect("synthetic stream is infinite");
+                if h.classify(rec).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+
+    // Scrape #1 lands while the closed loop is still running: the
+    // exposition must be valid mid-flight, not just at rest.
+    let (status, body) = http_get(bound, "/metrics", timeout).expect("mid-run scrape");
+    assert_eq!(status, 200, "/metrics must answer 200");
+    let mid = parse_exposition(&body)
+        .unwrap_or_else(|e| panic!("mid-run exposition has an invalid line: {e}"));
+    let mid_completed = series_value(&mid, "shdc_serve_completed_total");
+    println!(
+        "   mid-run scrape: {} series, all lines parse; completed so far: {}",
+        mid.len(),
+        mid_completed,
+    );
+
+    let completed_by_clients: u64 = load_threads
+        .into_iter()
+        .map(|t| t.join().expect("client thread"))
+        .sum();
+
+    // Scrape #2 after the load drained: counters are monotone and must
+    // land exactly on the offered totals (closed loop, Block admission
+    // — nothing sheds, nothing expires).
+    let (status, body) = http_get(bound, "/metrics", timeout).expect("end-of-run scrape");
+    assert_eq!(status, 200);
+    let fin = parse_exposition(&body)
+        .unwrap_or_else(|e| panic!("end-of-run exposition has an invalid line: {e}"));
+    let fin_completed = series_value(&fin, "shdc_serve_completed_total");
+    let fin_submitted = series_value(&fin, "shdc_serve_submitted_total");
+    assert!(
+        fin_completed >= mid_completed,
+        "completed_total moved backwards between scrapes ({mid_completed} -> {fin_completed})"
+    );
+    assert_eq!(
+        fin_completed as u64, completed_by_clients,
+        "end-of-run completed_total must equal the clients' completions"
+    );
+    assert_eq!(
+        fin_submitted as u64,
+        clients as u64 * per_client,
+        "end-of-run submitted_total must equal the offered load"
+    );
+
+    let (status, health) = http_get(bound, "/health", timeout).expect("health fetch");
+    assert_eq!(status, 200);
+    let health = Json::parse(&health).expect("/health parses as JSON");
+    let verdict = health
+        .get("health")
+        .and_then(|h| h.get("verdict"))
+        .and_then(Json::as_str)
+        .expect("health verdict")
+        .to_string();
+    let (status, snap) = http_get(bound, "/snapshot", timeout).expect("snapshot fetch");
+    assert_eq!(status, 200);
+    Json::parse(&snap).expect("/snapshot parses as JSON");
+    let (status, _) = http_get(bound, "/nope", timeout).expect("404 fetch");
+    assert_eq!(status, 404, "unknown paths must 404");
+
+    handle.shutdown();
+    server.join().expect("server thread");
+    println!(
+        "   end-of-run scrape: {} series; completed {} / submitted {}; verdict {verdict}",
+        fin.len(),
+        fin_completed,
+        fin_submitted,
+    );
+    println!("   metrics leg OK: exposition valid mid-run and at rest, counters reconcile");
 }
 
 /// The `--trace-out` leg: one traced closed-loop run and one traced

@@ -40,8 +40,15 @@
 //!    ─[complete]─ t_complete
 //!
 //!  Workers stamp pop/encode edges onto `EncodedBatch::stamps` when
-//!  `CoordinatorCfg::obs` is wired; the serve consumer assembles the
-//!  full trace per sampled request.
+//!  `CoordinatorCfg::obs` is wired with tracing enabled; the serve
+//!  consumer assembles the full trace per sampled request.
+//!
+//!  Monitoring (`crate::obs::export`) taps the same counters from the
+//!  outside — nothing on this diagram waits on it:
+//!
+//!  serve counters + tracer gauges ─► MetricsPublisher (interval tick)
+//!      ─► sample ring ─► windowed rates + SLO verdict + event ring
+//!      ─► GET /metrics · /health · /snapshot  (exporter listener)
 //! ```
 //!
 //! **Dispatch (§Perf).** The reader round-robins batches onto per-worker
@@ -220,9 +227,11 @@ pub struct CoordinatorCfg {
     /// Stage-span tracer shared with the serving layer. When present
     /// (and enabled) workers stamp each batch's pop/encode-start/
     /// encode-end edges and steal provenance into
-    /// [`EncodedBatch::stamps`], and worker retirement decrements the
-    /// tracer's live-worker gauge. `None` (the default — training
-    /// pipelines, untraced serving) costs one `Option` check per batch.
+    /// [`EncodedBatch::stamps`] *when the tracer has sampling enabled*,
+    /// and worker retirement always moves the tracer's live-worker
+    /// gauge (the serve monitoring publisher reads it even with tracing
+    /// off, so serving wires this unconditionally). `None` (the default
+    /// — training pipelines) costs one `Option` check per batch.
     pub obs: Option<Arc<crate::obs::Tracer>>,
 }
 
@@ -677,6 +686,12 @@ where
         let max_panics = cfg.max_worker_panics;
         let fault = cfg.fault.clone();
         let wobs = cfg.obs.clone();
+        // Serving always wires the tracer (the monitoring publisher
+        // reads its live-worker gauge even with tracing off), so
+        // presence no longer implies tracing: gate the per-batch clock
+        // stamping on `enabled` separately. Retirement still goes to
+        // `wobs` — the gauge must move regardless of sampling.
+        let sobs = wobs.clone().filter(|o| o.enabled());
         let wsched = Arc::clone(&sched);
         let wspine_tx = spine_tx.clone();
         workers.push(thread::spawn(move || {
@@ -723,7 +738,7 @@ where
                 // below. Plain u64 fields on the batch — no allocation,
                 // and three clock reads per *batch* when enabled.
                 let mut stamps = crate::obs::BatchStamps::default();
-                if let Some(obs) = wobs.as_deref() {
+                if let Some(obs) = sobs.as_deref() {
                     stamps.t_pop = obs.now_ns();
                     stamps.stolen = stolen;
                 }
@@ -755,7 +770,7 @@ where
                 // hostile record) must cost exactly this batch, not the
                 // pipeline. No lock is held here, so no Mutex is ever
                 // poisoned by an encode panic.
-                if let Some(obs) = wobs.as_deref() {
+                if let Some(obs) = sobs.as_deref() {
                     stamps.t_encode_start = obs.now_ns();
                 }
                 let encode_ok = catch_unwind(AssertUnwindSafe(|| {
@@ -766,7 +781,7 @@ where
                     enc.encode_batch_into(&raw.records, &mut encodings);
                 }))
                 .is_ok();
-                if let Some(obs) = wobs.as_deref() {
+                if let Some(obs) = sobs.as_deref() {
                     // Captured panic or not: a failed batch's encode span
                     // covers entry→unwind, which is what its trace shows.
                     stamps.t_encode_end = obs.now_ns();

@@ -1,0 +1,1107 @@
+//! Live metrics exposition: the publisher/exporter half of the
+//! monitoring subsystem (`crate::obs::health` holds the SLO judgment).
+//!
+//! # Dataflow
+//!
+//! ```text
+//!  serve counters ──► MetricsPublisher thread (publish_interval tick)
+//!  + histograms         │ one Sample per tick (counters are monotone,
+//!  + tracer gauges      ▼  so consecutive samples subtract exactly)
+//!                 SampleRing (preallocated, overwrite-oldest)
+//!                      │ last two samples = one window
+//!                      ▼
+//!          WindowObs deltas ──► SloEvaluator ──► HealthReport
+//!                      │                │
+//!                      ▼                ▼ lifecycle events
+//!               WindowRates        EventRing (bounded)
+//!                      │                │
+//!                      ▼                ▼
+//!   listener thread (std::net::TcpListener, `ServeCfg::metrics_addr`)
+//!       GET /metrics   Prometheus text exposition (see below)
+//!       GET /health    {"health": verdict+rates, "events": [...]}
+//!       GET /snapshot  the ObsSnapshot JSON (stage histograms, gauges)
+//! ```
+//!
+//! Both threads are owned by the server: spawned at construction,
+//! stopped and joined by `Server::run` on shutdown. Nothing here
+//! touches the request hot path — `classify` never reads or writes the
+//! hub, so the zero-allocation serve window holds with publishing
+//! enabled (pinned by `tests/alloc_regression.rs`).
+//!
+//! # Scraping
+//!
+//! ```text
+//! curl http://127.0.0.1:9464/metrics     # Prometheus text format
+//! curl http://127.0.0.1:9464/health     # JSON verdict + recent events
+//! curl http://127.0.0.1:9464/snapshot   # per-stage/per-model histograms
+//! ```
+//!
+//! `/metrics` reads the live counters at scrape time (honest Prometheus
+//! semantics: two scrapes subtract to exactly the traffic between
+//! them); the windowed `shdc_window_*` and `shdc_slo_*` series come
+//! from the publisher's last window. Every emitted line parses as
+//! `name{labels} value` — [`parse_exposition`] is the checker the tests
+//! and the `serve_bench --metrics-addr` smoke run against the real
+//! output.
+//!
+//! The exporter is deliberately minimal HTTP/1.1: one connection served
+//! at a time (inherently bounded), 4 KiB request cap, read/write
+//! timeouts, `Connection: close` on every response. A scraper cannot
+//! wedge the server — the worst a slow client can do is delay the next
+//! scrape.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::obs::health::{
+    EventKind, EventRing, HealthReport, ObsEvent, SloCfg, SloEvaluator, WindowObs,
+};
+use crate::obs::{json as obs_json, Stage};
+use crate::serve::latency::HistBuckets;
+use crate::serve::{HistSnapshot, ModelSnapshot, ServeHandle, ServeSnapshot};
+use crate::util::json::Json;
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
+
+/// Samples the publisher retains (~25 s of history at the default
+/// 100 ms interval). Windows only ever need the last two; the rest is
+/// scrape-time headroom and wraparound slack.
+const RING_CAP: usize = 256;
+/// Lifecycle events retained between drains.
+const EVENT_CAP: usize = 256;
+/// Accept-loop poll period while idle (stop-flag latency bound).
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+
+/// Publisher configuration, assembled by `Server::with_registry` from
+/// the serve config.
+#[derive(Clone, Debug)]
+pub struct PublishCfg {
+    /// Sampling interval (`ServeCfg::publish_interval`); one window per
+    /// tick. Clamped to ≥ 1 ms.
+    pub interval: Duration,
+    /// SLO objectives (`ServeCfg::slo`, or defaults when only
+    /// `metrics_addr` enabled publishing).
+    pub slo: SloCfg,
+    /// Worker-pool size for the liveness check.
+    pub configured_workers: u64,
+    /// Submission-queue capacity for saturation events.
+    pub queue_cap: u64,
+}
+
+/// One timestamped capture of every monotone counter + histogram the
+/// windowed derivation needs. Cloned only on the publisher thread.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Nanoseconds since the hub's epoch.
+    pub t_ns: u64,
+    pub serve: ServeSnapshot,
+    /// Raw end-to-end latency buckets ([`HistBuckets::diff`] pairs).
+    pub latency: HistBuckets,
+    /// Raw per-stage buckets ([`Stage::ALL`] order; empty when tracing
+    /// is disabled).
+    pub stages: Vec<HistBuckets>,
+    pub live_workers: u64,
+    pub queue_depth: u64,
+}
+
+/// Preallocated overwrite-oldest ring of [`Sample`]s.
+#[derive(Debug)]
+pub struct SampleRing {
+    cap: usize,
+    buf: Vec<Sample>,
+    /// Index of the oldest sample once the ring is full.
+    at: usize,
+    /// Samples ever pushed (wraparound accounting).
+    total: u64,
+}
+
+impl SampleRing {
+    pub fn new(cap: usize) -> SampleRing {
+        let cap = cap.max(2); // a window needs two samples
+        SampleRing { cap, buf: Vec::with_capacity(cap), at: 0, total: 0 }
+    }
+
+    pub fn push(&mut self, s: Sample) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(s);
+        } else {
+            self.buf[self.at] = s;
+            self.at = (self.at + 1) % self.cap;
+        }
+    }
+
+    /// Samples currently retained.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Samples ever pushed (≥ `len()`; the difference wrapped around).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Newest sample.
+    pub fn latest(&self) -> Option<&Sample> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let newest = if self.buf.len() < self.cap {
+            self.buf.len() - 1
+        } else {
+            (self.at + self.cap - 1) % self.cap
+        };
+        self.buf.get(newest)
+    }
+
+    /// The two newest samples, older first — one window.
+    pub fn last_two(&self) -> Option<(&Sample, &Sample)> {
+        if self.buf.len() < 2 {
+            return None;
+        }
+        if self.buf.len() < self.cap {
+            // Not yet wrapped: indices are dense 0..len in push order.
+            let n = self.buf.len();
+            Some((&self.buf[n - 2], &self.buf[n - 1]))
+        } else {
+            let newest = (self.at + self.cap - 1) % self.cap;
+            let prev = (newest + self.cap - 1) % self.cap;
+            Some((&self.buf[prev], &self.buf[newest]))
+        }
+    }
+}
+
+/// Windowed rates between two samples — exact counter deltas over the
+/// wall-clock gap ([`ServeHandle::window_rates`], the `shdc_window_*`
+/// exposition series, and the perf snapshot's windowed section).
+#[derive(Clone, Debug)]
+pub struct WindowRates {
+    /// Window width, seconds.
+    pub window_s: f64,
+    pub submitted_per_s: f64,
+    pub completed_per_s: f64,
+    /// Overload sheds (`Shed` + admission timeouts) per second.
+    pub shed_per_s: f64,
+    /// Tenant-quota (policy) sheds per second.
+    pub quota_shed_per_s: f64,
+    /// Encode-batch failures (worker panics) per second.
+    pub failed_per_s: f64,
+    /// Deadline expiries per second.
+    pub expired_per_s: f64,
+    /// Distribution of exactly this window's latency samples.
+    pub latency: HistSnapshot,
+    /// Windowed per-stage distributions ([`Stage::ALL`] names); empty
+    /// when tracing is disabled.
+    pub stages: Vec<(&'static str, HistSnapshot)>,
+}
+
+impl WindowRates {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("window_s", Json::num(self.window_s)),
+            ("submitted_per_s", Json::num(self.submitted_per_s)),
+            ("completed_per_s", Json::num(self.completed_per_s)),
+            ("shed_per_s", Json::num(self.shed_per_s)),
+            ("quota_shed_per_s", Json::num(self.quota_shed_per_s)),
+            ("failed_per_s", Json::num(self.failed_per_s)),
+            ("expired_per_s", Json::num(self.expired_per_s)),
+            ("latency", obs_json::hist_json(&self.latency)),
+            (
+                "stages",
+                Json::Obj(
+                    self.stages
+                        .iter()
+                        .map(|(name, h)| (name.to_string(), obs_json::hist_json(h)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn delta(new: u64, old: u64) -> u64 {
+    new.saturating_sub(old)
+}
+
+/// Derive the window's exact rates from two monotone samples (older
+/// first). A zero-width window yields all-zero rates, never NaN.
+pub fn rates_between(prev: &Sample, cur: &Sample) -> WindowRates {
+    let dt_ns = delta(cur.t_ns, prev.t_ns);
+    let dt_s = dt_ns as f64 / 1e9;
+    let per = |d: u64| if dt_ns == 0 { 0.0 } else { d as f64 / dt_s };
+    let stages = if cur.stages.len() == Stage::COUNT && prev.stages.len() == Stage::COUNT {
+        Stage::ALL
+            .iter()
+            .zip(cur.stages.iter().zip(&prev.stages))
+            .map(|(&s, (c, p))| (s.name(), c.diff(p)))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    WindowRates {
+        window_s: dt_s,
+        submitted_per_s: per(delta(cur.serve.submitted, prev.serve.submitted)),
+        completed_per_s: per(delta(cur.serve.completed, prev.serve.completed)),
+        shed_per_s: per(delta(
+            cur.serve.shed + cur.serve.admission_timeouts,
+            prev.serve.shed + prev.serve.admission_timeouts,
+        )),
+        quota_shed_per_s: per(delta(cur.serve.quota_shed, prev.serve.quota_shed)),
+        failed_per_s: per(delta(cur.serve.failed, prev.serve.failed)),
+        expired_per_s: per(delta(cur.serve.expired, prev.serve.expired)),
+        latency: cur.latency.diff(&prev.latency),
+        stages,
+    }
+}
+
+/// The window observation the SLO evaluator consumes, from the same
+/// sample pair the rates derive from.
+fn window_between(prev: &Sample, cur: &Sample, queue_cap: u64) -> WindowObs {
+    let lat = cur.latency.diff(&prev.latency);
+    WindowObs {
+        t_ns: cur.t_ns,
+        window_s: delta(cur.t_ns, prev.t_ns) as f64 / 1e9,
+        submitted_delta: delta(cur.serve.submitted, prev.serve.submitted),
+        completed_delta: delta(cur.serve.completed, prev.serve.completed),
+        shed_delta: delta(
+            cur.serve.shed + cur.serve.admission_timeouts,
+            prev.serve.shed + prev.serve.admission_timeouts,
+        ),
+        quota_shed_delta: delta(cur.serve.quota_shed, prev.serve.quota_shed),
+        failed_delta: delta(cur.serve.failed, prev.serve.failed),
+        expired_delta: delta(cur.serve.expired, prev.serve.expired),
+        in_flight: cur.serve.submitted.saturating_sub(cur.serve.completed),
+        queue_depth: cur.queue_depth,
+        queue_cap,
+        live_workers: cur.live_workers,
+        p99_ns: lat.p99,
+        latency_count: lat.count,
+    }
+}
+
+/// Shared state of the monitoring threads: the sample ring, the SLO
+/// evaluator + latest report, the event ring, and the stop signal. The
+/// serve layer holds one `Arc<MetricsHub>` next to its `Shared`; the
+/// publisher and listener threads hold clones.
+///
+/// Lock order: only [`MetricsHub::tick`] holds more than one lock at a
+/// time (ring, then evaluator, then events, then health — strictly
+/// nested, acquired in that fixed order); every other accessor takes a
+/// single lock, so the graph is acyclic.
+#[derive(Debug)]
+pub struct MetricsHub {
+    cfg: PublishCfg,
+    /// Origin of every `t_ns` (hub construction).
+    epoch: Instant,
+    ring: Mutex<SampleRing>,
+    evaluator: Mutex<SloEvaluator>,
+    events: Mutex<EventRing>,
+    health: Mutex<HealthReport>,
+    stop: AtomicBool,
+    /// Parking lot for the publisher's interval wait (condvar so stop
+    /// interrupts a sleep instead of waiting it out).
+    stop_mx: Mutex<()>,
+    stop_cv: Condvar,
+    /// Actual bound address of the listener (set after bind; `None`
+    /// when no listener was configured). Lets `metrics_addr: "…:0"`
+    /// report the kernel-assigned port.
+    bound: Mutex<Option<SocketAddr>>,
+}
+
+impl MetricsHub {
+    pub fn new(cfg: PublishCfg) -> Arc<MetricsHub> {
+        let slo = cfg.slo;
+        let workers = cfg.configured_workers;
+        Arc::new(MetricsHub {
+            cfg,
+            epoch: Instant::now(),
+            ring: Mutex::new(SampleRing::new(RING_CAP)),
+            evaluator: Mutex::new(SloEvaluator::new(slo, workers)),
+            events: Mutex::new(EventRing::new(EVENT_CAP)),
+            health: Mutex::new(HealthReport::default()),
+            stop: AtomicBool::new(false),
+            stop_mx: Mutex::new(()),
+            stop_cv: Condvar::new(),
+            bound: Mutex::new(None),
+        })
+    }
+
+    /// Nanoseconds since the hub's epoch, on the monotonic clock.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Ingest one sample: push it, and when it closes a window (a
+    /// previous sample exists and time advanced), evaluate the SLOs and
+    /// refresh the health report. Called by the publisher thread; also
+    /// directly by tests.
+    pub fn tick(&self, sample: Sample) {
+        let mut ring = lock_unpoisoned(&self.ring);
+        let prev = ring.latest().cloned();
+        ring.push(sample.clone());
+        // Holding the ring lock through evaluation keeps tick atomic
+        // with respect to concurrent ticks (tests drive tick directly);
+        // scrape-side readers take each lock singly and briefly.
+        if let Some(prev) = prev {
+            if sample.t_ns > prev.t_ns {
+                let w = window_between(&prev, &sample, self.cfg.queue_cap);
+                let mut evaluator = lock_unpoisoned(&self.evaluator);
+                let mut events = lock_unpoisoned(&self.events);
+                let report = evaluator.evaluate(&w, &mut events);
+                drop(events);
+                drop(evaluator);
+                *lock_unpoisoned(&self.health) = report;
+            }
+        }
+    }
+
+    /// Signal both monitoring threads to exit. Idempotent — safe to
+    /// call any number of times, from any thread.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        let _g = lock_unpoisoned(&self.stop_mx);
+        self.stop_cv.notify_all();
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    /// Park until the next tick is due or [`Self::stop`] fires; `false`
+    /// means stopped.
+    fn wait_for_tick(&self) -> bool {
+        if self.stopped() {
+            return false;
+        }
+        let g = lock_unpoisoned(&self.stop_mx);
+        let interval = self.cfg.interval.max(Duration::from_millis(1));
+        let (_g, _timeout) = wait_timeout_unpoisoned(&self.stop_cv, g, interval);
+        !self.stopped()
+    }
+
+    /// Latest SLO report (default-healthy before the first window).
+    pub fn health(&self) -> HealthReport {
+        lock_unpoisoned(&self.health).clone()
+    }
+
+    /// Rates of the last closed window (None before two samples).
+    pub fn window_rates(&self) -> Option<WindowRates> {
+        let ring = lock_unpoisoned(&self.ring);
+        let (prev, cur) = ring.last_two()?;
+        Some(rates_between(prev, cur))
+    }
+
+    /// Drain the lifecycle event ring (oldest first, ring resets).
+    pub fn drain_events(&self) -> Vec<ObsEvent> {
+        lock_unpoisoned(&self.events).drain()
+    }
+
+    /// Clone the retained events without resetting (the `/health`
+    /// endpoint — scrapes must not race consumer drains).
+    pub fn peek_events(&self) -> Vec<ObsEvent> {
+        lock_unpoisoned(&self.events).peek()
+    }
+
+    /// Cumulative event emissions per kind ([`EventKind::ALL`] order) —
+    /// the monotone `shdc_events_total` series.
+    pub fn event_counts(&self) -> Vec<(&'static str, u64)> {
+        let counts = lock_unpoisoned(&self.events).counts();
+        EventKind::ALL.iter().map(|k| k.name()).zip(counts).collect()
+    }
+
+    /// Samples ever taken / currently retained.
+    pub fn sample_counts(&self) -> (u64, usize) {
+        let ring = lock_unpoisoned(&self.ring);
+        (ring.total(), ring.len())
+    }
+
+    /// Actual listener address once bound (supports port 0).
+    pub fn bound_addr(&self) -> Option<SocketAddr> {
+        *lock_unpoisoned(&self.bound)
+    }
+}
+
+/// Spawn the `MetricsPublisher` thread: one [`MetricsHub::tick`] per
+/// interval, a final closing tick on stop (so end-of-run deltas stay
+/// observable), then exit. Joined by `Server::run`.
+pub fn spawn_publisher(hub: Arc<MetricsHub>, handle: ServeHandle) -> JoinHandle<()> {
+    thread::Builder::new()
+        .name("shdc-metrics-pub".to_string())
+        .spawn(move || {
+            loop {
+                let t = hub.now_ns();
+                hub.tick(handle.obs_sample(t));
+                if !hub.wait_for_tick() {
+                    break;
+                }
+            }
+            let t = hub.now_ns();
+            hub.tick(handle.obs_sample(t));
+        })
+        .expect("spawn metrics publisher thread")
+}
+
+/// Bind `addr` and spawn the exporter listener thread. The actual
+/// address (useful with port 0) is published via
+/// [`MetricsHub::bound_addr`] before this returns. Joined by
+/// `Server::run`; exit latency is bounded by the accept poll plus at
+/// most one in-flight connection's timeouts.
+pub fn spawn_listener(
+    addr: &str,
+    hub: Arc<MetricsHub>,
+    handle: ServeHandle,
+) -> io::Result<JoinHandle<()>> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    *lock_unpoisoned(&hub.bound) = Some(listener.local_addr()?);
+    thread::Builder::new()
+        .name("shdc-metrics-http".to_string())
+        .spawn(move || {
+            while !hub.stopped() {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        // One connection at a time: inherently bounded,
+                        // and a broken scraper costs at most its
+                        // timeouts.
+                        let _ = serve_conn(stream, &hub, &handle);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(_) => thread::sleep(ACCEPT_POLL),
+                }
+            }
+        })
+}
+
+/// Handle one scrape connection: parse the request line, route, write
+/// one `Connection: close` response.
+fn serve_conn(
+    mut stream: TcpStream,
+    hub: &Arc<MetricsHub>,
+    handle: &ServeHandle,
+) -> io::Result<()> {
+    // The accepted socket must block (the listener itself is
+    // nonblocking; inheritance is platform-dependent).
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut buf = [0u8; 4096];
+    let mut n = 0usize;
+    loop {
+        if n == buf.len() {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "request larger than 4KiB"));
+        }
+        let read = stream.read(&mut buf[n..])?;
+        if read == 0 {
+            break;
+        }
+        n += read;
+        if buf[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let mut line = req.lines().next().unwrap_or("").split_whitespace();
+    let method = line.next().unwrap_or("");
+    let path = line.next().unwrap_or("");
+    let (status, ctype, body) = if method != "GET" {
+        (405, "text/plain; charset=utf-8", "method not allowed\n".to_string())
+    } else {
+        match path {
+            "/metrics" => (
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                render_metrics(handle, hub),
+            ),
+            "/health" => (200, "application/json", health_body(hub)),
+            "/snapshot" => (200, "application/json", handle.obs_snapshot().to_json().pretty()),
+            _ => (404, "text/plain; charset=utf-8", "not found\n".to_string()),
+        }
+    };
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// The `/health` response body: latest report + retained events.
+fn health_body(hub: &MetricsHub) -> String {
+    Json::obj(vec![
+        ("health", hub.health().to_json()),
+        ("events", Json::Arr(hub.peek_events().iter().map(ObsEvent::to_json).collect())),
+    ])
+    .pretty()
+}
+
+// --- Prometheus text rendering ------------------------------------------
+
+/// Prometheus label-value escaping: `\` → `\\`, `"` → `\"`, newline →
+/// `\n`.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Exposition-safe float: finite values verbatim (integers without a
+/// trailing `.0`), non-finite clamped to 0 (we never mean NaN/Inf; a
+/// poisoned series must not poison the scrape).
+fn fmt_value(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        (v as i64).to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+fn type_line(out: &mut String, name: &str, kind: &str) {
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// One sample line: `name{labels} value`.
+fn sample_line(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(&escape_label(v));
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&fmt_value(value));
+    out.push('\n');
+}
+
+/// A counter/gauge with its TYPE line and a single unlabeled sample.
+fn scalar(out: &mut String, name: &str, kind: &str, value: f64) {
+    type_line(out, name, kind);
+    sample_line(out, name, &[], value);
+}
+
+/// Summary rendering of a histogram snapshot: quantile samples plus
+/// `_count` and `_sum` (sum reconstructed as mean×count — the histogram
+/// tracks an exact sum but snapshots carry the mean).
+fn summary(out: &mut String, name: &str, labels: &[(&str, &str)], h: &HistSnapshot) {
+    let mut q = Vec::with_capacity(labels.len() + 1);
+    for &(quantile, v) in &[("0.5", h.p50), ("0.9", h.p90), ("0.99", h.p99)] {
+        q.clear();
+        q.extend_from_slice(labels);
+        q.push(("quantile", quantile));
+        sample_line(out, name, &q, v as f64);
+    }
+    sample_line(out, &format!("{name}_count"), labels, h.count as f64);
+    sample_line(out, &format!("{name}_sum"), labels, h.mean * h.count as f64);
+}
+
+/// Per-model counter family: one TYPE line, one labeled sample per
+/// registered model.
+fn model_counter(
+    out: &mut String,
+    name: &str,
+    kind: &str,
+    models: &[ModelSnapshot],
+    f: impl Fn(&ModelSnapshot) -> f64,
+) {
+    type_line(out, name, kind);
+    for m in models {
+        sample_line(out, name, &[("model", &m.name)], f(m));
+    }
+}
+
+/// Render the full `/metrics` exposition from a **fresh** read of the
+/// serve counters (scrape-time truth, so two scrapes reconcile exactly
+/// with the traffic between them) plus the hub's windowed/SLO state.
+pub fn render_metrics(handle: &ServeHandle, hub: &MetricsHub) -> String {
+    let mut out = String::with_capacity(8192);
+    let snap = handle.stats();
+    let obs = handle.obs_snapshot();
+
+    // --- global counters --------------------------------------------------
+    for (name, v) in [
+        ("shdc_serve_submitted_total", snap.submitted),
+        ("shdc_serve_completed_total", snap.completed),
+        ("shdc_serve_rejected_total", snap.rejected),
+        ("shdc_serve_shed_total", snap.shed),
+        ("shdc_serve_admission_timeouts_total", snap.admission_timeouts),
+        ("shdc_serve_expired_total", snap.expired),
+        ("shdc_serve_failed_total", snap.failed),
+        ("shdc_serve_quota_shed_total", snap.quota_shed),
+        ("shdc_serve_batches_total", snap.batches),
+        ("shdc_serve_size_cuts_total", snap.size_cuts),
+        ("shdc_serve_deadline_cuts_total", snap.deadline_cuts),
+        ("shdc_serve_idle_cuts_total", snap.idle_cuts),
+        ("shdc_serve_model_cuts_total", snap.model_cuts),
+    ] {
+        scalar(&mut out, name, "counter", v as f64);
+    }
+
+    // --- global distributions + gauges ------------------------------------
+    type_line(&mut out, "shdc_serve_latency_ns", "summary");
+    summary(&mut out, "shdc_serve_latency_ns", &[], &snap.latency_ns);
+    type_line(&mut out, "shdc_serve_queue_depth_at_cut", "summary");
+    summary(&mut out, "shdc_serve_queue_depth_at_cut", &[], &snap.queue_depth);
+    for (gname, metric) in
+        [("queue_depth", "shdc_serve_queue_depth"), ("in_flight", "shdc_serve_in_flight")]
+    {
+        if let Some((_, v)) = obs.gauges.iter().find(|(n, _)| n == gname) {
+            scalar(&mut out, metric, "gauge", *v);
+        }
+    }
+    scalar(&mut out, "shdc_live_workers", "gauge", obs.live_workers as f64);
+    scalar(&mut out, "shdc_configured_workers", "gauge", hub.cfg.configured_workers as f64);
+
+    // --- per-model series --------------------------------------------------
+    let models = &snap.models;
+    model_counter(&mut out, "shdc_model_submitted_total", "counter", models, |m| {
+        m.submitted as f64
+    });
+    model_counter(&mut out, "shdc_model_completed_total", "counter", models, |m| {
+        m.completed as f64
+    });
+    model_counter(&mut out, "shdc_model_rejected_total", "counter", models, |m| {
+        m.rejected as f64
+    });
+    model_counter(&mut out, "shdc_model_shed_total", "counter", models, |m| m.shed as f64);
+    model_counter(&mut out, "shdc_model_quota_shed_total", "counter", models, |m| {
+        m.quota_shed as f64
+    });
+    model_counter(&mut out, "shdc_model_expired_total", "counter", models, |m| m.expired as f64);
+    model_counter(&mut out, "shdc_model_failed_total", "counter", models, |m| m.failed as f64);
+    model_counter(&mut out, "shdc_model_in_flight", "gauge", models, |m| m.in_flight as f64);
+    type_line(&mut out, "shdc_model_latency_ns", "summary");
+    for m in models {
+        summary(&mut out, "shdc_model_latency_ns", &[("model", &m.name)], &m.latency_ns);
+    }
+    // --- per-shard series --------------------------------------------------
+    type_line(&mut out, "shdc_shard_classes", "gauge");
+    for m in models {
+        for (s, shard) in m.shards.iter().enumerate() {
+            let sid = s.to_string();
+            sample_line(
+                &mut out,
+                "shdc_shard_classes",
+                &[("model", &m.name), ("shard", &sid)],
+                shard.classes as f64,
+            );
+        }
+    }
+    type_line(&mut out, "shdc_shard_scans_total", "counter");
+    for m in models {
+        for (s, shard) in m.shards.iter().enumerate() {
+            let sid = s.to_string();
+            sample_line(
+                &mut out,
+                "shdc_shard_scans_total",
+                &[("model", &m.name), ("shard", &sid)],
+                shard.scans as f64,
+            );
+        }
+    }
+
+    // --- per-stage / per-worker series (tracing only) ----------------------
+    if handle.tracing_enabled() {
+        type_line(&mut out, "shdc_stage_latency_ns", "summary");
+        for st in &obs.stages {
+            summary(&mut out, "shdc_stage_latency_ns", &[("stage", st.stage)], &st.hist);
+        }
+        type_line(&mut out, "shdc_worker_stage_latency_ns", "summary");
+        for (w, stages) in handle.worker_stage_snapshots().iter().enumerate() {
+            let wid = w.to_string();
+            for st in stages {
+                summary(
+                    &mut out,
+                    "shdc_worker_stage_latency_ns",
+                    &[("worker", &wid), ("stage", st.stage)],
+                    &st.hist,
+                );
+            }
+        }
+    }
+
+    // --- windowed rates -----------------------------------------------------
+    if let Some(r) = hub.window_rates() {
+        scalar(&mut out, "shdc_window_seconds", "gauge", r.window_s);
+        for (name, v) in [
+            ("shdc_window_submitted_per_s", r.submitted_per_s),
+            ("shdc_window_completed_per_s", r.completed_per_s),
+            ("shdc_window_shed_per_s", r.shed_per_s),
+            ("shdc_window_quota_shed_per_s", r.quota_shed_per_s),
+            ("shdc_window_failed_per_s", r.failed_per_s),
+            ("shdc_window_expired_per_s", r.expired_per_s),
+        ] {
+            scalar(&mut out, name, "gauge", v);
+        }
+        scalar(&mut out, "shdc_window_latency_count", "gauge", r.latency.count as f64);
+        scalar(&mut out, "shdc_window_latency_p50_ns", "gauge", r.latency.p50 as f64);
+        scalar(&mut out, "shdc_window_latency_p99_ns", "gauge", r.latency.p99 as f64);
+        if !r.stages.is_empty() {
+            type_line(&mut out, "shdc_window_stage_p50_ns", "gauge");
+            for (stage, h) in &r.stages {
+                let v = h.p50 as f64;
+                sample_line(&mut out, "shdc_window_stage_p50_ns", &[("stage", stage)], v);
+            }
+            type_line(&mut out, "shdc_window_stage_p99_ns", "gauge");
+            for (stage, h) in &r.stages {
+                let v = h.p99 as f64;
+                sample_line(&mut out, "shdc_window_stage_p99_ns", &[("stage", stage)], v);
+            }
+        }
+    }
+
+    // --- SLO / health -------------------------------------------------------
+    let health = hub.health();
+    scalar(&mut out, "shdc_slo_verdict", "gauge", health.verdict.severity() as f64);
+    scalar(&mut out, "shdc_slo_burn_rate", "gauge", health.burn_rate);
+    scalar(&mut out, "shdc_slo_budget_consumed", "gauge", health.budget_consumed);
+    scalar(&mut out, "shdc_slo_error_rate", "gauge", health.error_rate);
+    scalar(&mut out, "shdc_slo_shed_rate", "gauge", health.shed_rate);
+    scalar(&mut out, "shdc_slo_stalled", "gauge", if health.stalled { 1.0 } else { 0.0 });
+    scalar(&mut out, "shdc_slo_windows_total", "counter", health.windows as f64);
+
+    // --- lifecycle events ---------------------------------------------------
+    type_line(&mut out, "shdc_events_total", "counter");
+    for (kind, n) in hub.event_counts() {
+        sample_line(&mut out, "shdc_events_total", &[("kind", kind)], n as f64);
+    }
+
+    // --- publisher meta -----------------------------------------------------
+    let (total, retained) = hub.sample_counts();
+    scalar(&mut out, "shdc_publisher_samples_total", "counter", total as f64);
+    scalar(&mut out, "shdc_publisher_ring_retained", "gauge", retained as f64);
+    out
+}
+
+// --- Prometheus text parsing (the validity checker) ----------------------
+
+/// One parsed exposition sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParsedSeries {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// Validate a Prometheus text exposition: every non-comment, non-blank
+/// line must parse as `name{labels} value`. Returns the parsed series,
+/// or the first offending line with its number. This is the in-binary
+/// check `serve_bench --metrics-addr` runs against the live scrape, and
+/// the format contract `tests/obs_export.rs` pins.
+pub fn parse_exposition(text: &str) -> Result<Vec<ParsedSeries>, String> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim_end_matches('\r');
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_sample_line(line) {
+            Ok(series) => out.push(series),
+            Err(e) => return Err(format!("line {}: {e}: {line:?}", i + 1)),
+        }
+    }
+    Ok(out)
+}
+
+fn is_name_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_' || c == ':'
+}
+
+fn is_name_char(c: char) -> bool {
+    is_name_start(c) || c.is_ascii_digit()
+}
+
+fn parse_sample_line(line: &str) -> Result<ParsedSeries, String> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut i = 0usize;
+    // metric name
+    if i >= chars.len() || !is_name_start(chars[i]) {
+        return Err("expected metric name".to_string());
+    }
+    let start = i;
+    while i < chars.len() && is_name_char(chars[i]) {
+        i += 1;
+    }
+    let name: String = chars[start..i].iter().collect();
+    // optional label set
+    let mut labels = Vec::new();
+    if i < chars.len() && chars[i] == '{' {
+        i += 1;
+        loop {
+            if i >= chars.len() {
+                return Err("unterminated label set".to_string());
+            }
+            if chars[i] == '}' {
+                i += 1;
+                break;
+            }
+            // label name
+            if !is_name_start(chars[i]) || chars[i] == ':' {
+                return Err("expected label name".to_string());
+            }
+            let ls = i;
+            while i < chars.len() && is_name_char(chars[i]) && chars[i] != ':' {
+                i += 1;
+            }
+            let lname: String = chars[ls..i].iter().collect();
+            if i >= chars.len() || chars[i] != '=' {
+                return Err("expected '=' after label name".to_string());
+            }
+            i += 1;
+            if i >= chars.len() || chars[i] != '"' {
+                return Err("expected '\"' opening label value".to_string());
+            }
+            i += 1;
+            let mut lvalue = String::new();
+            loop {
+                if i >= chars.len() {
+                    return Err("unterminated label value".to_string());
+                }
+                match chars[i] {
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\\' => {
+                        i += 1;
+                        match chars.get(i) {
+                            Some('\\') => lvalue.push('\\'),
+                            Some('"') => lvalue.push('"'),
+                            Some('n') => lvalue.push('\n'),
+                            _ => return Err("bad escape in label value".to_string()),
+                        }
+                        i += 1;
+                    }
+                    c => {
+                        lvalue.push(c);
+                        i += 1;
+                    }
+                }
+            }
+            labels.push((lname, lvalue));
+            match chars.get(i) {
+                Some(',') => i += 1,
+                Some('}') => {}
+                _ => return Err("expected ',' or '}' after label".to_string()),
+            }
+        }
+    }
+    // whitespace, then the value; nothing may follow.
+    if i >= chars.len() || !chars[i].is_ascii_whitespace() {
+        return Err("expected whitespace before value".to_string());
+    }
+    while i < chars.len() && chars[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    let vstr: String = chars[i..].iter().collect();
+    if vstr.is_empty() || vstr.contains(char::is_whitespace) {
+        return Err("expected exactly one value token".to_string());
+    }
+    let value = match vstr.as_str() {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        s => s.parse::<f64>().map_err(|_| format!("bad value {s:?}"))?,
+    };
+    Ok(ParsedSeries { name, labels, value })
+}
+
+/// Minimal HTTP/1.1 GET over one blocking `TcpStream` (the scrape
+/// helper used by `serve_bench` and the exporter tests). Returns
+/// `(status, body)`; relies on the server's `Connection: close`.
+pub fn http_get(addr: SocketAddr, path: &str, timeout: Duration) -> io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: shdc\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf)?;
+    let (head, body) = buf
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidData, "response missing header terminator")
+        })?;
+    let status = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|c| c.parse::<u16>().ok())
+        .ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidData, "malformed status line")
+        })?;
+    Ok((status, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t_ns: u64, submitted: u64, completed: u64) -> Sample {
+        Sample {
+            t_ns,
+            serve: ServeSnapshot { submitted, completed, ..ServeSnapshot::default() },
+            latency: HistBuckets::empty(),
+            stages: Vec::new(),
+            live_workers: 2,
+            queue_depth: 0,
+        }
+    }
+
+    #[test]
+    fn sample_ring_wraps_across_window_boundaries() {
+        let mut ring = SampleRing::new(4);
+        assert!(ring.latest().is_none());
+        assert!(ring.last_two().is_none());
+        for i in 0..10u64 {
+            ring.push(sample(i * 1_000_000, i * 100, i * 90));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.total(), 10);
+        // The newest window straddles the wrapped region and still
+        // subtracts exactly.
+        let (prev, cur) = ring.last_two().expect("two samples retained");
+        assert_eq!(prev.t_ns, 8_000_000);
+        assert_eq!(cur.t_ns, 9_000_000);
+        let r = rates_between(prev, cur);
+        assert!((r.window_s - 0.001).abs() < 1e-12);
+        // 100 submissions in 1 ms = 100k/s, derived from exact deltas.
+        assert!((r.submitted_per_s - 100_000.0).abs() < 1e-6);
+        assert!((r.completed_per_s - 90_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn window_rates_reconcile_exactly_with_counter_deltas() {
+        let prev = sample(1_000_000_000, 1_234, 1_200);
+        let cur = sample(3_000_000_000, 5_678, 5_555);
+        let r = rates_between(&prev, &cur);
+        assert_eq!(r.window_s, 2.0);
+        // rate × window width recovers the integer delta exactly.
+        assert_eq!((r.submitted_per_s * r.window_s).round() as u64, 5_678 - 1_234);
+        assert_eq!((r.completed_per_s * r.window_s).round() as u64, 5_555 - 1_200);
+    }
+
+    #[test]
+    fn zero_width_window_has_finite_zero_rates() {
+        let a = sample(42, 100, 100);
+        let r = rates_between(&a, &a);
+        assert_eq!(r.window_s, 0.0);
+        for v in [r.submitted_per_s, r.completed_per_s, r.shed_per_s, r.failed_per_s] {
+            assert!(v.is_finite() && v == 0.0, "zero-width rate must be 0.0, got {v}");
+        }
+    }
+
+    #[test]
+    fn hub_tick_evaluates_windows_and_stays_idempotent_on_stop() {
+        let hub = MetricsHub::new(PublishCfg {
+            interval: Duration::from_millis(10),
+            slo: SloCfg::default(),
+            configured_workers: 2,
+            queue_cap: 16,
+        });
+        assert_eq!(hub.health().windows, 0);
+        hub.tick(sample(1_000_000, 0, 0));
+        assert!(hub.window_rates().is_none(), "one sample is not a window");
+        hub.tick(sample(2_000_000, 50, 50));
+        assert_eq!(hub.health().windows, 1);
+        let r = hub.window_rates().expect("window closed");
+        assert!((r.submitted_per_s * r.window_s).round() as u64 == 50);
+        // Same-timestamp tick: pushed but never evaluated (no /0).
+        hub.tick(sample(2_000_000, 60, 60));
+        assert_eq!(hub.health().windows, 1);
+        // stop is idempotent from any thread, any number of times.
+        hub.stop();
+        hub.stop();
+        assert!(hub.stopped());
+        assert!(!hub.wait_for_tick());
+    }
+
+    #[test]
+    fn rendered_lines_parse_and_labels_round_trip() {
+        let mut out = String::new();
+        scalar(&mut out, "shdc_test_total", "counter", 42.0);
+        sample_line(
+            &mut out,
+            "shdc_labeled",
+            &[("model", "weird \"name\"\\with\nstuff"), ("shard", "3")],
+            1.5,
+        );
+        let h = HistSnapshot { count: 10, mean: 2.5, p50: 2, p90: 4, p99: 5, max: 5, min: 1 };
+        summary(&mut out, "shdc_lat", &[("stage", "encode")], &h);
+        let series = parse_exposition(&out).expect("rendered text parses");
+        assert_eq!(series[0].name, "shdc_test_total");
+        assert_eq!(series[0].value, 42.0);
+        let labeled = &series[1];
+        assert_eq!(labeled.labels[0].1, "weird \"name\"\\with\nstuff");
+        assert_eq!(labeled.labels[1], ("shard".to_string(), "3".to_string()));
+        // summary emits 3 quantiles + _count + _sum
+        assert_eq!(series.len(), 2 + 5);
+        let sum = series.iter().find(|s| s.name == "shdc_lat_sum").unwrap();
+        assert_eq!(sum.value, 25.0);
+        assert_eq!(sum.labels, vec![("stage".to_string(), "encode".to_string())]);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        for bad in [
+            "9leading_digit 1",
+            "name{unclosed=\"x\" 1",
+            "name{k=bare} 1",
+            "name",
+            "name notanumber",
+            "name 1 2",
+        ] {
+            assert!(parse_exposition(bad).is_err(), "must reject {bad:?}");
+        }
+        // Comments and blank lines are skipped; Inf/NaN literals parse.
+        let ok = "# HELP x y\n\nx_total 3\nx_inf +Inf\n";
+        let series = parse_exposition(ok).expect("valid text");
+        assert_eq!(series.len(), 2);
+        assert!(series[1].value.is_infinite());
+    }
+
+    #[test]
+    fn fmt_value_guards_non_finite() {
+        assert_eq!(fmt_value(f64::NAN), "0");
+        assert_eq!(fmt_value(f64::INFINITY), "0");
+        assert_eq!(fmt_value(3.0), "3");
+        assert_eq!(fmt_value(0.25), "0.25");
+    }
+}

@@ -1,0 +1,788 @@
+//! SLO evaluation and lifecycle events for the serving stack: the
+//! judgment layer of the monitoring subsystem (`crate::obs::export`
+//! holds the sampling/exposition plumbing; this module holds the
+//! *verdict*).
+//!
+//! Once per publish window the [`SloEvaluator`] receives the window's
+//! exact counter deltas ([`WindowObs`], derived from two monotone
+//! snapshots) and produces a [`HealthReport`]:
+//!
+//! * **Latency** — windowed p99 (bucket-diff quantile over just this
+//!   window's samples) against [`SloCfg::p99_target`].
+//! * **Shedding** — the window's *overload* shed fraction (`Shed`
+//!   refusals + admission timeouts over admission attempts) against
+//!   [`SloCfg::max_shed_rate`]. Per-tenant quota refusals are policy,
+//!   not overload: they are reported separately and never breach.
+//! * **Error budget** — the window's bad fraction (encode failures +
+//!   deadline expiries over terminal outcomes) divided by
+//!   [`SloCfg::error_budget`] is the **burn rate**; > 1 means the
+//!   budget is being consumed faster than allowed. Cumulative
+//!   consumption is tracked across windows.
+//! * **Pipeline stall** — `completed` unchanged while requests are in
+//!   flight, for [`SloCfg::stall_windows`] consecutive windows.
+//! * **Worker liveness** — the tracer's live-worker gauge against the
+//!   configured pool (a shrunken pool degrades; it only breaches when
+//!   it also stalls or blows another objective).
+//!
+//! State transitions and notable window deltas emit [`ObsEvent`]s into
+//! a bounded overwrite-oldest [`EventRing`] — drained via
+//! `ServeHandle::drain_events`, peeked by the `/health` endpoint, and
+//! counted per kind for the `shdc_events_total` exposition series.
+//!
+//! A zero-traffic window is explicitly healthy: every rate in this
+//! module guards its denominator, so idle servers report finite zeros,
+//! never NaN (pinned by the unit tests below and
+//! `tests/obs_export.rs`).
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Service-level objectives, evaluated once per publish window
+/// (`ServeCfg::slo`; `ServeCfg::publish_interval` sets the window).
+#[derive(Clone, Copy, Debug)]
+pub struct SloCfg {
+    /// Windowed p99 end-to-end latency objective (checked only when the
+    /// window recorded at least one latency sample).
+    pub p99_target: Duration,
+    /// Maximum fraction of admission attempts the server may refuse for
+    /// *load* reasons (shed + admission timeouts) in one window. Quota
+    /// (policy) refusals are accounted separately and never breach.
+    pub max_shed_rate: f64,
+    /// Allowed fraction of terminal outcomes that fail (encode failures
+    /// + deadline expiries). The window's bad fraction over this budget
+    /// is the burn rate; > 1 breaches.
+    pub error_budget: f64,
+    /// Consecutive no-progress windows (completed counter unchanged
+    /// while requests are in flight) before the pipeline counts as
+    /// stalled. Clamped to ≥ 1.
+    pub stall_windows: u32,
+}
+
+impl Default for SloCfg {
+    fn default() -> SloCfg {
+        SloCfg {
+            p99_target: Duration::from_millis(50),
+            max_shed_rate: 0.05,
+            error_budget: 0.001,
+            stall_windows: 3,
+        }
+    }
+}
+
+/// The watchdog's judgment of one window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Every objective held.
+    Healthy,
+    /// No objective breached, but capacity is reduced (live workers
+    /// below the configured pool).
+    Degraded,
+    /// At least one objective violated ([`HealthReport::reasons`]).
+    Breach,
+}
+
+impl Verdict {
+    pub fn name(self) -> &'static str {
+        match self {
+            Verdict::Healthy => "healthy",
+            Verdict::Degraded => "degraded",
+            Verdict::Breach => "breach",
+        }
+    }
+
+    /// Numeric severity for the `shdc_slo_verdict` gauge (0/1/2).
+    pub fn severity(self) -> u64 {
+        match self {
+            Verdict::Healthy => 0,
+            Verdict::Degraded => 1,
+            Verdict::Breach => 2,
+        }
+    }
+}
+
+/// One window's exact observation, handed to [`SloEvaluator::evaluate`]
+/// by the metrics publisher. Deltas are computed from two monotone
+/// counter snapshots, so they are exact; gauges are from the window's
+/// closing sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowObs {
+    /// Window close time, nanoseconds since the publisher's epoch.
+    pub t_ns: u64,
+    /// Window width in seconds (> 0 for any real window).
+    pub window_s: f64,
+    pub submitted_delta: u64,
+    pub completed_delta: u64,
+    /// Overload refusals this window: `Shed` + admission timeouts.
+    pub shed_delta: u64,
+    /// Policy (tenant-quota) refusals this window.
+    pub quota_shed_delta: u64,
+    /// Encode-batch failures (worker panics) this window.
+    pub failed_delta: u64,
+    /// Deadline expiries this window.
+    pub expired_delta: u64,
+    /// Requests outstanding at window close (submitted − completed).
+    pub in_flight: u64,
+    /// Submission-queue depth at window close.
+    pub queue_depth: u64,
+    /// Submission-queue capacity (for saturation detection).
+    pub queue_cap: u64,
+    /// Live encode workers at window close.
+    pub live_workers: u64,
+    /// Windowed end-to-end p99 (ns); meaningful when `latency_count`>0.
+    pub p99_ns: u64,
+    /// Latency samples recorded this window.
+    pub latency_count: u64,
+}
+
+impl WindowObs {
+    /// Admission attempts this window (admitted + every refusal class).
+    pub fn attempts(&self) -> u64 {
+        self.submitted_delta + self.shed_delta + self.quota_shed_delta
+    }
+
+    /// Overload shed fraction of this window's attempts (0.0 idle).
+    pub fn shed_rate(&self) -> f64 {
+        ratio(self.shed_delta, self.attempts())
+    }
+
+    /// Policy (quota) shed fraction of this window's attempts.
+    pub fn quota_shed_rate(&self) -> f64 {
+        ratio(self.quota_shed_delta, self.attempts())
+    }
+
+    /// Bad fraction of this window's terminal outcomes. Expiries can
+    /// outnumber completions (admission-wait expiries are never
+    /// admitted), so the denominator includes them explicitly.
+    pub fn error_rate(&self) -> f64 {
+        let bad = self.failed_delta + self.expired_delta;
+        ratio(bad, self.completed_delta.max(bad))
+    }
+}
+
+/// Guarded division: zero denominator → 0.0, never NaN/inf.
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// Latest verdict plus everything behind it — the `/health` endpoint
+/// body and `ServeHandle::health`.
+#[derive(Clone, Debug)]
+pub struct HealthReport {
+    pub verdict: Verdict,
+    /// Human-readable breach/degradation reasons; empty when healthy.
+    pub reasons: Vec<String>,
+    /// Windows evaluated so far (0 until the second publisher sample).
+    pub windows: u64,
+    /// Width of the evaluated window, seconds.
+    pub window_s: f64,
+    /// Windowed end-to-end p99 (ns; 0 on a zero-traffic window).
+    pub p99_ns: u64,
+    /// Windowed overload shed fraction.
+    pub shed_rate: f64,
+    /// Windowed policy (quota) shed fraction.
+    pub quota_shed_rate: f64,
+    /// Windowed bad fraction (failures + expiries over outcomes).
+    pub error_rate: f64,
+    /// `error_rate / error_budget` — > 1 burns faster than allowed.
+    pub burn_rate: f64,
+    /// Cumulative bad outcomes over cumulative allowed bad outcomes
+    /// (`total_outcomes × budget`); > 1 means the lifetime budget is
+    /// spent.
+    pub budget_consumed: f64,
+    /// The pipeline is currently considered stalled.
+    pub stalled: bool,
+    /// Consecutive no-progress windows observed so far.
+    pub no_progress_windows: u32,
+    pub live_workers: u64,
+    pub configured_workers: u64,
+}
+
+impl Default for HealthReport {
+    fn default() -> HealthReport {
+        HealthReport {
+            verdict: Verdict::Healthy,
+            reasons: Vec::new(),
+            windows: 0,
+            window_s: 0.0,
+            p99_ns: 0,
+            shed_rate: 0.0,
+            quota_shed_rate: 0.0,
+            error_rate: 0.0,
+            burn_rate: 0.0,
+            budget_consumed: 0.0,
+            stalled: false,
+            no_progress_windows: 0,
+            live_workers: 0,
+            configured_workers: 0,
+        }
+    }
+}
+
+impl HealthReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("verdict", Json::str(self.verdict.name())),
+            (
+                "reasons",
+                Json::Arr(self.reasons.iter().map(|r| Json::str(r.clone())).collect()),
+            ),
+            ("windows", Json::num(self.windows as f64)),
+            ("window_s", Json::num(self.window_s)),
+            ("p99_ns", Json::num(self.p99_ns as f64)),
+            ("shed_rate", Json::num(self.shed_rate)),
+            ("quota_shed_rate", Json::num(self.quota_shed_rate)),
+            ("error_rate", Json::num(self.error_rate)),
+            ("burn_rate", Json::num(self.burn_rate)),
+            ("budget_consumed", Json::num(self.budget_consumed)),
+            ("stalled", Json::Bool(self.stalled)),
+            ("no_progress_windows", Json::num(self.no_progress_windows as f64)),
+            ("live_workers", Json::num(self.live_workers as f64)),
+            ("configured_workers", Json::num(self.configured_workers as f64)),
+        ])
+    }
+}
+
+/// Lifecycle event taxonomy. Kinds are closed (the exposition counts
+/// them per kind), details ride on the event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// The live-worker gauge dropped (panic budget exhausted; the pool
+    /// shrank permanently for this run).
+    WorkerRetired,
+    /// Encode-batch failures landed this window (worker panics that
+    /// were absorbed and recovered).
+    EncodeFailures,
+    /// Tenant-quota refusals landed this window.
+    QuotaShedBurst,
+    /// The submission queue was at capacity at window close.
+    QueueSaturated,
+    /// The watchdog entered the breach verdict.
+    SloBreach,
+    /// The watchdog left the breach verdict.
+    SloRecovered,
+    /// No-progress windows crossed [`SloCfg::stall_windows`].
+    PipelineStalled,
+    /// A stalled pipeline completed requests again.
+    PipelineResumed,
+}
+
+impl EventKind {
+    pub const COUNT: usize = 8;
+    pub const ALL: [EventKind; EventKind::COUNT] = [
+        EventKind::WorkerRetired,
+        EventKind::EncodeFailures,
+        EventKind::QuotaShedBurst,
+        EventKind::QueueSaturated,
+        EventKind::SloBreach,
+        EventKind::SloRecovered,
+        EventKind::PipelineStalled,
+        EventKind::PipelineResumed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::WorkerRetired => "worker_retired",
+            EventKind::EncodeFailures => "encode_failures",
+            EventKind::QuotaShedBurst => "quota_shed_burst",
+            EventKind::QueueSaturated => "queue_saturated",
+            EventKind::SloBreach => "slo_breach",
+            EventKind::SloRecovered => "slo_recovered",
+            EventKind::PipelineStalled => "pipeline_stalled",
+            EventKind::PipelineResumed => "pipeline_resumed",
+        }
+    }
+
+    fn index(self) -> usize {
+        EventKind::ALL.iter().position(|&k| k == self).expect("kind listed in ALL")
+    }
+}
+
+/// One structured lifecycle event.
+#[derive(Clone, Debug)]
+pub struct ObsEvent {
+    /// Nanoseconds since the publisher's epoch.
+    pub t_ns: u64,
+    pub kind: EventKind,
+    /// Kind-specific magnitude: workers lost, failures in the window,
+    /// burn rate at breach…
+    pub value: f64,
+    /// Short human-readable detail.
+    pub detail: String,
+}
+
+impl ObsEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t_ns", Json::num(self.t_ns as f64)),
+            ("kind", Json::str(self.kind.name())),
+            ("value", Json::num(self.value)),
+            ("detail", Json::str(self.detail.clone())),
+        ])
+    }
+}
+
+/// Bounded overwrite-oldest event ring plus cumulative per-kind
+/// counters (the counters survive drains — they feed the
+/// `shdc_events_total{kind=…}` counter series, which must stay
+/// monotone).
+#[derive(Debug)]
+pub struct EventRing {
+    cap: usize,
+    buf: Vec<ObsEvent>,
+    /// Index of the oldest event once the ring is full.
+    at: usize,
+    /// Events overwritten (ring was full) or refused (cap 0).
+    dropped: u64,
+    emitted: [u64; EventKind::COUNT],
+}
+
+impl EventRing {
+    pub fn new(cap: usize) -> EventRing {
+        EventRing {
+            cap,
+            buf: Vec::with_capacity(cap),
+            at: 0,
+            dropped: 0,
+            emitted: [0; EventKind::COUNT],
+        }
+    }
+
+    pub fn push(&mut self, ev: ObsEvent) {
+        self.emitted[ev.kind.index()] += 1;
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.at] = ev;
+            self.at = (self.at + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Retained events, oldest first; resets the ring (the per-kind
+    /// counters stay cumulative).
+    pub fn drain(&mut self) -> Vec<ObsEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        if self.buf.len() == self.cap && self.cap > 0 {
+            out.extend_from_slice(&self.buf[self.at..]);
+            out.extend_from_slice(&self.buf[..self.at]);
+        } else {
+            out.extend_from_slice(&self.buf);
+        }
+        self.buf.clear();
+        self.at = 0;
+        out
+    }
+
+    /// Clone of the retained events, oldest first, without resetting —
+    /// the `/health` endpoint peeks so scrapes don't race drains.
+    pub fn peek(&self) -> Vec<ObsEvent> {
+        if self.buf.len() == self.cap && self.cap > 0 {
+            let mut out = Vec::with_capacity(self.buf.len());
+            out.extend_from_slice(&self.buf[self.at..]);
+            out.extend_from_slice(&self.buf[..self.at]);
+            out
+        } else {
+            self.buf.to_vec()
+        }
+    }
+
+    /// Cumulative emissions per kind, [`EventKind::ALL`] order.
+    pub fn counts(&self) -> [u64; EventKind::COUNT] {
+        self.emitted
+    }
+
+    /// Events overwritten or refused since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// The watchdog: folds one [`WindowObs`] at a time into verdict state,
+/// emitting transition events into the caller's [`EventRing`]. Pure
+/// arithmetic over the inputs — unit-testable without a server.
+#[derive(Debug)]
+pub struct SloEvaluator {
+    cfg: SloCfg,
+    configured_workers: u64,
+    windows: u64,
+    /// Consecutive windows with in-flight requests but no completions.
+    no_progress: u32,
+    stalled: bool,
+    breached: bool,
+    /// The pipeline has reported its full worker pool at least once;
+    /// liveness is judged only after (before that, the gauge is just
+    /// "pipeline not started yet", not degradation).
+    pool_seen: bool,
+    prev_live: Option<u64>,
+    cum_bad: u64,
+    cum_outcomes: u64,
+}
+
+impl SloEvaluator {
+    pub fn new(cfg: SloCfg, configured_workers: u64) -> SloEvaluator {
+        SloEvaluator {
+            cfg,
+            configured_workers,
+            windows: 0,
+            no_progress: 0,
+            stalled: false,
+            breached: false,
+            pool_seen: false,
+            prev_live: None,
+            cum_bad: 0,
+            cum_outcomes: 0,
+        }
+    }
+
+    /// Evaluate one window. Emits lifecycle events for window deltas
+    /// (failures, quota bursts, queue saturation, worker retirement)
+    /// and for verdict/stall transitions, then returns the report.
+    pub fn evaluate(&mut self, w: &WindowObs, events: &mut EventRing) -> HealthReport {
+        self.windows += 1;
+
+        // --- stall detection ------------------------------------------------
+        if w.completed_delta == 0 && w.in_flight > 0 {
+            self.no_progress = self.no_progress.saturating_add(1);
+        } else {
+            self.no_progress = 0;
+        }
+        let now_stalled = self.no_progress >= self.cfg.stall_windows.max(1);
+        if now_stalled && !self.stalled {
+            events.push(ObsEvent {
+                t_ns: w.t_ns,
+                kind: EventKind::PipelineStalled,
+                value: w.in_flight as f64,
+                detail: format!(
+                    "no completions for {} windows with {} in flight",
+                    self.no_progress, w.in_flight
+                ),
+            });
+        }
+        if !now_stalled && self.stalled {
+            events.push(ObsEvent {
+                t_ns: w.t_ns,
+                kind: EventKind::PipelineResumed,
+                value: w.completed_delta as f64,
+                detail: format!("{} completions this window", w.completed_delta),
+            });
+        }
+        self.stalled = now_stalled;
+
+        // --- window-delta lifecycle events ----------------------------------
+        if w.failed_delta > 0 {
+            events.push(ObsEvent {
+                t_ns: w.t_ns,
+                kind: EventKind::EncodeFailures,
+                value: w.failed_delta as f64,
+                detail: format!("{} encode-batch failures", w.failed_delta),
+            });
+        }
+        if w.quota_shed_delta > 0 {
+            events.push(ObsEvent {
+                t_ns: w.t_ns,
+                kind: EventKind::QuotaShedBurst,
+                value: w.quota_shed_delta as f64,
+                detail: format!("{} quota refusals", w.quota_shed_delta),
+            });
+        }
+        if w.queue_cap > 0 && w.queue_depth >= w.queue_cap {
+            events.push(ObsEvent {
+                t_ns: w.t_ns,
+                kind: EventKind::QueueSaturated,
+                value: w.queue_depth as f64,
+                detail: format!("queue at capacity ({}/{})", w.queue_depth, w.queue_cap),
+            });
+        }
+        if let Some(prev) = self.prev_live {
+            if w.live_workers < prev {
+                events.push(ObsEvent {
+                    t_ns: w.t_ns,
+                    kind: EventKind::WorkerRetired,
+                    value: (prev - w.live_workers) as f64,
+                    detail: format!("live workers {} -> {}", prev, w.live_workers),
+                });
+            }
+        }
+        self.prev_live = Some(w.live_workers);
+        if w.live_workers >= self.configured_workers && self.configured_workers > 0 {
+            self.pool_seen = true;
+        }
+
+        // --- rates and budget (all denominators guarded) --------------------
+        let shed_rate = w.shed_rate();
+        let quota_shed_rate = w.quota_shed_rate();
+        let error_rate = w.error_rate();
+        let budget = self.cfg.error_budget.max(f64::MIN_POSITIVE);
+        let burn_rate = error_rate / budget;
+        let bad = w.failed_delta + w.expired_delta;
+        self.cum_bad += bad;
+        self.cum_outcomes += w.completed_delta.max(bad);
+        let allowed = self.cum_outcomes as f64 * budget;
+        let budget_consumed = if allowed > 0.0 { self.cum_bad as f64 / allowed } else { 0.0 };
+
+        // --- verdict ---------------------------------------------------------
+        let mut reasons = Vec::new();
+        if now_stalled {
+            reasons.push(format!(
+                "pipeline stalled: {} no-progress windows with {} in flight",
+                self.no_progress, w.in_flight
+            ));
+        }
+        let target_ns = self.cfg.p99_target.as_nanos() as u64;
+        if w.latency_count > 0 && w.p99_ns > target_ns {
+            reasons.push(format!("windowed p99 {}ns > target {}ns", w.p99_ns, target_ns));
+        }
+        if shed_rate > self.cfg.max_shed_rate {
+            reasons.push(format!(
+                "overload shed rate {:.4} > max {:.4}",
+                shed_rate, self.cfg.max_shed_rate
+            ));
+        }
+        if burn_rate > 1.0 {
+            reasons.push(format!("error-budget burn rate {:.2} > 1", burn_rate));
+        }
+        let degraded = self.pool_seen && w.live_workers < self.configured_workers;
+        let verdict = if !reasons.is_empty() {
+            Verdict::Breach
+        } else if degraded {
+            reasons.push(format!(
+                "degraded: {} of {} workers live",
+                w.live_workers, self.configured_workers
+            ));
+            Verdict::Degraded
+        } else {
+            Verdict::Healthy
+        };
+
+        if verdict == Verdict::Breach && !self.breached {
+            events.push(ObsEvent {
+                t_ns: w.t_ns,
+                kind: EventKind::SloBreach,
+                value: burn_rate,
+                detail: reasons.join("; "),
+            });
+        }
+        if verdict != Verdict::Breach && self.breached {
+            events.push(ObsEvent {
+                t_ns: w.t_ns,
+                kind: EventKind::SloRecovered,
+                value: burn_rate,
+                detail: "all objectives back within target".to_string(),
+            });
+        }
+        self.breached = verdict == Verdict::Breach;
+
+        HealthReport {
+            verdict,
+            reasons,
+            windows: self.windows,
+            window_s: w.window_s,
+            p99_ns: w.p99_ns,
+            shed_rate,
+            quota_shed_rate,
+            error_rate,
+            burn_rate,
+            budget_consumed,
+            stalled: now_stalled,
+            no_progress_windows: self.no_progress,
+            live_workers: w.live_workers,
+            configured_workers: self.configured_workers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring() -> EventRing {
+        EventRing::new(64)
+    }
+
+    /// A quiet healthy window with `n` completions.
+    fn window(t_ns: u64, completed: u64) -> WindowObs {
+        WindowObs {
+            t_ns,
+            window_s: 0.1,
+            submitted_delta: completed,
+            completed_delta: completed,
+            live_workers: 2,
+            latency_count: completed,
+            p99_ns: 1_000,
+            ..WindowObs::default()
+        }
+    }
+
+    fn evaluator() -> SloEvaluator {
+        SloEvaluator::new(SloCfg::default(), 2)
+    }
+
+    #[test]
+    fn zero_traffic_window_is_healthy_and_finite() {
+        let mut ev = evaluator();
+        let mut events = ring();
+        let idle = WindowObs { t_ns: 1, window_s: 0.1, live_workers: 2, ..WindowObs::default() };
+        let rep = ev.evaluate(&idle, &mut events);
+        assert_eq!(rep.verdict, Verdict::Healthy, "reasons: {:?}", rep.reasons);
+        for v in [
+            rep.shed_rate,
+            rep.quota_shed_rate,
+            rep.error_rate,
+            rep.burn_rate,
+            rep.budget_consumed,
+        ] {
+            assert!(v.is_finite() && v == 0.0, "idle rate must be exactly 0.0, got {v}");
+        }
+        assert!(events.drain().is_empty());
+    }
+
+    #[test]
+    fn liveness_not_judged_before_pipeline_start() {
+        // live_workers 0 before the pipeline sets the gauge: not
+        // degraded (the pool was never seen), and no retirement event.
+        let mut ev = evaluator();
+        let mut events = ring();
+        let rep = ev.evaluate(
+            &WindowObs { t_ns: 1, window_s: 0.1, ..WindowObs::default() },
+            &mut events,
+        );
+        assert_eq!(rep.verdict, Verdict::Healthy);
+        // Once the full pool has been seen, a shrink degrades.
+        ev.evaluate(&window(2, 10), &mut events);
+        let shrunk = WindowObs { live_workers: 1, ..window(3, 10) };
+        let rep = ev.evaluate(&shrunk, &mut events);
+        assert_eq!(rep.verdict, Verdict::Degraded);
+        let kinds: Vec<EventKind> = events.drain().iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&EventKind::WorkerRetired));
+    }
+
+    #[test]
+    fn stall_needs_consecutive_windows_then_breaches_and_recovers() {
+        let mut ev = evaluator();
+        let mut events = ring();
+        ev.evaluate(&window(1, 10), &mut events);
+        let stalled = WindowObs {
+            in_flight: 4,
+            submitted_delta: 0,
+            completed_delta: 0,
+            latency_count: 0,
+            ..window(2, 0)
+        };
+        // stall_windows = 3: two no-progress windows are not yet a stall.
+        assert_eq!(ev.evaluate(&stalled, &mut events).verdict, Verdict::Healthy);
+        assert_eq!(ev.evaluate(&stalled, &mut events).verdict, Verdict::Healthy);
+        let rep = ev.evaluate(&stalled, &mut events);
+        assert_eq!(rep.verdict, Verdict::Breach);
+        assert!(rep.stalled);
+        assert_eq!(rep.no_progress_windows, 3);
+        // Progress resumes: verdict recovers, resume + recovery events.
+        let rep = ev.evaluate(&window(5, 10), &mut events);
+        assert_eq!(rep.verdict, Verdict::Healthy);
+        assert!(!rep.stalled);
+        let kinds: Vec<EventKind> = events.drain().iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::PipelineStalled,
+                EventKind::SloBreach,
+                EventKind::PipelineResumed,
+                EventKind::SloRecovered,
+            ]
+        );
+    }
+
+    #[test]
+    fn breach_and_recovery_events_fire_once_per_transition() {
+        let mut ev = evaluator();
+        let mut events = ring();
+        let slow = WindowObs { p99_ns: 60_000_000, ..window(1, 10) }; // > 50ms target
+        ev.evaluate(&slow, &mut events);
+        ev.evaluate(&slow, &mut events); // still breached: no second event
+        ev.evaluate(&window(3, 10), &mut events); // recovered
+        let kinds: Vec<EventKind> = events.drain().iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec![EventKind::SloBreach, EventKind::SloRecovered]);
+    }
+
+    #[test]
+    fn burn_rate_and_budget_accounting() {
+        let mut ev = SloEvaluator::new(
+            SloCfg { error_budget: 0.1, ..SloCfg::default() },
+            2,
+        );
+        let mut events = ring();
+        // 5 failures out of 100 outcomes: error rate 0.05, burn 0.5.
+        let w = WindowObs { failed_delta: 5, ..window(1, 100) };
+        let rep = ev.evaluate(&w, &mut events);
+        assert_eq!(rep.verdict, Verdict::Healthy, "reasons: {:?}", rep.reasons);
+        assert!((rep.error_rate - 0.05).abs() < 1e-12);
+        assert!((rep.burn_rate - 0.5).abs() < 1e-12);
+        assert!((rep.budget_consumed - 0.5).abs() < 1e-12);
+        // 20 failures out of 100: burn 2.0 → breach; cumulative budget
+        // consumed = 25 bad / (200 × 0.1) = 1.25.
+        let w = WindowObs { failed_delta: 20, ..window(2, 100) };
+        let rep = ev.evaluate(&w, &mut events);
+        assert_eq!(rep.verdict, Verdict::Breach);
+        assert!((rep.burn_rate - 2.0).abs() < 1e-12);
+        assert!((rep.budget_consumed - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overload_sheds_breach_but_quota_sheds_do_not() {
+        let mut ev = evaluator();
+        let mut events = ring();
+        // 50 quota refusals on 100 attempts: policy, not overload.
+        let quota = WindowObs { quota_shed_delta: 50, ..window(1, 50) };
+        let rep = ev.evaluate(&quota, &mut events);
+        assert_eq!(rep.verdict, Verdict::Healthy, "reasons: {:?}", rep.reasons);
+        assert!((rep.quota_shed_rate - 0.5).abs() < 1e-12);
+        assert_eq!(rep.shed_rate, 0.0);
+        // The same fraction of overload sheds breaches max_shed_rate.
+        let overload = WindowObs { shed_delta: 50, ..window(2, 50) };
+        let rep = ev.evaluate(&overload, &mut events);
+        assert_eq!(rep.verdict, Verdict::Breach);
+        assert!((rep.shed_rate - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn event_ring_wraps_keeping_newest_and_counts_stay_cumulative() {
+        let mut ring = EventRing::new(3);
+        for i in 0..7u64 {
+            ring.push(ObsEvent {
+                t_ns: i,
+                kind: EventKind::EncodeFailures,
+                value: i as f64,
+                detail: String::new(),
+            });
+        }
+        assert_eq!(ring.dropped(), 4);
+        let peeked: Vec<u64> = ring.peek().iter().map(|e| e.t_ns).collect();
+        assert_eq!(peeked, vec![4, 5, 6]);
+        let drained: Vec<u64> = ring.drain().iter().map(|e| e.t_ns).collect();
+        assert_eq!(drained, vec![4, 5, 6]);
+        assert!(ring.drain().is_empty());
+        // Per-kind counters survive the drain.
+        let idx = EventKind::ALL.iter().position(|&k| k == EventKind::EncodeFailures).unwrap();
+        assert_eq!(ring.counts()[idx], 7);
+    }
+
+    #[test]
+    fn health_report_json_parses() {
+        let mut ev = evaluator();
+        let mut events = ring();
+        let rep = ev.evaluate(&window(1, 10), &mut events);
+        let text = rep.to_json().pretty();
+        let v = Json::parse(&text).expect("health json parses");
+        assert_eq!(v.get("verdict").unwrap().as_str(), Some("healthy"));
+        assert_eq!(v.get("windows").unwrap().as_usize(), Some(1));
+        assert!(v.get("burn_rate").unwrap().as_f64().is_some());
+    }
+}

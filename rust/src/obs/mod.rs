@@ -61,14 +61,47 @@
 //! trace (they never reach the consumer); the sampled-trace count
 //! therefore reconciles as `completed − failed_expired`-style
 //! arithmetic pinned by `tests/obs_tracing.rs`.
+//!
+//! # Monitoring and SLOs
+//!
+//! Snapshots are point-in-time; *monitoring* is their derivative. The
+//! [`export`] module runs a background publisher that captures the
+//! serve counters and raw histogram buckets every
+//! [`crate::serve::ServeCfg::publish_interval`] into a preallocated
+//! ring; because every counter is monotone, consecutive captures
+//! subtract into **exact** windowed rates (req/s, shed/s, failure rate)
+//! and windowed latency quantiles (raw bucket-count diffs, not
+//! approximations). Each closed window feeds the [`health`] watchdog:
+//! an [`health::SloEvaluator`] judging p99/shed-rate/error-budget burn,
+//! detecting pipeline stalls (completed counter frozen while requests
+//! are in flight) and worker deaths (live-worker gauge vs configured
+//! pool), and emitting lifecycle events into a bounded ring
+//! ([`crate::serve::ServeHandle::drain_events`]).
+//!
+//! With [`crate::serve::ServeCfg::metrics_addr`] set, a dependency-free
+//! exporter thread serves it all over HTTP:
+//!
+//! ```text
+//! curl http://127.0.0.1:9464/metrics    # Prometheus text exposition
+//! curl http://127.0.0.1:9464/health    # JSON verdict + recent events
+//! curl http://127.0.0.1:9464/snapshot  # ObsSnapshot JSON (this module)
+//! ```
+//!
+//! Every series parses as `name{labels} value` ([`export::parse_exposition`]
+//! is the checker the tests and the `serve_bench --metrics-addr` smoke
+//! run against the live output). The serve hot path never touches any
+//! of this — publisher and listener threads own all sampling and
+//! allocation, so the zero-alloc serve window holds with publishing on.
 
+pub mod export;
+pub mod health;
 pub mod json;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::serve::latency::{HistSnapshot, Histogram};
+use crate::serve::latency::{HistBuckets, HistSnapshot, Histogram};
 use crate::util::json::Json;
 use crate::util::sync::lock_unpoisoned;
 
@@ -474,6 +507,42 @@ impl Tracer {
                 .collect(),
             gauges: Vec::new(),
         }
+    }
+
+    /// Raw per-stage histogram buckets, all workers and models merged,
+    /// in [`Stage::ALL`] order — the publisher's windowed-stage capture
+    /// ([`export::Sample::stages`]). Counts are monotone, so two
+    /// consecutive captures subtract into exactly that window's stage
+    /// distribution via [`HistBuckets::diff`]. Empty when tracing is
+    /// disabled.
+    pub fn stage_buckets(&self) -> Vec<HistBuckets> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        let merged = StageHistograms::new();
+        for worker in &self.stages {
+            for sh in worker {
+                merged.merge(sh);
+            }
+        }
+        Stage::ALL.iter().map(|&s| merged.stage(s).buckets()).collect()
+    }
+
+    /// Per-worker per-stage latency snapshots (models merged within
+    /// each worker; outer order = worker pool order, inner =
+    /// [`Stage::ALL`]) — the `shdc_worker_stage_latency_ns` exposition
+    /// series. Empty when tracing is disabled.
+    pub fn worker_stages(&self) -> Vec<Vec<StageSnapshot>> {
+        self.stages
+            .iter()
+            .map(|worker| {
+                let merged = StageHistograms::new();
+                for sh in worker {
+                    merged.merge(sh);
+                }
+                merged.snapshot()
+            })
+            .collect()
     }
 }
 

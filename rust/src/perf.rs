@@ -38,6 +38,11 @@
 //! ([`crate::serve::bench::run_closed_loop_many_class`]): a 1k-class
 //! Zipf-skewed tenant scored single-shard and through the sharded AM
 //! scan, with per-shard scan stats in each report's `models[].shards`.
+//! A final **windowed** run (`serve_windowed`) repeats the f32
+//! closed loop with the metrics publisher and SLO watchdog enabled
+//! (10 ms publish interval) and records the last window's exact
+//! counter-delta rates, the end-of-run health verdict and lifecycle
+//! events under the snapshot's `serve_windowed` key.
 //!
 //! Knobs: `BENCH_MS` (per-measurement budget, default 300),
 //! `SHDC_BENCH_RECORDS` (pipeline-scaling record budget, default 60000),
@@ -372,6 +377,65 @@ fn serve_stage_breakdown(requests: u64) -> Json {
     obs.to_json()
 }
 
+/// One closed-loop run with the metrics publisher + SLO watchdog live
+/// (no HTTP listener — the snapshot reads the handle directly): the
+/// snapshot's `serve_windowed` key records the last closed window's
+/// exact counter-delta rates, the watchdog's end-of-run health report,
+/// and the lifecycle-event counts — the monitoring layer's numbers
+/// pinned next to the point-in-time sections it derives from.
+fn serve_windowed(requests: u64) -> Json {
+    let enc = serve_encoder();
+    let store = serve_store(&enc);
+    let clients = 8usize;
+    let cfg = crate::serve::ServeCfg {
+        obs: crate::obs::ObsCfg { sample_every: 4, ..Default::default() },
+        slo: Some(crate::obs::health::SloCfg::default()),
+        publish_interval: Duration::from_millis(10),
+        ..serve_cfg(enc, Precision::F32)
+    };
+    let (server, handle) = crate::serve::Server::new(cfg, store);
+    let server = std::thread::spawn(move || server.run());
+    let per_client = (requests / clients as u64).max(1);
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let mut stream = SyntheticStream::new(SyntheticConfig {
+                    alphabet_size: 1_000_000,
+                    ..SyntheticConfig::sampled(22 + c as u64)
+                });
+                for _ in 0..per_client {
+                    let rec = stream.next_record().expect("synthetic stream is infinite");
+                    let _ = h.classify(rec);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("client thread");
+    }
+    // Read the monitoring surfaces while the publisher is still live;
+    // shutdown joins it afterwards.
+    let rates = handle.window_rates().map(|r| r.to_json()).unwrap_or(Json::Null);
+    let health = handle.health().expect("publishing was enabled");
+    let events = handle.drain_events();
+    println!(
+        "  serve windowed: verdict {} after {} windows ({} lifecycle events)",
+        health.verdict.name(),
+        health.windows,
+        events.len(),
+    );
+    handle.shutdown();
+    server.join().expect("server thread");
+    Json::obj(vec![
+        ("publish_interval_ms", Json::num(10.0)),
+        ("requests", Json::num(clients as f64 * per_client as f64)),
+        ("last_window_rates", rates),
+        ("health", health.to_json()),
+        ("events", Json::Arr(events.iter().map(|e| e.to_json()).collect())),
+    ])
+}
+
 /// Run the full encode snapshot; returns the machine-readable document
 /// written to `BENCH_encode.json`.
 pub fn encode_snapshot() -> Json {
@@ -629,6 +693,7 @@ pub fn encode_snapshot() -> Json {
     let serve_requests = env_u64("SHDC_BENCH_SERVE_REQUESTS", 20_000);
     let serve_results = serve_scenarios(serve_requests);
     let stage_breakdown = serve_stage_breakdown(serve_requests.clamp(1, 10_000));
+    let windowed = serve_windowed(serve_requests.clamp(1, 10_000));
 
     // --- coordinator worker scaling ---------------------------------------
     let scale_records = env_u64("SHDC_BENCH_RECORDS", 60_000);
@@ -717,6 +782,7 @@ pub fn encode_snapshot() -> Json {
         ("pipeline_scaling", Json::Arr(scaling)),
         ("serve", Json::Arr(serve_results)),
         ("serve_stage_breakdown", stage_breakdown),
+        ("serve_windowed", windowed),
     ])
 }
 

@@ -116,6 +116,18 @@ impl Histogram {
         self.min.fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
+    /// Raw bucket-level capture for windowed diffs
+    /// ([`HistBuckets::diff`]): every bucket count plus the running
+    /// sum, loaded once each. Allocates (one `Vec` per capture) — call
+    /// it from aggregation threads (the metrics publisher), never from
+    /// the request hot path.
+    pub fn buckets(&self) -> HistBuckets {
+        HistBuckets {
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+
     /// Point-in-time summary. Quantiles are bucket representatives
     /// (≤ ~6% relative error); count/sum/max/min are exact.
     pub fn snapshot(&self) -> HistSnapshot {
@@ -149,7 +161,7 @@ impl Histogram {
 }
 
 /// Summary of a [`Histogram`] at one instant.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct HistSnapshot {
     pub count: u64,
     pub mean: f64,
@@ -158,6 +170,84 @@ pub struct HistSnapshot {
     pub p99: u64,
     pub max: u64,
     pub min: u64,
+}
+
+/// Raw bucket counts of a [`Histogram`] at one instant
+/// ([`Histogram::buckets`]). Histograms are monotone (counts only ever
+/// grow), so two captures of the same histogram subtract exactly:
+/// [`HistBuckets::diff`] is the distribution of precisely the samples
+/// recorded between the captures — the windowed-quantile primitive
+/// behind `obs::export`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistBuckets {
+    counts: Vec<u64>,
+    sum: u64,
+}
+
+impl HistBuckets {
+    /// The all-zero capture: `newer.diff(&HistBuckets::empty())` equals
+    /// `newer`'s own summary. Also the placeholder when a window has no
+    /// earlier capture yet.
+    pub fn empty() -> HistBuckets {
+        HistBuckets::default()
+    }
+
+    /// Samples captured (sum of bucket counts).
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Summarize the samples recorded after `older` was captured and
+    /// before `self` was. Quantiles are bucket representatives as in
+    /// [`Histogram::snapshot`]; windowed `max`/`min` are the
+    /// highest/lowest *occupied-bucket* representatives (the exact
+    /// extremes of a sub-window are not recoverable from monotone
+    /// captures). Per-bucket subtraction saturates, so a capture pair
+    /// torn by concurrent `record`s can skew a window by at most the
+    /// in-flight samples — never underflow.
+    pub fn diff(&self, older: &HistBuckets) -> HistSnapshot {
+        let n = self.counts.len().max(older.counts.len());
+        let delta = |i: usize| -> u64 {
+            let new = self.counts.get(i).copied().unwrap_or(0);
+            let old = older.counts.get(i).copied().unwrap_or(0);
+            new.saturating_sub(old)
+        };
+        let count: u64 = (0..n).map(delta).sum();
+        if count == 0 {
+            return HistSnapshot { count: 0, mean: 0.0, p50: 0, p90: 0, p99: 0, max: 0, min: 0 };
+        }
+        let sum = self.sum.saturating_sub(older.sum);
+        let quantile = |p: f64| -> u64 {
+            let target = ((p * count as f64).ceil() as u64).clamp(1, count);
+            let mut seen = 0u64;
+            for i in 0..n {
+                seen += delta(i);
+                if seen >= target {
+                    return representative_of(i);
+                }
+            }
+            representative_of(n - 1)
+        };
+        let mut min_idx = usize::MAX;
+        let mut max_idx = 0usize;
+        for i in 0..n {
+            if delta(i) > 0 {
+                if min_idx == usize::MAX {
+                    min_idx = i;
+                }
+                max_idx = i;
+            }
+        }
+        HistSnapshot {
+            count,
+            mean: sum as f64 / count as f64,
+            p50: quantile(0.50),
+            p90: quantile(0.90),
+            p99: quantile(0.99),
+            max: representative_of(max_idx),
+            min: representative_of(min_idx),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -331,6 +421,64 @@ mod tests {
         let s = a.snapshot();
         assert_eq!(s.count, 2);
         assert!(s.mean > u64::MAX as f64 / 4.0, "sum wrapped: {}", s.mean);
+    }
+
+    #[test]
+    fn bucket_diff_is_exactly_the_window_samples() {
+        // Capture, record more, capture again: the diff must equal a
+        // fresh histogram holding only the in-between samples.
+        let h = Histogram::new();
+        for v in [10u64, 200, 3_000] {
+            h.record(v);
+        }
+        let older = h.buckets();
+        let window_only = Histogram::new();
+        for v in [5u64, 5, 70_000, 123, 123, 123] {
+            h.record(v);
+            window_only.record(v);
+        }
+        let d = h.buckets().diff(&older);
+        let want = window_only.snapshot();
+        assert_eq!(d.count, want.count);
+        assert_eq!(d.p50, want.p50);
+        assert_eq!(d.p90, want.p90);
+        assert_eq!(d.p99, want.p99);
+        assert!((d.mean - want.mean).abs() < 1e-9);
+        // Windowed extremes carry bucket resolution, not exact values.
+        assert_eq!(d.min, representative_of(index_of(5)));
+        assert_eq!(d.max, representative_of(index_of(70_000)));
+    }
+
+    #[test]
+    fn bucket_diff_empty_window_is_zeroed() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3] {
+            h.record(v);
+        }
+        let cap = h.buckets();
+        let d = cap.diff(&cap.clone());
+        assert_eq!(d.count, 0);
+        assert_eq!(d.mean, 0.0);
+        assert_eq!((d.p50, d.p99, d.min, d.max), (0, 0, 0, 0));
+        // Diff against the empty capture recovers the full summary.
+        let full = cap.diff(&HistBuckets::empty());
+        assert_eq!(full.count, 3);
+        assert_eq!(full.p50, h.snapshot().p50);
+    }
+
+    #[test]
+    fn bucket_diff_never_underflows_on_swapped_captures() {
+        // Swapped operand order (older.diff(&newer)) models the worst
+        // torn-capture case: every delta saturates to zero instead of
+        // wrapping to ~u64::MAX counts.
+        let h = Histogram::new();
+        h.record(42);
+        let older = h.buckets();
+        h.record(42);
+        let newer = h.buckets();
+        let d = older.diff(&newer);
+        assert_eq!(d.count, 0);
+        assert_eq!(d.p99, 0);
     }
 
     #[test]

@@ -187,6 +187,16 @@
 //! JSON section of the bench reports) and
 //! [`ServeHandle::drain_traces`] (the raw per-request records;
 //! `serve_bench --trace-out` writes them as JSONL).
+//!
+//! Live *monitoring* builds on those snapshots: setting
+//! [`ServeCfg::metrics_addr`] (and/or [`ServeCfg::slo`]) starts a
+//! background publisher that samples the counters every
+//! [`ServeCfg::publish_interval`] into a ring, derives windowed rates,
+//! judges SLO health, and — with an address — serves Prometheus text on
+//! `GET /metrics` plus `/health` and `/snapshot`. See
+//! [`crate::obs::export`] for the dataflow and scrape examples, and
+//! [`crate::obs::health`] for the verdict semantics. Shutdown joins
+//! both threads after the pipeline drains.
 
 pub mod bench;
 pub mod latency;
@@ -208,7 +218,11 @@ use crate::coordinator::{
     run_pipeline_multi, CoordinatorCfg, EncodedBatch, EncoderCfg, PipelineStats,
 };
 use crate::data::{Record, RecordStream};
-use crate::obs::{ObsCfg, ObsSnapshot, TraceCtx, TraceRecord, Tracer};
+use crate::obs::export::{
+    spawn_listener, spawn_publisher, MetricsHub, PublishCfg, Sample, WindowRates,
+};
+use crate::obs::health::{HealthReport, ObsEvent, SloCfg};
+use crate::obs::{ObsCfg, ObsSnapshot, StageSnapshot, TraceCtx, TraceRecord, Tracer};
 use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 
 /// What `classify` does when the server is saturated (no free completion
@@ -378,6 +392,24 @@ pub struct ServeCfg {
     /// section). Disabled by default (`sample_every: 0`) — costs one
     /// branch per submission and allocates nothing.
     pub obs: ObsCfg,
+    /// Bind address for the metrics exporter (`"127.0.0.1:9464"`;
+    /// port 0 picks a free port, readable back via
+    /// [`ServeHandle::metrics_addr`]). `None` — the default — binds
+    /// nothing. Setting it also starts the metrics publisher. The
+    /// listener serves `GET /metrics` (Prometheus text), `/health`
+    /// (JSON SLO verdict + lifecycle events) and `/snapshot`
+    /// ([`ObsSnapshot`] JSON); see [`crate::obs::export`].
+    pub metrics_addr: Option<String>,
+    /// SLO objectives evaluated once per publish window by the
+    /// watchdog ([`crate::obs::health`]). `Some` starts the publisher
+    /// even without a listener (verdicts via [`ServeHandle::health`]);
+    /// `None` with a `metrics_addr` still publishes, judging against
+    /// [`SloCfg::default`].
+    pub slo: Option<SloCfg>,
+    /// Sampling interval of the metrics publisher — one windowed-rate /
+    /// SLO evaluation per tick. Only meaningful when publishing is on
+    /// (`metrics_addr` or `slo` set). Clamped to ≥ 1 ms.
+    pub publish_interval: Duration,
 }
 
 impl ServeCfg {
@@ -398,6 +430,9 @@ impl ServeCfg {
             admission: AdmissionPolicy::Block,
             default_deadline: None,
             obs: ObsCfg::default(),
+            metrics_addr: None,
+            slo: None,
+            publish_interval: Duration::from_millis(100),
         }
     }
 }
@@ -574,7 +609,7 @@ pub struct ModelSnapshot {
 
 /// Point-in-time serve statistics. (No longer `Copy`: it carries the
 /// per-model snapshot vector.)
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct ServeSnapshot {
     pub submitted: u64,
     pub completed: u64,
@@ -598,18 +633,52 @@ pub struct ServeSnapshot {
 }
 
 impl ServeSnapshot {
-    /// Fraction of admission attempts refused for load reasons
-    /// (`shed + admission_timeouts + quota_shed` over all attempts that
-    /// reached admission). The saturation gauge for open-loop traffic:
-    /// ~0 below capacity, climbing toward `1 − capacity/offered` above
-    /// it.
+    fn attempts(&self) -> u64 {
+        self.submitted + self.shed + self.admission_timeouts + self.quota_shed
+    }
+
+    /// Fraction of admission attempts refused for *any* rationing
+    /// reason — overload sheds (`shed + admission_timeouts`) **and**
+    /// tenant-quota refusals (`quota_shed`) — over all attempts that
+    /// reached admission. The aggregate saturation gauge for open-loop
+    /// traffic: ~0 below capacity, climbing toward
+    /// `1 − capacity/offered` above it. When the distinction matters
+    /// (it does to the SLO watchdog), use [`Self::overload_shed_rate`]
+    /// / [`Self::quota_shed_rate`], which partition this exactly:
+    /// `shed_rate == overload_shed_rate + quota_shed_rate`.
     pub fn shed_rate(&self) -> f64 {
         let refused = self.shed + self.admission_timeouts + self.quota_shed;
-        let attempts = self.submitted + refused;
+        let attempts = self.attempts();
         if attempts == 0 {
             return 0.0;
         }
         refused as f64 / attempts as f64
+    }
+
+    /// Fraction of admission attempts refused because the *server* was
+    /// overloaded: [`ServeError::QueueFull`] sheds plus
+    /// [`ServeError::AdmissionTimeout`] backoff exhaustion. This is the
+    /// rate the SLO evaluator judges against
+    /// [`SloCfg::max_shed_rate`] — an overloaded server is the
+    /// operator's problem.
+    pub fn overload_shed_rate(&self) -> f64 {
+        let attempts = self.attempts();
+        if attempts == 0 {
+            return 0.0;
+        }
+        (self.shed + self.admission_timeouts) as f64 / attempts as f64
+    }
+
+    /// Fraction of admission attempts refused by tenants' *own*
+    /// [`TenantQuota`]s ([`ServeError::QuotaExceeded`]). Policy working
+    /// as designed — never an SLO breach, however high it climbs
+    /// (though bursts are surfaced as lifecycle events).
+    pub fn quota_shed_rate(&self) -> f64 {
+        let attempts = self.attempts();
+        if attempts == 0 {
+            return 0.0;
+        }
+        self.quota_shed as f64 / attempts as f64
     }
 }
 
@@ -798,6 +867,11 @@ struct Shared {
     /// Stage-span tracer ([`ServeCfg::obs`]); always present, inert
     /// (one plain branch per submission) when sampling is disabled.
     tracer: Arc<Tracer>,
+    /// Monitoring hub (sample ring + SLO evaluator + event ring),
+    /// present iff publishing is enabled (`metrics_addr` or `slo`).
+    /// The request hot path never touches it — the publisher and
+    /// listener threads own all sampling and allocation.
+    hub: Option<Arc<MetricsHub>>,
 }
 
 /// Assemble a sampled request's full span chain: the context it carried
@@ -1161,6 +1235,72 @@ impl ServeHandle {
         }
         snap
     }
+
+    /// Actual bound address of the metrics exporter — `Some` once
+    /// [`ServeCfg::metrics_addr`] was set and the listener bound
+    /// (immediately at construction), carrying the kernel-assigned port
+    /// when the config said `:0`.
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.shared.hub.as_ref().and_then(|h| h.bound_addr())
+    }
+
+    /// Latest SLO verdict from the watchdog; `None` when publishing is
+    /// off ([`ServeCfg::slo`] and [`ServeCfg::metrics_addr`] both
+    /// unset), default-healthy before the first closed window.
+    pub fn health(&self) -> Option<HealthReport> {
+        self.shared.hub.as_ref().map(|h| h.health())
+    }
+
+    /// Windowed rates of the last closed publish window (`None` when
+    /// publishing is off or fewer than two samples exist yet).
+    pub fn window_rates(&self) -> Option<WindowRates> {
+        self.shared.hub.as_ref().and_then(|h| h.window_rates())
+    }
+
+    /// Take every retained lifecycle event (worker retirements, shed
+    /// bursts, queue saturation, SLO breach/recovery…), oldest first,
+    /// resetting the ring. Empty when publishing is off. The `/health`
+    /// endpoint *peeks* instead, so scrapes never race a consumer
+    /// draining here.
+    pub fn drain_events(&self) -> Vec<ObsEvent> {
+        self.shared.hub.as_ref().map(|h| h.drain_events()).unwrap_or_default()
+    }
+
+    /// Render the full Prometheus text exposition from the live
+    /// counters — exactly what `GET /metrics` serves; `None` when
+    /// publishing is off.
+    pub fn render_metrics(&self) -> Option<String> {
+        self.shared.hub.as_ref().map(|h| crate::obs::export::render_metrics(self, h))
+    }
+
+    /// Per-worker per-stage latency snapshots ([`Stage::ALL`] order per
+    /// worker, workers in pool order; the `shdc_worker_stage_latency_ns`
+    /// series). Empty when tracing is disabled.
+    ///
+    /// [`Stage::ALL`]: crate::obs::Stage::ALL
+    pub fn worker_stage_snapshots(&self) -> Vec<Vec<StageSnapshot>> {
+        self.shared.tracer.worker_stages()
+    }
+
+    /// One publisher sample: every monotone counter + raw histogram
+    /// bucket capture the windowed derivation subtracts. Called by the
+    /// metrics publisher thread on its own interval; the only cost to
+    /// the serve path is the relaxed atomic loads.
+    pub fn obs_sample(&self, t_ns: u64) -> Sample {
+        let sh = &*self.shared;
+        let serve = self.stats();
+        let latency = sh.stats.latency_ns.buckets();
+        let stages = sh.tracer.stage_buckets();
+        let queue_depth = lock_unpoisoned(&sh.queue).len() as u64;
+        Sample {
+            t_ns,
+            serve,
+            latency,
+            stages,
+            live_workers: sh.tracer.live_workers(),
+            queue_depth,
+        }
+    }
 }
 
 /// The batcher side: a [`RecordStream`] over the submission queue.
@@ -1391,6 +1531,10 @@ pub struct Server {
     shared: Arc<Shared>,
     pending_tx: SyncSender<Pending>,
     pending_rx: Receiver<Pending>,
+    /// Monitoring threads (metrics publisher, exporter listener) when
+    /// publishing is enabled; stopped and joined by [`Server::run`] on
+    /// shutdown.
+    obs_threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -1459,6 +1603,16 @@ impl Server {
             cfg.coordinator.n_workers.max(1),
             registry.models.len(),
         ));
+        // Monitoring is on when there is anyone to tell: a scrape
+        // address, or SLO objectives to judge.
+        let hub = (cfg.metrics_addr.is_some() || cfg.slo.is_some()).then(|| {
+            MetricsHub::new(PublishCfg {
+                interval: cfg.publish_interval,
+                slo: cfg.slo.unwrap_or_default(),
+                configured_workers: cfg.coordinator.n_workers.max(1) as u64,
+                queue_cap: cfg.queue_cap.max(1) as u64,
+            })
+        });
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::with_capacity(cfg.queue_cap.max(1))),
             nonempty_cv: Condvar::new(),
@@ -1477,12 +1631,25 @@ impl Server {
             default_deadline: cfg.default_deadline,
             jitter: AtomicU64::new(registry.models[0].encoder.seed),
             tracer,
+            hub,
         });
         // One pending per in-flight request; each holds a slot, so
         // `slots` bounds the channel and sends never block.
         let (pending_tx, pending_rx) = sync_channel::<Pending>(slots + 1);
         let handle = ServeHandle { shared: Arc::clone(&shared) };
-        (Server { cfg, registry, shared, pending_tx, pending_rx }, handle)
+        // Monitoring threads start now so the exporter answers (and the
+        // publisher baselines its first sample) before any traffic;
+        // `run()` stops and joins them after the pipeline drains.
+        let mut obs_threads = Vec::new();
+        if let Some(hub) = &shared.hub {
+            obs_threads.push(spawn_publisher(Arc::clone(hub), handle.clone()));
+            if let Some(addr) = &cfg.metrics_addr {
+                let listener = spawn_listener(addr, Arc::clone(hub), handle.clone())
+                    .unwrap_or_else(|e| panic!("bind metrics listener on {addr}: {e}"));
+                obs_threads.push(listener);
+            }
+        }
+        (Server { cfg, registry, shared, pending_tx, pending_rx, obs_threads }, handle)
     }
 
     /// Run the serve loop on the current thread until
@@ -1490,7 +1657,7 @@ impl Server {
     /// the pipeline stats (spawn this on a dedicated thread and keep the
     /// [`ServeHandle`] for clients).
     pub fn run(self) -> Arc<PipelineStats> {
-        let Server { cfg, registry, shared, pending_tx, pending_rx } = self;
+        let Server { cfg, registry, shared, pending_tx, pending_rx, obs_threads } = self;
         let stream = RequestStream {
             shared: Arc::clone(&shared),
             pending_tx,
@@ -1512,7 +1679,11 @@ impl Server {
             keep_records: false,
             max_records: None,
             stop_flag: Some(Arc::clone(&shared.pipeline_stop)),
-            obs: shared.tracer.enabled().then(|| Arc::clone(&shared.tracer)),
+            // Always wired: the tracer carries the live-worker gauge the
+            // SLO watchdog's liveness check reads even when stage-span
+            // sampling is off (the coordinator gates its per-batch
+            // stamping on `Tracer::enabled` separately).
+            obs: Some(Arc::clone(&shared.tracer)),
             ..cfg.coordinator.clone()
         };
         // One worker pool, every tenant: the registry's encoder configs
@@ -1609,6 +1780,17 @@ impl Server {
             }
             true
         });
+        // Stop the monitoring threads and wait them out: the publisher
+        // takes one final closing sample (end-of-run deltas stay
+        // observable), the listener finishes at most one in-flight
+        // scrape. On the panic path these are not joined — AbortOnDrop
+        // still stops the hub, so both exit promptly on their own.
+        if let Some(hub) = &shared.hub {
+            hub.stop();
+        }
+        for t in obs_threads {
+            let _ = t.join();
+        }
         stats
         // _abort_guard drops here (and on any panic path above): see
         // AbortOnDrop.
@@ -1629,6 +1811,12 @@ impl Drop for AbortOnDrop {
     fn drop(&mut self) {
         let sh = &*self.0;
         sh.shutdown.store(true, Ordering::Release);
+        // Signal the monitoring threads too (idempotent — run() already
+        // did on the clean path): after an abnormal exit nobody joins
+        // them, so the stop flag is what keeps them from spinning on.
+        if let Some(hub) = &sh.hub {
+            hub.stop();
+        }
         {
             let mut q = lock_unpoisoned(&sh.queue);
             q.clear();

@@ -26,6 +26,7 @@ use shdc::coordinator::{run_pipeline, CatCfg, CoordinatorCfg, EncoderCfg, NumCfg
 use shdc::data::synthetic::SyntheticConfig;
 use shdc::data::{RecordStream, SyntheticStream};
 use shdc::encoding::BundleMethod;
+use shdc::obs::health::SloCfg;
 use shdc::obs::ObsCfg;
 use shdc::serve::{ServeCfg, Server};
 
@@ -154,7 +155,17 @@ fn assert_alloc_free(label: &str, workers: usize, queue_depth: usize) {
 /// threaded through so the same window pins the tracer's claims:
 /// disabled tracing adds nothing, and *enabled* sampling stays
 /// heap-free too (Copy contexts, preallocated rings and histograms).
-fn measure_serve(obs: ObsCfg, warmup: u64, window: u64, total: u64) -> (u64, u64) {
+/// `slo` likewise: enabling the metrics publisher must not put a single
+/// allocation on the request path — the publisher thread owns all
+/// snapshot/ring/report allocation, and `classify` never touches the
+/// hub.
+fn measure_serve(
+    obs: ObsCfg,
+    slo: Option<SloCfg>,
+    warmup: u64,
+    window: u64,
+    total: u64,
+) -> (u64, u64) {
     // 2-class prototype store at the encoder's output dim (2048 + 512).
     let d = 2048 + 512;
     let mut rng = shdc::util::rng::Rng::new(7);
@@ -179,6 +190,14 @@ fn measure_serve(obs: ObsCfg, warmup: u64, window: u64, total: u64) -> (u64, u64
         // parallelism and are exercised in tests/serve_smoke.rs instead.
         am_shards: 1,
         obs,
+        slo,
+        // Long enough that no publisher tick lands inside the measured
+        // window: the phase pins that *enabling* publishing leaves the
+        // request path untouched (ticks themselves run — and allocate —
+        // on the publisher thread, outside the window by construction;
+        // the spawn tick precedes warmup, the closing tick follows the
+        // window).
+        publish_interval: Duration::from_secs(10),
         ..ServeCfg::new(enc_cfg(43))
     };
     let (server, handle) = Server::new(cfg, store);
@@ -203,10 +222,10 @@ fn measure_serve(obs: ObsCfg, warmup: u64, window: u64, total: u64) -> (u64, u64
     (end.0 - start.0, end.1 - start.1)
 }
 
-fn assert_serve_alloc_free(label: &str, obs: ObsCfg) {
+fn assert_serve_alloc_free(label: &str, obs: ObsCfg, slo: Option<SloCfg>) {
     let mut observed = Vec::new();
     for attempt in 0..3 {
-        let (allocs, deallocs) = measure_serve(obs, 400, 300, 720);
+        let (allocs, deallocs) = measure_serve(obs, slo, 400, 300, 720);
         if allocs == 0 && deallocs == 0 {
             return;
         }
@@ -227,12 +246,22 @@ fn steady_state_pipeline_is_allocation_free() {
     assert_alloc_free("3-worker stealing", 3, 4);
     // Phase 3: the serving loop — submit → micro-batch → encode → AM
     // score → respond — is allocation-free per request once warm.
-    assert_serve_alloc_free("closed-loop serve", ObsCfg::default());
+    assert_serve_alloc_free("closed-loop serve", ObsCfg::default(), None);
     // Phase 4: same loop with stage-span tracing live (1-in-16
     // sampling). Sampled requests carry Copy contexts and land in
     // preallocated rings/histograms, so the window must still be clean.
     assert_serve_alloc_free(
         "closed-loop serve traced",
         ObsCfg { sample_every: 16, ring_cap: 512 },
+        None,
+    );
+    // Phase 5: same loop with the SLO watchdog / metrics publisher
+    // enabled. All publishing allocation belongs to the publisher
+    // thread (spawn tick before warmup, closing tick after the window);
+    // the request path must stay exactly as clean as phase 3.
+    assert_serve_alloc_free(
+        "closed-loop serve publishing",
+        ObsCfg::default(),
+        Some(SloCfg::default()),
     );
 }

@@ -1,0 +1,344 @@
+//! End-to-end contract tests for the monitoring subsystem
+//! (`shdc::obs::export` + `shdc::obs::health` wired through the
+//! serving stack):
+//!
+//! * a zero-traffic publishing window is explicitly healthy — every
+//!   reported rate is a finite zero, never NaN;
+//! * publisher/listener shutdown is idempotent (double `shutdown`,
+//!   post-join `shutdown`, repeated event drains) and the monitoring
+//!   surfaces stay readable after the threads are joined;
+//! * the `/metrics` exposition parses line-for-line as Prometheus text
+//!   and two scrapes reconcile *exactly* with the requests issued
+//!   between them (counters are monotone, deltas exact);
+//! * `/health` and `/snapshot` serve valid JSON, unknown paths 404,
+//!   non-GET methods 405;
+//! * an injected worker stall ([`FaultPlan::stall_once`]) flips the
+//!   watchdog to `breach` with a `pipeline_stalled` event, and the
+//!   verdict recovers (with `pipeline_resumed` + `slo_recovered`)
+//!   once the worker wakes and completes the backlog.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use shdc::am::AmStore;
+use shdc::coordinator::{CatCfg, CoordinatorCfg, EncoderCfg, FaultPlan, NumCfg};
+use shdc::data::synthetic::SyntheticConfig;
+use shdc::data::{RecordStream, SyntheticStream};
+use shdc::encoding::BundleMethod;
+use shdc::obs::export::{http_get, parse_exposition, ParsedSeries};
+use shdc::obs::health::{EventKind, SloCfg, Verdict};
+use shdc::serve::{ServeCfg, ServeHandle, Server};
+use shdc::util::rng::Rng;
+
+fn encoder_cfg(seed: u64) -> EncoderCfg {
+    EncoderCfg {
+        cat: CatCfg::Bloom { d: 256, k: 2 },
+        num: NumCfg::None,
+        bundle: BundleMethod::Concat,
+        n_numeric: 13,
+        seed,
+    }
+}
+
+fn small_store(d: usize, seed: u64) -> AmStore {
+    let mut rng = Rng::new(seed);
+    let rows: Vec<Vec<f32>> =
+        (0..2).map(|_| (0..d).map(|_| rng.normal_f32()).collect()).collect();
+    AmStore::from_prototypes(d, &rows, None)
+}
+
+/// A serving config with the monitoring stack enabled: SLO watchdog
+/// always, HTTP exporter when `metrics_addr` is set. Lenient latency
+/// target so slow CI hosts never trip the p99 objective by accident —
+/// the stall test is the only one that *wants* a breach.
+fn monitored_cfg(
+    seed: u64,
+    n_workers: usize,
+    metrics_addr: Option<&str>,
+    slo: SloCfg,
+) -> ServeCfg {
+    ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 8,
+            n_workers,
+            queue_depth: 2,
+            ..Default::default()
+        },
+        max_batch_delay: Duration::from_micros(200),
+        queue_cap: 64,
+        slots: 32,
+        metrics_addr: metrics_addr.map(str::to_string),
+        slo: Some(slo),
+        publish_interval: Duration::from_millis(10),
+        ..ServeCfg::new(encoder_cfg(seed))
+    }
+}
+
+/// Latency objective no real request will miss; everything else default.
+fn lenient_slo() -> SloCfg {
+    SloCfg { p99_target: Duration::from_secs(10), ..SloCfg::default() }
+}
+
+/// Drive `n` sequential classify calls from one client thread.
+fn run_sequential(handle: &ServeHandle, data_seed: u64, n: u64) {
+    let mut stream = SyntheticStream::new(SyntheticConfig::sampled(data_seed));
+    let mut rec = stream.next_record().expect("unbounded stream");
+    for _ in 0..n {
+        let resp = handle.classify(rec).expect("in-capacity classify");
+        rec = resp.record;
+        stream.refill_record(&mut rec);
+    }
+}
+
+/// Poll `cond` against the live health report until it holds or the
+/// deadline passes; panics with the last report on timeout.
+fn wait_for_health(
+    handle: &ServeHandle,
+    what: &str,
+    deadline: Duration,
+    cond: impl Fn(&shdc::obs::health::HealthReport) -> bool,
+) -> shdc::obs::health::HealthReport {
+    let start = Instant::now();
+    loop {
+        let report = handle.health().expect("publishing enabled");
+        if cond(&report) {
+            return report;
+        }
+        assert!(
+            start.elapsed() < deadline,
+            "timed out waiting for {what}; last report: {report:?}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn series_value(series: &[ParsedSeries], name: &str) -> f64 {
+    series
+        .iter()
+        .find(|s| s.name == name && s.labels.is_empty())
+        .unwrap_or_else(|| panic!("series {name} missing from exposition"))
+        .value
+}
+
+#[test]
+fn zero_traffic_windows_are_healthy_and_finite() {
+    let cfg = monitored_cfg(80, 2, None, lenient_slo());
+    let (server, handle) = Server::new(cfg, small_store(256, 81));
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // No traffic at all: the publisher must still close windows, and
+    // every window must be a finite-zero, healthy one.
+    let report =
+        wait_for_health(&handle, "3 idle windows", Duration::from_secs(10), |r| r.windows >= 3);
+    assert_eq!(report.verdict, Verdict::Healthy, "idle is healthy: {report:?}");
+    assert!(!report.stalled);
+    assert!(report.reasons.is_empty(), "{:?}", report.reasons);
+    for (name, v) in [
+        ("window_s", report.window_s),
+        ("shed_rate", report.shed_rate),
+        ("quota_shed_rate", report.quota_shed_rate),
+        ("error_rate", report.error_rate),
+        ("burn_rate", report.burn_rate),
+        ("budget_consumed", report.budget_consumed),
+    ] {
+        assert!(v.is_finite(), "{name} must be finite on an idle window, got {v}");
+    }
+    assert_eq!(report.shed_rate, 0.0);
+    assert_eq!(report.error_rate, 0.0);
+
+    let rates = handle.window_rates().expect("two samples have landed");
+    for (name, v) in [
+        ("submitted_per_s", rates.submitted_per_s),
+        ("completed_per_s", rates.completed_per_s),
+        ("shed_per_s", rates.shed_per_s),
+        ("quota_shed_per_s", rates.quota_shed_per_s),
+        ("failed_per_s", rates.failed_per_s),
+        ("expired_per_s", rates.expired_per_s),
+    ] {
+        assert!(v.is_finite(), "{name} finite on idle window, got {v}");
+        assert_eq!(v, 0.0, "{name} must be zero with no traffic");
+    }
+    assert_eq!(rates.latency.count, 0, "no latency samples without traffic");
+
+    handle.shutdown();
+    server_thread.join().expect("server");
+}
+
+#[test]
+fn publisher_shutdown_is_idempotent_and_surfaces_outlive_the_threads() {
+    let cfg = monitored_cfg(82, 2, None, lenient_slo());
+    let (server, handle) = Server::new(cfg, small_store(256, 83));
+    let server_thread = std::thread::spawn(move || server.run());
+    run_sequential(&handle, 84, 40);
+    // Let at least one window close over the traffic so the evaluator
+    // has judged something before we tear down.
+    wait_for_health(&handle, "first window", Duration::from_secs(10), |r| r.windows >= 1);
+
+    handle.shutdown();
+    handle.shutdown(); // second call must be a no-op
+    server_thread.join().expect("server");
+    handle.shutdown(); // post-join call must also be a no-op
+
+    // The hub outlives its threads: every read surface still answers.
+    let report = handle.health().expect("hub retained after join");
+    assert!(report.windows >= 1);
+    let text = handle.render_metrics().expect("renderer works after stop");
+    let series = parse_exposition(&text).expect("valid exposition after stop");
+    assert_eq!(series_value(&series, "shdc_serve_completed_total"), 40.0);
+
+    // Draining is idempotent too: whatever was left comes out once.
+    let first = handle.drain_events();
+    let second = handle.drain_events();
+    assert!(second.is_empty(), "second drain must be empty, got {second:?}");
+    drop(first);
+}
+
+#[test]
+fn scrapes_parse_and_reconcile_exactly_with_counter_deltas() {
+    let cfg = monitored_cfg(85, 2, Some("127.0.0.1:0"), lenient_slo());
+    let (server, handle) = Server::new(cfg, small_store(256, 86));
+    let server_thread = std::thread::spawn(move || server.run());
+    let addr = handle.metrics_addr().expect("listener bound at construction");
+    let timeout = Duration::from_secs(2);
+
+    // First batch of traffic, then scrape. classify is synchronous, so
+    // at scrape time exactly 40 requests have completed.
+    run_sequential(&handle, 87, 40);
+    let (status, body) = http_get(addr, "/metrics", timeout).expect("scrape 1");
+    assert_eq!(status, 200);
+    let first = parse_exposition(&body).expect("every line parses");
+    assert_eq!(series_value(&first, "shdc_serve_submitted_total"), 40.0);
+    assert_eq!(series_value(&first, "shdc_serve_completed_total"), 40.0);
+    assert!(series_value(&first, "shdc_configured_workers") >= 2.0);
+    assert!(series_value(&first, "shdc_publisher_samples_total") >= 1.0);
+
+    // Second batch: the two scrapes must reconcile exactly — counters
+    // are monotone and the renderer reads them live.
+    run_sequential(&handle, 88, 25);
+    let (status, body) = http_get(addr, "/metrics", timeout).expect("scrape 2");
+    assert_eq!(status, 200);
+    let second = parse_exposition(&body).expect("every line parses");
+    let c1 = series_value(&first, "shdc_serve_completed_total");
+    let c2 = series_value(&second, "shdc_serve_completed_total");
+    assert_eq!(c2 - c1, 25.0, "scrape delta must equal requests issued between scrapes");
+    assert_eq!(series_value(&second, "shdc_serve_submitted_total"), 65.0);
+
+    // Per-model series carry labels and agree with the global counter.
+    let model_completed: f64 = second
+        .iter()
+        .filter(|s| s.name == "shdc_model_completed_total")
+        .map(|s| s.value)
+        .sum();
+    assert_eq!(model_completed, 65.0, "per-model series sum to the global counter");
+
+    // The other endpoints hold up their contracts.
+    let (status, body) = http_get(addr, "/health", timeout).expect("/health");
+    assert_eq!(status, 200);
+    let health = shdc::util::json::Json::parse(&body).expect("valid JSON");
+    let verdict = health
+        .get("health")
+        .and_then(|h| h.get("verdict"))
+        .and_then(|v| v.as_str())
+        .expect("verdict string");
+    assert!(["healthy", "degraded", "breach"].contains(&verdict));
+
+    let (status, body) = http_get(addr, "/snapshot", timeout).expect("/snapshot");
+    assert_eq!(status, 200);
+    shdc::util::json::Json::parse(&body).expect("snapshot is valid JSON");
+
+    let (status, _) = http_get(addr, "/nope", timeout).expect("unknown path");
+    assert_eq!(status, 404);
+
+    // Non-GET methods are refused with 405 (raw request: http_get only
+    // speaks GET).
+    let mut conn = TcpStream::connect_timeout(&addr, timeout).expect("connect");
+    conn.set_read_timeout(Some(timeout)).expect("timeout");
+    conn.write_all(b"POST /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .expect("send");
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).expect("read");
+    assert!(
+        resp.starts_with("HTTP/1.1 405"),
+        "POST must get 405, got {:?}",
+        resp.lines().next()
+    );
+
+    handle.shutdown();
+    server_thread.join().expect("server");
+}
+
+#[test]
+fn stalled_worker_flips_health_to_breach_and_recovers() {
+    // One worker that sleeps 400 ms before its first encode: with a
+    // 10 ms publish window and stall_windows = 3, the watchdog must see
+    // the no-progress run long before the worker wakes. The latency,
+    // shed and error objectives are made unmissable so the stall is the
+    // only possible breach reason.
+    let slo = SloCfg {
+        p99_target: Duration::from_secs(10),
+        max_shed_rate: 1.1,
+        error_budget: 1.0,
+        stall_windows: 3,
+    };
+    let cfg = ServeCfg {
+        coordinator: CoordinatorCfg {
+            batch_size: 1,
+            n_workers: 1,
+            queue_depth: 2,
+            fault: FaultPlan {
+                stall_once: Some((0, Duration::from_millis(400))),
+                ..FaultPlan::default()
+            },
+            ..Default::default()
+        },
+        ..monitored_cfg(89, 1, None, slo)
+    };
+    let (server, handle) = Server::new(cfg, small_store(256, 90));
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // The client blocks inside classify while the worker sleeps — that
+    // is exactly the stall signature: in-flight > 0, completed frozen.
+    let client = {
+        let h = handle.clone();
+        std::thread::spawn(move || run_sequential(&h, 91, 30))
+    };
+
+    let breach = wait_for_health(&handle, "stall breach", Duration::from_secs(10), |r| {
+        r.stalled && r.verdict == Verdict::Breach
+    });
+    assert!(
+        breach.reasons.iter().any(|r| r.contains("stalled")),
+        "breach must cite the stall: {:?}",
+        breach.reasons
+    );
+
+    client.join().expect("client");
+    let recovered = wait_for_health(&handle, "recovery", Duration::from_secs(10), |r| {
+        !r.stalled && r.verdict == Verdict::Healthy
+    });
+    assert!(recovered.reasons.is_empty(), "{:?}", recovered.reasons);
+
+    // The transition events landed in order: stalled → breach while the
+    // worker slept, resumed → recovered once it completed the backlog.
+    let events = handle.drain_events();
+    let kinds: Vec<EventKind> = events.iter().map(|e| e.kind).collect();
+    for kind in [
+        EventKind::PipelineStalled,
+        EventKind::SloBreach,
+        EventKind::PipelineResumed,
+        EventKind::SloRecovered,
+    ] {
+        assert!(kinds.contains(&kind), "missing {kind:?} in {kinds:?}");
+    }
+    let stalled_at = kinds.iter().position(|&k| k == EventKind::PipelineStalled).unwrap();
+    let resumed_at = kinds.iter().position(|&k| k == EventKind::PipelineResumed).unwrap();
+    assert!(stalled_at < resumed_at, "stall precedes resume: {kinds:?}");
+
+    handle.shutdown();
+    server_thread.join().expect("server");
+
+    // After recovery and drain, the report stays healthy and readable.
+    let final_report = handle.health().expect("hub retained");
+    assert!(!final_report.stalled);
+}

@@ -83,6 +83,15 @@ cargo test -q --test fault_injection
 echo "== cargo test -q --test obs_tracing =="
 cargo test -q --test obs_tracing
 
+# Monitoring contract in isolation: zero-traffic windows stay finite and
+# healthy, /metrics parses line-for-line and two scrapes reconcile
+# exactly with the traffic between them, publisher shutdown is
+# idempotent, and an injected worker stall flips /health to breach and
+# back. Also in the full suite; the dedicated leg keeps the exposition
+# contract visible in CI logs.
+echo "== cargo test -q --test obs_export =="
+cargo test -q --test obs_export
+
 # Overload smoke: a tiny closed-loop sweep plus the open-loop phase at
 # 2.5x capacity must TERMINATE with a nonzero shed rate rather than
 # hang — the cheapest end-to-end check that admission control actually
@@ -92,11 +101,15 @@ cargo test -q --test obs_tracing
 # --trace-out adds the traced closed+open runs: the binary writes the
 # sampled spans as JSONL, re-reads the file, and asserts every line
 # parses and every trace's stage spans telescope within its end-to-end
-# latency.
-echo "== serve_bench overload + many-class + trace-dump smoke =="
+# latency. --metrics-addr adds the live-exporter leg: the binary scrapes
+# its own /metrics endpoint mid-run and at end-of-run, parses every
+# exposition line in-binary, and asserts the scraped counters reconcile
+# with the client-side completion counts.
+echo "== serve_bench overload + many-class + trace-dump + metrics smoke =="
 SHDC_SERVE_REQUESTS=2000 SHDC_SERVE_CLIENTS=4 SHDC_SERVE_OPEN_REQUESTS=2000 \
     SHDC_SERVE_CLASSES=200 \
-    cargo run --release --bin serve_bench -- --trace-out target/serve_traces.jsonl
+    cargo run --release --bin serve_bench -- --trace-out target/serve_traces.jsonl \
+    --metrics-addr 127.0.0.1:0
 
 if [[ "$run_simd" == 1 ]]; then
     # The kernel differential suite (tests/kernel_equivalence.rs) must
